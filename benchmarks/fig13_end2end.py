@@ -1,0 +1,57 @@
+"""Fig. 13 — end-to-end training throughput: Baseline(CPU) vs Ours(CPU)
+(= Tensor Casting, casting precomputed in the host pipeline) for RM1-4,
+measured as full train-step wall time on the real system (CPU here; the
+role the DGX played in the paper). Also reports Fig. 14's energy proxy
+(time x constant power => speedup == energy ratio on like hardware)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.data.pipeline import CastingServer
+from repro.data.synth import DLRMStream
+from repro.runtime import dlrm_train
+from benchmarks.common import emit, time_fn
+
+ROWS = 100_000
+BATCH = 1024
+
+
+def run(batch: int = BATCH, rows: int = ROWS) -> dict:
+    results = {}
+    for arch in ("rm1", "rm2", "rm3", "rm4"):
+        base_cfg = get_config(arch, smoke=True)
+        cfg = type(base_cfg)(**{**base_cfg.__dict__, "rows_per_table": rows})
+        stream = DLRMStream(num_tables=cfg.num_tables, rows_per_table=rows,
+                            gathers_per_table=cfg.gathers_per_table, batch=batch,
+                            profile="criteo", seed=0)
+        cs = CastingServer(rows_per_table=rows)
+        raw = stream.batch_at(0)
+        b_plain = jax.tree_util.tree_map(jax.numpy.asarray, raw)
+        b_cast = jax.tree_util.tree_map(jax.numpy.asarray, cs(raw))
+
+        t = {}
+        for system, batch_used in (("baseline", b_plain), ("tc", b_cast)):
+            state = dlrm_train.init_state(cfg, jax.random.key(0))
+            step = dlrm_train.make_sparse_train_step(cfg, system=system)
+            holder = {"s": state}  # the step donates its input state: chain it
+
+            def run_step(bb=batch_used, f=step, h=holder):
+                h["s"], loss = f(h["s"], bb)
+                return loss
+
+            t[system] = time_fn(run_step, warmup=1, iters=3)
+        speedup = t["baseline"] / t["tc"]
+        results[arch] = dict(**t, speedup=speedup)
+        emit(f"fig13.{arch}.baseline", t["baseline"])
+        emit(f"fig13.{arch}.tc", t["tc"])
+        emit(f"fig13.{arch}.speedup", 0.0, f"{speedup:.2f}x")
+        emit(f"fig14.{arch}.energy_ratio", 0.0, f"{speedup:.2f}x (time-proportional proxy)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fig. 15 — unified-engine utilization analogue.
+
+The paper measures the fraction of training time the NMP gather-scatter
+engine is active: ~7% for TensorDIMM (only fwd gather-reduce + scatter run
+on it) vs 44–92% with Tensor Casting (backward coalesce becomes
+gather-reduce too). Our analogue: fraction of the embedding-layer step time
+spent inside the *unified* gather-reduce/scatter primitives — i.e. the
+fraction of work a single accelerator datapath (our Pallas kernel pair)
+covers — before and after casting, per RM model, from the same component
+timings as Fig. 4/12."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.core.casting import tensor_casting
+from repro.data.synth import DLRMStream
+from benchmarks.common import emit, time_fn
+from benchmarks.fig12_latency import _baseline_expand_coalesce, _tc_gather_reduce
+
+
+def run(batch: int = 1024, rows: int = 100_000, dim: int = 64) -> dict:
+    results = {}
+    for arch in ("rm1", "rm2", "rm3", "rm4"):
+        cfg = get_config(arch, smoke=True)
+        P = cfg.gathers_per_table
+        T = cfg.num_tables
+        st = DLRMStream(num_tables=1, rows_per_table=rows, gathers_per_table=P,
+                        batch=batch, profile="criteo", seed=0)
+        ids = jnp.asarray(st.batch_at(0)["idx"][:, 0, :].reshape(-1))
+        dst = jnp.repeat(jnp.arange(batch, dtype=jnp.int32), P)
+        n = ids.shape[0]
+        rng = np.random.default_rng(0)
+        table = jnp.asarray(rng.normal(size=(rows, dim)).astype(np.float32))
+        grad = jnp.asarray(rng.normal(size=(batch, dim)).astype(np.float32))
+
+        # unified primitives (the datapath the kernel pair covers)
+        fwd = jax.jit(lambda t, s, d: jax.ops.segment_sum(jnp.take(t, s, axis=0), d, num_segments=batch))
+        t_fwd = time_fn(fwd, table, ids, dst) * T
+        casted = jax.jit(lambda s, d: tensor_casting(s, d, fill_id=rows))(ids, dst)
+        tc_gr = jax.jit(lambda g, cs, cd: _tc_gather_reduce(g, cs, cd, n))
+        t_tcgr = time_fn(tc_gr, grad, casted.casted_src, casted.casted_dst) * T
+        uids = casted.unique_ids
+        coal = tc_gr(grad, casted.casted_src, casted.casted_dst)
+        scat = jax.jit(lambda t, u, c: t.at[u].add(c, mode="drop"))
+        t_scat = time_fn(scat, table, uids, coal) * T
+
+        # non-unified baseline backward (expand+coalesce on the host/CPU side)
+        base_bwd = jax.jit(lambda g, s, d: _baseline_expand_coalesce(g, s, d, n))
+        t_base_bwd = time_fn(base_bwd, grad, ids, dst) * T
+
+        total_base = t_fwd + t_base_bwd + t_scat
+        total_tc = t_fwd + t_tcgr + t_scat
+        util_base = (t_fwd + t_scat) / total_base  # TensorDIMM: bwd coalesce not covered
+        util_tc = 1.0  # every primitive is gather-reduce/scatter after casting
+        covered_tc = (t_fwd + t_tcgr + t_scat) / total_tc
+        results[arch] = dict(util_base=util_base, util_tc=covered_tc)
+        emit(f"fig15.{arch}.unified_fraction_baseline", 0.0, f"{util_base:.2f}")
+        emit(f"fig15.{arch}.unified_fraction_tc", 0.0, f"{covered_tc:.2f}")
+        assert covered_tc > util_base
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig. 16 — Tensor Casting sensitivity to training batch size (the paper
+sweeps to tens of thousands; speedup grows with batch because coalescing
+hits more duplicates)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs
+from repro.core.casting import tensor_casting
+from repro.data.synth import DLRMStream
+from benchmarks.fig12_latency import _baseline_expand_coalesce, _tc_gather_reduce
+from benchmarks.common import emit, time_fn
+
+import numpy as np
+
+ROWS = 200_000
+GATHERS = 10
+DIM = 64
+
+
+def run(batches=(1024, 2048, 4096, 8192, 16384)) -> dict:
+    results = {}
+    for batch in batches:
+        st = DLRMStream(num_tables=1, rows_per_table=ROWS, gathers_per_table=GATHERS,
+                        batch=batch, profile="criteo", seed=0)
+        ids = jnp.asarray(st.batch_at(0)["idx"][:, 0, :].reshape(-1))
+        dst = jnp.repeat(jnp.arange(batch, dtype=jnp.int32), GATHERS)
+        n = ids.shape[0]
+        grad = jnp.asarray(np.random.default_rng(0).normal(size=(batch, DIM)).astype(np.float32))
+        base = jax.jit(lambda g, s, d: _baseline_expand_coalesce(g, s, d, n))
+        t_base = time_fn(base, grad, ids, dst)
+        casted = jax.jit(lambda s, d: tensor_casting(s, d, fill_id=ROWS))(ids, dst)
+        tc = jax.jit(lambda g, cs, cd: _tc_gather_reduce(g, cs, cd, n))
+        t_tc = time_fn(tc, grad, casted.casted_src, casted.casted_dst)
+        results[batch] = t_base / t_tc
+        emit(f"fig16.b{batch}.speedup", 0.0, f"{t_base / t_tc:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

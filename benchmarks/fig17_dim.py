@@ -1,0 +1,41 @@
+"""Fig. 17 — Tensor Casting sensitivity to embedding vector dimension
+(paper sweeps around the default 64)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs
+from repro.core.casting import tensor_casting
+from repro.data.synth import DLRMStream
+from benchmarks.fig12_latency import _baseline_expand_coalesce, _tc_gather_reduce
+from benchmarks.common import emit, time_fn
+
+ROWS = 200_000
+GATHERS = 10
+BATCH = 2048
+
+
+def run(dims=(32, 64, 128, 256)) -> dict:
+    st = DLRMStream(num_tables=1, rows_per_table=ROWS, gathers_per_table=GATHERS,
+                    batch=BATCH, profile="criteo", seed=0)
+    ids = jnp.asarray(st.batch_at(0)["idx"][:, 0, :].reshape(-1))
+    dst = jnp.repeat(jnp.arange(BATCH, dtype=jnp.int32), GATHERS)
+    n = ids.shape[0]
+    casted = jax.jit(lambda s, d: tensor_casting(s, d, fill_id=ROWS))(ids, dst)
+    results = {}
+    for dim in dims:
+        grad = jnp.asarray(np.random.default_rng(0).normal(size=(BATCH, dim)).astype(np.float32))
+        base = jax.jit(lambda g, s, d: _baseline_expand_coalesce(g, s, d, n))
+        t_base = time_fn(base, grad, ids, dst)
+        tc = jax.jit(lambda g, cs, cd: _tc_gather_reduce(g, cs, cd, n))
+        t_tc = time_fn(tc, grad, casted.casted_src, casted.casted_dst)
+        results[dim] = t_base / t_tc
+        emit(f"fig17.d{dim}.speedup", 0.0, f"{t_base / t_tc:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Fig. 4 — training-time breakdown into the key primitives of embedding
+layers, per RM model: FWD(gather-reduce), BWD(expand), BWD(coalesce:sort),
+BWD(coalesce:accu), BWD(scatter), plus the MLP fwd+bwd. CPU-scaled rows
+(full tables only exist in the dry-run); ratios are the reproduction target:
+backprop primitives dominate (62-92% in the paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.data.synth import DLRMStream
+from repro.models import api, dlrm
+from benchmarks.common import emit, time_fn
+
+ROWS = 100_000
+BATCH = 512
+
+
+def run(batch: int = BATCH, rows: int = ROWS) -> dict:
+    results = {}
+    for arch in ("rm1", "rm2", "rm3", "rm4"):
+        cfg = get_config(arch, smoke=True)
+        cfg = type(cfg)(**{**cfg.__dict__, "rows_per_table": rows, "name": cfg.name})
+        T, P, D = cfg.num_tables, cfg.gathers_per_table, cfg.emb_dim
+        stream = DLRMStream(num_tables=T, rows_per_table=rows, gathers_per_table=P,
+                            batch=batch, profile="criteo", seed=0)
+        b = stream.batch_at(0)
+        table = jnp.asarray(np.random.default_rng(0).normal(size=(rows, D)).astype(np.float32))
+        src = jnp.asarray(b["idx"][:, 0, :].reshape(-1))
+        dst = jnp.repeat(jnp.arange(batch, dtype=jnp.int32), P)
+        grad = jnp.asarray(np.random.default_rng(1).normal(size=(batch, D)).astype(np.float32))
+
+        # FWD gather-reduce (per table, x T)
+        fwd = jax.jit(lambda t, s, d: jax.ops.segment_sum(jnp.take(t, s, axis=0), d, num_segments=batch))
+        t_fwd = time_fn(fwd, table, src, dst) * T
+
+        # BWD expand (materializes (n, D))
+        expand = jax.jit(lambda g, d: jnp.take(g, d, axis=0))
+        t_expand = time_fn(expand, grad, dst) * T
+
+        # BWD coalesce: sort step then accumulate step (Alg. 1 split)
+        sort_f = jax.jit(lambda s: jax.lax.sort([s, jnp.arange(s.shape[0], dtype=jnp.int32)], num_keys=1))
+        t_sort = time_fn(sort_f, src) * T
+        exp = expand(grad, dst)
+        sorted_src, sorted_pos = sort_f(src)
+        seg = jnp.cumsum(jnp.concatenate([jnp.ones(1, jnp.int32), (sorted_src[1:] != sorted_src[:-1]).astype(jnp.int32)])) - 1
+        accu = jax.jit(lambda e, p, g: jax.ops.segment_sum(jnp.take(e, p, axis=0), g, num_segments=e.shape[0]))
+        t_accu = time_fn(accu, exp, sorted_pos, seg) * T
+
+        # BWD scatter (coalesced rows back into the table)
+        coal = accu(exp, sorted_pos, seg)
+        uids = jnp.zeros((src.shape[0],), jnp.int32).at[seg].set(sorted_src)
+        scat = jax.jit(lambda t, u, c: t.at[u].add(c, mode="drop"))
+        t_scatter = time_fn(scat, table, uids, coal) * T
+
+        # MLP fwd+bwd
+        params = api.init_params(cfg, jax.random.key(0))
+        mb = {k: jnp.asarray(v) for k, v in b.items()}
+        mlp_loss = jax.jit(jax.value_and_grad(
+            lambda bot, top: dlrm.train_loss(
+                cfg, {"bot_mlp": bot, "top_mlp": top, "tables": params["tables"]}, mb
+            )[0], argnums=(0, 1)))
+        t_mlp = time_fn(mlp_loss, params["bot_mlp"], params["top_mlp"])
+
+        total = t_fwd + t_expand + t_sort + t_accu + t_scatter + t_mlp
+        bwd_frac = (t_expand + t_sort + t_accu + t_scatter) / total
+        results[arch] = dict(fwd_gr=t_fwd, bwd_expand=t_expand, bwd_sort=t_sort,
+                             bwd_accu=t_accu, bwd_scatter=t_scatter, mlp=t_mlp,
+                             total=total, bwd_frac=bwd_frac)
+        emit(f"fig4.{arch}.fwd_gather_reduce", t_fwd)
+        emit(f"fig4.{arch}.bwd_expand", t_expand)
+        emit(f"fig4.{arch}.bwd_coalesce_sort", t_sort)
+        emit(f"fig4.{arch}.bwd_coalesce_accu", t_accu)
+        emit(f"fig4.{arch}.bwd_scatter", t_scatter)
+        emit(f"fig4.{arch}.mlp_fwd_bwd", t_mlp)
+        emit(f"fig4.{arch}.total", total, f"bwd_frac={bwd_frac:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig. 5 — (a) lookup-locality profiles per dataset; (b) gradient tensor
+size before/after expand and coalesce, vs batch size. Pure analysis over the
+synthetic Zipf streams fit to the paper's datasets. The paper's setup: each
+table gathered 10 times, so the expanded tensor is exactly 10x the
+backpropagated gradient; coalescing then shrinks it by the duplicate
+fraction (more at larger batch)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synth import DATASET_PROFILES, DLRMStream, coalescing_stats
+from benchmarks.common import emit
+
+GATHERS = 10
+ROWS = 1_000_000
+
+
+def run(batches=(1024, 2048, 4096)) -> dict:
+    results = {}
+    for profile in DATASET_PROFILES:
+        for batch in batches:
+            st = DLRMStream(num_tables=1, rows_per_table=ROWS, gathers_per_table=GATHERS,
+                            batch=batch, profile=profile, seed=0)
+            ids = st.batch_at(0)["idx"].reshape(-1)
+            s = coalescing_stats(ids)
+            # sizes normalized to the backpropagated gradient tensor (= batch rows)
+            expanded = s["lookups"] / batch  # == GATHERS by construction
+            coalesced = s["unique"] / batch
+            results[(profile, batch)] = (expanded, coalesced)
+            emit(
+                f"fig5.{profile}.b{batch}",
+                0.0,
+                f"expanded={expanded:.2f}x coalesced={coalesced:.2f}x shrink={expanded / coalesced:.2f}x",
+            )
+    # the paper's qualitative claims
+    for batch in batches[1:]:
+        for profile in ("criteo", "taobao", "movielens", "amazon-books"):
+            lo = results[(profile, batch)][1]
+            hi = results[(profile, batches[0])][1]
+            assert lo <= hi + 1e-6, "coalescing should improve with batch size"
+    return results
+
+
+if __name__ == "__main__":
+    run()

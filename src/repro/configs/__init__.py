@@ -1,0 +1,24 @@
+"""Config registry: importing this package registers every assigned arch
+(plus the paper's RM1–RM4) under its ``--arch <id>``."""
+from repro.configs.base import (  # noqa: F401
+    SHAPE_CELLS,
+    DLRMConfig,
+    ModelConfig,
+    arch_meta,
+    get_config,
+    list_archs,
+    shape_cells_for,
+)
+from repro.configs import (  # noqa: F401
+    dlrm_rm,
+    gemma_7b,
+    moonshot_v1_16b_a3b,
+    musicgen_large,
+    olmoe_1b_7b,
+    pixtral_12b,
+    qwen2_0_5b,
+    qwen2_72b,
+    starcoder2_15b,
+    xlstm_350m,
+    zamba2_1_2b,
+)

@@ -1,0 +1,182 @@
+"""Config system: one frozen dataclass describes every supported arch.
+
+``full()`` returns the exact published configuration (used only by the
+dry-run via ShapeDtypeStruct — never allocated on CPU); ``smoke()`` returns a
+reduced same-family config for CPU tests. The registry maps ``--arch <id>``
+to both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+SHAPE_CELLS = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm | dlrm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    mlp_act: str = "swiglu"
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dispatch: str = "sort"  # "sort" (global argsort) | "local" (per-row cumsum ranks)
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    attn_every: int = 0  # hybrid: one *shared* attention block every k blocks
+    # xLSTM
+    slstm_every: int = 0  # every k-th block is sLSTM, rest mLSTM
+    # frontends (stubs per assignment: precomputed patch/frame embeddings)
+    frontend: str = "none"  # none | vision_stub | audio_stub
+    frontend_tokens: int = 0  # patches/frames prepended to the sequence
+    # numerics & memory
+    dtype: str = "bfloat16"
+    kv_cache_dtype: str = "native"  # "native" (= dtype) | "int8" (quantized decode cache)
+    remat: bool = True
+    loss_chunk: int = 2048  # seq-chunked LM head/xent (0 = unchunked)
+    # which shape cells this arch supports (long_500k only sub-quadratic)
+    supports_long_context: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (exact, matches init_params)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        if self.qkv_bias:
+            attn += hd * (self.num_heads + 2 * self.num_kv_heads)
+        if self.mlp_act in ("swiglu", "geglu"):
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        total = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        total += d  # final norm
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            blk = attn + 2 * d
+            if self.num_experts:
+                blk += d * self.num_experts + self.num_experts * 3 * d * self.d_ff
+            else:
+                blk += mlp
+            return total + self.num_layers * blk
+        if self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            H = max(1, d_in // 64)
+            N = self.ssm_state
+            mamba = (
+                d * (2 * d_in + 2 * N + H)  # in_proj
+                + self.ssm_conv * (d_in + 2 * N)  # conv
+                + 3 * H  # A_log, D, dt_bias
+                + d_in * d  # out_proj
+                + d_in  # inner norm
+                + d  # pre-norm
+            )
+            groups = self.num_layers // self.attn_every
+            n_mamba = self.num_layers - groups
+            shared = attn + 3 * d * self.d_ff + 2 * d  # one shared attn+mlp block
+            return total + n_mamba * mamba + shared
+        if self.family == "ssm":  # xLSTM
+            d_in = 2 * d
+            H = self.num_heads
+            P = d // H
+            mlstm = (
+                d * 2 * d_in + d_in * 3 * d_in + d_in * 2 * H + d_in * d + d_in + d
+            )
+            slstm = d * 4 * d + 4 * H * P * P + d * d + 2 * d
+            groups = self.num_layers // self.slstm_every
+            n_m = self.num_layers - groups
+            return total + n_m * mlstm + groups * slstm
+        raise ValueError(self.family)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        dense_total = self.param_count()
+        all_experts = self.num_layers * self.num_experts * 3 * self.d_model * self.d_ff
+        active = self.num_layers * self.experts_per_token * 3 * self.d_model * self.d_ff
+        return dense_total - all_experts + active
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    """Paper Table II configurations."""
+
+    name: str
+    num_tables: int
+    gathers_per_table: int
+    bottom_mlp: tuple[int, ...]
+    top_mlp: tuple[int, ...]
+    rows_per_table: int = 1_000_000
+    emb_dim: int = 64
+    dense_features: int = 13
+    dtype: str = "float32"
+    family: str = "dlrm"
+    supports_long_context: bool = False
+
+    def param_count(self) -> int:
+        emb = self.num_tables * self.rows_per_table * self.emb_dim
+        bot = sum(a * b + b for a, b in zip((self.dense_features,) + self.bottom_mlp, self.bottom_mlp))
+        f = self.num_tables + 1
+        top_in = self.emb_dim + f * (f - 1) // 2
+        top = sum(a * b + b for a, b in zip((top_in,) + self.top_mlp, self.top_mlp))
+        return emb + bot + top
+
+    def active_param_count(self) -> int:
+        """Per-example active params: only gathered table rows touch compute."""
+        dense = self.param_count() - self.num_tables * self.rows_per_table * self.emb_dim
+        return dense + self.num_tables * self.gathers_per_table * self.emb_dim
+
+
+_REGISTRY: dict[str, dict] = {}
+
+
+def register(arch_id: str, *, full, smoke, source: str, tier: str):
+    _REGISTRY[arch_id] = {"full": full, "smoke": smoke, "source": source, "tier": tier}
+
+
+def get_config(arch_id: str, *, smoke: bool = False):
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]["smoke" if smoke else "full"]
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def arch_meta(arch_id: str) -> dict:
+    return dict(_REGISTRY[arch_id])
+
+
+def shape_cells_for(cfg) -> list[str]:
+    """The shape cells this arch runs (assignment rules; skips recorded)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if getattr(cfg, "supports_long_context", False):
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,20 @@
+"""Paper Table II: RM1–RM4 DLRM configurations (the reproduction targets).
+
+RM1/RM2 embedding-intensive (80 gathers/table), RM3/RM4 MLP-intensive.
+Full configs use 1M rows/table; smoke configs shrink tables for CPU tests.
+"""
+from repro.configs.base import DLRMConfig, register
+
+_SPECS = {
+    "rm1": dict(num_tables=10, gathers_per_table=80, bottom_mlp=(256, 128, 64), top_mlp=(256, 64, 1)),
+    "rm2": dict(num_tables=40, gathers_per_table=80, bottom_mlp=(256, 128, 64), top_mlp=(512, 128, 1)),
+    "rm3": dict(num_tables=10, gathers_per_table=20, bottom_mlp=(2560, 512, 64), top_mlp=(512, 128, 1)),
+    "rm4": dict(num_tables=10, gathers_per_table=20, bottom_mlp=(2560, 1024, 64), top_mlp=(2048, 2048, 1024, 1)),
+}
+
+CONFIGS = {}
+for name, spec in _SPECS.items():
+    full = DLRMConfig(name=name, rows_per_table=1_000_000, **spec)
+    smoke = DLRMConfig(name=f"{name}-smoke", rows_per_table=1000, **spec)
+    CONFIGS[name] = full
+    register(name, full=full, smoke=smoke, source="paper Table II / Gupta et al. HPCA'20", tier="paper")

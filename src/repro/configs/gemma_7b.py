@@ -1,0 +1,38 @@
+"""gemma-7b [dense]: GeGLU, head_dim=256 (16 heads x 256 = 4096 attn inner,
+wider than d_model=3072), kv=16, 256k vocab, tied embeddings with
+sqrt(d_model) embedding scaling. [arXiv:2403.08295; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_act="geglu",
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="gemma-7b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=48,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,  # head_dim wider than d_model/heads, like the real config
+    d_ff=96,
+    vocab_size=512,
+    mlp_act="geglu",
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("gemma-7b", full=FULL, smoke=SMOKE, source="arXiv:2403.08295", tier="hf")

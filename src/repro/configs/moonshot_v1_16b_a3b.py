@@ -1,0 +1,39 @@
+"""moonshot-v1-16b-a3b [moe]: kimi/moonlight-style, 64 experts top-6,
+per-expert d_ff=1408. [hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=163840,
+    mlp_act="swiglu",
+    rope_theta=50_000.0,
+    num_experts=64,
+    experts_per_token=6,
+)
+
+SMOKE = ModelConfig(
+    name="moonshot-v1-16b-a3b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=32,
+    vocab_size=512,
+    mlp_act="swiglu",
+    rope_theta=50_000.0,
+    num_experts=8,
+    experts_per_token=2,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("moonshot-v1-16b-a3b", full=FULL, smoke=SMOKE, source="hf:moonshotai/Moonlight-16B-A3B", tier="hf")

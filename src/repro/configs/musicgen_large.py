@@ -1,0 +1,44 @@
+"""musicgen-large [audio]: decoder-only transformer over EnCodec tokens
+(vocab 2048). [arXiv:2306.05284; hf]
+
+The EnCodec/text-conditioning frontend is a stub per assignment:
+``input_specs`` supplies 64 precomputed conditioning frame embeddings as a
+prefix; the decoder itself is the backbone being measured.
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    mlp_act="gelu",
+    rope_theta=10_000.0,
+    frontend="audio_stub",
+    frontend_tokens=64,
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-large-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    mlp_act="gelu",
+    rope_theta=10_000.0,
+    frontend="audio_stub",
+    frontend_tokens=4,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("musicgen-large", full=FULL, smoke=SMOKE, source="arXiv:2306.05284", tier="hf")

@@ -1,0 +1,39 @@
+"""olmoe-1b-7b [moe]: 64 experts top-8, per-expert d_ff=1024.
+[arXiv:2409.02060; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab_size=50304,
+    mlp_act="swiglu",
+    rope_theta=10_000.0,
+    num_experts=64,
+    experts_per_token=8,
+)
+
+SMOKE = ModelConfig(
+    name="olmoe-1b-7b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=32,
+    vocab_size=512,
+    mlp_act="swiglu",
+    rope_theta=10_000.0,
+    num_experts=8,
+    experts_per_token=2,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("olmoe-1b-7b", full=FULL, smoke=SMOKE, source="arXiv:2409.02060", tier="hf")

@@ -1,0 +1,44 @@
+"""pixtral-12b [vlm]: Pixtral-ViT frontend (stubbed) + Mistral-Nemo-style
+text backbone. [hf:mistralai/Pixtral-12B-2409; unverified]
+
+Backbone only per assignment; the ViT is a stub — ``input_specs`` supplies
+precomputed patch embeddings (B, 1024, d_model) prepended to the text
+sequence, so the 4096-token train cell is 1024 patches + 3072 text tokens.
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    mlp_act="swiglu",
+    rope_theta=1_000_000.0,
+    frontend="vision_stub",
+    frontend_tokens=1024,
+)
+
+SMOKE = ModelConfig(
+    name="pixtral-12b-smoke",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    mlp_act="swiglu",
+    rope_theta=1_000_000.0,
+    frontend="vision_stub",
+    frontend_tokens=4,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("pixtral-12b", full=FULL, smoke=SMOKE, source="hf:mistralai/Pixtral-12B-2409", tier="unverified")

@@ -1,0 +1,36 @@
+"""qwen2-72b [dense]: 80L, GQA kv=8, QKV bias. [arXiv:2407.10671; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    mlp_act="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-72b-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=192,
+    vocab_size=512,
+    mlp_act="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("qwen2-72b", full=FULL, smoke=SMOKE, source="arXiv:2407.10671", tier="hf")

@@ -1,0 +1,37 @@
+"""starcoder2-15b [dense]: GQA kv=4, RoPE, plain-GeLU 4x MLP.
+[arXiv:2402.19173; hf]"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_act="gelu",
+    qkv_bias=True,
+    rope_theta=100_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-15b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=256,
+    vocab_size=512,
+    mlp_act="gelu",
+    qkv_bias=True,
+    rope_theta=100_000.0,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("starcoder2-15b", full=FULL, smoke=SMOKE, source="arXiv:2402.19173", tier="hf")

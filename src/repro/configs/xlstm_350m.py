@@ -1,0 +1,34 @@
+"""xlstm-350m [ssm]: sLSTM + mLSTM blocks (1 sLSTM per 4 blocks), d_ff=0
+(no separate MLP — blocks carry their own projections).
+[arXiv:2405.04517; unverified] Runs long_500k (recurrent O(1) state)."""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=4,
+    supports_long_context=True,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-350m-smoke",
+    family="ssm",
+    num_layers=4,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=0,
+    vocab_size=512,
+    slstm_every=2,
+    supports_long_context=True,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("xlstm-350m", full=FULL, smoke=SMOKE, source="arXiv:2405.04517", tier="unverified")

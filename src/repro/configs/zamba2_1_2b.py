@@ -1,0 +1,42 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared attention block
+(weight-shared, applied every 6 blocks), ssm_state=64.
+[arXiv:2411.15242; hf] Runs the long_500k cell (O(1) SSM state)."""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    mlp_act="swiglu",
+    rope_theta=10_000.0,
+    ssm_state=64,
+    attn_every=6,
+    supports_long_context=True,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-1.2b-smoke",
+    family="hybrid",
+    num_layers=7,  # 2 groups of (2 mamba + shared attn) + 1 tail mamba
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    mlp_act="swiglu",
+    rope_theta=10_000.0,
+    ssm_state=8,
+    attn_every=3,
+    supports_long_context=True,
+    loss_chunk=8,
+    dtype="float32",
+)
+
+register("zamba2-1.2b", full=FULL, smoke=SMOKE, source="arXiv:2411.15242", tier="hf")

@@ -1,0 +1,139 @@
+"""Tensor Casting (paper Alg. 2) and the baseline gradient expand-coalesce (Alg. 1).
+
+Index conventions follow the paper's Fig. 2:
+  * ``src``  — row ids into the embedding table, one per lookup (length n).
+  * ``dst``  — output segment id per lookup (which pooled vector the gathered
+    row reduces into).  For LM token embeddings there is no pooling, so
+    ``dst = arange(n)`` and each "segment" is a single position.
+
+Backward pass, baseline (Alg. 1): the pooled gradient G (num_segments, D) is
+*expanded* to one row per lookup (exp_grad[i] = G[dst[i]], materialized) and
+then *coalesced*: rows sharing a src id are accumulated so the optimizer sees
+one summed gradient per touched table row.
+
+Tensor Casting (Alg. 2) permutes the metadata once so expand+coalesce becomes
+a single gather-reduce over G with a *sorted* destination array:
+
+    coal_grad[casted_dst[i]] += G[casted_src[i]]
+
+``casted_dst`` being non-decreasing is the property every downstream kernel
+exploits (one-pass streaming reduction; no unsorted scatter on TPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+class CastedIndices(NamedTuple):
+    """Output of the casting stage (paper Alg. 2), all shapes static = (n,).
+
+    Attributes:
+      casted_src: which row of the backpropagated gradient "table" to gather.
+      casted_dst: non-decreasing segment id; coalesced gradient row to reduce
+        into. ``casted_dst[-1] + 1 == num_unique`` when n > 0.
+      unique_ids: embedding-table row id per coalesced segment, padded with
+        ``fill_id`` past ``num_unique`` (padding rows carry zero gradient and
+        are dropped by the sparse update).
+      num_unique: scalar int32, number of distinct src ids.
+    """
+
+    casted_src: Array
+    casted_dst: Array
+    unique_ids: Array
+    num_unique: Array
+
+
+def tensor_casting(src: Array, dst: Array, *, fill_id: int) -> CastedIndices:
+    """Paper Algorithm 2, vectorized.
+
+    Args:
+      src: (n,) int32 table-row id per lookup.
+      dst: (n,) int32 output segment id per lookup.
+      fill_id: sentinel row id used to pad ``unique_ids`` to static length n
+        (use num_rows of the table so padded updates clamp/drop).
+    """
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    n = src.shape[0]
+    # sort-by-key, key = src (stable so repeated ids keep batch order)
+    sorted_src, sorted_dst = jax.lax.sort([src, dst], num_keys=1)
+    casted_src = sorted_dst
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (sorted_src[1:] != sorted_src[:-1]).astype(jnp.int32)]
+    )
+    casted_dst = jnp.cumsum(boundary) - 1
+    num_unique = jnp.where(n > 0, casted_dst[-1] + 1, 0).astype(jnp.int32)
+    unique_ids = jnp.full((n,), fill_id, jnp.int32).at[casted_dst].set(sorted_src, mode="drop")
+    return CastedIndices(casted_src, casted_dst, unique_ids, num_unique)
+
+
+def cast_token_ids(token_ids: Array, *, fill_id: int) -> CastedIndices:
+    """Casting for LM embeddings: src = flattened token ids, dst = position."""
+    flat = token_ids.reshape(-1)
+    return tensor_casting(flat, jnp.arange(flat.shape[0], dtype=jnp.int32), fill_id=fill_id)
+
+
+def expand_gradients(grad: Array, dst: Array) -> Array:
+    """Baseline gradient *expand* (Fig. 2b): one gradient row per lookup.
+
+    Materializes the (n, D) expanded tensor — this HBM round-trip is exactly
+    the traffic Tensor Casting eliminates; kept for the baseline measurement.
+    """
+    return jnp.take(grad, dst, axis=0)
+
+
+def coalesce_gradients(src: Array, exp_grad: Array) -> tuple[Array, Array, Array]:
+    """Baseline Algorithm 1 (gradient coalescing), vectorized semantics.
+
+    Sorts ``src``, permutes the *materialized* expanded gradients into sorted
+    order (second (n, D) round-trip), and accumulates runs of equal src ids.
+
+    Returns (coal_grad (n, D) padded with zeros, unique_ids (n,) padded with
+    the max src value + 1 region clamped out by callers, num_unique scalar).
+    """
+    n = src.shape[0]
+    sorted_pos = jnp.argsort(src, stable=True)
+    sorted_src = jnp.take(src, sorted_pos)
+    sorted_grad = jnp.take(exp_grad, sorted_pos, axis=0)  # materialized reread
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (sorted_src[1:] != sorted_src[:-1]).astype(jnp.int32)]
+    )
+    seg = jnp.cumsum(boundary) - 1
+    coal = jax.ops.segment_sum(sorted_grad, seg, num_segments=n)
+    num_unique = seg[-1] + 1
+    unique_ids = jnp.zeros((n,), src.dtype).at[seg].set(sorted_src, mode="drop")
+    return coal, unique_ids, num_unique
+
+
+def casted_grad_gather_reduce(grad: Array, casted: CastedIndices) -> Array:
+    """T.Casted gradient gather-reduce (paper Alg. 3 Step B), jnp reference.
+
+    The fused production path lives in ``repro.kernels.ops.gather_reduce``;
+    this is the semantics: a segment-sum over rows of ``grad`` gathered in
+    casted order. Never materializes the expanded tensor.
+    """
+    n = casted.casted_src.shape[0]
+    rows = jnp.take(grad, casted.casted_src, axis=0)
+    return jax.ops.segment_sum(rows, casted.casted_dst, num_segments=n)
+
+
+def segment_offsets_from_sorted(casted_dst: Array, num_segments: int) -> Array:
+    """CSR offsets (num_segments + 1,) from a sorted segment-id array.
+
+    offsets[s] = first lookup index belonging to segment s. Padding segments
+    (>= num_unique) get empty ranges. Consumed by the Pallas kernel's scalar
+    prefetch to drive row DMA.
+    """
+    n = casted_dst.shape[0]
+    counts = jnp.zeros((num_segments,), jnp.int32).at[casted_dst].add(1, mode="drop")
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)])
+
+
+def pooled_lookup_indices(batch_size: int, pooling: int) -> Array:
+    """dst array for fixed-pooling embedding bags (DLRM: `pooling` gathers
+    per sample reduce into one vector per sample)."""
+    return jnp.repeat(jnp.arange(batch_size, dtype=jnp.int32), pooling)

@@ -1,0 +1,248 @@
+"""Embedding layers whose backward pass is Tensor-Casted.
+
+Two integration styles:
+
+1. ``tc_embed`` / ``tc_embedding_bag`` — drop-in differentiable ops
+   (``jax.custom_vjp``). The cotangent w.r.t. the table is still dense
+   (framework-compatible), but it is produced by coalesce-then-one-scatter
+   of *unique sorted* rows instead of XLA's default unsorted scatter-add of
+   all n lookup rows. On TPU the default lowers to a serialized loop over n;
+   ours scatters num_unique sorted rows once.
+
+2. The *sparse* path (``embed_fwd_with_cast`` + ``repro.optim.sparse``) —
+   the paper-faithful system: the optimizer consumes (unique_ids, coalesced
+   rows) directly and only touches the live table rows. Used by the DLRM
+   trainer where the table is the capacity bottleneck.
+
+The actual reduce is dispatched through ``repro.kernels.ops.gather_reduce``
+(Pallas kernel on TPU, interpret/jnp on CPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.casting import CastedIndices, cast_token_ids, tensor_casting
+
+
+def _reduce(grad: Array, casted: CastedIndices) -> Array:
+    from repro.kernels import ops  # deferred: kernels layer sits above core
+
+    return ops.gather_reduce(grad, casted.casted_src, casted.casted_dst)
+
+
+def init_embedding(key: Array, num_rows: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (num_rows, dim)) * (dim**-0.5)).astype(dtype)
+
+
+def _int_cotangent(x: Array):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# LM token embedding (no pooling): out[p] = table[ids[p]]
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def tc_embed(table: Array, token_ids: Array) -> Array:
+    return jnp.take(table, token_ids, axis=0)
+
+
+def _tc_embed_fwd(table, token_ids):
+    witness = jnp.zeros((0,), table.dtype)
+    return jnp.take(table, token_ids, axis=0), (token_ids, table.shape[0], witness)
+
+
+def _tc_embed_bwd(res, d_out):
+    token_ids, num_rows, witness = res
+    dtype = witness.dtype
+    flat = d_out.reshape(-1, d_out.shape[-1])
+    casted = cast_token_ids(token_ids, fill_id=num_rows)
+    coal = _reduce(flat, casted)
+    d_table = (
+        jnp.zeros((num_rows, flat.shape[-1]), coal.dtype)
+        .at[casted.unique_ids]
+        .add(coal, mode="drop")
+    )
+    return d_table.astype(dtype), _int_cotangent(token_ids)
+
+
+tc_embed.defvjp(_tc_embed_fwd, _tc_embed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pooled embedding bag (DLRM): out[s] = sum_{i: dst[i]==s} table[src[i]]
+# ---------------------------------------------------------------------------
+
+
+def _bag_fwd_impl(table, src, dst, num_segments):
+    rows = jnp.take(table, src, axis=0)
+    return jax.ops.segment_sum(rows, dst, num_segments=num_segments)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def tc_embedding_bag(table: Array, src: Array, dst: Array, num_segments: int) -> Array:
+    return _bag_fwd_impl(table, src, dst, num_segments)
+
+
+def _tc_bag_fwd(table, src, dst, num_segments):
+    out = _bag_fwd_impl(table, src, dst, num_segments)
+    return out, (src, dst, table.shape[0], jnp.zeros((0,), table.dtype))
+
+
+def _tc_bag_bwd(num_segments, res, d_out):
+    src, dst, num_rows, witness = res
+    dtype = witness.dtype
+    casted = tensor_casting(src, dst, fill_id=num_rows)
+    coal = _reduce(d_out, casted)
+    d_table = (
+        jnp.zeros((num_rows, d_out.shape[-1]), coal.dtype)
+        .at[casted.unique_ids]
+        .add(coal, mode="drop")
+    )
+    return d_table.astype(dtype), _int_cotangent(src), _int_cotangent(dst)
+
+
+tc_embedding_bag.defvjp(_tc_bag_fwd, _tc_bag_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Sparse path: forward + precomputed cast; gradient stays (unique_ids, rows)
+# ---------------------------------------------------------------------------
+
+
+class SparseGrad(NamedTuple):
+    """Coalesced embedding gradient: only touched rows, ids sorted unique.
+
+    rows[i] is the summed gradient for table row unique_ids[i]; entries with
+    i >= num_unique are zero and unique_ids there equal the table size
+    (dropped by `.at[].add(mode='drop')` or clamped by the Pallas scatter).
+    """
+
+    unique_ids: Array  # (n,) int32
+    rows: Array  # (n, D)
+    num_unique: Array  # () int32
+
+    def to_dense(self, num_rows: int) -> Array:
+        return (
+            jnp.zeros((num_rows, self.rows.shape[-1]), self.rows.dtype)
+            .at[self.unique_ids]
+            .add(self.rows, mode="drop")
+        )
+
+
+def embed_fwd_with_cast(table: Array, token_ids: Array) -> tuple[Array, CastedIndices]:
+    """Forward lookup + the casting stage (paper Fig. 9b: cast during fwd).
+
+    The cast depends only on ``token_ids`` so XLA schedules it concurrently
+    with the downstream dense forward; with the host pipeline it is instead
+    precomputed a step ahead (data/pipeline.CastingServer).
+    """
+    out = jnp.take(table, token_ids, axis=0)
+    casted = cast_token_ids(token_ids, fill_id=table.shape[0])
+    return out, casted
+
+
+def bag_fwd_with_cast(
+    table: Array, src: Array, dst: Array, num_segments: int
+) -> tuple[Array, CastedIndices]:
+    out = _bag_fwd_impl(table, src, dst, num_segments)
+    casted = tensor_casting(src, dst, fill_id=table.shape[0])
+    return out, casted
+
+
+def sparse_grad_from_cast(d_out: Array, casted: CastedIndices) -> SparseGrad:
+    """T.Casted gradient gather-reduce producing the sparse update payload."""
+    flat = d_out.reshape(-1, d_out.shape[-1])
+    coal = _reduce(flat, casted)
+    return SparseGrad(casted.unique_ids, coal, casted.num_unique)
+
+
+# ---------------------------------------------------------------------------
+# Distributed Tensor Casting: shard_map embedding over the vocab (model) axis
+# ---------------------------------------------------------------------------
+#
+# This is the paper's rank-local NMP processing mapped onto the pod: each
+# model-axis shard owns V/TP table rows (a "rank" in TensorDIMM terms) and
+# handles gather AND coalesced update for exactly the rows it owns.
+#
+#   forward : out = psum_over_model( mask_m * table_m[ids - lo_m] )
+#             -> one (B_local, S, d) psum instead of all-gathering the table.
+#   backward: each shard Tensor-Casts the token ids it owns (sort -> segment
+#             sum -> ONE sorted scatter of unique rows) — fully local, no
+#             collective. The baseline autodiff path instead materializes a
+#             replicated dense (V, d) cotangent and all-reduces it (measured
+#             in EXPERIMENTS.md §Perf as the dominant collective of the
+#             train cells).
+
+
+def _local_lookup_fwd(table_l: Array, ids: Array, axis: str):
+    v_l = table_l.shape[0]
+    lo = jax.lax.axis_index(axis).astype(jnp.int32) * v_l
+    local = ids.astype(jnp.int32) - lo
+    hit = (local >= 0) & (local < v_l)
+    safe = jnp.clip(local, 0, v_l - 1)
+    rows = jnp.take(table_l, safe, axis=0)
+    rows = jnp.where(hit[..., None], rows, jnp.zeros((), rows.dtype))
+    return jax.lax.psum(rows, axis), (safe, hit, v_l)
+
+
+def _make_local_embed(axis: str, dp_axes: tuple):
+    @jax.custom_vjp
+    def local_embed(table_l, ids):
+        return _local_lookup_fwd(table_l, ids, axis)[0]
+
+    def fwd(table_l, ids):
+        out, (safe, hit, v_l) = _local_lookup_fwd(table_l, ids, axis)
+        witness = jnp.zeros((table_l.shape[0], 0), table_l.dtype)  # static shape/dtype
+        return out, (safe, hit, witness, ids)
+
+    def bwd(resids, d_out):
+        safe, hit, witness, ids = resids
+        v_l = witness.shape[0]
+        flat_ids = jnp.where(hit, safe, v_l).reshape(-1)  # miss -> sentinel v_l
+        casted = cast_token_ids(flat_ids, fill_id=v_l)
+        flat_d = d_out.reshape(-1, d_out.shape[-1])
+        coal = _reduce(flat_d, casted)  # local T.Casted gather-reduce
+        d_table = (
+            jnp.zeros((v_l, flat_d.shape[-1]), jnp.float32)
+            .at[casted.unique_ids]
+            .add(coal.astype(jnp.float32), mode="drop")
+        )
+        d_table = d_table.astype(witness.dtype)
+        if dp_axes:
+            # DP grad reduction of the (V_l, d) shard — in table dtype (bf16
+            # wire), the only collective of the whole embedding backward
+            d_table = jax.lax.psum(d_table, dp_axes)
+        return d_table, _int_cotangent(ids)
+
+    local_embed.defvjp(fwd, bwd)
+    return local_embed
+
+
+def tc_embed_sharded(table: Array, token_ids: Array, *, axis: str = "model") -> Array:
+    """shard_map TC embedding. table sharded P(axis, None); token_ids and the
+    output batch-sharded over the data axes and replicated over ``axis``.
+    Uses the ambient (abstract) mesh — call under jit with a mesh context."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if dp else None
+    # vma checking ON: the psum makes the output provably replicated over
+    # ``axis``, which the transpose needs to produce an exact cotangent
+    # (with checking off each shard would receive d_out / axis_size).
+    fn = jax.shard_map(
+        _make_local_embed(axis, dp),
+        mesh=mesh,
+        in_specs=(P(axis, None), P(dp_spec, None)),
+        out_specs=P(dp_spec, None, None),
+    )
+    return fn(table, token_ids)

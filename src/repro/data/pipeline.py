@@ -1,0 +1,120 @@
+"""Host input pipeline: background prefetch + the CastingServer.
+
+The paper's runtime (Fig. 9b) hides the casting stage (Alg. 2 sort + scan)
+by running it on the idle GPU during the CPU's forward gather-reduce. The
+TPU adaptation: the *host* input pipeline computes the casted index arrays
+one step ahead of the device, in a background thread, so the device-side
+backward pass receives precomputed (casted_src, casted_dst, unique_ids) as
+ordinary inputs and never pays the sort latency on the critical path.
+
+``numpy_tensor_casting`` mirrors core.casting.tensor_casting exactly
+(tested for equivalence) — it is the host-side implementation.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+def numpy_tensor_casting(src: np.ndarray, dst: np.ndarray, fill_id: int) -> dict:
+    """Host-side Alg. 2 (stable sort-by-key on src)."""
+    order = np.argsort(src, kind="stable")
+    sorted_src = src[order]
+    casted_src = dst[order].astype(np.int32)
+    n = src.shape[0]
+    boundary = np.empty(n, np.int32)
+    boundary[0] = 1
+    boundary[1:] = (sorted_src[1:] != sorted_src[:-1]).astype(np.int32)
+    casted_dst = np.cumsum(boundary, dtype=np.int32) - 1
+    num_unique = int(casted_dst[-1]) + 1 if n else 0
+    unique_ids = np.full(n, fill_id, np.int32)
+    unique_ids[casted_dst] = sorted_src
+    return {
+        "casted_src": casted_src,
+        "casted_dst": casted_dst,
+        "unique_ids": unique_ids,
+        "num_unique": np.int32(num_unique),
+    }
+
+
+class CastingServer:
+    """Attaches casted index arrays to each batch (host-side, off the device
+    critical path). For LM batches casts the flattened token ids; for DLRM
+    batches casts every table's (src, dst) pair."""
+
+    def __init__(self, *, vocab_size: int = 0, rows_per_table: int = 0):
+        self.vocab_size = vocab_size
+        self.rows_per_table = rows_per_table
+
+    def __call__(self, batch: dict) -> dict:
+        out = dict(batch)
+        if "tokens" in batch:
+            flat = batch["tokens"].reshape(-1)
+            dst = np.arange(flat.shape[0], dtype=np.int32)
+            out["cast"] = numpy_tensor_casting(flat, dst, fill_id=self.vocab_size)
+        if "idx" in batch:
+            B, T, P = batch["idx"].shape
+            dst = np.repeat(np.arange(B, dtype=np.int32), P)
+            casts = [
+                numpy_tensor_casting(batch["idx"][:, t, :].reshape(-1), dst, fill_id=self.rows_per_table)
+                for t in range(T)
+            ]
+            out["cast"] = {
+                k: np.stack([c[k] for c in casts]) for k in casts[0]
+            }
+        return out
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded queue (depth steps ahead).
+
+    The produce function runs on the host while the device executes the
+    previous step — this is where CastingServer's work overlaps with forward
+    compute, the paper's Fig. 9b timeline."""
+
+    def __init__(self, produce: Callable[[int], dict], *, depth: int = 2, start_step: int = 0):
+        self._produce = produce
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        try:
+            while not self._stop.is_set():
+                item = self._produce(step)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, item), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+        except BaseException as e:  # surfaced on next get()
+            self._exc = e
+
+    def get(self) -> tuple[int, dict]:
+        while True:
+            if self._exc is not None:
+                raise self._exc
+            try:
+                return self._q.get(timeout=0.1)
+            except queue.Empty:
+                if not self._thread.is_alive() and self._exc is None:
+                    raise RuntimeError("prefetch thread died")
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

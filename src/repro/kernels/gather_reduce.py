@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: sorted tensor gather-reduce.
+
+This is the paper's unified primitive — it executes BOTH the forward
+embedding gather-reduce AND (after Tensor Casting) the backward gradient
+coalesce, i.e. the role the NMP core plays in Fig. 11 of the paper.
+
+    out[s] = sum_{i : dst[i] == s} values[src[i]]        dst non-decreasing
+
+Datapath (TPU adaptation of the NMP core):
+  * ``src``/``dst`` live in SMEM via scalar prefetch — the analogue of the
+    CISC instruction metadata the NMP controller receives.
+  * each grid step DMAs one gathered row HBM->VMEM through the input
+    BlockSpec index_map (rank-granularity gather in the paper),
+  * reduction happens in the VPU against a VMEM-resident output block that
+    is *revisited* across consecutive grid steps of the same segment —
+    valid only because Tensor Casting guarantees ``dst`` is sorted. The
+    block is flushed to HBM exactly once per segment: the 2x traffic saving
+    the paper proves for casted coalescing appears here structurally (no
+    materialized expanded tensor, one write per output row).
+
+Output blocks for segments that receive no rows (index >= num_unique
+padding) are never visited and hold garbage — callers mask or drop them
+(see ops.gather_reduce).
+
+A blocked variant that reduces R rows per step on the MXU via a one-hot
+boundary matmul lives in ``gather_reduce_mxu.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ref, dst_ref, values_ref, out_ref):
+    i = pl.program_id(0)
+    row = values_ref[...]
+    is_new_segment = jnp.logical_or(i == 0, dst_ref[i] != dst_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(is_new_segment)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(jnp.logical_not(is_new_segment))
+    def _accum():
+        out_ref[...] += row
+
+
+@partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def gather_reduce_pallas(
+    values: Array,
+    src: Array,
+    dst: Array,
+    *,
+    num_segments: int,
+    interpret: bool = False,
+) -> Array:
+    """Sorted gather-reduce. ``dst`` MUST be non-decreasing.
+
+    values: (n_rows, D); src, dst: (n,) int32. Returns (num_segments, D);
+    segments that receive no rows are unspecified (padding — mask or drop).
+    """
+    n = src.shape[0]
+    d = values.shape[-1]
+    if n == 0:
+        return jnp.zeros((num_segments, d), values.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, src_ref, dst_ref: (src_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, src_ref, dst_ref: (dst_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), values.dtype),
+        interpret=interpret,
+    )(src.astype(jnp.int32), dst.astype(jnp.int32), values)

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: MXU-blocked sorted segment reduction.
+
+Design study vs the one-row-per-step kernel in ``gather_reduce.py``:
+
+  * ``gather_reduce.py`` fuses gather + reduce in ONE HBM pass but issues one
+    (1, D) DMA per grid step — latency-bound for small D (the paper's NMP
+    core has the same property: per-64B-row access).
+  * This kernel trades a second pass for MXU utilization: rows are
+    pre-gathered into sorted order (XLA dynamic-gather, bandwidth-bound),
+    then reduced R rows per grid step with a one-hot boundary matmul
+    ``OneHot(local_seg)ᵀ @ rows`` — the coalesce itself runs on the systolic
+    array (the TPU-native answer to the paper's NMP vector ALU).
+
+Alignment contract (produced host-side by ``align_blocks_np`` — the casting
+stage already runs on the host per the paper's Fig. 9b, so the aligner is
+part of the same precomputed metadata):
+  * rows are grouped into R-row input blocks; every input block maps to
+    exactly ONE output block of SB segments (spans padded to R with zero
+    rows), so the output BlockSpec revisits consecutively — same invariant
+    Tensor Casting's sortedness gives the row-wise kernel.
+  * ``local_seg[i]`` = dst[i] - SB * out_block[i // R], in [0, SB).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def align_blocks_np(dst: np.ndarray, num_segments: int, *, R: int = 8, SB: int = 8) -> dict:
+    """Host-side block aligner. dst: sorted segment ids (n,).
+
+    Returns gather order (indices into the pre-gather row list, padding =
+    n -> caller appends a zero row), local segment ids, and the output block
+    id per input block. Output length is a multiple of R.
+    """
+    n = dst.shape[0]
+    out_order, out_loc, out_blk = [], [], []
+    num_out_blocks = -(-num_segments // SB)
+    for k in range(num_out_blocks):
+        lo = np.searchsorted(dst, k * SB, side="left")
+        hi = np.searchsorted(dst, (k + 1) * SB, side="left")
+        span = hi - lo
+        if span == 0:
+            continue
+        pad = (-span) % R
+        out_order.extend(range(lo, hi))
+        out_order.extend([n] * pad)  # zero row sentinel
+        out_loc.extend((dst[lo:hi] - k * SB).tolist())
+        out_loc.extend([0] * pad)
+        out_blk.extend([k] * ((span + pad) // R))
+    return {
+        "order": np.asarray(out_order, np.int32),
+        "local_seg": np.asarray(out_loc, np.int32),
+        "out_block": np.asarray(out_blk, np.int32),
+    }
+
+
+def _kernel(blk_ref, local_ref, x_ref, out_ref, *, R: int, SB: int):
+    i = pl.program_id(0)
+    x = x_ref[...]  # (R, D) rows, already gathered into sorted order
+    loc = local_ref[0, :]  # (R,) local segment ids in [0, SB), VMEM-tiled
+    onehot = (
+        loc[None, :] == jax.lax.broadcasted_iota(jnp.int32, (SB, R), 0)
+    ).astype(x.dtype)
+    part = jnp.dot(onehot, x, preferred_element_type=jnp.float32).astype(out_ref.dtype)
+    is_new = jnp.logical_or(i == 0, blk_ref[i] != blk_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(is_new)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(jnp.logical_not(is_new))
+    def _accum():
+        out_ref[...] += part
+
+
+@partial(jax.jit, static_argnames=("num_segments", "R", "SB", "interpret"))
+def segment_sum_mxu_pallas(
+    rows: Array,
+    local_seg: Array,
+    out_block: Array,
+    *,
+    num_segments: int,
+    R: int = 8,
+    SB: int = 8,
+    interpret: bool = False,
+) -> Array:
+    """rows: (N', D) block-aligned pre-gathered rows (padding rows zero);
+    local_seg: (N',) int32; out_block: (N'/R,) int32 non-decreasing.
+    Returns (ceil(num_segments/SB)*SB, D); unvisited blocks unspecified."""
+    n, d = rows.shape
+    assert n % R == 0
+    num_out = -(-num_segments // SB) * SB
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # out_block only; local_seg streams via VMEM
+        grid=(n // R,),
+        in_specs=[
+            pl.BlockSpec((1, R), lambda i, blk_ref: (i, 0)),  # local_seg tile
+            pl.BlockSpec((R, d), lambda i, blk_ref: (i, 0)),  # row block
+        ],
+        out_specs=pl.BlockSpec((SB, d), lambda i, blk_ref: (blk_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        partial(_kernel, R=R, SB=SB),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_out, d), rows.dtype),
+        interpret=interpret,
+    )(out_block.astype(jnp.int32), local_seg.astype(jnp.int32).reshape(-1, R), rows)
+
+
+def gather_reduce_mxu(
+    values: Array,
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_segments: int,
+    *,
+    R: int = 8,
+    SB: int = 8,
+    interpret: bool = False,
+) -> Array:
+    """Two-pass gather-reduce: XLA row gather (+zero pad row) then the MXU
+    segment-sum kernel. src/dst are host metadata (numpy) — matching the
+    paper's host-side casting stage."""
+    meta = align_blocks_np(np.asarray(dst), num_segments, R=R, SB=SB)
+    padded = jnp.concatenate([values, jnp.zeros((1, values.shape[-1]), values.dtype)])
+    gather_ids = np.where(meta["order"] == len(src), len(values), np.asarray(src)[np.minimum(meta["order"], len(src) - 1)])
+    rows = jnp.take(padded, jnp.asarray(gather_ids), axis=0)
+    out = segment_sum_mxu_pallas(
+        rows,
+        jnp.asarray(meta["local_seg"]),
+        jnp.asarray(meta["out_block"]),
+        num_segments=num_segments,
+        R=R,
+        SB=SB,
+        interpret=interpret,
+    )
+    return out[:num_segments]

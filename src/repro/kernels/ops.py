@@ -1,0 +1,110 @@
+"""jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+Dispatch modes:
+  * ``auto``             — Mosaic kernel on TPU, jnp reference on CPU/GPU.
+  * ``pallas``           — force compiled Pallas (TPU only).
+  * ``pallas_interpret`` — Pallas interpreter (CPU-validatable kernel body).
+  * ``jnp``              — pure reference (also the dry-run lowering path).
+
+The module-level default can be overridden per call or globally via
+``set_default_mode`` (tests pin ``pallas_interpret``; the multi-pod dry-run
+pins ``jnp`` so CPU lowering of full-size models never routes through the
+interpreter's per-row loop).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.kernels import ref
+from repro.kernels.gather_reduce import gather_reduce_pallas
+from repro.kernels.scatter_apply import scatter_apply_adagrad_pallas
+
+_DEFAULT_MODE = "auto"
+_VALID_MODES = ("auto", "pallas", "pallas_interpret", "jnp")
+
+
+def set_default_mode(mode: str) -> None:
+    global _DEFAULT_MODE
+    if mode not in _VALID_MODES:
+        raise ValueError(f"mode must be one of {_VALID_MODES}, got {mode!r}")
+    _DEFAULT_MODE = mode
+
+
+def get_default_mode() -> str:
+    return _DEFAULT_MODE
+
+
+def _resolve(mode: Optional[str]) -> str:
+    mode = mode or _DEFAULT_MODE
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+def gather_reduce(
+    values: Array,
+    src: Array,
+    dst: Array,
+    num_segments: Optional[int] = None,
+    *,
+    num_valid: Optional[Array] = None,
+    mode: Optional[str] = None,
+) -> Array:
+    """Unified sorted gather-reduce: out[s] = sum_{dst[i]==s} values[src[i]].
+
+    ``dst`` non-decreasing (Tensor Casting invariant). ``num_valid`` — when
+    given, rows >= num_valid are forced to zero (the Pallas kernel leaves
+    never-visited padding segments unspecified; jnp already zeroes them).
+    """
+    if num_segments is None:
+        num_segments = src.shape[0]
+    resolved = _resolve(mode)
+    if resolved == "jnp":
+        out = ref.gather_reduce_ref(values, src, dst, num_segments)
+    else:
+        out = gather_reduce_pallas(
+            values, src, dst, num_segments=num_segments,
+            interpret=(resolved == "pallas_interpret"),
+        )
+        if num_valid is not None:
+            valid = jnp.arange(num_segments) < num_valid
+            out = jnp.where(valid[:, None], out, 0)
+    return out
+
+
+def scatter_apply_adagrad(
+    table: Array,
+    accum: Array,
+    ids: Array,
+    grads: Array,
+    lr,
+    *,
+    mode: Optional[str] = None,
+) -> tuple[Array, Array]:
+    """Fused row-wise Adagrad sparse update on a sentinel-padded table.
+
+    table: (V+1, D) — row V is dead padding. accum: (V+1, 1) fp32.
+    ids: (n,) sorted; real entries unique; padding points at row V w/ g=0.
+    """
+    resolved = _resolve(mode)
+    if resolved == "jnp":
+        new_table, new_accum = ref.scatter_apply_adagrad_ref(
+            table, accum[:, 0], ids, grads, lr=float(lr) if not isinstance(lr, jax.Array) else lr
+        )
+        return new_table, new_accum[:, None]
+    return scatter_apply_adagrad_pallas(
+        table, accum, ids, grads, lr, interpret=(resolved == "pallas_interpret")
+    )
+
+
+def pad_rows(x: Array, multiple: int) -> Array:
+    """Pad leading dim up to a multiple (hardware-aligned grid sizes)."""
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics the kernels are tested against (assert_allclose
+across shape/dtype sweeps in tests/test_kernels.py) and serve as the CPU
+dispatch path in ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def gather_reduce_ref(values: Array, src: Array, dst: Array, num_segments: int | None = None) -> Array:
+    """out[s] = sum_{i: dst[i]==s} values[src[i]].
+
+    ``dst`` is non-decreasing (guaranteed by Tensor Casting); the reference
+    does not rely on that, the kernel does.
+    """
+    if num_segments is None:
+        num_segments = src.shape[0]
+    rows = jnp.take(values, src, axis=0)
+    return jax.ops.segment_sum(rows, dst, num_segments=num_segments)
+
+
+def scatter_apply_adagrad_ref(
+    table: Array,
+    accum: Array,
+    ids: Array,
+    grads: Array,
+    *,
+    lr: float,
+    eps: float = 1e-10,
+) -> tuple[Array, Array]:
+    """Fused row-wise Adagrad applied to coalesced rows (paper Eq. 2).
+
+    ``ids`` are unique (duplicates only as zero-grad padding); row-wise
+    Adagrad keeps one accumulator scalar per table row (mean of g^2).
+
+      A[r] += mean(g_r^2);  W[r] -= lr * g_r / sqrt(A[r] + eps)
+    """
+    g2 = jnp.mean(jnp.square(grads.astype(jnp.float32)), axis=-1)
+    new_accum = accum.at[ids].add(g2, mode="drop")
+    scale = lr / jnp.sqrt(jnp.take(new_accum, ids, mode="clip") + eps)
+    upd = grads.astype(jnp.float32) * scale[:, None]
+    new_table = table.at[ids].add((-upd).astype(table.dtype), mode="drop")
+    return new_table, new_accum
+
+
+def scatter_apply_sgd_ref(table: Array, ids: Array, grads: Array, *, lr: float) -> Array:
+    """Plain SGD scatter-update (the paper's 'gradient scatter' primitive)."""
+    return table.at[ids].add((-lr * grads.astype(jnp.float32)).astype(table.dtype), mode="drop")

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused sparse row-wise optimizer scatter-update.
+
+The paper's third hot primitive (gradient scatter, Fig. 2b) runs on the same
+NMP gather-scatter datapath as gather-reduce, "just in the opposite
+direction" (§IV-C). Here: same scalar-prefetched row-id metadata, same
+(1, D) row DMA — but the block is read-modify-written back into the
+embedding table in place (input_output_aliasing), fused with the row-wise
+Adagrad update (paper Eq. 2):
+
+    A[r] += mean(g_r^2);   W[r] -= lr * g_r / rsqrt-free sqrt(A[r] + eps)
+
+Contract (enforced by ops.scatter_apply_adagrad):
+  * ``ids`` sorted; real entries unique; padding entries all point at the
+    table's dead sentinel row (row V of a (V+1, D) table) and carry g = 0.
+  * tables in the sparse-update path are allocated with the sentinel row.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, grads_ref, table_ref, accum_ref, lr_ref, out_table_ref, out_accum_ref):
+    g = grads_ref[...].astype(jnp.float32)
+    a = accum_ref[...] + jnp.mean(jnp.square(g))
+    lr = lr_ref[0]
+    w = table_ref[...].astype(jnp.float32) - lr * g / jnp.sqrt(a + 1e-10)
+    out_table_ref[...] = w.astype(out_table_ref.dtype)
+    out_accum_ref[...] = a
+
+
+# NOTE: donation is left to the caller's train-step jit; donating here would
+# invalidate the caller's handle to the old table between steps.
+@partial(jax.jit, static_argnames=("interpret",))
+def scatter_apply_adagrad_pallas(
+    table: Array,
+    accum: Array,
+    ids: Array,
+    grads: Array,
+    lr: Array,
+    *,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """table: (V+1, D) — last row is the dead padding row. accum: (V+1, 1)
+    f32. ids: (n,) int32 sorted, unique except sentinel padding. grads:
+    (n, D) coalesced. Returns (new_table, new_accum)."""
+    n, d = grads.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),  # grads
+            pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),  # table row
+            pl.BlockSpec((1, 1), lambda i, ids_ref: (ids_ref[i], 0)),  # accum row
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lr scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(table.shape, table.dtype),
+            jax.ShapeDtypeStruct(accum.shape, accum.dtype),
+        ],
+        # read-modify-write in place: the table/accum rows not touched by any
+        # grid step keep their prior contents.
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(ids.astype(jnp.int32), grads, table, accum, jnp.asarray([lr], jnp.float32))

@@ -1,0 +1,79 @@
+"""Compiled-artifact analysis: collective-byte extraction from post-SPMD
+HLO and the three-term roofline (v5e constants). No jax device-state side
+effects — importable from tests and benchmarks."""
+from __future__ import annotations
+
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"(?:ROOT )?%?[\w.\-]+ = (\(?.*?\)?) (\w[\w\-]*)\(")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Result shape = per-participant payload; a conservative proxy for wire
+    bytes (a ring all-reduce moves ~2x this)."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line.strip())
+        if not m:
+            continue
+        shape_txt, opname = m.groups()
+        base = next(
+            (k for k in COLLECTIVE_OPS if opname == k or opname == f"{k}-start"), None
+        )
+        if base is None:
+            continue
+        out[base]["count"] += 1
+        out[base]["bytes"] += shape_bytes(shape_txt)
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, collective_bytes: float, n_dev: int) -> dict:
+    """Three-term roofline. ``flops``/``bytes_accessed`` come from
+    compiled.cost_analysis() which on an SPMD module reports the PER-DEVICE
+    program, so the spec's HLO_FLOPs/(chips*peak) == flops/peak here.
+    ``collective_bytes`` is likewise parsed from the per-device program."""
+    terms = {
+        "flops_global": flops * n_dev,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": collective_bytes / ICI_BW,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    terms["step_time_lb_s"] = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    if terms["step_time_lb_s"] > 0:
+        terms["roofline_fraction"] = terms["compute_s"] / terms["step_time_lb_s"]
+    else:
+        terms["roofline_fraction"] = 0.0
+    return terms

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape-cell) on the
+production meshes, extract memory / cost / collective statistics.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run is allowed to see 512 host devices.
+
+For each cell this emits one JSON record under ``experiments/dryrun/``:
+  * memory_analysis (per-device bytes: args/outputs/temps/peak)
+  * cost_analysis   (HLO flops / bytes accessed)
+  * collective_bytes by op kind (parsed from post-SPMD HLO)
+  * MODEL_FLOPS (6*N*D analytic) and roofline terms for v5e constants
+Runs are resumable: existing JSONs are skipped unless --force.
+
+(No ``from __future__`` import here: the XLA_FLAGS lines must be the first
+statements in the file.)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs  # registry
+from repro.configs.base import SHAPE_CELLS, get_config, shape_cells_for
+from repro.dist import sharding as shd
+from repro.kernels import ops as kops
+from repro.launch.analysis import collective_stats, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim.optimizers import adam, apply_updates
+
+ARCHS = [
+    "pixtral-12b",
+    "qwen2-0.5b",
+    "gemma-7b",
+    "qwen2-72b",
+    "starcoder2-15b",
+    "moonshot-v1-16b-a3b",
+    "olmoe-1b-7b",
+    "zamba2-1.2b",
+    "musicgen-large",
+    "xlstm-350m",
+]
+
+def _apply_variant(cfg, variant: str):
+    """Named lowering variants for the §Perf hillclimb."""
+    if variant == "base":
+        return cfg, {}
+    if variant == "nosp":  # sequence parallelism off (ablation)
+        return cfg, {"seq_parallel": False}
+    if variant == "chunk512":
+        return dataclasses.replace(cfg, loss_chunk=512), {}
+    if variant == "chunk8k":
+        return dataclasses.replace(cfg, loss_chunk=8192), {}
+    if variant == "noremat":
+        return dataclasses.replace(cfg, remat=False), {}
+    if variant == "shardmap_embed":
+        return cfg, {"shardmap_embed": True}
+    if variant == "moe_local":
+        return dataclasses.replace(cfg, moe_dispatch="local"), {}
+    if variant == "moe_local+shardmap_embed":
+        return dataclasses.replace(cfg, moe_dispatch="local"), {"shardmap_embed": True}
+    if variant == "kv_int8":
+        return dataclasses.replace(cfg, kv_cache_dtype="int8"), {}
+    if variant == "combo":  # best-of: shardmap embed + no SP + 512 loss chunk
+        return dataclasses.replace(cfg, loss_chunk=512), {
+            "shardmap_embed": True,
+            "seq_parallel": False,
+        }
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def build_step(cfg, cell: str, variant_flags: dict):
+    """Returns (step_fn, abstract_args, donate) for one cell kind."""
+    seq, batch, kind = SHAPE_CELLS[cell]
+    specs = api.input_specs(cfg, cell)
+    key = jax.random.key(0)
+    params_abs = jax.eval_shape(partial(api.init_params, cfg), key)
+
+    if kind == "train":
+        opt = adam(3e-4)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+
+        def step(params, opt_state, batch):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: api.train_loss(cfg, p, batch), has_aux=True
+            )(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return step, (params_abs, opt_abs, specs), (0, 1)
+
+    if kind == "prefill":
+        cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, batch, seq, jnp.bfloat16))
+
+        def step(params, tokens, cache, prefix=None):
+            kw = {} if prefix is None else {"prefix_embeds": prefix}
+            if cfg.family in ("hybrid", "ssm"):
+                return api.prefill_step(cfg, params, tokens, cache)
+            return api.prefill_step(cfg, params, tokens, cache, **kw)
+
+        args = (params_abs, specs["tokens"], cache_abs)
+        if "prefix_embeds" in specs:
+            args = args + (specs["prefix_embeds"],)
+        return step, args, (2,)
+
+    if kind == "decode":
+        cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, batch, seq, jnp.bfloat16))
+
+        def step(params, cache, tokens):
+            return api.decode_step(cfg, params, cache, tokens)
+
+        return step, (params_abs, cache_abs, specs["tokens"]), (1,)
+
+    raise ValueError(kind)
+
+
+def shardings_for(mesh, cfg, cell, abstract_args, kind):
+    seq, batch, _ = SHAPE_CELLS[cell]
+    out = []
+    for i, a in enumerate(abstract_args):
+        if kind == "train":
+            if i < 2:
+                out.append(shd.param_shardings(mesh, a))
+            else:
+                out.append(shd.batch_shardings(mesh, a, batch_size=batch))
+        elif kind == "prefill":
+            if i == 0:
+                out.append(shd.param_shardings(mesh, a))
+            elif i == 2:
+                out.append(shd.cache_shardings(mesh, a, batch_size=batch))
+            else:
+                out.append(shd.batch_shardings(mesh, a, batch_size=batch))
+        else:  # decode
+            if i == 0:
+                out.append(shd.param_shardings(mesh, a))
+            elif i == 1:
+                out.append(shd.cache_shardings(mesh, a, batch_size=batch))
+            else:
+                out.append(shd.batch_shardings(mesh, a, batch_size=batch))
+    return tuple(out)
+
+
+def model_flops(cfg, cell: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd-only), N = active params."""
+    seq, batch, kind = SHAPE_CELLS[cell]
+    n = cfg.active_param_count()
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def run_cell(arch: str, cell: str, mesh_kind: str, variant: str, out_dir: str, force: bool,
+             dump_hlo: bool = False):
+    out_path = os.path.join(out_dir, mesh_kind, f"{arch}__{cell}__{variant}.json")
+    if os.path.exists(out_path) and not force:
+        prev = json.load(open(out_path))
+        if prev.get("status") in ("OK", "SKIP"):  # FAILs always retry
+            print(f"[dryrun] skip existing {out_path}")
+            return prev
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+
+    cfg = get_config(arch)
+    if cell == "long_500k" and not cfg.supports_long_context:
+        rec = {"arch": arch, "cell": cell, "mesh": mesh_kind, "variant": variant,
+               "status": "SKIP", "reason": "full-attention long-context (see DESIGN.md)"}
+        json.dump(rec, open(out_path, "w"), indent=1)
+        print(f"[dryrun] {arch} {cell}: SKIP (full attention)")
+        return rec
+
+    cfg, flags = _apply_variant(cfg, variant)
+    seq, batch, kind = SHAPE_CELLS[cell]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    kops.set_default_mode("jnp")  # CPU lowering path for kernels
+
+    use_sp = flags.get("seq_parallel", kind in ("train", "prefill") and cfg.family in ("dense", "moe", "vlm", "audio"))
+    tp = mesh.shape["model"]
+    use_attn_tp = flags.get(
+        "attn_tp",
+        cfg.family == "dlrm" or shd.attn_tp_valid(cfg.num_heads, cfg.num_kv_heads, tp),
+    )
+    t0 = time.time()
+    rec = {"arch": arch, "cell": cell, "mesh": mesh_kind, "variant": variant,
+           "seq": seq, "batch": batch, "kind": kind,
+           "seq_parallel": use_sp, "attn_tp": use_attn_tp}
+    try:
+        with shd.attn_tp(use_attn_tp), shd.serving(kind != "train"):
+            step, abstract_args, donate = build_step(cfg, cell, flags)
+            in_sh = shardings_for(mesh, cfg, cell, abstract_args, kind)
+        # NB: `with mesh:` alone does NOT seed jax.sharding.get_abstract_mesh();
+        # without use_abstract_mesh every with_sharding_constraint in the model
+        # would silently no-op (validated in tests/test_dryrun.py).
+        with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh), \
+                shd.seq_parallel(use_sp), shd.serving(kind != "train"), \
+                shd.attn_tp(use_attn_tp), shd.shardmap_embed(flags.get("shardmap_embed", False)):
+            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jitted.lower(*abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        n_dev = mesh.devices.size
+        if dump_hlo:
+            import gzip
+
+            with gzip.open(out_path.replace(".json", ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        mf = model_flops(get_config(arch), cell)
+        terms = roofline_terms(flops, bytes_acc, coll["total_bytes"], n_dev)
+        rec.update(
+            status="OK",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            devices=n_dev,
+            memory={
+                k: getattr(mem, k, None)
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                    "peak_memory_in_bytes",
+                )
+            } if mem is not None else None,
+            cost={"flops_per_device": flops, "bytes_accessed_per_device": bytes_acc},
+            collectives=coll,
+            model_flops=mf,
+            useful_flops_ratio=(mf / (flops * n_dev) if flops else None),
+            roofline=terms,
+        )
+        print(
+            f"[dryrun] {arch} {cell} {mesh_kind}/{variant}: OK "
+            f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+            f"flops {flops:.3g}, coll {coll['total_bytes']:.3g}B, "
+            f"bottleneck {terms['bottleneck']})"
+        )
+    except Exception as e:  # record the failure; the driver keeps going
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch} {cell} {mesh_kind}/{variant}: FAIL {type(e).__name__}: {e}")
+    json.dump(rec, open(out_path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--cell", default="all", help="shape cell or 'all'")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--dump-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            cells = list(SHAPE_CELLS) if args.cell == "all" else [args.cell]
+            for cell in cells:
+                rec = run_cell(arch, cell, mesh_kind, args.variant, args.out, args.force,
+                               dump_hlo=args.dump_hlo)
+                n_fail += rec.get("status") == "FAIL"
+    print(f"[dryrun] done, failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

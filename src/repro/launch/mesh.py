@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so tests importing repro.* see the single real
+device; only dryrun.py sets the 512-device host-platform flag).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod: (pod=2,
+    data=16, model=16) = 512 chips; ``pod`` composes with ``data`` for DP.
+    Scaling to N pods is the pod-axis length — no code change."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devs)} — dry-run "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax"
+        )
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """Small helper for tests (e.g. (2,4)/(data,model) on 8 fake devices)."""
+    need = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need])

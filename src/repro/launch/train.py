@@ -1,0 +1,69 @@
+"""Training launcher CLI.
+
+CPU/demo:     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke --steps 20
+Pod (TPU):    python -m repro.launch.train --arch gemma-7b --mesh pod
+Multi-pod:    python -m repro.launch.train --arch qwen2-72b --mesh multipod
+
+On real hardware the mesh axes map onto the physical slice topology; on CPU
+the launcher runs the smoke config on the single local device. The same
+train loop serves both (mesh-agnostic; shardings enter at the jit boundary).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.data.synth import ZipfTokenStream
+from repro.optim import adam
+from repro.runtime.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="none", choices=["none", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", default="none", choices=["none", "bf16", "int8"])
+    ap.add_argument("--zipf", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke or args.mesh == "none")
+    stream = ZipfTokenStream(
+        vocab_size=cfg.vocab_size, batch=args.batch, seq=args.seq, s=args.zipf, seed=args.seed
+    )
+
+    def run():
+        state = train(
+            cfg,
+            adam(args.lr, clip=1.0),
+            stream,
+            num_steps=args.steps,
+            ckpt_dir=args.ckpt_dir or None,
+            ckpt_every=args.ckpt_every,
+            compression=args.compression,
+            seed=args.seed,
+        )
+        print(f"[launch.train] done at step {state.step}")
+
+    if args.mesh == "none":
+        run()
+    else:
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+        with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+            run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Unified model API: dispatch by config family.
+
+Every arch exposes the same five entry points regardless of family:
+  init_params(cfg, key)                       -> params pytree
+  train_loss(cfg, params, batch)              -> (loss, metrics)
+  init_cache(cfg, batch, max_len)             -> decode cache pytree
+  prefill_step(cfg, params, tokens, cache)    -> (logits, cache)
+  decode_step(cfg, params, cache, tokens)     -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig, ModelConfig
+from repro.models import dlrm as _dlrm
+from repro.models import hybrid as _hybrid
+from repro.models import ssm_lm as _ssm
+from repro.models import transformer as _tf
+
+_ATTENTION_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def _mod(cfg):
+    if isinstance(cfg, DLRMConfig) or getattr(cfg, "family", None) == "dlrm":
+        return _dlrm
+    if cfg.family in _ATTENTION_FAMILIES:
+        return _tf
+    if cfg.family == "hybrid":
+        return _hybrid
+    if cfg.family == "ssm":
+        return _ssm
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_params(cfg, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def train_loss(cfg, params, batch):
+    if isinstance(cfg, DLRMConfig):
+        return _dlrm.train_loss(cfg, params, batch)
+    return _mod(cfg).train_loss(cfg, params, batch)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    m = _mod(cfg)
+    return m.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill_step(cfg, params, tokens, cache, **kw):
+    return _mod(cfg).prefill_step(cfg, params, tokens, cache, **kw)
+
+
+def decode_step(cfg, params, cache, tokens):
+    return _mod(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def input_specs(cfg, shape_cell: str):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell —
+    the dry-run contract (no allocation, weak-type-correct, shardable)."""
+    import jax
+
+    from repro.configs.base import SHAPE_CELLS
+
+    seq, batch, kind = SHAPE_CELLS[shape_cell]
+    i32 = jnp.int32
+    if isinstance(cfg, DLRMConfig):
+        if kind != "train":
+            raise ValueError("DLRM configs only define the train cell")
+        batch = 4096  # paper's nominal large-batch regime (§VI-D)
+        return {
+            "dense": jax.ShapeDtypeStruct((batch, cfg.dense_features), jnp.float32),
+            "idx": jax.ShapeDtypeStruct((batch, cfg.num_tables, cfg.gathers_per_table), i32),
+            "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        }
+    n_pre = cfg.frontend_tokens
+    if kind == "train":
+        batch_d = {"tokens": jax.ShapeDtypeStruct((batch, seq - n_pre), i32)}
+        if n_pre:
+            batch_d["prefix_embeds"] = jax.ShapeDtypeStruct((batch, n_pre, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch_d
+    if kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((batch, seq - n_pre), i32)}
+        if n_pre:
+            d["prefix_embeds"] = jax.ShapeDtypeStruct((batch, n_pre, cfg.d_model), jnp.dtype(cfg.dtype))
+        return d
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+    raise ValueError(kind)

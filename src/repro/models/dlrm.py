@@ -1,0 +1,107 @@
+"""DLRM (Naumov et al.) — the paper's workload (Table II: RM1–RM4).
+
+Structure: dense features -> bottom MLP; T embedding tables each gathered
+P times per sample and sum-pooled (multi-hot); pairwise dot-product feature
+interaction; top MLP -> CTR logit.
+
+``embedding_mode`` selects the paper's comparison:
+  * "baseline" — plain take + segment_sum; autodiff produces the framework's
+    gradient expand-coalesce (XLA unsorted scatter-add), i.e. the
+    CPU-centric baseline of Fig. 4.
+  * "tc"       — Tensor-Casted embedding bags (custom_vjp coalesced bwd).
+The fully sparse trainer (scatter_apply kernel, no dense table grads) lives
+in ``repro.runtime.dlrm_train``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import DLRMConfig
+from repro.core.casting import pooled_lookup_indices
+from repro.core.embedding import tc_embedding_bag
+from repro.dist.sharding import constrain
+
+Params = dict[str, Any]
+
+
+def _init_mlp(key, sizes: tuple[int, ...], dtype) -> Params:
+    ks = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"w{i}": (jax.random.normal(ks[i], (sizes[i], sizes[i + 1])) * sizes[i] ** -0.5).astype(dtype)
+        for i in range(len(sizes) - 1)
+    } | {f"b{i}": jnp.zeros((sizes[i + 1],), dtype) for i in range(len(sizes) - 1)}
+
+
+def _apply_mlp(p: Params, x: Array, *, final_act: bool) -> Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def top_input_dim(cfg: DLRMConfig) -> int:
+    f = cfg.num_tables + 1
+    return cfg.emb_dim + f * (f - 1) // 2
+
+
+def init_params(cfg: DLRMConfig, key, *, sentinel_row: bool = False) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    kb, kt, ke = jax.random.split(key, 3)
+    rows = cfg.rows_per_table + (1 if sentinel_row else 0)
+    tables = (
+        jax.random.normal(ke, (cfg.num_tables, rows, cfg.emb_dim)) * cfg.emb_dim**-0.5
+    ).astype(dt)
+    return {
+        "bot_mlp": _init_mlp(kb, (cfg.dense_features,) + cfg.bottom_mlp, dt),
+        "tables": tables,
+        "top_mlp": _init_mlp(kt, (top_input_dim(cfg),) + cfg.top_mlp, dt),
+    }
+
+
+def _interact(bot: Array, emb: Array) -> Array:
+    """bot: (B, D); emb: (B, T, D) -> pairwise dots + bottom passthrough."""
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F, D)
+    dots = jnp.einsum("bfd,bgd->bfg", z, z)
+    F = z.shape[1]
+    iu, ju = jnp.triu_indices(F, k=1)
+    flat = dots[:, iu, ju]  # (B, F(F-1)/2)
+    return jnp.concatenate([bot, flat], axis=-1)
+
+
+def _lookup_all(cfg: DLRMConfig, tables: Array, idx: Array, mode: str) -> Array:
+    """idx: (B, T, P) -> pooled (B, T, D)."""
+    B, T, P = idx.shape
+    dst = pooled_lookup_indices(B, P)  # (B*P,) batch-major segment ids
+
+    def one(table, ids):
+        src = ids.reshape(-1)  # (B*P,)
+        if mode == "tc":
+            return tc_embedding_bag(table, src, dst, B)
+        rows = jnp.take(table, src, axis=0)
+        return jax.ops.segment_sum(rows, dst, num_segments=B)
+
+    emb = jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, idx)  # (B, T, D)
+    return emb
+
+
+def forward(cfg: DLRMConfig, params: Params, batch: dict, *, embedding_mode: str = "tc") -> Array:
+    """batch: dense (B, 13) float, idx (B, T, P) int32. Returns CTR logits (B,)."""
+    bot = _apply_mlp(params["bot_mlp"], batch["dense"].astype(params["tables"].dtype), final_act=True)
+    emb = _lookup_all(cfg, params["tables"], batch["idx"], embedding_mode)
+    emb = constrain(emb, "batch", None, "embed")
+    x = _interact(bot, emb)
+    return _apply_mlp(params["top_mlp"], x, final_act=False)[:, 0]
+
+
+def train_loss(cfg: DLRMConfig, params: Params, batch: dict, *, embedding_mode: str = "tc") -> tuple[Array, dict]:
+    logits = forward(cfg, params, batch, embedding_mode=embedding_mode)
+    labels = batch["labels"].astype(jnp.float32)
+    lf = logits.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(lf, 0) - lf * labels + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+    return loss, {"loss": loss}

@@ -1,0 +1,248 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + one *shared* attention block
+applied every ``attn_every`` layers (weight sharing is the arch's signature).
+
+Block layout for L layers, attn_every=k: G = L // k groups of
+(k-1 mamba + shared attn), then (L - G*k) trailing mamba blocks.
+Mamba params are stacked (G, k-1, ...) and scanned; the shared attention
+block's single param set is closed over. Supports the ``long_500k`` cell:
+decode state is O(1) for mamba and the shared-attn KV cache is written per
+group application (G caches, not L).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig
+from repro.core.embedding import init_embedding, tc_embed, tc_embed_sharded
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.transformer import _attn_cfg, _head, lm_loss_from_hidden, logits_from_hidden
+
+Params = dict[str, Any]
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    k = cfg.attn_every
+    groups = cfg.num_layers // k
+    per_group = k - 1
+    tail = cfg.num_layers - groups * k
+    return groups, per_group, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    groups, per_group, tail = _layout(cfg)
+    ke, km, kt, ka, kh = jax.random.split(key, 5)
+
+    def init_mamba_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln": L.init_rmsnorm(cfg.d_model, dt), "mamba": M.init_mamba2(k1, cfg, dt)}
+
+    grouped = jax.vmap(jax.vmap(init_mamba_block))(
+        jax.random.split(km, groups * per_group).reshape(groups, per_group)
+    )
+    k1, k2 = jax.random.split(ka)
+    shared_attn = {
+        "ln_attn": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": L.init_attention(k1, _attn_cfg(cfg), dt),
+        "ln_mlp": L.init_rmsnorm(cfg.d_model, dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dt),
+    }
+    p = {
+        "embed": {"table": init_embedding(ke, cfg.vocab_size, cfg.d_model, dt)},
+        "mamba_groups": grouped,
+        "shared_attn": shared_attn,
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if tail:
+        p["mamba_tail"] = jax.vmap(init_mamba_block)(jax.random.split(kt, tail))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) * cfg.d_model**-0.5).astype(dt)
+    return p
+
+
+def _mamba_block(cfg, p, h):
+    out, cache = M.mamba2_forward(p["mamba"], cfg, L.rmsnorm(p["ln"], h, cfg.norm_eps))
+    return constrain(h + out, "batch", "seq", "embed"), cache
+
+
+def _attn_block(cfg, p, h, positions):
+    a = L.attention(p["attn"], _attn_cfg(cfg), L.rmsnorm(p["ln_attn"], h, cfg.norm_eps), positions)
+    h = h + a
+    m = L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], h, cfg.norm_eps), cfg.mlp_act)
+    return constrain(h + m, "batch", "seq", "embed")
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: Array) -> Array:
+    groups, per_group, tail = _layout(cfg)
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    def group_body(h, group_params):
+        def inner(carry, p):
+            out, _ = _mamba_block(cfg, p, carry)
+            return out, None
+
+        h, _ = jax.lax.scan(inner, h, group_params)
+        return _attn_block(cfg, params["shared_attn"], h, positions)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(lambda c, p: (body(c, p), None), h, params["mamba_groups"])
+    if tail:
+
+        def tail_step(c, p):
+            out, _ = _mamba_block(cfg, p, c)
+            return out, None
+
+        h, _ = jax.lax.scan(tail_step, h, params["mamba_tail"])
+    return L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict) -> tuple[Array, dict]:
+    tokens = batch["tokens"]
+    h = forward_hidden(cfg, params, tokens)
+    targets = tokens[:, 1:]
+    mask = jnp.ones_like(targets, jnp.float32)
+    total = lm_loss_from_hidden(cfg, params, h[:, :-1, :], targets, mask)
+    loss = total / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    groups, per_group, tail = _layout(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    one = M.init_mamba2_cache(cfg, batch, dt)
+    stack = lambda n, tree: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree
+    )
+    c = {
+        "mamba_groups": stack(groups, stack(per_group, one)),
+        "k": jnp.zeros((groups, batch, max_len, KV, hd), dt),
+        "v": jnp.zeros((groups, batch, max_len, KV, hd), dt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if tail:
+        c["mamba_tail"] = stack(tail, one)
+    return c
+
+
+def prefill_step(cfg: ModelConfig, params: Params, tokens: Array, cache: dict) -> tuple[Array, dict]:
+    groups, per_group, tail = _layout(cfg)
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    acfg = _attn_cfg(cfg)
+    max_len = cache["k"].shape[2]
+
+    def group_body(h, xs):
+        group_params, k_c, v_c = xs
+
+        def inner(carry, p):
+            out, mcache = _mamba_block(cfg, p, carry)
+            return out, mcache
+
+        h, mcaches = jax.lax.scan(inner, h, group_params)
+        sp = params["shared_attn"]
+        hn = L.rmsnorm(sp["ln_attn"], h, cfg.norm_eps)
+        q, k, v = L._project_qkv(sp["attn"], acfg, hn)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, 0, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, 0, 0, 0))
+        group = acfg.num_heads // acfg.num_kv_heads
+        scores = L._gqa_scores(q, k, group).astype(jnp.float32) * (acfg.head_dim**-0.5)
+        mask = positions[:, :, None] >= positions[:, None, :]
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+        o = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(B, S, acfg.num_heads * acfg.head_dim)
+        h = h + jnp.einsum("bsf,fd->bsd", o, sp["attn"]["wo"])
+        m = L.mlp(sp["mlp"], L.rmsnorm(sp["ln_mlp"], h, cfg.norm_eps), cfg.mlp_act)
+        return h + m, (mcaches, k_c, v_c)
+
+    h, (mcaches, k_all, v_all) = jax.lax.scan(
+        group_body, h, (params["mamba_groups"], cache["k"][:, :, :S], cache["v"][:, :, :S])
+    )
+    out_cache = {"mamba_groups": mcaches, "pos": jnp.full((B,), S, jnp.int32)}
+    if tail:
+
+        def tail_step(c, p):
+            out, mc = _mamba_block(cfg, p, c)
+            return out, mc
+
+        h, out_cache["mamba_tail"] = jax.lax.scan(tail_step, h, params["mamba_tail"])
+    h_last = L.rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, h_last)
+    out_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_all.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    out_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_all.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    return logits, out_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, tokens: Array) -> tuple[Array, dict]:
+    groups, per_group, tail = _layout(cfg)
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+    B = h.shape[0]
+    pos = cache["pos"]
+    acfg = _attn_cfg(cfg)
+
+    def group_body(h, xs):
+        group_params, mcache_g, k_c, v_c = xs
+
+        def inner(carry, xs2):
+            p, mc = xs2
+            out, mc2 = M.mamba2_decode(p["mamba"], cfg, L.rmsnorm(p["ln"], carry, cfg.norm_eps), mc)
+            return carry + out, mc2
+
+        h, mcache_g = jax.lax.scan(inner, h, (group_params, mcache_g))
+        sp = params["shared_attn"]
+        hn = L.rmsnorm(sp["ln_attn"], h, cfg.norm_eps)
+        a, k_c, v_c = L.decode_attention(sp["attn"], acfg, hn, pos, k_c, v_c)
+        h = h + a
+        m = L.mlp(sp["mlp"], L.rmsnorm(sp["ln_mlp"], h, cfg.norm_eps), cfg.mlp_act)
+        return h + m, (mcache_g, k_c, v_c)
+
+    h, (mg, k_new, v_new) = jax.lax.scan(
+        group_body, h, (params["mamba_groups"], cache["mamba_groups"], cache["k"], cache["v"])
+    )
+    out_cache = {"mamba_groups": mg, "k": k_new, "v": v_new, "pos": pos + 1}
+    if tail:
+
+        def tail_step(carry, xs2):
+            p, mc = xs2
+            out, mc2 = M.mamba2_decode(p["mamba"], cfg, L.rmsnorm(p["ln"], carry, cfg.norm_eps), mc)
+            return carry + out, mc2
+
+        h, out_cache["mamba_tail"] = jax.lax.scan(
+            tail_step, h, (params["mamba_tail"], cache["mamba_tail"])
+        )
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, out_cache

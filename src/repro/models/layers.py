@@ -1,0 +1,198 @@
+"""Shared neural building blocks: RMSNorm, RoPE, GQA attention, gated MLPs.
+
+Pure functional style: every layer is (params_pytree, inputs) -> outputs with
+an ``init_*`` companion. Layer stacks are *stacked* along a leading axis and
+driven by ``jax.lax.scan`` so the lowered HLO stays O(1) in depth — a hard
+requirement for compiling 80-layer configs in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+Params = dict[str, Any]
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = (fan_in**-0.5) if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool
+    rope_theta: float
+
+
+def init_attention(key, cfg: AttnConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    H, KV, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": _dense_init(ks[0], (d, H * hd), dtype),
+        "wk": _dense_init(ks[1], (d, KV * hd), dtype),
+        "wv": _dense_init(ks[2], (d, KV * hd), dtype),
+        "wo": _dense_init(ks[3], (H * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: AttnConfig, x: Array):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KV, hd),
+        v.reshape(B, S, KV, hd),
+    )
+
+
+def _gqa_scores(q: Array, k: Array, group: int) -> Array:
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> (B, KV, group, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, group, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k)
+
+
+def attention(
+    p: Params,
+    cfg: AttnConfig,
+    x: Array,
+    positions: Array,
+    *,
+    kv_override: Optional[tuple[Array, Array]] = None,
+    kv_positions: Optional[Array] = None,
+    causal: bool = True,
+) -> Array:
+    """Full (training/prefill) attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    group = H // KV
+    q, k, v = _project_qkv(p, cfg, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if kv_override is not None:
+        k, v = kv_override
+    scores = _gqa_scores(q, k, group).astype(jnp.float32) * (hd**-0.5)
+    Sk = k.shape[1]
+    q_pos = positions if kv_positions is None else positions
+    k_pos = kv_positions if kv_positions is not None else positions
+    if causal:
+        mask = q_pos[:, :, None] >= k_pos[:, None, :]  # (B, Sq, Sk)
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(B, S, H * hd)
+    return jnp.einsum("bsf,fd->bsd", o, p["wo"])
+
+
+def decode_attention(
+    p: Params,
+    cfg: AttnConfig,
+    x: Array,
+    pos: Array,
+    k_cache: Array,
+    v_cache: Array,
+) -> tuple[Array, Array, Array]:
+    """Single-token decode. x: (B, 1, d); caches: (B, Smax, KV, hd);
+    pos: (B,) current write position. Returns (out, new_k, new_v)."""
+    B, _, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    group = H // KV
+    q, k, v = _project_qkv(p, cfg, x)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    # write new kv at pos
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))
+    k_cache = upd(k_cache, k.astype(k_cache.dtype), pos)
+    v_cache = upd(v_cache, v.astype(v_cache.dtype), pos)
+    Smax = k_cache.shape[1]
+    scores = _gqa_scores(q, k_cache, group).astype(jnp.float32) * (hd**-0.5)
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]  # (B, Smax)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkh->bskgh", w, v_cache).reshape(B, 1, H * hd)
+    return jnp.einsum("bsf,fd->bsd", o, p["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs: swiglu (llama/qwen), geglu (gemma), gelu (plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_down": _dense_init(ks[2], (d_ff, d), dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = _dense_init(ks[0], (d, d_ff), dtype)
+        p["w_up"] = _dense_init(ks[1], (d, d_ff), dtype)
+    else:
+        p["w_up"] = _dense_init(ks[1], (d, d_ff), dtype)
+    return p
+
+
+def mlp(p: Params, x: Array, act: str) -> Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    else:
+        raise ValueError(f"unknown mlp act {act!r}")
+    return h @ p["w_down"]

@@ -1,0 +1,174 @@
+"""Mamba2 (SSD) block with the chunked block-parallel formulation.
+
+Per head (state N, head dim P), the recurrence
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T         a_t = exp(dt_t * A) in (0,1)
+    y_t = C_t^T h_t + D * x_t
+is evaluated chunk-parallel: within a chunk of length c everything is
+matmuls against a causal decay mask (MXU-friendly); across chunks a
+``lax.scan`` carries the (N, P) state. This is the standard efficient SSD
+schedule — sequential only in S/c, not S — and the reason the ``long_500k``
+cell is runnable for the SSM/hybrid archs (state is O(1) in sequence).
+
+Decode is the one-step recurrence on a (B, H, N, P) state cache.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+Params = dict[str, Any]
+
+HEAD_P = 64  # Mamba2 head dim
+
+
+def dims(cfg) -> tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = max(1, d_inner // HEAD_P)
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, H, N = dims(cfg)
+    ks = jax.random.split(key, 4)
+    # fused input projection: [z (gate), x, B, C, dt]
+    proj_out = 2 * d_inner + 2 * N + H
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * d**-0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner + 2 * N)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[3], (d_inner, d)) * d_inner**-0.5).astype(dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+    }
+
+
+def _split_proj(cfg, proj: Array):
+    d_inner, H, N = dims(cfg)
+    z, x, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4): unrolled taps
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def _ssd_chunked(xh: Array, Bm: Array, Cm: Array, dt: Array, A: Array, chunk: int):
+    """Chunk-parallel SSD scan.
+
+    xh: (B,S,H,P), Bm/Cm: (B,S,N), dt: (B,S,H) (post-softplus), A: (H,) < 0.
+    Returns y: (B,S,H,P), final state (B,H,N,P).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+
+    la = (dt * A[None, None, :]).astype(jnp.float32)  # log decay (B,S,H), <= 0
+    r = lambda t: t.reshape(Bsz, n, c, *t.shape[2:]).swapaxes(0, 1)
+    xh_c, B_c, C_c, la_c, dt_c = r(xh), r(Bm), r(Cm), r(la), r(dt)
+
+    def per_chunk(args):
+        xc, bc, cc, lac, dtc = args  # (B,c,H,P),(B,c,N),(B,c,N),(B,c,H),(B,c,H)
+        L = jnp.cumsum(lac, axis=1)  # (B,c,H) inclusive log-decay
+        # intra-chunk: y[t] = sum_{s<=t} exp(L_t - L_s) (C_t.B_s) dt_s x_s
+        G = jnp.einsum("btn,bsn->bts", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        W = jnp.exp(L[:, :, None, :] - L[:, None, :, :])  # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        M = jnp.where(causal[None, :, :, None], G[..., None] * W, 0.0)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xdt)
+        # state contribution of this chunk: sum_s exp(L_c - L_s) dt_s B_s x_s^T
+        decay_to_end = jnp.exp(L[:, -1:, :] - L)  # (B,c,H)
+        state_in = jnp.einsum("bsh,bsn,bshp->bhnp", decay_to_end, bc.astype(jnp.float32), xdt)
+        # carry factors
+        chunk_decay = jnp.exp(L[:, -1, :])  # (B,H)
+        inter_w = jnp.exp(L)  # decay from chunk start to t
+        return y_intra, state_in, chunk_decay, inter_w, cc
+
+    y_i, s_in, cd, iw, ccs = jax.lax.map(per_chunk, (xh_c, B_c, C_c, la_c, dt_c))
+
+    def scan_step(h, xs):
+        y_intra, state_in, chunk_decay, inter_w, cc = xs
+        # inter-chunk: y_t += C_t^T (exp(L_t) h_in)
+        y_inter = jnp.einsum("btn,bth,bhnp->bthp", cc.astype(jnp.float32), inter_w, h)
+        h_next = chunk_decay[:, :, None, None] * h + state_in
+        return h_next, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h_final, y = jax.lax.scan(scan_step, h0, (y_i, s_in, cd, iw, ccs))
+    y = y.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba2_forward(p: Params, cfg, x: Array, *, chunk: int = 128) -> tuple[Array, dict]:
+    """Train/prefill. x: (B,S,d). Returns (out, state_cache)."""
+    B, S, d = x.shape
+    d_inner, H, N = dims(cfg)
+    proj = jnp.einsum("bsd,df->bsf", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, HEAD_P)
+    y, h_final = _ssd_chunked(xh, Bm, Cm, dt, A, chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    cache = {
+        "state": h_final.astype(jnp.float32),
+        "conv": conv_in[:, -(cfg.ssm_conv - 1) :, :].astype(x.dtype),
+    }
+    return out, cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype) -> dict:
+    d_inner, H, N = dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, N, HEAD_P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * N), dtype),
+    }
+
+
+def mamba2_decode(p: Params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    """One-step recurrence. x: (B,1,d)."""
+    B, _, d = x.shape
+    d_inner, H, N = dims(cfg)
+    proj = jnp.einsum("bsd,df->bsf", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))[:, None, :]
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])[:, 0]  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"])[None, :])  # (B,H)
+    xh = xs.reshape(B, H, HEAD_P).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    h = cache["state"]
+    h = a[:, :, None, None] * h + jnp.einsum("bh,bn,bhp->bhnp", dt, Bv, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, {"state": h, "conv": window[:, 1:, :]}

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts FFN with sort-based dispatch (EP over the model axis).
+
+The dispatch/combine structure is deliberately the same shape as the paper's
+primitive: assignments are *sorted by expert id* (exactly the sort-by-key of
+Tensor Casting Alg. 2), ranks within experts come from the same
+boundary-cumsum trick, and the combine is a gather + weighted reduce — never
+an unsorted scatter. Capacity-dropped tokens contribute zero (standard
+top-k + capacity-factor semantics).
+
+Expert weights are stacked (E, ...) and sharded over the ``model`` mesh axis
+(expert parallelism); GSPMD inserts the all-to-alls at the (T, d) -> (E, cap,
+d) dispatch reshard.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist.sharding import constrain
+
+Params = dict[str, Any]
+
+
+def init_moe(key, d: int, d_ff: int, num_experts: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    sc = d**-0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d, num_experts)) * sc).astype(jnp.float32),
+        "experts": {
+            "w_gate": (jax.random.normal(ks[1], (num_experts, d, d_ff)) * sc).astype(dtype),
+            "w_up": (jax.random.normal(ks[2], (num_experts, d, d_ff)) * sc).astype(dtype),
+            "w_down": (jax.random.normal(ks[3], (num_experts, d_ff, d)) * (d_ff**-0.5)).astype(dtype),
+        },
+    }
+
+
+def expert_capacity(num_tokens: int, num_experts: int, k: int, factor: float) -> int:
+    cap = int(num_tokens * k * factor / num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for lane alignment
+
+
+def moe_ffn(p: Params, x: Array, cfg) -> Array:
+    if getattr(cfg, "moe_dispatch", "sort") == "local":
+        return moe_ffn_local(p, x, cfg)
+    return moe_ffn_sort(p, x, cfg)
+
+
+def _local_dispatch_combine(x_l, top_p, top_e, w_gate, w_up, w_down, *, E, k, cf, tp, axis):
+    """Runs per shard: tokens are this shard's (batch, seq-chunk); experts
+    local to the shard are ``E/tp``. Dispatch/combine scatters are LOCAL
+    (the SPMD partitioner never sees them); the only communication is the
+    canonical expert all_to_all each way.
+
+    x_l: (B_l, S_l, d); top_p/top_e: (B_l, S_l, k); w_*: (E/tp, ...)."""
+    B_l, S_l, d = x_l.shape
+    cap = expert_capacity(S_l, E, k, cf)
+
+    flat_e = top_e.reshape(B_l, S_l * k).astype(jnp.int32)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B_l, n, E)
+    rank = jnp.sum(jnp.cumsum(onehot, axis=1) * onehot, axis=-1) - 1  # (B_l, n)
+    valid = rank < cap
+    idx = jnp.where(valid, flat_e * cap + rank, E * cap)
+
+    x_rep = jnp.repeat(x_l.reshape(B_l, S_l, 1, d), k, axis=2).reshape(B_l, S_l * k, d)
+    buf = jnp.zeros((B_l, E * cap + 1, d), x_l.dtype)
+    buf = buf.at[jnp.arange(B_l)[:, None], idx].set(x_rep)  # local scatter
+    buf = buf[:, :-1].reshape(B_l, E, cap, d)
+
+    if tp > 1:
+        # send each expert block to its owner; receive my experts' tokens
+        # from every seq-chunk peer: (B_l, E, cap, d) -> (B_l, E/tp, tp*cap, d)
+        buf = jax.lax.all_to_all(buf, axis, split_axis=1, concat_axis=2, tiled=True)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, w_gate))
+    h = h * jnp.einsum("becd,edf->becf", buf, w_up)
+    y = jnp.einsum("becf,efd->becd", h, w_down)
+
+    if tp > 1:
+        y = jax.lax.all_to_all(y, axis, split_axis=2, concat_axis=1, tiled=True)
+
+    yf = jnp.concatenate([y.reshape(B_l, E * cap, d), jnp.zeros((B_l, 1, d), y.dtype)], axis=1)
+    rows = yf[jnp.arange(B_l)[:, None], idx].reshape(B_l, S_l, k, d)
+    return jnp.sum(rows * top_p.reshape(B_l, S_l, k, 1).astype(rows.dtype), axis=2)
+
+
+def moe_ffn_local(p: Params, x: Array, cfg) -> Array:
+    """shard_map MoE: routing + dispatch local per (batch, seq-chunk) shard,
+    one all_to_all each way for expert parallelism.
+
+    The global argsort of moe_ffn_sort is correct but catastrophic under
+    SPMD — the partitioner replicates the full (B, S*k, d) assignment tensor
+    on every shard (measured: 935GB of collectives for olmoe train_4k,
+    EXPERIMENTS.md §Perf iteration 2). A batched scatter formulation fares
+    no better (XLA cannot partition scatter batch dims). Inside shard_map
+    both scatters are shard-local and the wire traffic collapses to the
+    information-theoretic dispatch payload (tokens*k*cf*d each way).
+    """
+    import jax.sharding as jshard
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (B,S,k) — router grads flow here
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    mesh = jshard.get_abstract_mesh()
+    has_model = mesh is not None and "model" in (mesh.axis_names or ()) and not mesh.empty
+    tp = mesh.shape["model"] if has_model else 1
+    if tp == 1 or S % tp != 0 or E % tp != 0:
+        out = _local_dispatch_combine(
+            x, top_p, top_e, p["experts"]["w_gate"], p["experts"]["w_up"],
+            p["experts"]["w_down"], E=E, k=k, cf=cfg.moe_capacity_factor, tp=1, axis="model",
+        )
+        return out
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if dp else None
+    fn = jax.shard_map(
+        partial(_local_dispatch_combine, E=E, k=k, cf=cfg.moe_capacity_factor,
+                tp=tp, axis="model"),
+        mesh=mesh,
+        in_specs=(
+            P(dp_spec, "model", None),  # x: batch x seq-chunk
+            P(dp_spec, "model", None),  # top_p
+            P(dp_spec, "model", None),  # top_e
+            P("model", None, None),  # experts (EP)
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=P(dp_spec, "model", None),
+    )
+    return fn(x, top_p, top_e, p["experts"]["w_gate"], p["experts"]["w_up"], p["experts"]["w_down"])
+
+
+def moe_ffn_sort(p: Params, x: Array, cfg) -> Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    cap = expert_capacity(T, E, k, cfg.moe_capacity_factor)
+    xf = x.reshape(T, d)
+
+    # --- routing ---
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # --- dispatch metadata: sort assignments by expert (Tensor Casting) ---
+    flat_e = top_e.reshape(-1).astype(jnp.int32)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = jnp.take(flat_e, order)
+    sorted_t = jnp.take(flat_t, order)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k, dtype=jnp.int32) - jnp.take(starts, sorted_e)
+    valid = rank < cap
+
+    # slot of each assignment in ORIGINAL (token-major) order
+    slot_sorted = jnp.where(valid, rank, cap)  # cap == dropped sentinel
+    slot = jnp.zeros((T * k,), jnp.int32).at[order].set(slot_sorted)
+
+    # --- dispatch: build (E, cap, d) expert inputs ---
+    flat_idx = jnp.where(valid, sorted_e * cap + rank, E * cap)
+    x_sorted = jnp.take(xf, sorted_t, axis=0)
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[flat_idx].set(x_sorted, mode="drop")
+    x_disp = constrain(buf[:-1].reshape(E, cap, d), "experts", None, "embed")
+
+    # --- expert computation (stacked, EP-sharded) ---
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_disp, p["experts"]["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", x_disp, p["experts"]["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w_down"])
+    y = constrain(y, "experts", None, "embed")
+
+    # --- combine: pure gather + weighted reduce over each token's k slots ---
+    yf = jnp.concatenate([y.reshape(E * cap, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    gather_idx = jnp.where(slot < cap, flat_e * cap + slot, E * cap)
+    rows = jnp.take(yf, gather_idx, axis=0).reshape(T, k, d)
+    out = jnp.sum(rows * top_p.astype(rows.dtype)[..., None], axis=1)
+    return out.reshape(B, S, d)
+
+
+def load_balance_loss(p: Params, x: Array, cfg) -> Array:
+    """Switch-style auxiliary loss (mean prob * mean assignment fraction)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    xf = x.reshape(-1, d)
+    probs = jax.nn.softmax((xf.astype(jnp.float32) @ p["router"]), axis=-1)
+    _, top_e = jax.lax.top_k(probs, k)
+    assign = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))
+    importance = jnp.mean(probs, axis=0)
+    return E * jnp.sum(assign * importance)

@@ -1,0 +1,198 @@
+"""xLSTM language model: interleaved mLSTM / sLSTM blocks.
+
+Layout for L layers, slstm_every=k: G = L // k groups of
+(k-1 mLSTM + 1 sLSTM); any remainder is trailing mLSTM blocks. mLSTM runs
+chunk-parallel (see xlstm.py); sLSTM is a sequential lax.scan — inherently
+recurrent, and the reason this arch (with O(1) state) runs the long_500k
+decode cell.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig
+from repro.core.embedding import init_embedding, tc_embed, tc_embed_sharded
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import xlstm as X
+from repro.models.transformer import lm_loss_from_hidden, logits_from_hidden
+
+Params = dict[str, Any]
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    k = cfg.slstm_every
+    groups = cfg.num_layers // k
+    return groups, k - 1, cfg.num_layers - groups * k
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    groups, per_group, tail = _layout(cfg)
+    ke, km, ks, kt, kh = jax.random.split(key, 5)
+
+    def init_m(k):
+        return {"ln": L.init_rmsnorm(cfg.d_model, dt), "mlstm": X.init_mlstm(k, cfg, dt)}
+
+    def init_s(k):
+        return {"ln": L.init_rmsnorm(cfg.d_model, dt), "slstm": X.init_slstm(k, cfg, dt)}
+
+    p = {
+        "embed": {"table": init_embedding(ke, cfg.vocab_size, cfg.d_model, dt)},
+        "mlstm_groups": jax.vmap(jax.vmap(init_m))(
+            jax.random.split(km, groups * per_group).reshape(groups, per_group)
+        ),
+        "slstm_blocks": jax.vmap(init_s)(jax.random.split(ks, groups)),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if tail:
+        p["mlstm_tail"] = jax.vmap(init_m)(jax.random.split(kt, tail))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) * cfg.d_model**-0.5).astype(dt)
+    return p
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: Array) -> Array:
+    groups, per_group, tail = _layout(cfg)
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+
+    def group_body(h, xs):
+        m_params, s_params = xs
+
+        def inner(c, p):
+            out, _ = X.mlstm_forward(p["mlstm"], cfg, L.rmsnorm(p["ln"], c, cfg.norm_eps))
+            return constrain(c + out, "batch", "seq", "embed"), None
+
+        h, _ = jax.lax.scan(inner, h, m_params)
+        out, _ = X.slstm_forward(s_params["slstm"], cfg, L.rmsnorm(s_params["ln"], h, cfg.norm_eps))
+        return h + out
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(
+        lambda c, xs: (body(c, xs), None), h, (params["mlstm_groups"], params["slstm_blocks"])
+    )
+    if tail:
+
+        def tail_step(c, p):
+            out, _ = X.mlstm_forward(p["mlstm"], cfg, L.rmsnorm(p["ln"], c, cfg.norm_eps))
+            return c + out, None
+
+        h, _ = jax.lax.scan(tail_step, h, params["mlstm_tail"])
+    return L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict) -> tuple[Array, dict]:
+    tokens = batch["tokens"]
+    h = forward_hidden(cfg, params, tokens)
+    targets = tokens[:, 1:]
+    mask = jnp.ones_like(targets, jnp.float32)
+    total = lm_loss_from_hidden(cfg, params, h[:, :-1, :], targets, mask)
+    loss = total / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None) -> dict:
+    groups, per_group, tail = _layout(cfg)
+    stack = lambda n, tree: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree
+    )
+    m_one = X.init_mlstm_cache(cfg, batch)
+    s_one = X.init_slstm_cache(cfg, batch)
+    c = {
+        "mlstm_groups": stack(groups, stack(per_group, m_one)),
+        "slstm_blocks": stack(groups, s_one),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if tail:
+        c["mlstm_tail"] = stack(tail, m_one)
+    return c
+
+
+def prefill_step(cfg: ModelConfig, params: Params, tokens: Array, cache: dict) -> tuple[Array, dict]:
+    groups, per_group, tail = _layout(cfg)
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+    B, S, _ = h.shape
+
+    def group_body(h, xs):
+        m_params, s_params = xs
+
+        def inner(c, p):
+            out, mc = X.mlstm_forward(p["mlstm"], cfg, L.rmsnorm(p["ln"], c, cfg.norm_eps))
+            return c + out, mc
+
+        h, m_caches = jax.lax.scan(inner, h, m_params)
+        out, s_cache = X.slstm_forward(s_params["slstm"], cfg, L.rmsnorm(s_params["ln"], h, cfg.norm_eps))
+        return h + out, (m_caches, s_cache)
+
+    h, (m_all, s_all) = jax.lax.scan(group_body, h, (params["mlstm_groups"], params["slstm_blocks"]))
+    out_cache = {"mlstm_groups": m_all, "slstm_blocks": s_all, "pos": jnp.full((B,), S, jnp.int32)}
+    if tail:
+
+        def tail_step(c, p):
+            out, mc = X.mlstm_forward(p["mlstm"], cfg, L.rmsnorm(p["ln"], c, cfg.norm_eps))
+            return c + out, mc
+
+        h, out_cache["mlstm_tail"] = jax.lax.scan(tail_step, h, params["mlstm_tail"])
+    h_last = L.rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, h_last)
+    return logits, out_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, tokens: Array) -> tuple[Array, dict]:
+    groups, per_group, tail = _layout(cfg)
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+
+    def group_body(h, xs):
+        m_params, s_params, m_cache, s_cache = xs
+
+        def inner(c, xs2):
+            p, mc = xs2
+            out, mc2 = X.mlstm_decode(p["mlstm"], cfg, L.rmsnorm(p["ln"], c, cfg.norm_eps), mc)
+            return c + out, mc2
+
+        h, m_cache = jax.lax.scan(inner, h, (m_params, m_cache))
+        out, s_cache = X.slstm_decode(
+            s_params["slstm"], cfg, L.rmsnorm(s_params["ln"], h, cfg.norm_eps), s_cache
+        )
+        return h + out, (m_cache, s_cache)
+
+    h, (m_all, s_all) = jax.lax.scan(
+        group_body,
+        h,
+        (params["mlstm_groups"], params["slstm_blocks"], cache["mlstm_groups"], cache["slstm_blocks"]),
+    )
+    out_cache = {"mlstm_groups": m_all, "slstm_blocks": s_all, "pos": cache["pos"] + 1}
+    if tail:
+
+        def tail_step(c, xs2):
+            p, mc = xs2
+            out, mc2 = X.mlstm_decode(p["mlstm"], cfg, L.rmsnorm(p["ln"], c, cfg.norm_eps), mc)
+            return c + out, mc2
+
+        h, out_cache["mlstm_tail"] = jax.lax.scan(
+            tail_step, h, (params["mlstm_tail"], cache["mlstm_tail"])
+        )
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, out_cache

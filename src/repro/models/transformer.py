@@ -1,0 +1,379 @@
+"""Decoder-only LM trunk: GQA attention + (dense | MoE) FFN blocks.
+
+Layers are stacked and driven by ``lax.scan`` (O(1) HLO in depth) with
+``jax.checkpoint`` remat per block. The token embedding is the Tensor-Casted
+``tc_embed`` — its backward pass is the paper's casted gradient
+gather-reduce instead of XLA's unsorted scatter-add.
+
+Sequence cells:
+  * train:   ``train_loss``  (next-token xent, seq-chunked head)
+  * prefill: ``prefill_step`` (returns last-position logits + KV cache)
+  * decode:  ``decode_step``  (one token, cache update)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig
+from repro.core.embedding import init_embedding, tc_embed
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+Params = dict[str, Any]
+
+
+def _attn_cfg(cfg: ModelConfig) -> L.AttnConfig:
+    return L.AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    p: Params = {
+        "ln_attn": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": L.init_attention(k1, _attn_cfg(cfg), dt),
+        "ln_mlp": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.num_experts:
+        p["moe"] = MOE.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.num_experts, dt)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kb, kh = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    blocks = jax.vmap(lambda k: init_block(cfg, k))(jax.random.split(kb, cfg.num_layers))
+    p: Params = {
+        "embed": {"table": init_embedding(ke, cfg.vocab_size, cfg.d_model, dt)},
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) * cfg.d_model**-0.5).astype(dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward trunk
+# ---------------------------------------------------------------------------
+
+
+def block_apply(cfg: ModelConfig, p: Params, h: Array, positions: Array) -> Array:
+    acfg = _attn_cfg(cfg)
+    a = L.attention(p["attn"], acfg, L.rmsnorm(p["ln_attn"], h, cfg.norm_eps), positions)
+    h = constrain(h + a, "batch", "seq", "embed")
+    hn = L.rmsnorm(p["ln_mlp"], h, cfg.norm_eps)
+    if cfg.num_experts:
+        m = MOE.moe_ffn(p["moe"], hn, cfg)
+    else:
+        m = L.mlp(p["mlp"], hn, cfg.mlp_act)
+    return constrain(h + m, "batch", "seq", "embed")
+
+
+def _scan_blocks(cfg: ModelConfig, blocks: Params, h: Array, positions: Array) -> Array:
+    body = lambda p, h: block_apply(cfg, p, h, positions)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(carry, p):
+        return body(p, carry), None
+
+    h, _ = jax.lax.scan(step, h, blocks)
+    return h
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: Array) -> Array:
+    from repro.core.embedding import tc_embed_sharded
+    from repro.dist.sharding import use_shardmap_embed
+
+    if use_shardmap_embed():
+        h = tc_embed_sharded(params["embed"]["table"], tokens)
+    else:
+        h = tc_embed(params["embed"]["table"], tokens)
+    if cfg.name.startswith("gemma"):
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)  # gemma embedding scaling
+    return h
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Array,
+    prefix_embeds: Optional[Array] = None,
+) -> Array:
+    """tokens: (B, S_text). prefix_embeds: (B, S_prefix, d) modality stub
+    (precomputed patch/frame embeddings, per assignment). Returns (B, S, d)."""
+    h = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = _scan_blocks(cfg, params["blocks"], h, positions)
+    return L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+
+def _head(cfg: ModelConfig, params: Params) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T  # (d, V)
+    return params["lm_head"]
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Params, h: Array) -> Array:
+    logits = jnp.einsum("...d,dv->...v", h, _head(cfg, params))
+    # vocab takes the model axis here; seq must stay unsharded (an axis can
+    # only be used once per spec)
+    return constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def _xent_chunk(head: Array, h: Array, targets: Array, mask: Array) -> Array:
+    """Summed masked xent for one chunk. h: (B,C,d); targets/mask: (B,C).
+
+    The label logit is extracted with an iota-compare reduction rather than
+    take_along_axis: under vocab (model-axis) sharding, take_along_axis
+    forces an all-gather of the full logits chunk, while the masked
+    reduction stays vocab-local and psums a (B,C) scalar field."""
+    logits = jnp.einsum("bcd,dv->bcv", h, head).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    ll = jnp.sum(jnp.where(vocab_iota == targets[..., None].astype(jnp.int32), logits, 0.0), axis=-1)
+    return jnp.sum((logz - ll) * mask)
+
+
+def lm_loss_from_hidden(cfg: ModelConfig, params: Params, h: Array, targets: Array, mask: Array) -> Array:
+    """Seq-chunked LM head + xent: never materializes (B, S, V) logits.
+
+    Chunking bounds the transient logits buffer to (B, C, V) — with a 256k
+    vocab the full tensor is the single largest allocation of the step.
+    """
+    head = _head(cfg, params)
+    B, S, d = h.shape
+    C = cfg.loss_chunk
+    if C <= 0 or S <= C:
+        return _xent_chunk(head, h, targets, mask)
+    n = S // C
+    cut = n * C
+    hs = h[:, :cut].reshape(B, n, C, d).swapaxes(0, 1)  # (n, B, C, d)
+    ts = targets[:, :cut].reshape(B, n, C).swapaxes(0, 1)
+    ms = mask[:, :cut].reshape(B, n, C).swapaxes(0, 1)
+    body = jax.checkpoint(lambda hc, tc, mc: _xent_chunk(head, hc, tc, mc))
+
+    def step(acc, xs):
+        hc, tc, mc = xs
+        return acc + body(hc, tc, mc), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ts, ms))
+    if cut < S:  # remainder chunk (e.g. the S-1 of next-token shift)
+        total = total + _xent_chunk(head, h[:, cut:], targets[:, cut:], mask[:, cut:])
+    return total
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict) -> tuple[Array, dict]:
+    """batch: tokens (B,S_text) int32, plus optional prefix_embeds.
+    Next-token prediction over the text region only."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    h = forward_hidden(cfg, params, tokens, prefix)
+    S_pre = 0 if prefix is None else prefix.shape[1]
+    h_text = h[:, S_pre:, :]
+    inp_h = h_text[:, :-1, :]
+    targets = tokens[:, 1:]
+    mask = jnp.ones_like(targets, jnp.float32)
+    total = lm_loss_from_hidden(cfg, params, inp_h, targets, mask)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = total / count
+    return loss, {"loss": loss, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) absmax int8 quantization of K/V rows."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _dequantize_kv(q: Array, s: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or _dtype(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, KV, hd)
+    if cfg.kv_cache_dtype == "int8":
+        # int8 rows + fp32 per-(token, head) scales: 2.06 bytes/elem-pair vs
+        # 4 for bf16 k+v — halves the decode cache footprint and HBM read
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill_step(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Array,
+    cache: dict,
+    prefix_embeds: Optional[Array] = None,
+) -> tuple[Array, dict]:
+    """Run the prompt, fill the cache, return last-position logits."""
+    h = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    acfg = _attn_cfg(cfg)
+
+    def step(carry, p):
+        h = carry
+        hn = L.rmsnorm(p["ln_attn"], h, cfg.norm_eps)
+        q, k, v = L._project_qkv(p["attn"], acfg, hn)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        group = acfg.num_heads // acfg.num_kv_heads
+        scores = L._gqa_scores(q, k, group).astype(jnp.float32) * (acfg.head_dim**-0.5)
+        mask = positions[:, :, None] >= positions[:, None, :]
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+        o = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(B, S, acfg.num_heads * acfg.head_dim)
+        h = h + jnp.einsum("bsf,fd->bsd", o, p["attn"]["wo"])
+        hn = L.rmsnorm(p["ln_mlp"], h, cfg.norm_eps)
+        if cfg.num_experts:
+            m = MOE.moe_ffn(p["moe"], hn, cfg)
+        else:
+            m = L.mlp(p["mlp"], hn, cfg.mlp_act)
+        return constrain(h + m, "batch", "seq", "embed"), (k, v)
+
+    body = step
+    if cfg.remat:
+        body = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (k_all, v_all) = jax.lax.scan(body, h, params["blocks"])
+    new_cache = dict(cache, pos=jnp.full((B,), S, jnp.int32))
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k_all)
+        vq, vs = _quantize_kv(v_all)
+        new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0, 0))
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0, 0, 0))
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0, 0, 0))
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_all.astype(cache["k"].dtype), (0, 0, 0, 0, 0)
+        )
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_all.astype(cache["v"].dtype), (0, 0, 0, 0, 0)
+        )
+    h_last = L.rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, h_last)
+    return logits, new_cache
+
+
+def _decode_attn_int8(p, acfg, cfg, h, pos, k_c, v_c, ks, vs):
+    """Decode attention against the int8 cache: int8 rows stream from HBM
+    and are dequantized in-register (fused convert into the dots)."""
+    B = h.shape[0]
+    group = acfg.num_heads // acfg.num_kv_heads
+    q, k, v = L._project_qkv(p["attn"], acfg, L.rmsnorm(p["ln_attn"], h, cfg.norm_eps))
+    q = L.rope(q, pos[:, None], cfg.rope_theta)
+    k = L.rope(k, pos[:, None], cfg.rope_theta)
+    kq, ksc = _quantize_kv(k)
+    vq, vsc = _quantize_kv(v)
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))
+    upds = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))
+    k_c = upd(k_c, kq, pos)
+    v_c = upd(v_c, vq, pos)
+    ks = upds(ks, ksc, pos)
+    vs = upds(vs, vsc, pos)
+    k_deq = _dequantize_kv(k_c, ks, h.dtype)
+    v_deq = _dequantize_kv(v_c, vs, h.dtype)
+    Smax = k_c.shape[1]
+    scores = L._gqa_scores(q, k_deq, group).astype(jnp.float32) * (acfg.head_dim**-0.5)
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    o = jnp.einsum("bkgst,btkh->bskgh", w, v_deq).reshape(B, 1, acfg.num_heads * acfg.head_dim)
+    return jnp.einsum("bsf,fd->bsd", o, p["attn"]["wo"]), k_c, v_c, ks, vs
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, tokens: Array) -> tuple[Array, dict]:
+    """tokens: (B, 1). One decode step against the cache."""
+    h = embed_tokens(cfg, params, tokens)
+    B = h.shape[0]
+    h = constrain(h, "batch", "seq", "embed")
+    pos = cache["pos"]
+    acfg = _attn_cfg(cfg)
+    int8 = cfg.kv_cache_dtype == "int8"
+
+    def step(carry, xs):
+        h = carry
+        if int8:
+            p, k_c, v_c, ks, vs = xs
+            a, k_c, v_c, ks, vs = _decode_attn_int8(p, acfg, cfg, h, pos, k_c, v_c, ks, vs)
+            caches = (k_c, v_c, ks, vs)
+        else:
+            p, k_c, v_c = xs
+            hn = L.rmsnorm(p["ln_attn"], h, cfg.norm_eps)
+            a, k_c, v_c = L.decode_attention(p["attn"], acfg, hn, pos, k_c, v_c)
+            caches = (k_c, v_c)
+        h = h + a
+        hn = L.rmsnorm(p["ln_mlp"], h, cfg.norm_eps)
+        if cfg.num_experts:
+            m = MOE.moe_ffn(p["moe"], hn, cfg)
+        else:
+            m = L.mlp(p["mlp"], hn, cfg.mlp_act)
+        return h + m, caches
+
+    if int8:
+        xs = (params["blocks"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+        h, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(step, h, xs)
+        out_cache = {"k": k_new, "v": v_new, "k_scale": ks_new, "v_scale": vs_new, "pos": pos + 1}
+    else:
+        h, (k_new, v_new) = jax.lax.scan(step, h, (params["blocks"], cache["k"], cache["v"]))
+        out_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, out_cache

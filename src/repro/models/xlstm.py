@@ -1,0 +1,203 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential scan).
+
+mLSTM recurrence per head (key dim N = value dim P = head dim):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t              (normalizer)
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with f_t = sigmoid(f̃) and i_t = exp(ĩ, clipped) in fp32. The normalizer
+recurrence is folded into the matrix one by augmenting values with a ones
+column, so one chunked scan (same schedule as mamba2's SSD) computes both.
+
+sLSTM keeps per-unit scalar state with block-diagonal (per-head) recurrent
+weights and exponential gating with the max-stabilizer; inherently
+sequential -> lax.scan over time. Both decode as O(1) recurrences.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+Params = dict[str, Any]
+
+_ICLIP = 8.0  # input-gate log clip (stability without the running max)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg) -> tuple[int, int]:
+    d_inner = 2 * cfg.d_model
+    return d_inner, cfg.num_heads
+
+
+def init_mlstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, H = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_inner)) * d**-0.5).astype(dtype),  # [x, z]
+        "w_qkv": (jax.random.normal(ks[1], (d_inner, 3 * d_inner)) * d_inner**-0.5).astype(dtype),
+        "gates": (jax.random.normal(ks[2], (d_inner, 2 * H)) * 0.01).astype(jnp.float32),
+        "out_proj": (jax.random.normal(ks[3], (d_inner, d)) * d_inner**-0.5).astype(dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int):
+    """q,k,v: (B,S,H,P); li/lf: (B,S,H) log input/forget gates (fp32).
+    Returns y (B,S,H,P) and final augmented state (B,H,P,P+1)."""
+    B, S, H, P = q.shape
+    vb = jnp.concatenate([v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)  # ones col -> normalizer
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    r = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+    q_c, k_c, v_c, li_c, lf_c = r(q), r(k), r(vb), r(li), r(lf)
+
+    def per_chunk(args):
+        qc, kc, vc, lic, lfc = args
+        L = jnp.cumsum(lfc, axis=1)  # (B,c,H) inclusive log forget decay
+        G = jnp.einsum("bthn,bshn->btsh", qc.astype(jnp.float32), kc.astype(jnp.float32))
+        W = jnp.exp(L[:, :, None, :] - L[:, None, :, :] + lic[:, None, :, :])
+        causal = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), bool))
+        M = jnp.where(causal[None, :, :, None], G * W, 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, vc.astype(jnp.float32))
+        decay_to_end = jnp.exp(L[:, -1:, :] - L + lic)
+        state_in = jnp.einsum("bsh,bshn,bshp->bhnp", decay_to_end, kc.astype(jnp.float32), vc.astype(jnp.float32))
+        return y_intra, state_in, jnp.exp(L[:, -1, :]), jnp.exp(L), qc
+
+    y_i, s_in, cd, iw, qcs = jax.lax.map(per_chunk, (q_c, k_c, v_c, li_c, lf_c))
+
+    def scan_step(h, xs):
+        y_intra, state_in, chunk_decay, inter_w, qc = xs
+        y_inter = jnp.einsum("bthn,bth,bhnp->bthp", qc.astype(jnp.float32), inter_w, h)
+        return chunk_decay[:, :, None, None] * h + state_in, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, P + 1), jnp.float32)
+    h_final, y = jax.lax.scan(scan_step, h0, (y_i, s_in, cd, iw, qcs))
+    y = y.swapaxes(0, 1).reshape(B, S, H, P + 1)
+    num, den = y[..., :P], y[..., P]
+    return num / jnp.maximum(jnp.abs(den), 1.0)[..., None], h_final
+
+
+def mlstm_forward(p: Params, cfg, x: Array, *, chunk: int = 128) -> tuple[Array, dict]:
+    B, S, d = x.shape
+    d_inner, H = _mlstm_dims(cfg)
+    P = d_inner // H
+    xi, z = jnp.split(jnp.einsum("bsd,df->bsf", x, p["in_proj"]), 2, axis=-1)
+    qkv = jnp.einsum("bsf,fg->bsg", xi, p["w_qkv"])
+    q, k, v = (t.reshape(B, S, H, P) for t in jnp.split(qkv, 3, axis=-1))
+    k = k * (P**-0.5)
+    gates = xi.astype(jnp.float32) @ p["gates"]  # (B,S,2H)
+    li = jnp.clip(gates[..., :H], a_max=_ICLIP)
+    lf = jax.nn.log_sigmoid(gates[..., H:])
+    y, h_final = _mlstm_chunked(q, k, v, li, lf, chunk)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bsf,fd->bsd", y, p["out_proj"]), {"state": h_final}
+
+
+def init_mlstm_cache(cfg, batch: int) -> dict:
+    d_inner, H = _mlstm_dims(cfg)
+    P = d_inner // H
+    return {"state": jnp.zeros((batch, H, P, P + 1), jnp.float32)}
+
+
+def mlstm_decode(p: Params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    B, _, d = x.shape
+    d_inner, H = _mlstm_dims(cfg)
+    P = d_inner // H
+    xi, z = jnp.split(jnp.einsum("bsd,df->bsf", x, p["in_proj"]), 2, axis=-1)
+    qkv = jnp.einsum("bsf,fg->bsg", xi, p["w_qkv"])
+    q, k, v = (t.reshape(B, H, P) for t in jnp.split(qkv[:, 0], 3, axis=-1))
+    k = k * (P**-0.5)
+    gates = xi[:, 0].astype(jnp.float32) @ p["gates"]
+    i_g = jnp.exp(jnp.clip(gates[..., :H], a_max=_ICLIP))  # (B,H)
+    f_g = jax.nn.sigmoid(gates[..., H:])
+    vb = jnp.concatenate([v.astype(jnp.float32), jnp.ones((B, H, 1), jnp.float32)], axis=-1)
+    h = f_g[:, :, None, None] * cache["state"] + i_g[:, :, None, None] * jnp.einsum(
+        "bhn,bhp->bhnp", k.astype(jnp.float32), vb
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), h)
+    num, den = y[..., :P], y[..., P]
+    out = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).reshape(B, 1, d_inner).astype(x.dtype)
+    out = rmsnorm(p["norm"], out, cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bsf,fd->bsd", out, p["out_proj"]), {"state": h}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_if": (jax.random.normal(ks[0], (d, 4 * d)) * d**-0.5).astype(dtype),  # z,i,f,o pre-acts
+        "r_blocks": (jax.random.normal(ks[1], (4, H, P, P)) * P**-0.5).astype(jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d, d)) * d**-0.5).astype(dtype),
+        "norm": init_rmsnorm(d, dtype),
+    }
+
+
+def init_slstm_cache(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p: Params, cfg, pre: Array, state: dict) -> tuple[Array, dict]:
+    """pre: (B, 4d) input pre-activations; block-diagonal recurrence on h."""
+    B = pre.shape[0]
+    H = cfg.num_heads
+    d = cfg.d_model
+    P = d // H
+    h_prev = state["h"].reshape(B, H, P)
+    rec = jnp.einsum("ghpq,bhq->gbhp", p["r_blocks"], h_prev).reshape(4, B, d)
+    zt, it, ft, ot = [pre[:, i * d : (i + 1) * d].astype(jnp.float32) + rec[i] for i in range(4)]
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + state["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * jnp.tanh(zt)
+    n = f_p * state["n"] + i_p
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return h, {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_forward(p: Params, cfg, x: Array) -> tuple[Array, dict]:
+    B, S, d = x.shape
+    pre = jnp.einsum("bsd,df->bsf", x, p["w_if"])  # (B,S,4d)
+
+    def step(state, pre_t):
+        h, state = _slstm_cell(p, cfg, pre_t, state)
+        return state, h
+
+    state0 = init_slstm_cache(cfg, B)
+    state, hs = jax.lax.scan(step, state0, pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,d)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsd,df->bsf", y, p["out_proj"]), state
+
+
+def slstm_decode(p: Params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    pre = jnp.einsum("bsd,df->bsf", x, p["w_if"])[:, 0]
+    h, state = _slstm_cell(p, cfg, pre, cache)
+    y = rmsnorm(p["norm"], h[:, None, :].astype(x.dtype), cfg.norm_eps)
+    return jnp.einsum("bsd,df->bsf", y, p["out_proj"]), state

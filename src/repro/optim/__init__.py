@@ -1,0 +1,16 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adagrad,
+    adam,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    momentum,
+    rmsprop,
+    scale,
+    sgd,
+)
+from repro.optim.sparse import (  # noqa: F401
+    init_rowwise_adagrad,
+    rowwise_adagrad_update,
+)

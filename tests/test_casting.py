@@ -1,0 +1,150 @@
+"""Properties of the Tensor Casting algorithm (paper Alg. 2) vs the baseline
+gradient expand-coalesce (Alg. 1). These are the system's core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.casting import (
+    cast_token_ids,
+    casted_grad_gather_reduce,
+    coalesce_gradients,
+    expand_gradients,
+    pooled_lookup_indices,
+    segment_offsets_from_sorted,
+    tensor_casting,
+)
+
+idx_arrays = st.integers(min_value=1, max_value=64).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(0, 31), min_size=n, max_size=n),
+        st.integers(1, 8),
+    )
+)
+
+
+def _np_coalesce(src, grad, dst, num_rows):
+    """Dead-simple numpy oracle: dense scatter-add then keep touched rows."""
+    d = grad.shape[-1]
+    dense = np.zeros((num_rows, d), np.float64)
+    for i in range(len(src)):
+        dense[src[i]] += grad[dst[i]]
+    uniq = np.unique(src)
+    return dense[uniq], uniq
+
+
+@settings(max_examples=60, deadline=None)
+@given(idx_arrays, st.integers(0, 2**31 - 1))
+def test_casted_gather_reduce_matches_dense_oracle(data, seed):
+    src_list, nseg = data
+    n = len(src_list)
+    rng = np.random.default_rng(seed)
+    src = np.asarray(src_list, np.int32)
+    dst = np.sort(rng.integers(0, nseg, size=n).astype(np.int32))
+    grad = rng.normal(size=(nseg, 4)).astype(np.float32)
+
+    casted = tensor_casting(jnp.asarray(src), jnp.asarray(dst), fill_id=32)
+    coal = np.asarray(casted_grad_gather_reduce(jnp.asarray(grad), casted))
+    nu = int(casted.num_unique)
+    uid = np.asarray(casted.unique_ids)[:nu]
+
+    want, want_uniq = _np_coalesce(src, grad, dst, num_rows=32)
+    np.testing.assert_array_equal(uid, want_uniq)
+    np.testing.assert_allclose(coal[:nu], want, rtol=1e-5, atol=1e-5)
+    # padding region of unique_ids carries the sentinel
+    assert (np.asarray(casted.unique_ids)[nu:] == 32).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(idx_arrays, st.integers(0, 2**31 - 1))
+def test_alg1_equals_alg2(data, seed):
+    """Baseline expand-coalesce (Alg. 1) and T.Casted gather-reduce (Alg. 2)
+    are functionally identical — the paper's central equivalence claim."""
+    src_list, nseg = data
+    n = len(src_list)
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(src_list, jnp.int32)
+    dst = jnp.asarray(np.sort(rng.integers(0, nseg, size=n)).astype(np.int32))
+    grad = jnp.asarray(rng.normal(size=(nseg, 8)).astype(np.float32))
+
+    coal_b, uid_b, nu_b = coalesce_gradients(src, expand_gradients(grad, dst))
+    casted = tensor_casting(src, dst, fill_id=1 << 20)
+    coal_c = casted_grad_gather_reduce(grad, casted)
+
+    assert int(nu_b) == int(casted.num_unique)
+    nu = int(nu_b)
+    np.testing.assert_allclose(np.asarray(coal_b)[:nu], np.asarray(coal_c)[:nu], rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(uid_b)[:nu], np.asarray(casted.unique_ids)[:nu])
+
+
+def test_casted_dst_sorted_and_dense():
+    """casted_dst must be non-decreasing, start at 0, step by <=1 — the
+    invariant the Pallas revisiting kernel relies on."""
+    rng = np.random.default_rng(3)
+    src = jnp.asarray(rng.integers(0, 100, size=257).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, 64, size=257).astype(np.int32))
+    casted = tensor_casting(src, dst, fill_id=100)
+    cd = np.asarray(casted.casted_dst)
+    steps = np.diff(cd)
+    assert cd[0] == 0
+    assert ((steps == 0) | (steps == 1)).all()
+    assert cd[-1] + 1 == int(casted.num_unique)
+
+
+def test_casting_is_permutation():
+    """casted_src is a permutation of dst — every gradient row gathered
+    exactly as many times as it was produced."""
+    rng = np.random.default_rng(4)
+    src = jnp.asarray(rng.integers(0, 9, size=40).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, 10, size=40).astype(np.int32))
+    casted = tensor_casting(src, dst, fill_id=9)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(casted.casted_src)), np.sort(np.asarray(dst))
+    )
+
+
+def test_paper_worked_example():
+    """Fig. 7/8 of the paper: src=[1,2,4,0,2], dst=[0,0,0,1,1]."""
+    src = jnp.asarray([1, 2, 4, 0, 2], jnp.int32)
+    dst = jnp.asarray([0, 0, 0, 1, 1], jnp.int32)
+    casted = tensor_casting(src, dst, fill_id=8)
+    np.testing.assert_array_equal(np.asarray(casted.casted_src), [1, 0, 0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(casted.casted_dst), [0, 1, 2, 2, 3])
+    assert int(casted.num_unique) == 4
+    # unique_ids is padded to static length n with the fill sentinel
+    np.testing.assert_array_equal(np.asarray(casted.unique_ids), [0, 1, 2, 4, 8])
+
+
+def test_cast_token_ids_lm_case():
+    ids = jnp.asarray([[5, 3, 5], [3, 3, 7]], jnp.int32)
+    casted = cast_token_ids(ids, fill_id=100)
+    assert int(casted.num_unique) == 3
+    np.testing.assert_array_equal(np.asarray(casted.unique_ids)[:3], [3, 5, 7])
+    # 3 appears 3x, 5 appears 2x, 7 once
+    cd = np.asarray(casted.casted_dst)
+    np.testing.assert_array_equal(np.bincount(cd, minlength=3)[:3], [3, 2, 1])
+
+
+def test_segment_offsets():
+    dst = jnp.asarray([0, 0, 1, 3, 3, 3], jnp.int32)
+    off = np.asarray(segment_offsets_from_sorted(dst, 5))
+    np.testing.assert_array_equal(off, [0, 2, 3, 3, 6, 6])
+
+
+def test_pooled_lookup_indices():
+    np.testing.assert_array_equal(
+        np.asarray(pooled_lookup_indices(3, 2)), [0, 0, 1, 1, 2, 2]
+    )
+
+
+def test_casting_jit_and_grad_safe():
+    """Casting must be jittable with static shapes (production requirement)."""
+    f = jax.jit(lambda s, d: tensor_casting(s, d, fill_id=64))
+    src = jnp.arange(32, dtype=jnp.int32) % 7
+    dst = jnp.arange(32, dtype=jnp.int32) // 4
+    c1 = f(src, dst)
+    c2 = f(src, dst)
+    assert c1.casted_src.shape == (32,)
+    np.testing.assert_array_equal(np.asarray(c1.casted_dst), np.asarray(c2.casted_dst))

@@ -1,0 +1,191 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle across
+shape/dtype sweeps + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.casting import tensor_casting
+from repro.kernels import ops, ref
+from repro.kernels.gather_reduce import gather_reduce_pallas
+from repro.kernels.scatter_apply import scatter_apply_adagrad_pallas
+
+
+@pytest.mark.parametrize("d", [8, 64, 128, 256, 640])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_reduce_shape_dtype_sweep(rng, d, dtype):
+    n, nrows, nseg = 33, 17, 9
+    values = jnp.asarray(rng.normal(size=(nrows, d)).astype(np.float32)).astype(dtype)
+    src = jnp.asarray(rng.integers(0, nrows, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, nseg, size=n)).astype(np.int32))
+    out = gather_reduce_pallas(values, src, dst, num_segments=nseg, interpret=True)
+    want = ref.gather_reduce_ref(values, src, dst, nseg)
+    tol = 1e-6 if dtype == jnp.float32 else 5e-2
+    touched = np.unique(np.asarray(dst))  # unvisited segments are unspecified
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32)[touched],
+        np.asarray(want, np.float32)[touched],
+        rtol=tol,
+        atol=tol,
+    )
+
+
+@pytest.mark.parametrize("n,nrows,nseg", [(1, 1, 1), (2, 1, 1), (64, 64, 64), (100, 3, 50)])
+def test_gather_reduce_edge_shapes(rng, n, nrows, nseg):
+    values = jnp.asarray(rng.normal(size=(nrows, 32)).astype(np.float32))
+    src = jnp.asarray(rng.integers(0, nrows, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, nseg, size=n)).astype(np.int32))
+    out = gather_reduce_pallas(values, src, dst, num_segments=nseg, interpret=True)
+    want = ref.gather_reduce_ref(values, src, dst, nseg)
+    touched = np.unique(np.asarray(dst))
+    np.testing.assert_allclose(
+        np.asarray(out)[touched], np.asarray(want)[touched], rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 20), st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_gather_reduce_property(n, nrows, nseg, seed):
+    rng = np.random.default_rng(seed)
+    values = jnp.asarray(rng.normal(size=(nrows, 16)).astype(np.float32))
+    src = jnp.asarray(rng.integers(0, nrows, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, nseg, size=n)).astype(np.int32))
+    out = gather_reduce_pallas(values, src, dst, num_segments=nseg, interpret=True)
+    want = ref.gather_reduce_ref(values, src, dst, nseg)
+    touched = np.unique(np.asarray(dst))
+    np.testing.assert_allclose(
+        np.asarray(out)[touched], np.asarray(want)[touched], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_gather_reduce_via_casting_path(rng):
+    """End-to-end: tensor_casting output drives the kernel; padding segments
+    masked through ops.gather_reduce(num_valid=...)."""
+    V, nseg, n, d = 40, 12, 64, 128
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, nseg, size=n)).astype(np.int32))
+    grad = jnp.asarray(rng.normal(size=(nseg, d)).astype(np.float32))
+    casted = tensor_casting(src, dst, fill_id=V)
+    out_k = ops.gather_reduce(
+        grad, casted.casted_src, casted.casted_dst,
+        num_valid=casted.num_unique, mode="pallas_interpret",
+    )
+    out_r = ops.gather_reduce(grad, casted.casted_src, casted.casted_dst, mode="jnp")
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("d", [16, 128, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scatter_apply_sweep(rng, d, dtype):
+    V, n = 23, 9
+    table = jnp.asarray(rng.normal(size=(V + 1, d)).astype(np.float32)).astype(dtype)
+    accum = jnp.asarray(rng.uniform(0.1, 2.0, size=(V + 1, 1)).astype(np.float32))
+    real = np.sort(rng.choice(V, size=6, replace=False)).astype(np.int32)
+    ids = jnp.asarray(np.concatenate([real, [V] * (n - 6)]).astype(np.int32))
+    grads = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    grads = grads.at[6:].set(0.0)
+
+    nt, na = scatter_apply_adagrad_pallas(table, accum, ids, grads, 0.05, interpret=True)
+    rt, ra = ref.scatter_apply_adagrad_ref(table, accum[:, 0], ids, grads, lr=0.05)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(nt, np.float32)[:V], np.asarray(rt, np.float32)[:V], rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(na)[:V, 0], np.asarray(ra)[:V], rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_apply_untouched_rows_intact(rng):
+    V, d = 17, 64
+    table = jnp.asarray(rng.normal(size=(V + 1, d)).astype(np.float32))
+    accum = jnp.asarray(rng.uniform(0.1, 1.0, size=(V + 1, 1)).astype(np.float32))
+    ids = jnp.asarray([2, 5, V, V], jnp.int32)
+    grads = jnp.asarray(rng.normal(size=(4, d)).astype(np.float32)).at[2:].set(0.0)
+    nt, na = scatter_apply_adagrad_pallas(table, accum, ids, grads, 0.1, interpret=True)
+    untouched = [i for i in range(V) if i not in (2, 5)]
+    np.testing.assert_array_equal(np.asarray(nt)[untouched], np.asarray(table)[untouched])
+    np.testing.assert_array_equal(np.asarray(na)[untouched], np.asarray(accum)[untouched])
+    # touched rows actually moved
+    assert not np.allclose(np.asarray(nt)[2], np.asarray(table)[2])
+
+
+def test_ops_dispatch_modes(rng):
+    values = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    src = jnp.asarray(rng.integers(0, 8, size=12).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, 5, size=12)).astype(np.int32))
+    a = ops.gather_reduce(values, src, dst, 5, mode="jnp")
+    b = ops.gather_reduce(values, src, dst, 5, mode="pallas_interpret",
+                          num_valid=jnp.asarray(5))
+    touched = np.unique(np.asarray(dst))
+    np.testing.assert_allclose(np.asarray(a)[touched], np.asarray(b)[touched], rtol=1e-6)
+    assert ops.get_default_mode() == "auto"
+    ops.set_default_mode("jnp")
+    try:
+        assert ops.get_default_mode() == "jnp"
+        with pytest.raises(ValueError):
+            ops.set_default_mode("bogus")
+    finally:
+        ops.set_default_mode("auto")
+
+
+def test_pad_rows():
+    x = jnp.ones((10, 3))
+    assert ops.pad_rows(x, 8).shape == (16, 3)
+    assert ops.pad_rows(x, 5).shape == (10, 3)
+
+
+# ---------------------------------------------------------------------------
+# MXU-blocked variant (two-pass: XLA gather + one-hot matmul segment sum)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,dtype", [(64, jnp.float32), (128, jnp.float32), (128, jnp.bfloat16), (256, jnp.float32)])
+def test_gather_reduce_mxu_sweep(rng, d, dtype):
+    from repro.kernels.gather_reduce_mxu import gather_reduce_mxu
+
+    n, nrows, nseg = 57, 23, 11
+    values = jnp.asarray(rng.normal(size=(nrows, d)).astype(np.float32)).astype(dtype)
+    src = rng.integers(0, nrows, size=n).astype(np.int32)
+    dst = np.sort(rng.integers(0, nseg, size=n).astype(np.int32))
+    out = gather_reduce_mxu(values, src, dst, nseg, R=8, SB=8, interpret=True)
+    want = ref.gather_reduce_ref(values, jnp.asarray(src), jnp.asarray(dst), nseg)
+    touched = np.unique(dst)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32)[touched], np.asarray(want, np.float32)[touched],
+        rtol=tol, atol=tol,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 30), st.integers(1, 20), st.integers(0, 2**31 - 1))
+def test_gather_reduce_mxu_property(n, nrows, nseg, seed):
+    from repro.kernels.gather_reduce_mxu import gather_reduce_mxu
+
+    rng = np.random.default_rng(seed)
+    values = jnp.asarray(rng.normal(size=(nrows, 32)).astype(np.float32))
+    src = rng.integers(0, nrows, size=n).astype(np.int32)
+    dst = np.sort(rng.integers(0, nseg, size=n).astype(np.int32))
+    out = gather_reduce_mxu(values, src, dst, nseg, R=4, SB=4, interpret=True)
+    want = ref.gather_reduce_ref(values, jnp.asarray(src), jnp.asarray(dst), nseg)
+    touched = np.unique(dst)
+    np.testing.assert_allclose(
+        np.asarray(out)[touched], np.asarray(want)[touched], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_align_blocks_invariants(rng):
+    from repro.kernels.gather_reduce_mxu import align_blocks_np
+
+    dst = np.sort(rng.integers(0, 20, size=97).astype(np.int32))
+    meta = align_blocks_np(dst, 20, R=8, SB=8)
+    n_aligned = meta["order"].shape[0]
+    assert n_aligned % 8 == 0
+    assert meta["out_block"].shape[0] == n_aligned // 8
+    # out_block non-decreasing; each input block maps to exactly one output block
+    assert (np.diff(meta["out_block"]) >= 0).all()
+    assert (meta["local_seg"] >= 0).all() and (meta["local_seg"] < 8).all()
+    # every real row appears exactly once
+    real = meta["order"][meta["order"] < 97]
+    np.testing.assert_array_equal(np.sort(real), np.arange(97))

@@ -1,0 +1,115 @@
+"""Tests for the §Perf hillclimb features: shard_map TC embedding, MoE
+local dispatch, int8 KV cache. Multi-device equivalence runs in a
+subprocess (8 fake devices); single-device semantics in-process."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.models import api
+from repro.models import moe as MOE
+
+
+def test_moe_local_equals_sort_fwd_and_grads(rng):
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)  # no drops
+    p = MOE.init_moe(jax.random.key(0), cfg.d_model, cfg.d_ff, cfg.num_experts, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(3, 8, cfg.d_model)).astype(np.float32))
+    a = MOE.moe_ffn_sort(p, x, cfg)
+    b = MOE.moe_ffn_local(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+    ga = jax.grad(lambda pp: jnp.sum(jnp.sin(MOE.moe_ffn_sort(pp, x, cfg))))(p)
+    gb = jax.grad(lambda pp: jnp.sum(jnp.sin(MOE.moe_ffn_local(pp, x, cfg))))(p)
+    for k in ("w_gate", "w_up", "w_down"):
+        np.testing.assert_allclose(
+            np.asarray(ga["experts"][k]), np.asarray(gb["experts"][k]), rtol=2e-3, atol=2e-4
+        )
+    np.testing.assert_allclose(np.asarray(ga["router"]), np.asarray(gb["router"]), rtol=2e-3, atol=2e-4)
+
+
+def test_int8_kv_cache_close_to_native(rng):
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(0))
+    B, S = 2, 9
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32))
+
+    def run(c):
+        cache = api.init_cache(c, B, S + 4)
+        lg, cache = api.prefill_step(c, params, toks[:, :-1], cache)
+        ld, cache2 = api.decode_step(c, params, cache, toks[:, -1:])
+        return np.asarray(lg), np.asarray(ld), cache2
+
+    lg_n, ld_n, _ = run(cfg)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    lg_8, ld_8, c8 = run(cfg8)
+    assert c8["k"].dtype == jnp.int8 and "k_scale" in c8
+    cos = float((lg_n * lg_8).sum() / (np.linalg.norm(lg_n) * np.linalg.norm(lg_8)))
+    cosd = float((ld_n * ld_8).sum() / (np.linalg.norm(ld_n) * np.linalg.norm(ld_8)))
+    assert cos > 0.999 and cosd > 0.995
+    assert (np.argmax(lg_n[:, -1], -1) == np.argmax(lg_8[:, -1], -1)).all()
+
+
+def test_int8_kv_multi_step_decode_stable(rng):
+    cfg = dataclasses.replace(get_config("qwen2-0.5b", smoke=True), kv_cache_dtype="int8")
+    params = api.init_params(cfg, jax.random.key(0))
+    B = 2
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, 5)).astype(np.int32))
+    cache = api.init_cache(cfg, B, 16)
+    logits, cache = api.prefill_step(cfg, params, toks, cache)
+    cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    for _ in range(4):
+        logits, cache = api.decode_step(cfg, params, cache, cur)
+        assert np.isfinite(np.asarray(logits)).all()
+        cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+
+_SM_EMBED = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core.embedding import tc_embed, tc_embed_sharded
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    V, D, B, S = 64, 16, 4, 8
+    table = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, V, size=(B, S)).astype(np.int32))
+    t_sh = jax.device_put(table, NamedSharding(mesh, P("model", None)))
+    ids_sh = jax.device_put(ids, NamedSharding(mesh, P("data", None)))
+
+    def loss_sh(t, i):
+        return jnp.sum(jnp.sin(tc_embed_sharded(t, i)) * 2.0)
+
+    with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        v1, g1 = jax.jit(jax.value_and_grad(loss_sh))(t_sh, ids_sh)
+    v2, g2 = jax.value_and_grad(lambda t, i: jnp.sum(jnp.sin(tc_embed(t, i)) * 2.0))(table, ids)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)
+    print(json.dumps({"ok": True}))
+    """
+)
+
+
+@pytest.mark.slow
+def test_shardmap_embed_equivalence_subprocess():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _SM_EMBED], env=env, capture_output=True, text=True, timeout=600
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

@@ -1,0 +1,52 @@
+"""Training-loop integration: short run, crash/resume determinism, and the
+compression-enabled step."""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.data.synth import ZipfTokenStream
+from repro.optim import adam
+from repro.runtime.train_loop import train
+
+
+def _stream(cfg):
+    return ZipfTokenStream(vocab_size=cfg.vocab_size, batch=2, seq=16, s=1.0, seed=7)
+
+
+def test_train_short_run_loss_finite(tmp_path):
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    state = train(cfg, adam(1e-3), _stream(cfg), num_steps=4,
+                  ckpt_dir=str(tmp_path), ckpt_every=2, log_every=0, log=lambda s: None)
+    assert state.step == 4
+    flat = jax.tree_util.tree_leaves(state.params)
+    assert all(np.isfinite(np.asarray(x, np.float32)).all() for x in flat)
+
+
+def test_crash_resume_determinism(tmp_path):
+    """Run 6 steps straight vs 3 steps + restart + 3 steps: identical params
+    (data stream is (seed, step)-keyed; checkpoints carry full state)."""
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    s_full = train(cfg, adam(1e-3), _stream(cfg), num_steps=6,
+                   ckpt_dir=str(tmp_path / "a"), ckpt_every=100, log_every=0, log=lambda s: None)
+
+    train(cfg, adam(1e-3), _stream(cfg), num_steps=3,
+          ckpt_dir=str(tmp_path / "b"), ckpt_every=3, log_every=0, log=lambda s: None)
+    s_resumed = train(cfg, adam(1e-3), _stream(cfg), num_steps=6,
+                      ckpt_dir=str(tmp_path / "b"), ckpt_every=3, resume=True,
+                      log_every=0, log=lambda s: None)
+
+    for a, b in zip(jax.tree_util.tree_leaves(s_full.params),
+                    jax.tree_util.tree_leaves(s_resumed.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_train_with_int8_compression():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    state = train(cfg, adam(1e-3), _stream(cfg), num_steps=3,
+                  compression="int8", log_every=0, log=lambda s: None)
+    flat = jax.tree_util.tree_leaves(state.params)
+    assert all(np.isfinite(np.asarray(x, np.float32)).all() for x in flat)
