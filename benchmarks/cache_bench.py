@@ -1,0 +1,143 @@
+"""Tiered embedding store benchmark: hit-rate and step-time vs the flat
+``tc`` baseline under zipf-exponent sweeps.
+
+For each alpha, trains the same single-table DLRM with ``system="tc"`` and
+``system="tc_cached"`` (1/cap-frac hot tier, EMA-driven promotion every
+``promote_every`` steps) on identical batches from data.synth.DLRMStream,
+and reports:
+
+  * ``hit_rate``  — mean hot-tier hit fraction over the measured tail
+                    (post-warmup; the acceptance operating point is
+                    alpha=1.05, 1/16 capacity -> >= 0.80).
+  * ``us/step``   — median wall-clock per train step for both systems.
+
+CSV rows via benchmarks.common.emit:
+  cache/tc/alpha<a>,<us>,hit=-
+  cache/tc_cached/alpha<a>,<us>,hit=<rate>
+
+On CPU the cached path pays the searchsorted + dual-gather overhead with no
+memory-hierarchy win — the step-time column is an upper bound on overhead,
+not the NMP/TPU speedup (that needs the fused cached-gather Pallas kernel,
+see ROADMAP open items).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import DLRMConfig
+from repro.data.pipeline import CastingServer
+from repro.data.synth import DLRMStream
+from repro.runtime import dlrm_train
+
+
+# the one definition of the reduced CI sweep (run.py --quick and --quick here)
+QUICK = dict(rows=16384, steps=32, batch=64, alphas=(1.05,))
+
+
+def bench_config(rows: int, pooling: int, emb_dim: int) -> DLRMConfig:
+    return DLRMConfig(
+        name="cache-bench",
+        num_tables=1,
+        gathers_per_table=pooling,
+        bottom_mlp=(64, emb_dim),
+        top_mlp=(64, 1),
+        rows_per_table=rows,
+        emb_dim=emb_dim,
+    )
+
+
+def _run_system(cfg, system: str, batches, *, capacity, promote_every, warmup_frac=0.25):
+    if system == "tc_cached":
+        state = dlrm_train.init_cached_state(cfg, jax.random.key(0), capacity=capacity)
+        promote = dlrm_train.make_promote_step()
+    else:
+        state = dlrm_train.init_state(cfg, jax.random.key(0))
+        promote = None
+    step = dlrm_train.make_sparse_train_step(cfg, system=system)
+
+    times, hits = [], []
+    warmup = int(len(batches) * warmup_frac)
+    for i, b in enumerate(batches):
+        t0 = time.perf_counter()
+        state, loss = step(state, b)
+        jax.block_until_ready(loss)
+        dt = time.perf_counter() - t0
+        if i >= warmup:
+            times.append(dt)
+            if system == "tc_cached":
+                hits.append(float(state["hit_rate"]))
+        if promote is not None and promote_every > 0 and i % promote_every == promote_every - 1:
+            state = promote(state)
+    times.sort()
+    med_us = times[len(times) // 2] * 1e6
+    # score the converged regime: tail half of the post-warmup window
+    hit = float(np.mean(hits[len(hits) // 2:])) if hits else float("nan")
+    return med_us, hit
+
+
+def run(
+    *,
+    rows: int = 131072,
+    cap_frac: int = 16,
+    batch: int = 256,
+    pooling: int = 32,
+    emb_dim: int = 64,
+    steps: int = 96,
+    promote_every: int = 8,
+    alphas=(0.8, 0.95, 1.05, 1.15),
+) -> dict:
+    cfg = bench_config(rows, pooling, emb_dim)
+    capacity = rows // cap_frac
+    cs = CastingServer(rows_per_table=cfg.rows_per_table, with_counts=True)
+    results = {}
+    for alpha in alphas:
+        stream = DLRMStream(
+            num_tables=1, rows_per_table=rows, gathers_per_table=pooling,
+            batch=batch, s=float(alpha), seed=0,
+        )
+        batches = [
+            jax.tree_util.tree_map(jnp.asarray, cs(stream.batch_at(i)))
+            for i in range(steps)
+        ]
+        us_tc, _ = _run_system(cfg, "tc", batches, capacity=capacity,
+                               promote_every=promote_every)
+        us_ca, hit = _run_system(cfg, "tc_cached", batches, capacity=capacity,
+                                 promote_every=promote_every)
+        results[alpha] = {"tc_us": us_tc, "tc_cached_us": us_ca, "hit_rate": hit}
+        emit(f"cache/tc/alpha{alpha}", us_tc, "hit=-")
+        emit(f"cache/tc_cached/alpha{alpha}", us_ca, f"hit={hit:.4f}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=131072)
+    ap.add_argument("--cap-frac", type=int, default=16, help="capacity = rows / cap_frac")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--pooling", type=int, default=32)
+    ap.add_argument("--emb-dim", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=96)
+    ap.add_argument("--promote-every", type=int, default=8)
+    ap.add_argument("--alphas", default="0.8,0.95,1.05,1.15")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    kw = dict(
+        rows=args.rows, cap_frac=args.cap_frac, batch=args.batch,
+        pooling=args.pooling, emb_dim=args.emb_dim, steps=args.steps,
+        promote_every=args.promote_every,
+        alphas=tuple(float(a) for a in args.alphas.split(",")),
+    )
+    if args.quick:
+        kw.update(QUICK)
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,8 +27,12 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--rows", type=int, default=150_000)
-    ap.add_argument("--system", default="tc", choices=["baseline", "tc", "tc_nmp"])
+    ap.add_argument("--system", default="tc", choices=["baseline", "tc", "tc_nmp", "tc_cached"])
     ap.add_argument("--profile", default="criteo")
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="tc_cached hot rows per table (0 -> rows/16)")
+    ap.add_argument("--promote-every", type=int, default=20,
+                    help="tc_cached promotion cadence in steps (0 -> never promote)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     args = ap.parse_args()
@@ -43,7 +47,7 @@ def main():
         gathers_per_table=cfg.gathers_per_table, batch=args.batch,
         profile=args.profile, seed=0,
     )
-    cast = CastingServer(rows_per_table=args.rows)
+    cast = CastingServer(rows_per_table=args.rows, with_counts=(args.system == "tc_cached"))
 
     def produce(step: int):
         b = stream.batch_at(step)
@@ -51,7 +55,15 @@ def main():
             b = cast(b)  # host-side casting, overlapped (paper Fig. 9b)
         return jax.tree_util.tree_map(jax.numpy.asarray, b)
 
-    state = dlrm_train.init_state(cfg, jax.random.key(0))
+    if args.system == "tc_cached":
+        state = dlrm_train.init_cached_state(
+            cfg, jax.random.key(0), capacity=args.cache_capacity or None
+        )
+        promote_fn = dlrm_train.make_promote_step()
+        flush_fn = dlrm_train.make_flush_step()
+    else:
+        state = dlrm_train.init_state(cfg, jax.random.key(0))
+        promote_fn = flush_fn = None
     step_fn = dlrm_train.make_sparse_train_step(cfg, system=args.system)
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
 
@@ -61,9 +73,19 @@ def main():
             step_no, batch = pf.get()
             state, loss = step_fn(state, batch)
             losses.append(float(loss))
+            promoted = (promote_fn and args.promote_every > 0
+                        and (step_no + 1) % args.promote_every == 0)
+            if promoted:
+                state = promote_fn(state)
             if step_no % 50 == 0:
-                print(f"[dlrm] step {step_no} loss {losses[-1]:.4f}")
+                hit = f" hit {float(state['hit_rate']):.2f}" if promote_fn else ""
+                print(f"[dlrm] step {step_no} loss {losses[-1]:.4f}{hit}")
             if ckpt and (step_no + 1) % args.ckpt_every == 0:
+                if flush_fn and not promoted:
+                    # hot rows live in the cache tier between promotions; the
+                    # write-back makes state["tables"] authoritative without
+                    # touching the hot set (promote_every=0 stays frozen)
+                    state = flush_fn(state)
                 ckpt.save(step_no + 1, {"tables": state["tables"], "dense": state["dense"]})
     dt = time.perf_counter() - t0
     if ckpt:

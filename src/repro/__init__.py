@@ -1,0 +1,1 @@
+from repro import _compat  # noqa: F401  (installs jax API shims on import)

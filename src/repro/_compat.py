@@ -1,0 +1,84 @@
+"""Compatibility shims for jax API drift.
+
+The codebase targets the jax >= 0.5 surface (``jax.shard_map``,
+``jax.sharding.get_abstract_mesh`` / ``use_abstract_mesh``). On older jax
+(0.4.x) those names are missing; this module installs equivalents built on
+``jax.experimental.shard_map`` and the thread-resource mesh context so every
+call site can stay written against the modern API.
+
+Imported for its side effect from ``repro/__init__.py`` — any
+``import repro.<submodule>`` runs it before jax symbols are touched.
+
+On the 0.4.x fallback, ``get_abstract_mesh`` returns the *concrete* ambient
+mesh (entered via ``with mesh:``): it carries the same ``.axis_names`` /
+``.shape`` surface consumers rely on, and unlike a true AbstractMesh it is
+accepted by the experimental shard_map.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    jax.shard_map = _shard_map
+
+if not hasattr(jax.sharding, "get_abstract_mesh"):
+    import threading
+
+    from jax._src import mesh as _mesh_lib
+
+    # thread-scoped like the real jax API (and thread_resources itself):
+    # concurrent `with use_abstract_mesh(...)` blocks must not interleave
+    _MESH_TLS = threading.local()
+
+    def _mesh_stack() -> list:
+        if not hasattr(_MESH_TLS, "stack"):
+            _MESH_TLS.stack = []
+        return _MESH_TLS.stack
+
+    def _get_abstract_mesh():
+        physical = _mesh_lib.thread_resources.env.physical_mesh
+        if not physical.empty:
+            return physical
+        stack = _mesh_stack()
+        if stack:
+            return stack[-1]
+        return physical  # empty mesh: axis_names == (), callers no-op
+
+    @contextlib.contextmanager
+    def _use_abstract_mesh(mesh):
+        stack = _mesh_stack()
+        stack.append(mesh)
+        try:
+            yield
+        finally:
+            stack.pop()
+
+    jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    jax.sharding.use_abstract_mesh = _use_abstract_mesh
+
+
+def _normalize_cost_analysis():
+    """jax <= 0.4.x returns a one-element list from Compiled.cost_analysis();
+    0.5+ returns the dict directly. Normalize to the modern shape."""
+    from jax._src import stages
+
+    orig = stages.Compiled.cost_analysis
+    if getattr(orig, "_repro_normalized", False):
+        return
+
+    def cost_analysis(self):
+        cost = orig(self)
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return cost
+
+    cost_analysis._repro_normalized = True
+    stages.Compiled.cost_analysis = cost_analysis
+
+
+if jax.__version__.startswith("0.4."):
+    _normalize_cost_analysis()

@@ -1,0 +1,28 @@
+"""Tiered embedding store driven by Tensor Casting metadata.
+
+The casting stage sorts every batch's lookup ids anyway (paper Alg. 2), so
+per-row access counts fall out of its output for free: segment s of
+``CastedIndices`` covers ``counts[s]`` lookups of row ``unique_ids[s]``.
+This package turns those counts into a decayed-frequency signal
+(``stats``), keeps the hottest rows in a small static-shape cache with
+their optimizer state (``hotcache``), and exposes a two-tier embedding
+store whose results are bit-identical to the flat table (``tiered``).
+
+See docs/cache.md for the dataflow and ROADMAP.md for the Pallas fused
+cached-gather follow-on.
+"""
+from repro.cache.hotcache import (  # noqa: F401
+    HotRowCache,
+    init_hot_cache,
+    promote_evict,
+    resolve,
+    write_back,
+)
+from repro.cache.stats import (  # noqa: F401
+    RowStatsAccumulator,
+    init_row_stats,
+    row_counts_from_cast,
+    segment_counts,
+    update_row_stats,
+)
+from repro.cache.tiered import TieredEmbedding, init_tiered  # noqa: F401

@@ -1,0 +1,116 @@
+"""Static-shape hot-row cache: the fast tier of the tiered embedding store.
+
+Layout mirrors the sentinel-padding discipline of ``optim.sparse`` tables —
+arrays carry ``C + 1`` slots for ``C`` cached rows, with slot ``C``
+permanently the dead sentinel (like row ``V`` of a (V+1)-padded table), so
+tier-splitting can redirect cold traffic there with no per-step padding
+copies:
+
+  * ``ids``   — (C+1,) int32, ascending; unfilled slots and the permanent
+    last slot hold the sentinel ``num_rows``, which sorts after every real
+    id so ``searchsorted`` membership tests stay O(log C).
+  * ``rows``  — (C+1, D) cached embedding rows (authoritative while cached).
+  * ``accum`` — (C+1, 1) fp32 row-wise Adagrad accumulators, cached alongside
+    the rows so the sparse update never touches the cold tier for hot rows.
+
+Promotion/eviction is one jittable step with static shapes: write back ALL
+cached rows + accumulators (demotion; a no-op write for rows that stay hot),
+then gather the EMA's top-C rows back in (promotion). Rows present in both
+generations round-trip bit-identically, so the step is semantically
+transparent — the tiered store stays exactly equal to a flat table.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+class HotRowCache(NamedTuple):
+    ids: Array  # (C+1,) int32 ascending, sentinel-padded, slot C always dead
+    rows: Array  # (C+1, D) table dtype
+    accum: Array  # (C+1, 1) float32
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[0] - 1
+
+
+def init_hot_cache(
+    capacity: int, dim: int, num_rows: int, dtype=jnp.float32
+) -> HotRowCache:
+    """All-empty cache (capacity real slots + the permanent dead slot):
+    every slot holds the sentinel id ``num_rows``."""
+    if not 1 <= capacity <= num_rows:
+        raise ValueError(f"capacity must be in [1, {num_rows}], got {capacity}")
+    return HotRowCache(
+        ids=jnp.full((capacity + 1,), num_rows, jnp.int32),
+        rows=jnp.zeros((capacity + 1, dim), dtype),
+        accum=jnp.zeros((capacity + 1, 1), jnp.float32),
+    )
+
+
+def resolve(cache_ids: Array, ids: Array) -> tuple[Array, Array]:
+    """id -> (slot, hit) by sorted search. ``ids`` may be any shape.
+
+    Contract note for kernel implementers: a sentinel query (id ==
+    num_rows, e.g. a SparseGrad padding entry) returns ``hit=True`` at the
+    FIRST sentinel slot — slot 0 on a fresh all-sentinel cache, the
+    permanent dead slot C on a promoted one. That is harmless by
+    construction (sentinel slots are dead and padding gradients are zero),
+    but padding ids must NOT be assumed to miss: they take the hot path,
+    not the cold-tier one."""
+    pos = jnp.searchsorted(cache_ids, ids.astype(jnp.int32)).astype(jnp.int32)
+    pos = jnp.minimum(pos, cache_ids.shape[0] - 1)
+    hit = jnp.take(cache_ids, pos) == ids
+    return pos, hit
+
+
+def write_back(
+    cache: HotRowCache, table: Array, accum: Array
+) -> tuple[Array, Array]:
+    """Flush cached rows + accumulators into the cold tier WITHOUT changing
+    the hot set. Afterwards both tiers agree on every cached row, so the
+    table alone is checkpoint-complete; training may continue with the same
+    cache (still bit-consistent). Sentinel slots land on the dead row V."""
+    table = table.at[cache.ids].set(cache.rows.astype(table.dtype), mode="drop")
+    accum = accum.at[cache.ids].set(cache.accum, mode="drop")
+    return table, accum
+
+
+def promote_evict(
+    cache: HotRowCache,
+    table: Array,
+    accum: Array,
+    ema: Array,
+) -> tuple[HotRowCache, Array, Array]:
+    """One placement step: demote everything, promote the EMA's top-C rows.
+
+    Args:
+      cache: current hot tier.
+      table: (V+1, D) sentinel-padded cold tier.
+      accum: (V+1, 1) fp32 Adagrad accumulators.
+      ema:   (V,) decayed access frequency (stats.RowStatsAccumulator.ema).
+
+    Returns (new_cache, new_table, new_accum). Write-back targets of
+    sentinel slots are the dead row V, which absorbs them harmlessly.
+    """
+    C = cache.capacity
+    V = table.shape[0] - 1
+    # demotion: write back every cached row + accumulator (rows that stay
+    # hot are re-gathered below unchanged)
+    table, accum = write_back(cache, table, accum)
+    # promotion: EMA top-C, id-sorted so searchsorted stays valid; the last
+    # slot stays the dead sentinel (real ids < V always sort before it)
+    _, top_ids = jax.lax.top_k(ema, C)
+    new_ids = jnp.concatenate(
+        [jnp.sort(top_ids.astype(jnp.int32)), jnp.full((1,), V, jnp.int32)]
+    )
+    new_cache = HotRowCache(
+        ids=new_ids,
+        rows=jnp.take(table, new_ids, axis=0),
+        accum=jnp.take(accum, new_ids, axis=0),
+    )
+    return new_cache, table, accum

@@ -1,0 +1,84 @@
+"""Per-row access statistics derived from the casting stage.
+
+Tensor Casting already sorts each batch's lookup ids (paper Alg. 2); the
+coalesced-segment structure of ``CastedIndices`` therefore encodes per-row
+access counts with no extra sort: segment ``s`` groups ``counts[s]`` lookups
+of table row ``unique_ids[s]``. The host pipeline (data.pipeline
+CastingServer) ships those counts with each batch; on device the same
+quantity is one scatter-add over ``casted_dst`` (the count-extraction half
+of ``segment_offsets_from_sorted``).
+
+The placement signal is a decayed-frequency EMA (RecNMP-style hot-entry
+profiling, continuously adapted instead of trace-profiled):
+
+    ema <- decay * ema;  ema[unique_ids] += counts
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.casting import CastedIndices
+
+
+class RowStatsAccumulator(NamedTuple):
+    """Decayed per-row access frequency. ``ema`` has one fp32 entry per REAL
+    table row (no sentinel slot — sentinel updates are dropped)."""
+
+    ema: Array  # (num_rows,) float32
+    decay: Array  # () float32
+
+
+def init_row_stats(num_rows: int, *, decay: float = 0.9) -> RowStatsAccumulator:
+    return RowStatsAccumulator(
+        ema=jnp.zeros((num_rows,), jnp.float32),
+        decay=jnp.asarray(decay, jnp.float32),
+    )
+
+
+def segment_counts(casted_dst: Array, num_segments: int) -> Array:
+    """(num_segments,) lookups per coalesced segment — no sort, one
+    scatter-add over the already-sorted ``casted_dst``."""
+    return jnp.zeros((num_segments,), jnp.int32).at[casted_dst].add(1, mode="drop")
+
+
+def row_counts_from_cast(casted: CastedIndices, num_rows: int) -> Array:
+    """(num_rows,) access count per table row for one batch. Padding segments
+    point at the ``fill_id`` sentinel >= num_rows and are dropped."""
+    counts = segment_counts(casted.casted_dst, casted.casted_dst.shape[0])
+    return (
+        jnp.zeros((num_rows,), jnp.int32)
+        .at[casted.unique_ids]
+        .add(counts, mode="drop")
+    )
+
+
+def fold_counts(ema: Array, decay, unique_ids: Array, counts: Array) -> Array:
+    """Array-level EMA fold: ``decay * ema`` then scatter-add of per-segment
+    counts. The single definition of the placement-signal update — shared by
+    ``update_row_stats`` and the fused trainer (runtime.dlrm_train)."""
+    return (ema * decay).at[unique_ids].add(counts.astype(jnp.float32), mode="drop")
+
+
+def update_row_stats(
+    stats: RowStatsAccumulator,
+    unique_ids: Array,
+    counts: Optional[Array] = None,
+    *,
+    casted_dst: Optional[Array] = None,
+) -> RowStatsAccumulator:
+    """Fold one batch into the EMA.
+
+    Pass host-precomputed ``counts`` (CastingServer attaches them per batch),
+    or ``casted_dst`` to derive them on device. ``unique_ids`` entries >=
+    num_rows (padding sentinel) are dropped by the scatter.
+    """
+    if counts is None:
+        if casted_dst is None:
+            raise ValueError("need counts or casted_dst")
+        counts = segment_counts(casted_dst, casted_dst.shape[0])
+    return RowStatsAccumulator(
+        ema=fold_counts(stats.ema, stats.decay, unique_ids, counts), decay=stats.decay
+    )

@@ -1,0 +1,134 @@
+"""Two-tier embedding store with the flat-table contract.
+
+``TieredEmbedding`` wraps a sentinel-padded cold table (+ row-wise Adagrad
+accumulators, as in ``optim.sparse``) and a ``HotRowCache``. Lookups and the
+``SparseGrad`` update are split between the tiers by a sorted-search
+membership test on the casted unique ids; each tier then runs the SAME
+gather / ``scatter_apply_adagrad`` primitives as the flat path, so every
+result is bit-identical to an untiered table (property-tested in
+tests/test_cache.py, and end-to-end in the ``tc_cached`` DLRM system).
+
+Tier-splitting trick: both tiers receive the FULL coalesced gradient, with
+the rows belonging to the other tier redirected to that tier's dead
+sentinel row (slot C of a padded cache copy / row V of the table). Real rows
+stay unique so the scatter semantics match the flat update exactly; the
+sentinel rows absorb the redirected traffic and are never read back.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.cache.hotcache import (
+    HotRowCache,
+    init_hot_cache,
+    promote_evict,
+    resolve,
+    write_back,
+)
+from repro.core.embedding import SparseGrad
+from repro.kernels import ops
+
+
+class TieredEmbedding(NamedTuple):
+    table: Array  # (V+1, D) cold tier, sentinel row V dead
+    accum: Array  # (V+1, 1) fp32 Adagrad accumulators
+    cache: HotRowCache  # hot tier (C rows + accums + sorted id map)
+
+    @property
+    def num_rows(self) -> int:
+        return self.table.shape[0] - 1
+
+    @property
+    def capacity(self) -> int:
+        return self.cache.capacity
+
+    # -- reads ------------------------------------------------------------
+
+    def lookup(self, ids: Array) -> tuple[Array, Array]:
+        """ids (...,) -> (rows (..., D), hit (...,)). Hot rows come from the
+        cache (authoritative while cached); everything else from the table."""
+        slots, hit = resolve(self.cache.ids, ids)
+        hot = jnp.take(self.cache.rows, slots, axis=0)
+        cold = jnp.take(self.table, ids, axis=0)
+        return jnp.where(hit[..., None], hot, cold), hit
+
+    def bag_lookup(
+        self, src: Array, dst: Array, num_segments: int
+    ) -> tuple[Array, Array]:
+        """Pooled forward (DLRM embedding bag): same contract as
+        core.embedding's bag forward, plus the per-lookup hit mask."""
+        rows, hit = self.lookup(src)
+        return jax.ops.segment_sum(rows, dst, num_segments=num_segments), hit
+
+    # -- writes -----------------------------------------------------------
+
+    def sparse_update(
+        self, grad: SparseGrad, *, lr, mode: Optional[str] = "jnp"
+    ) -> "TieredEmbedding":
+        """Row-wise Adagrad over the coalesced gradient, split between tiers.
+
+        Bit-identical to ``rowwise_adagrad_update`` on a flat table: each
+        real row is updated exactly once, by the same primitive, with the
+        same coalesced gradient row.
+
+        The redirected id streams are unsorted and their dead-sentinel
+        duplicates carry nonzero gradients, which violates the Pallas
+        scatter-apply kernel's layout contract (sorted ids, zero-grad
+        padding) — so only the jnp reference path is accepted, and anything
+        else raises up front rather than silently corrupting rows. A
+        cache-aware fused kernel is a ROADMAP open item.
+        """
+        if ops.resolve_mode(mode) != "jnp":
+            raise NotImplementedError(
+                "tier-split scatter breaks the Pallas kernel's sorted/zero-pad "
+                "contract; pass mode='jnp' (fused cached-scatter: see ROADMAP)"
+            )
+        V = self.num_rows
+        slots, hit = resolve(self.cache.ids, grad.unique_ids)
+
+        # hot tier: misses redirect to the permanent dead slot C (the cache
+        # is allocated C+1 slots for exactly this — no padding copies here)
+        hot_ids = jnp.where(hit, slots, self.capacity)
+        rows, accum_c = ops.scatter_apply_adagrad(
+            self.cache.rows, self.cache.accum, hot_ids, grad.rows, lr, mode=mode
+        )
+
+        # cold tier: hits redirect to the dead sentinel row V
+        cold_ids = jnp.where(hit, V, grad.unique_ids)
+        table, accum = ops.scatter_apply_adagrad(
+            self.table, self.accum, cold_ids, grad.rows, lr, mode=mode
+        )
+        return TieredEmbedding(
+            table=table,
+            accum=accum,
+            cache=HotRowCache(self.cache.ids, rows, accum_c),
+        )
+
+    # -- placement --------------------------------------------------------
+
+    def promote(self, ema: Array) -> "TieredEmbedding":
+        """Adopt the EMA's top-C rows as the new hot set (write-back +
+        re-fill; see hotcache.promote_evict)."""
+        cache, table, accum = promote_evict(self.cache, self.table, self.accum, ema)
+        return TieredEmbedding(table=table, accum=accum, cache=cache)
+
+    def flush(self) -> "TieredEmbedding":
+        """Write the hot tier back WITHOUT changing the hot set — afterwards
+        ``table``/``accum`` alone are checkpoint-complete."""
+        table, accum = write_back(self.cache, self.table, self.accum)
+        return TieredEmbedding(table=table, accum=accum, cache=self.cache)
+
+
+def init_tiered(table_with_sentinel: Array, capacity: int) -> TieredEmbedding:
+    """Wrap a sentinel-padded (V+1, D) table (optim.sparse.add_sentinel_row)
+    into a tiered store with an empty hot cache and zero accumulators."""
+    V, D = table_with_sentinel.shape[0] - 1, table_with_sentinel.shape[1]
+    return TieredEmbedding(
+        table=table_with_sentinel,
+        accum=jnp.zeros((V + 1, 1), jnp.float32),
+        cache=init_hot_cache(capacity, D, V, table_with_sentinel.dtype),
+    )

@@ -32,6 +32,9 @@ SMOKE = ModelConfig(
     rope_theta=10_000.0,
     num_experts=8,
     experts_per_token=2,
+    # no-drop capacity: batch-dependent capacity drops make decode-vs-forward
+    # equivalence unattainable at smoke scale (same idiom as test_moe_local)
+    moe_capacity_factor=8.0,
     loss_chunk=8,
     dtype="float32",
 )

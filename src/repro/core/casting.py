@@ -59,6 +59,9 @@ def tensor_casting(src: Array, dst: Array, *, fill_id: int) -> CastedIndices:
     src = src.astype(jnp.int32)
     dst = dst.astype(jnp.int32)
     n = src.shape[0]
+    if n == 0:  # static shape: resolve at trace time, skip the [-1] indexing
+        empty = jnp.zeros((0,), jnp.int32)
+        return CastedIndices(empty, empty, empty, jnp.zeros((), jnp.int32))
     # sort-by-key, key = src (stable so repeated ids keep batch order)
     sorted_src, sorted_dst = jax.lax.sort([src, dst], num_keys=1)
     casted_src = sorted_dst
@@ -66,7 +69,7 @@ def tensor_casting(src: Array, dst: Array, *, fill_id: int) -> CastedIndices:
         [jnp.ones((1,), jnp.int32), (sorted_src[1:] != sorted_src[:-1]).astype(jnp.int32)]
     )
     casted_dst = jnp.cumsum(boundary) - 1
-    num_unique = jnp.where(n > 0, casted_dst[-1] + 1, 0).astype(jnp.int32)
+    num_unique = (casted_dst[-1] + 1).astype(jnp.int32)  # n > 0 here
     unique_ids = jnp.full((n,), fill_id, jnp.int32).at[casted_dst].set(sorted_src, mode="drop")
     return CastedIndices(casted_src, casted_dst, unique_ids, num_unique)
 
@@ -86,16 +89,22 @@ def expand_gradients(grad: Array, dst: Array) -> Array:
     return jnp.take(grad, dst, axis=0)
 
 
-def coalesce_gradients(src: Array, exp_grad: Array) -> tuple[Array, Array, Array]:
+def coalesce_gradients(
+    src: Array, exp_grad: Array, *, fill_id: int | None = None
+) -> tuple[Array, Array, Array]:
     """Baseline Algorithm 1 (gradient coalescing), vectorized semantics.
 
     Sorts ``src``, permutes the *materialized* expanded gradients into sorted
     order (second (n, D) round-trip), and accumulates runs of equal src ids.
 
     Returns (coal_grad (n, D) padded with zeros, unique_ids (n,) padded with
-    the max src value + 1 region clamped out by callers, num_unique scalar).
+    ``fill_id`` past num_unique — a sentinel callers clamp/drop, exactly like
+    ``tensor_casting``; defaults to max(src) + 1 — num_unique scalar).
     """
     n = src.shape[0]
+    if n == 0:
+        empty_ids = jnp.zeros((0,), src.dtype)
+        return jnp.zeros_like(exp_grad), empty_ids, jnp.zeros((), jnp.int32)
     sorted_pos = jnp.argsort(src, stable=True)
     sorted_src = jnp.take(src, sorted_pos)
     sorted_grad = jnp.take(exp_grad, sorted_pos, axis=0)  # materialized reread
@@ -105,7 +114,11 @@ def coalesce_gradients(src: Array, exp_grad: Array) -> tuple[Array, Array, Array
     seg = jnp.cumsum(boundary) - 1
     coal = jax.ops.segment_sum(sorted_grad, seg, num_segments=n)
     num_unique = seg[-1] + 1
-    unique_ids = jnp.zeros((n,), src.dtype).at[seg].set(sorted_src, mode="drop")
+    # padding must not alias a row TOUCHED by this batch (zero-fill aliased
+    # row 0). The max(src)+1 default is only out-of-batch; callers that need
+    # a true out-of-table sentinel must pass fill_id = num_rows.
+    fill = jnp.asarray(fill_id if fill_id is not None else sorted_src[-1] + 1, src.dtype)
+    unique_ids = jnp.full((n,), fill, src.dtype).at[seg].set(sorted_src, mode="drop")
     return coal, unique_ids, num_unique
 
 

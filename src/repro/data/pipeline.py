@@ -19,25 +19,41 @@ from typing import Callable, Iterator, Optional
 import numpy as np
 
 
-def numpy_tensor_casting(src: np.ndarray, dst: np.ndarray, fill_id: int) -> dict:
-    """Host-side Alg. 2 (stable sort-by-key on src)."""
+def numpy_tensor_casting(
+    src: np.ndarray, dst: np.ndarray, fill_id: int, *, with_counts: bool = False
+) -> dict:
+    """Host-side Alg. 2 (stable sort-by-key on src).
+
+    Mirrors ``core.casting.tensor_casting`` exactly, including the guarded
+    n=0 case (empty index arrays, num_unique == 0). ``with_counts`` adds a
+    ``counts`` array (lookups per coalesced segment, aligned with
+    ``unique_ids``) — the placement signal for the tiered store
+    (repro.cache); skipped by default to keep the hot input path lean for
+    systems that never read it.
+    """
     order = np.argsort(src, kind="stable")
     sorted_src = src[order]
     casted_src = dst[order].astype(np.int32)
     n = src.shape[0]
     boundary = np.empty(n, np.int32)
-    boundary[0] = 1
-    boundary[1:] = (sorted_src[1:] != sorted_src[:-1]).astype(np.int32)
+    if n:
+        boundary[0] = 1
+        boundary[1:] = (sorted_src[1:] != sorted_src[:-1]).astype(np.int32)
     casted_dst = np.cumsum(boundary, dtype=np.int32) - 1
     num_unique = int(casted_dst[-1]) + 1 if n else 0
     unique_ids = np.full(n, fill_id, np.int32)
     unique_ids[casted_dst] = sorted_src
-    return {
+    out = {
         "casted_src": casted_src,
         "casted_dst": casted_dst,
         "unique_ids": unique_ids,
         "num_unique": np.int32(num_unique),
     }
+    if with_counts:
+        out["counts"] = (
+            np.bincount(casted_dst, minlength=n).astype(np.int32) if n else np.zeros(0, np.int32)
+        )
+    return out
 
 
 class CastingServer:
@@ -45,21 +61,29 @@ class CastingServer:
     critical path). For LM batches casts the flattened token ids; for DLRM
     batches casts every table's (src, dst) pair."""
 
-    def __init__(self, *, vocab_size: int = 0, rows_per_table: int = 0):
+    def __init__(self, *, vocab_size: int = 0, rows_per_table: int = 0, with_counts: bool = False):
         self.vocab_size = vocab_size
         self.rows_per_table = rows_per_table
+        # per-row access counts ride along only for tiered-store consumers
+        # (system="tc_cached"); other systems never read them
+        self.with_counts = with_counts
 
     def __call__(self, batch: dict) -> dict:
         out = dict(batch)
         if "tokens" in batch:
             flat = batch["tokens"].reshape(-1)
             dst = np.arange(flat.shape[0], dtype=np.int32)
-            out["cast"] = numpy_tensor_casting(flat, dst, fill_id=self.vocab_size)
+            out["cast"] = numpy_tensor_casting(
+                flat, dst, fill_id=self.vocab_size, with_counts=self.with_counts
+            )
         if "idx" in batch:
             B, T, P = batch["idx"].shape
             dst = np.repeat(np.arange(B, dtype=np.int32), P)
             casts = [
-                numpy_tensor_casting(batch["idx"][:, t, :].reshape(-1), dst, fill_id=self.rows_per_table)
+                numpy_tensor_casting(
+                    batch["idx"][:, t, :].reshape(-1), dst,
+                    fill_id=self.rows_per_table, with_counts=self.with_counts,
+                )
                 for t in range(T)
             ]
             out["cast"] = {

@@ -66,10 +66,11 @@ class DLRMStream:
     batch: int
     dense_features: int = 13
     profile: str = "criteo"
+    s: float | None = None  # explicit zipf exponent; overrides ``profile``
     seed: int = 0
 
     def __post_init__(self):
-        s = DATASET_PROFILES[self.profile]
+        s = DATASET_PROFILES[self.profile] if self.s is None else self.s
         n = min(self.rows_per_table, 1 << 18)
         self._probs = _zipf_probs(n, s)
         self._n = n

@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules and pipeline parallelism."""
+from repro import _compat  # noqa: F401  (jax API shims must be in place first)

@@ -1,0 +1,84 @@
+"""GPipe-style pipeline parallelism over a dedicated mesh axis.
+
+Stage weights are stacked on a leading stage dim and sharded over ``axis``;
+microbatches stream through the stages with one inter-stage
+collective-permute per tick. The schedule is the classic GPipe fill/drain:
+``n_micro + n_stages - 1`` ticks, bubble fraction
+``(n_stages - 1) / (n_micro + n_stages - 1)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import _compat  # noqa: F401
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """Fraction of stage-ticks idle in the fill/drain bubble."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def gpipe(stage_fn, stage_params, x: jax.Array, *, n_micro: int, axis: str) -> jax.Array:
+    """Run ``x`` through ``n_stages`` pipeline stages, microbatched.
+
+    Args:
+      stage_fn: (stage_params_slice, h) -> h, shape-preserving on h.
+      stage_params: pytree stacked (n_stages, ...) and sharded P(axis) on the
+        leading dim.
+      x: (B, ...) full batch, replicated; B must divide by n_micro.
+      n_micro: number of microbatches.
+      axis: mesh axis holding the stages (one stage per shard).
+
+    Call under jit with the mesh ambient (``with mesh,
+    jax.sharding.use_abstract_mesh(mesh.abstract_mesh)``).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    n_stages = dict(mesh.shape)[axis]
+    B = x.shape[0]
+    if B % n_micro:
+        raise ValueError(f"batch {B} not divisible by n_micro {n_micro}")
+    mb = B // n_micro
+    ticks = n_micro + n_stages - 1
+    fwd_ring = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def body(w_local, x_full):
+        w_stage = jax.tree_util.tree_map(lambda a: a[0], w_local)  # strip stage dim
+        idx = jax.lax.axis_index(axis)
+        micro = x_full.reshape((n_micro, mb) + x_full.shape[1:])
+        carry = jnp.zeros((mb,) + x_full.shape[1:], x_full.dtype)
+        out = jnp.zeros_like(micro)
+
+        def tick(t, state):
+            carry, out = state
+            # stage 0 feeds microbatch t (clipped during drain; its extra
+            # outputs never reach a write tick at the last stage)
+            feed = jax.lax.dynamic_index_in_dim(
+                micro, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False
+            )
+            h = jnp.where(idx == 0, feed, carry)
+            y = stage_fn(w_stage, h)
+            # last stage finishes microbatch m = t - (n_stages - 1)
+            m = t - (n_stages - 1)
+            mc = jnp.clip(m, 0, n_micro - 1)
+            write = (idx == n_stages - 1) & (m >= 0)
+            cur = jax.lax.dynamic_index_in_dim(out, mc, axis=0, keepdims=False)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, jnp.where(write, y, cur), mc, axis=0
+            )
+            carry = jax.lax.ppermute(y, axis, fwd_ring) if fwd_ring else y
+            return carry, out
+
+        _, out = jax.lax.fori_loop(0, ticks, tick, (carry, out))
+        # only the last stage holds real outputs; psum replicates them
+        out = jax.lax.psum(jnp.where(idx == n_stages - 1, out, jnp.zeros_like(out)), axis)
+        return out.reshape(x_full.shape)
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+    )
+    return fn(stage_params, x)

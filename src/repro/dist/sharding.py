@@ -1,0 +1,224 @@
+"""Logical-axis sharding: one place that maps model-level axis names onto
+whatever physical mesh is ambient.
+
+Models annotate activations with *logical* names ("batch", "seq", "embed",
+"vocab", "experts") via ``constrain``; the mapping to physical mesh axes is
+decided here, modulated by a small set of lowering flags (sequence
+parallelism, serving vs training, attention tensor parallelism, shard_map
+embedding). The flags are context managers so the dry-run can sweep lowering
+variants without threading booleans through every model.
+
+Physical axis conventions (see launch/mesh.py):
+  * ``data`` (+ optional ``pod``) — pure data parallelism.
+  * ``model``                     — tensor/model parallelism.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import _compat  # noqa: F401
+
+_DATA_AXES = ("pod", "data")
+
+_state = threading.local()
+
+
+def _flags() -> dict:
+    if not hasattr(_state, "flags"):
+        _state.flags = {
+            "seq_parallel": False,
+            "serving": False,
+            "attn_tp": False,
+            "shardmap_embed": False,
+        }
+    return _state.flags
+
+
+@contextlib.contextmanager
+def _flag(name: str, on: bool):
+    flags = _flags()
+    prev = flags[name]
+    flags[name] = bool(on)
+    try:
+        yield
+    finally:
+        flags[name] = prev
+
+
+def seq_parallel(on: bool = True):
+    """Shard the sequence dim of activations over ``model`` (Megatron SP)."""
+    return _flag("seq_parallel", on)
+
+
+def serving(on: bool = True):
+    """Serving shapes (small/ragged batch): keep activations batch-replicated
+    unless the batch divides the data axes exactly."""
+    return _flag("serving", on)
+
+
+def attn_tp(on: bool = True):
+    """Attention-head tensor parallelism (valid only when head counts divide
+    the model axis — see ``attn_tp_valid``)."""
+    return _flag("attn_tp", on)
+
+
+def shardmap_embed(on: bool = True):
+    """Route token embedding through the shard_map TC path
+    (core.embedding.tc_embed_sharded) instead of the replicated-table path."""
+    return _flag("shardmap_embed", on)
+
+
+def use_seq_parallel() -> bool:
+    return _flags()["seq_parallel"]
+
+
+def use_serving() -> bool:
+    return _flags()["serving"]
+
+
+def use_attn_tp() -> bool:
+    return _flags()["attn_tp"]
+
+
+def use_shardmap_embed() -> bool:
+    return _flags()["shardmap_embed"]
+
+
+def attn_tp_valid(num_heads: int, num_kv_heads: Optional[int], tp: int) -> bool:
+    """Head-parallel attention needs every head group to divide the TP degree."""
+    if tp <= 1:
+        return True
+    if num_heads is None or num_heads % tp:
+        return False
+    kv = num_kv_heads or num_heads
+    return kv % tp == 0
+
+
+# ---------------------------------------------------------------------------
+# constrain: logical names -> with_sharding_constraint on the ambient mesh
+# ---------------------------------------------------------------------------
+
+
+def _mesh_axes(mesh) -> dict:
+    try:
+        return dict(mesh.shape)
+    except Exception:
+        return {}
+
+
+def _physical_for(logical: Optional[str], axes: dict):
+    """Resolve one logical axis name to mesh axis name(s) (or None)."""
+    if logical is None:
+        return None
+    if logical == "batch":
+        dp = tuple(a for a in _DATA_AXES if a in axes)
+        return dp if dp else None
+    if logical == "seq":
+        return "model" if (use_seq_parallel() and "model" in axes) else None
+    if logical in ("vocab", "experts", "heads"):
+        return "model" if "model" in axes else None
+    if logical == "embed":
+        return None  # hidden dim of activations stays replicated
+    return logical if logical in axes else None
+
+
+def _axis_size(phys, axes: dict) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        return math.prod(axes[a] for a in phys)
+    return axes.get(phys, 1)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names, one per dim.
+
+    No-ops when no mesh is ambient (single-device tests) or when a dim does
+    not divide the mapped axes (e.g. serving's ragged batches)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    axes = _mesh_axes(mesh)
+    if not axes:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"constrain got {len(logical)} names for rank-{x.ndim} array")
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        phys = _physical_for(name, axes)
+        size = _axis_size(phys, axes)
+        spec.append(phys if (size > 1 and dim % size == 0) else None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Input/state sharding trees for jit boundaries
+# ---------------------------------------------------------------------------
+
+
+def _leaf_shape(leaf: Any) -> tuple:
+    return tuple(getattr(leaf, "shape", ()))
+
+
+def _param_spec(shape: tuple, axes: dict) -> P:
+    """Shard the largest dim divisible by ``model`` (prefer trailing dims on
+    ties: matmul weights shard their output dim)."""
+    m = axes.get("model", 1)
+    if m <= 1 or not shape:
+        return P()
+    best = None
+    for i in reversed(range(len(shape))):
+        if shape[i] >= m and shape[i] % m == 0:
+            if best is None or shape[i] > shape[best]:
+                best = i
+    if best is None:
+        return P()
+    spec = [None] * len(shape)
+    spec[best] = "model"
+    return P(*spec)
+
+
+def param_shardings(mesh, tree):
+    """NamedSharding tree for parameters/optimizer state: model-axis sharded
+    where shapes allow, replicated otherwise (always valid to reshard)."""
+    axes = _mesh_axes(mesh)
+
+    def one(leaf):
+        return NamedSharding(mesh, _param_spec(_leaf_shape(leaf), axes))
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def _batch_spec(shape: tuple, axes: dict, batch_size: Optional[int]) -> P:
+    dp = tuple(a for a in _DATA_AXES if a in axes)
+    dp_size = math.prod(axes[a] for a in dp) if dp else 1
+    if (
+        dp_size > 1
+        and shape
+        and (batch_size is None or shape[0] == batch_size)
+        and shape[0] % dp_size == 0
+    ):
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P()
+
+
+def batch_shardings(mesh, tree, *, batch_size: Optional[int] = None):
+    """Shard the leading (batch) dim over the data axes; everything else
+    replicated. Leaves whose leading dim is not the batch stay replicated."""
+    axes = _mesh_axes(mesh)
+
+    def one(leaf):
+        return NamedSharding(mesh, _batch_spec(_leaf_shape(leaf), axes, batch_size))
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def cache_shardings(mesh, tree, *, batch_size: Optional[int] = None):
+    """KV/state caches are laid out batch-major like inputs."""
+    return batch_shardings(mesh, tree, batch_size=batch_size)

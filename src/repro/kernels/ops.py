@@ -45,6 +45,12 @@ def _resolve(mode: Optional[str]) -> str:
     return mode
 
 
+def resolve_mode(mode: Optional[str] = None) -> str:
+    """Public dispatch resolution (None -> module default -> backend):
+    lets callers with kernel-contract restrictions validate up front."""
+    return _resolve(mode)
+
+
 def gather_reduce(
     values: Array,
     src: Array,

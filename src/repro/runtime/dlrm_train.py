@@ -15,6 +15,12 @@ Four design points from the paper's evaluation (§VI), selectable as
                         routed through the Pallas kernels (the NMP-core
                         analogue). On CPU this dispatches to interpret mode
                         for validation; on TPU to Mosaic.
+  * ``tc_cached``     — Ours + tiered store (repro.cache): the casting
+                        metadata drives a hot-row cache per table; lookups
+                        and sparse updates split between tiers, and a
+                        decayed-frequency EMA (fed by the CastingServer's
+                        per-batch row counts) periodically re-picks the hot
+                        set. Bit-identical to ``tc`` by construction.
 
 The dense MLPs always train with dense Adagrad (the GPU side of Fig. 3).
 """
@@ -26,6 +32,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.cache.hotcache import HotRowCache, init_hot_cache, promote_evict, write_back
+from repro.cache.stats import fold_counts, segment_counts
+from repro.cache.tiered import TieredEmbedding
 from repro.configs.base import DLRMConfig
 from repro.core.casting import CastedIndices
 from repro.core.embedding import SparseGrad
@@ -55,6 +64,29 @@ def _pooled_from_tables(cfg: DLRMConfig, tables, idx):
     return jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, idx)
 
 
+def _tiered_of(state):
+    """View per-table state slices as a TieredEmbedding (used under vmap)."""
+    table, accum, cids, crows, caccum = state
+    return TieredEmbedding(table, accum, HotRowCache(cids, crows, caccum))
+
+
+def _pooled_from_tiered(cfg: DLRMConfig, tables, accums, cids, crows, caccums, idx):
+    """Cache-aware forward gather-reduce: hot rows come from the cache tier
+    (the authoritative copy while cached). Returns (emb (B,T,D), hit_frac)."""
+    B, T, P = idx.shape
+    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+
+    def one(table, accum, ci, cr, ca, ids):
+        te = _tiered_of((table, accum, ci, cr, ca))
+        pooled, hit = te.bag_lookup(ids.reshape(-1), dst, B)
+        return pooled, jnp.mean(hit.astype(jnp.float32))
+
+    emb, hits = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 1), out_axes=(1, 0))(
+        tables, accums, cids, crows, caccums, idx
+    )
+    return emb, jnp.mean(hits)
+
+
 def _dense_fn(cfg: DLRMConfig, dense_params, emb, batch):
     bot = dlrm._apply_mlp(dense_params["bot_mlp"], batch["dense"], final_act=True)
     x = dlrm._interact(bot, emb)
@@ -64,15 +96,18 @@ def _dense_fn(cfg: DLRMConfig, dense_params, emb, batch):
     return jnp.mean(jnp.maximum(lf, 0) - lf * labels + jnp.log1p(jnp.exp(-jnp.abs(lf))))
 
 
-def make_sparse_train_step(cfg: DLRMConfig, *, lr: float = 0.01, system: str = "tc"):
+def make_sparse_train_step(
+    cfg: DLRMConfig, *, lr: float = 0.01, system: str = "tc", decay: float = 0.98
+):
     """Returns jitted (state, batch_with_cast) -> (state, loss).
 
     batch must carry ``cast`` stacked per table (from data.pipeline
-    CastingServer) when system != baseline.
+    CastingServer) when system != baseline. ``decay`` is the hot-row EMA
+    decay, used only by ``tc_cached`` (pair with ``make_promote_step``).
     """
     # tc pins the reference path; tc_nmp auto-dispatches (Mosaic on TPU,
     # jnp on CPU — kernel equivalence is covered by interpret-mode tests).
-    kernel_mode = {"baseline": None, "tc": "jnp", "tc_nmp": None}[system]
+    kernel_mode = {"baseline": None, "tc": "jnp", "tc_nmp": None, "tc_cached": "jnp"}[system]
     dense_opt = adagrad(lr)
 
     def step(state, batch):
@@ -92,6 +127,40 @@ def make_sparse_train_step(cfg: DLRMConfig, *, lr: float = 0.01, system: str = "
             # add zero) — numerically identical to the sparse path.
             accums = accums + jnp.mean(jnp.square(d_tables.astype(jnp.float32)), -1, keepdims=True)
             tables = (tables - lr * d_tables / jnp.sqrt(accums + 1e-10)).astype(tables.dtype)
+        elif system == "tc_cached":
+            # tiered store: cache-aware forward, tier-split sparse update,
+            # EMA fed by the CastingServer's per-batch row counts
+            cids, crows, caccums = state["cache_ids"], state["cache_rows"], state["cache_accums"]
+            ema = state["ema"]
+            cast = batch["cast"]
+            emb, hit_rate = _pooled_from_tiered(
+                cfg, tables, accums, cids, crows, caccums, batch["idx"]
+            )
+            loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
+            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
+            if "counts" in cast:  # host-computed (CastingServer); else derive
+                counts = cast["counts"]
+            else:
+                counts = jax.vmap(lambda cd: segment_counts(cd, cd.shape[0]))(cast["casted_dst"])
+
+            def upd_one(table, accum, ci, cr, ca, e, d_e, c_src, c_dst, uids, nuniq, cnt):
+                te = _tiered_of((table, accum, ci, cr, ca))
+                coal = ops.gather_reduce(d_e, c_src, c_dst, mode=kernel_mode)
+                te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode=kernel_mode)
+                e = fold_counts(e, decay, uids, cnt)
+                return te.table, te.accum, te.cache.ids, te.cache.rows, te.cache.accum, e
+
+            tables, accums, cids, crows, caccums, ema = jax.vmap(
+                upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
+            )(
+                tables, accums, cids, crows, caccums, ema,
+                d_emb,
+                cast["casted_src"],
+                cast["casted_dst"],
+                cast["unique_ids"],
+                cast["num_unique"],
+                counts,
+            )
         else:
             # paper system: fwd gather-reduce; bwd = casted gather-reduce + sparse scatter
             emb = _pooled_from_tables(cfg, tables, batch["idx"])
@@ -114,10 +183,18 @@ def make_sparse_train_step(cfg: DLRMConfig, *, lr: float = 0.01, system: str = "
 
         updates, opt_state = dense_opt.update(d_dense, opt_state, dense_params)
         dense_params = apply_updates(dense_params, updates)
-        return (
-            {"dense": dense_params, "tables": tables, "accums": accums, "opt_state": opt_state},
-            loss,
-        )
+        new_state = {
+            "dense": dense_params,
+            "tables": tables,
+            "accums": accums,
+            "opt_state": opt_state,
+        }
+        if system == "tc_cached":
+            new_state.update(
+                cache_ids=cids, cache_rows=crows, cache_accums=caccums,
+                ema=ema, hit_rate=hit_rate,
+            )
+        return new_state, loss
 
     return jax.jit(step, donate_argnums=(0,))
 
@@ -126,3 +203,62 @@ def init_state(cfg: DLRMConfig, key, *, lr: float = 0.01):
     s = init_sparse_system(cfg, key)
     s["opt_state"] = adagrad(lr).init(s["dense"])
     return s
+
+
+def init_cached_state(cfg: DLRMConfig, key, *, lr: float = 0.01, capacity: int | None = None):
+    """init_state + per-table tiered-store state for ``system="tc_cached"``.
+
+    ``capacity`` defaults to rows/16 — the paper-adjacent 'small fast tier'
+    operating point (RecNMP's hot-entry working set)."""
+    s = init_state(cfg, key, lr=lr)
+    T, rows_p1, D = s["tables"].shape
+    V = rows_p1 - 1
+    C = capacity if capacity is not None else max(1, V // 16)
+    # one source of truth for the cache layout/validation: hotcache.init
+    cache = init_hot_cache(C, D, V, s["tables"].dtype)
+    s["cache_ids"] = jnp.tile(cache.ids, (T, 1))
+    s["cache_rows"] = jnp.tile(cache.rows, (T, 1, 1))
+    s["cache_accums"] = jnp.tile(cache.accum, (T, 1, 1))
+    s["ema"] = jnp.zeros((T, V), jnp.float32)
+    s["hit_rate"] = jnp.zeros((), jnp.float32)
+    return s
+
+
+def make_promote_step():
+    """Jitted placement step for ``tc_cached``: per table, demote the current
+    hot set (write-back of rows + accumulators) and adopt the EMA's top-C.
+    Run every N steps off the critical path; semantically a no-op (the
+    tiered store stays bit-identical to the flat table). Shape-polymorphic
+    over the state — no config needed."""
+
+    def promote(state):
+        def one(table, accum, ci, cr, ca, ema):
+            cache, table, accum = promote_evict(HotRowCache(ci, cr, ca), table, accum, ema)
+            return table, accum, cache.ids, cache.rows, cache.accum
+
+        tables, accums, cids, crows, caccums = jax.vmap(one)(
+            state["tables"], state["accums"], state["cache_ids"],
+            state["cache_rows"], state["cache_accums"], state["ema"],
+        )
+        return dict(
+            state,
+            tables=tables, accums=accums,
+            cache_ids=cids, cache_rows=crows, cache_accums=caccums,
+        )
+
+    return jax.jit(promote, donate_argnums=(0,))
+
+
+def make_flush_step():
+    """Jitted write-back WITHOUT hot-set adoption: after this,
+    state["tables"]/["accums"] alone are checkpoint-complete while the
+    cache stays as configured (e.g. frozen under promote_every=0)."""
+
+    def flush(state):
+        tables, accums = jax.vmap(lambda t, a, ci, cr, ca: write_back(HotRowCache(ci, cr, ca), t, a))(
+            state["tables"], state["accums"], state["cache_ids"],
+            state["cache_rows"], state["cache_accums"],
+        )
+        return dict(state, tables=tables, accums=accums)
+
+    return jax.jit(flush, donate_argnums=(0,))

@@ -1,0 +1,60 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API used here.
+
+Loaded by tests/conftest.py ONLY when the real hypothesis is not installed
+(the CI workflow installs the real one; air-gapped dev boxes fall back to
+this). It implements the subset this repo's property tests use — ``given``,
+``settings`` and the ``strategies`` combinators — with deterministic
+pseudo-random example generation (seeded per test name), no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+from . import strategies  # noqa: F401
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class HealthCheck:  # placeholder enum namespace
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__module__.encode() + b"::" + fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for example in range(n):
+                args = [s.example_from(rng) for s in strats]
+                kwargs = {k: s.example_from(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{example}: args={args!r} kwargs={kwargs!r}"
+                    ) from e
+
+        # drop hypothesis params from the pytest signature
+        wrapper.__wrapped__ = None
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

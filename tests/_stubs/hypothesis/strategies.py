@@ -1,0 +1,74 @@
+"""Strategy combinators for the hypothesis stub (see __init__.py)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def flatmap(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)).example_from(rng))
+
+    def filter(self, pred, _tries: int = 1000):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30) -> SearchStrategy:
+    return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(seq: Sequence) -> SearchStrategy:
+    items = list(seq)
+    return SearchStrategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example_from(rng) for _ in range(size)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example_from(rng) for s in strats))
+
+
+def composite(f):
+    def builder(*args, **kwargs):
+        def draw_fn(rng):
+            draw = lambda strategy: strategy.example_from(rng)  # noqa: E731
+            return f(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_fn)
+
+    return builder

@@ -1,6 +1,16 @@
 # NOTE: no XLA_FLAGS device-count overrides here — smoke tests and benches
 # must see the single real CPU device. Multi-device sharding tests spawn
 # subprocesses that set the flag before importing jax (tests/test_dryrun.py).
+import os
+import sys
+
+# Fall back to the deterministic hypothesis stub when the real one is not
+# installed (see pyproject [project.optional-dependencies] and tests/_stubs/).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "_stubs"))
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,251 @@
+"""Tiered embedding store (repro.cache): exact equivalence to the flat
+table under arbitrary id streams, cache sizes and promotion schedules, plus
+the casting-derived row statistics and the tc_cached DLRM system."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.hotcache import init_hot_cache, resolve
+from repro.cache.stats import (
+    init_row_stats,
+    row_counts_from_cast,
+    segment_counts,
+    update_row_stats,
+)
+from repro.cache.tiered import TieredEmbedding, init_tiered
+from repro.core.casting import tensor_casting
+from repro.core.embedding import SparseGrad
+from repro.kernels import ops
+from repro.optim.sparse import add_sentinel_row, init_rowwise_adagrad
+
+
+def _flat_view(tiered: TieredEmbedding) -> tuple[np.ndarray, np.ndarray]:
+    """Materialize the tiered store as one flat table (cache wins on hits)."""
+    table = np.asarray(tiered.table).copy()
+    accum = np.asarray(tiered.accum).copy()
+    ids = np.asarray(tiered.cache.ids)
+    real = ids < tiered.num_rows
+    table[ids[real]] = np.asarray(tiered.cache.rows)[real]
+    accum[ids[real]] = np.asarray(tiered.cache.accum)[real]
+    return table, accum
+
+
+def _one_round(rng, V, n, D):
+    """One synthetic casted batch: ids, casted metadata, coalesced grad."""
+    m = max(1, n // 2)
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, m, size=n)).astype(np.int32))
+    casted = tensor_casting(src, dst, fill_id=V)
+    g = jnp.asarray(rng.normal(size=(m, D)).astype(np.float32))
+    coal = ops.gather_reduce(g, casted.casted_src, casted.casted_dst, mode="jnp")
+    return src, casted, SparseGrad(casted.unique_ids, coal, casted.num_unique)
+
+
+# ---------------------------------------------------------------------------
+# resolve / hot cache basics
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_cache_all_miss():
+    cache = init_hot_cache(4, 8, num_rows=32)
+    _, hit = resolve(cache.ids, jnp.arange(32, dtype=jnp.int32))
+    assert not bool(hit.any())
+
+
+def test_capacity_cannot_exceed_rows():
+    with pytest.raises(ValueError):
+        init_hot_cache(33, 8, num_rows=32)
+
+
+def test_promotion_adopts_topk_rows(rng):
+    V, C, D = 64, 4, 8
+    tiered = init_tiered(add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), C)
+    ema = jnp.zeros((V,)).at[jnp.asarray([3, 17, 40, 59])].set(jnp.asarray([9.0, 7.0, 8.0, 6.0]))
+    tiered = tiered.promote(ema)
+    # C real slots + the permanent dead sentinel slot
+    np.testing.assert_array_equal(np.asarray(tiered.cache.ids), [3, 17, 40, 59, V])
+    # promoted rows were copied verbatim from the table
+    np.testing.assert_array_equal(
+        np.asarray(tiered.cache.rows)[:4], np.asarray(tiered.table)[[3, 17, 40, 59]]
+    )
+    _, hit = resolve(tiered.cache.ids, jnp.asarray([3, 4, 59], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(hit), [True, False, True])
+
+
+# ---------------------------------------------------------------------------
+# casting-derived row statistics
+# ---------------------------------------------------------------------------
+
+
+def test_segment_counts_match_bincount(rng):
+    V, n = 40, 100
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    casted = tensor_casting(src, jnp.arange(n, dtype=jnp.int32), fill_id=V)
+    counts = np.asarray(segment_counts(casted.casted_dst, n))
+    np.testing.assert_array_equal(counts, np.bincount(np.asarray(casted.casted_dst), minlength=n))
+    # per-row counts recover the raw id histogram
+    per_row = np.asarray(row_counts_from_cast(casted, V))
+    np.testing.assert_array_equal(per_row, np.bincount(np.asarray(src), minlength=V))
+
+
+def test_row_stats_ema_decays(rng):
+    V = 16
+    src = jnp.asarray(rng.integers(0, V, size=32).astype(np.int32))
+    casted = tensor_casting(src, jnp.arange(32, dtype=jnp.int32), fill_id=V)
+    stats = init_row_stats(V, decay=0.5)
+    stats = update_row_stats(stats, casted.unique_ids, casted_dst=casted.casted_dst)
+    first = np.asarray(stats.ema)
+    np.testing.assert_array_equal(first, np.bincount(np.asarray(src), minlength=V))
+    stats = update_row_stats(stats, casted.unique_ids, casted_dst=casted.casted_dst)
+    np.testing.assert_allclose(np.asarray(stats.ema), 1.5 * first, rtol=1e-6)
+
+
+def test_casting_server_attaches_counts():
+    from repro.data.pipeline import CastingServer
+
+    cs = CastingServer(rows_per_table=50, with_counts=True)
+    out = cs({"idx": np.tile(np.asarray([1, 1, 7, 3], np.int32), (2, 3, 1))})
+    # counts are opt-in: the default server must keep the hot path lean
+    assert "counts" not in CastingServer(rows_per_table=50)(
+        {"idx": np.tile(np.asarray([1, 1, 7, 3], np.int32), (2, 3, 1))}
+    )["cast"]
+    counts = out["cast"]["counts"]
+    assert counts.shape == out["cast"]["casted_dst"].shape
+    # ids 1,1,3,7 per sample x 2 samples: segments carry [4, 2, 2] lookups
+    np.testing.assert_array_equal(np.sort(counts[0])[-3:], [2, 2, 4])
+    assert counts[0].sum() == 8
+
+
+# ---------------------------------------------------------------------------
+# exact equivalence to the flat path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(4, 32),  # V table rows
+    st.integers(1, 32),  # C cache capacity (clipped to V; C == V -> all-hot)
+    st.integers(1, 48),  # n lookups per round
+    st.integers(1, 4),  # rounds
+    st.integers(0, 2**31 - 1),
+)
+def test_tiered_bitwise_equals_flat(V, C, n, rounds, seed):
+    """lookup + sparse_update through the tiered store are EXACT-equal to the
+    flat sentinel-padded table across promotion/eviction boundaries,
+    including the all-cold (fresh cache) and all-hot (C == V) extremes."""
+    C = min(C, V)
+    D = 4
+    rng = np.random.default_rng(seed)
+    table0 = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    flat_t = add_sentinel_row(table0)
+    flat_a = init_rowwise_adagrad(flat_t)
+    tiered = init_tiered(add_sentinel_row(table0), C)
+    stats = init_row_stats(V, decay=0.9)
+    lr = 0.1
+
+    for r in range(rounds):
+        src, casted, grad = _one_round(rng, V, n, D)
+        # reads: all-cold on round 0, mixed afterwards
+        got, _ = tiered.lookup(src)
+        np.testing.assert_array_equal(np.asarray(got), _flat_view(tiered)[0][np.asarray(src)])
+        # writes
+        flat_t, flat_a = ops.scatter_apply_adagrad(
+            flat_t, flat_a, grad.unique_ids, grad.rows, lr, mode="jnp"
+        )
+        tiered = tiered.sparse_update(grad, lr=lr, mode="jnp")
+        stats = update_row_stats(stats, casted.unique_ids, casted_dst=casted.casted_dst)
+        if r % 2 == 0:  # cross a promotion boundary mid-stream
+            tiered = tiered.promote(stats.ema)
+        tt, aa = _flat_view(tiered)
+        np.testing.assert_array_equal(tt[:V], np.asarray(flat_t)[:V])
+        np.testing.assert_array_equal(aa[:V], np.asarray(flat_a)[:V])
+
+
+def test_flush_makes_table_authoritative_without_changing_hot_set(rng):
+    V, C, D = 32, 4, 4
+    table0 = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    tiered = init_tiered(add_sentinel_row(table0), C)
+    tiered = tiered.promote(jnp.arange(V, dtype=jnp.float32))  # hot = top-4 ids
+    _, casted, grad = _one_round(rng, V, 24, D)
+    tiered = tiered.sparse_update(grad, lr=0.1)
+    ids_before = np.asarray(tiered.cache.ids).copy()
+    flushed = tiered.flush()
+    np.testing.assert_array_equal(np.asarray(flushed.cache.ids), ids_before)  # hot set frozen
+    # after flush the table ALONE equals the tiered view (checkpoint-complete)
+    np.testing.assert_array_equal(np.asarray(flushed.table)[:V], _flat_view(tiered)[0][:V])
+
+
+def test_sparse_update_rejects_pallas_modes(rng):
+    V, D = 16, 4
+    tiered = init_tiered(add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), 4)
+    _, _, grad = _one_round(rng, V, 8, D)
+    with pytest.raises(NotImplementedError):
+        tiered.sparse_update(grad, lr=0.1, mode="pallas_interpret")
+
+
+def test_all_hot_cache_serves_every_lookup(rng):
+    V, D = 16, 4
+    tiered = init_tiered(add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), V)
+    tiered = tiered.promote(jnp.arange(V, dtype=jnp.float32) + 1.0)
+    ids = jnp.asarray(rng.integers(0, V, size=64).astype(np.int32))
+    _, hit = tiered.lookup(ids)
+    assert bool(hit.all())
+
+
+# ---------------------------------------------------------------------------
+# tc_cached DLRM system: bit-identical training
+# ---------------------------------------------------------------------------
+
+
+def _dlrm_batches(cfg, steps):
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+
+    stream = DLRMStream(
+        num_tables=cfg.num_tables,
+        rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table,
+        batch=8,
+        profile="taobao",
+        seed=0,
+    )
+    cs = CastingServer(rows_per_table=cfg.rows_per_table, with_counts=True)
+    for i in range(steps):
+        yield jax.tree_util.tree_map(jnp.asarray, cs(stream.batch_at(i)))
+
+
+def test_tc_cached_bit_identical_to_tc_50_steps():
+    """Acceptance: >= 50 steps on zipfian data, periodic promotion, tables
+    AND accumulators bit-identical to the flat ``tc`` system."""
+    import repro.configs  # registry
+    from repro.configs.base import get_config
+    from repro.runtime import dlrm_train
+
+    cfg = get_config("rm1", smoke=True)
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    s_ca = dlrm_train.init_cached_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    step_ca = dlrm_train.make_sparse_train_step(cfg, system="tc_cached")
+    promote = dlrm_train.make_promote_step()
+
+    for i, b in enumerate(_dlrm_batches(cfg, 50)):
+        s_tc, l_tc = step_tc(s_tc, b)
+        s_ca, l_ca = step_ca(s_ca, b)
+        assert float(l_tc) == float(l_ca), f"loss diverged at step {i}"
+        if i % 10 == 9:
+            s_ca = promote(s_ca)
+
+    V = cfg.rows_per_table
+    tt = np.asarray(s_ca["tables"]).copy()
+    aa = np.asarray(s_ca["accums"]).copy()
+    ids = np.asarray(s_ca["cache_ids"])
+    for t in range(tt.shape[0]):
+        tt[t, ids[t]] = np.asarray(s_ca["cache_rows"])[t]
+        aa[t, ids[t]] = np.asarray(s_ca["cache_accums"])[t]
+    np.testing.assert_array_equal(tt[:, :V], np.asarray(s_tc["tables"])[:, :V])
+    np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
+    # zipfian traffic through a 1/16 cache: the hot tier serves most lookups
+    assert float(s_ca["hit_rate"]) > 0.3

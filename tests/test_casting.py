@@ -139,6 +139,33 @@ def test_pooled_lookup_indices():
     )
 
 
+def test_empty_batch_equivalence_host_and_device():
+    """n=0: both casting implementations return empty arrays and
+    num_unique == 0 (the host one used to IndexError on boundary[0])."""
+    from repro.data.pipeline import numpy_tensor_casting
+
+    src = np.zeros(0, np.int32)
+    dst = np.zeros(0, np.int32)
+    got = numpy_tensor_casting(src, dst, fill_id=7)
+    want = tensor_casting(jnp.asarray(src), jnp.asarray(dst), fill_id=7)
+    assert int(got["num_unique"]) == int(want.num_unique) == 0
+    for k in ("casted_src", "casted_dst", "unique_ids"):
+        assert got[k].shape == (0,)
+        assert np.asarray(getattr(want, k)).shape == (0,)
+
+
+def test_coalesce_padding_uses_fill_sentinel(rng):
+    """unique_ids padding must not alias real row 0: caller-supplied fill_id,
+    defaulting to max(src) + 1."""
+    src = jnp.asarray([2, 2, 5, 0], jnp.int32)
+    grad = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    _, uids, nu = coalesce_gradients(src, grad, fill_id=9)
+    assert int(nu) == 3
+    np.testing.assert_array_equal(np.asarray(uids), [0, 2, 5, 9])
+    _, uids_d, _ = coalesce_gradients(src, grad)
+    np.testing.assert_array_equal(np.asarray(uids_d), [0, 2, 5, 6])  # max+1
+
+
 def test_casting_jit_and_grad_safe():
     """Casting must be jittable with static shapes (production requirement)."""
     f = jax.jit(lambda s, d: tensor_casting(s, d, fill_id=64))
