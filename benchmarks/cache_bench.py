@@ -10,15 +10,26 @@ and reports:
                     (post-warmup; the acceptance operating point is
                     alpha=1.05, 1/16 capacity -> >= 0.80).
   * ``us/step``   — median wall-clock per train step for both systems.
+  * modeled HBM gather bytes per step for flat vs cached: the flat path DMAs
+    every gathered row from HBM; the fused cached-gather kernel
+    (kernels/cached_gather.py) serves hits from the VMEM-resident hot tier,
+    so only misses cost per-row HBM traffic — row-DMA savings track the hit
+    rate. The (C+1, D) hot-tier fill the kernel pays once per pallas_call
+    (VMEM blocks do not persist across invocations) is reported as a
+    separate accounting (``saved_with_fill``): that is the kernel exactly as
+    written, and it only nets out when C + 1 < hit * lookups_per_step.
 
 CSV rows via benchmarks.common.emit:
-  cache/tc/alpha<a>,<us>,hit=-
-  cache/tc_cached/alpha<a>,<us>,hit=<rate>
+  cache/tc/alpha<a>,<us>,hit=-;hbm_gather_B=<flat bytes>
+  cache/tc_cached/alpha<a>,<us>,hit=<rate>;hbm_gather_B=<miss bytes>;saved=<frac>;saved_with_fill=<frac>
+
+A ``BENCH_cache.json`` artifact (benchmarks.common.write_json) carries the
+same numbers machine-readably for the perf trajectory.
 
 On CPU the cached path pays the searchsorted + dual-gather overhead with no
 memory-hierarchy win — the step-time column is an upper bound on overhead,
-not the NMP/TPU speedup (that needs the fused cached-gather Pallas kernel,
-see ROADMAP open items).
+not the NMP/TPU speedup; the modeled-bytes columns are the hardware-
+transferable signal.
 """
 from __future__ import annotations
 
@@ -30,7 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, model_hbm_gather, write_json
 from repro.configs.base import DLRMConfig
 from repro.data.pipeline import CastingServer
 from repro.data.synth import DLRMStream
@@ -96,6 +107,7 @@ def run(
     cfg = bench_config(rows, pooling, emb_dim)
     capacity = rows // cap_frac
     cs = CastingServer(rows_per_table=cfg.rows_per_table, with_counts=True)
+    lookups = batch * pooling  # gathered rows per step (f32 tables)
     results = {}
     for alpha in alphas:
         stream = DLRMStream(
@@ -110,9 +122,27 @@ def run(
                                promote_every=promote_every)
         us_ca, hit = _run_system(cfg, "tc_cached", batches, capacity=capacity,
                                  promote_every=promote_every)
-        results[alpha] = {"tc_us": us_tc, "tc_cached_us": us_ca, "hit_rate": hit}
-        emit(f"cache/tc/alpha{alpha}", us_tc, "hit=-")
-        emit(f"cache/tc_cached/alpha{alpha}", us_ca, f"hit={hit:.4f}")
+        traffic = model_hbm_gather(lookups, emb_dim, capacity, hit)
+        results[alpha] = {"tc_us": us_tc, "tc_cached_us": us_ca, **traffic}
+        emit(
+            f"cache/tc/alpha{alpha}", us_tc,
+            f"hit=-;hbm_gather_B={traffic['hbm_gather_bytes_flat']}",
+        )
+        emit(
+            f"cache/tc_cached/alpha{alpha}", us_ca,
+            f"hit={hit:.4f};"
+            f"hbm_gather_B={traffic['hbm_gather_bytes_cached_resident']:.0f};"
+            f"saved={traffic['hbm_gather_saved_frac']:.4f};"
+            f"saved_with_fill={traffic['hbm_gather_saved_frac_with_fill']:.4f}",
+        )
+    write_json("cache", {
+        "config": {
+            "rows": rows, "cap_frac": cap_frac, "capacity": capacity,
+            "batch": batch, "pooling": pooling, "emb_dim": emb_dim,
+            "steps": steps, "promote_every": promote_every,
+        },
+        "alphas": {str(a): r for a, r in results.items()},
+    })
     return results
 
 

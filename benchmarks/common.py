@@ -1,7 +1,13 @@
-"""Shared benchmark utilities: wall-clock timing of jitted callables and the
-CSV emission contract (``name,us_per_call,derived``)."""
+"""Shared benchmark utilities: wall-clock timing of jitted callables, the
+CSV emission contract (``name,us_per_call,derived``), and the machine-
+readable ``BENCH_<name>.json`` artifact contract (the perf trajectory CI
+uploads per run — see .github/workflows/ci.yml)."""
 from __future__ import annotations
 
+import json
+import os
+import platform
+import sys
 import time
 from typing import Callable
 
@@ -23,3 +29,57 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def model_hbm_gather(
+    lookups: int, d: int, capacity: int, hit: float, itemsize: int = 4
+) -> dict:
+    """The one definition of the cached-gather HBM traffic model (shared by
+    kernel_bench and cache_bench so the BENCH_*.json artifacts can't drift).
+
+    Two accountings side by side:
+      * resident — per-row DMA only: flat moves every gathered row from HBM,
+        the fused kernel only misses; savings == hit rate. The design target
+        where the hot tier persists in VMEM.
+      * per_invocation — adds the (C+1, D) hot-tier fill the kernel AS
+        WRITTEN pays every pallas_call (VMEM blocks do not persist across
+        invocations); only nets out when C + 1 < hit * lookups.
+    """
+    flat = lookups * d * itemsize
+    miss = (1.0 - hit) * flat
+    fill = (capacity + 1) * d * itemsize
+    return {
+        "hit_rate": hit,
+        "hbm_gather_bytes_flat": flat,
+        "hbm_gather_bytes_cached_resident": miss,
+        "hbm_gather_saved_frac": 1.0 - miss / flat,
+        "vmem_fill_bytes_per_invocation": fill,
+        "hbm_gather_bytes_cached_per_invocation": miss + fill,
+        "hbm_gather_saved_frac_with_fill": 1.0 - (miss + fill) / flat,
+    }
+
+
+def write_json(name: str, payload: dict) -> str:
+    """Write ``BENCH_<name>.json`` into $BENCH_OUT_DIR (default: cwd).
+
+    ``payload`` is the benchmark's structured result dict; a small
+    environment header (backend, jax version, host) is attached so
+    trajectories from different runners stay comparable. Returns the path.
+    """
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {
+        "bench": name,
+        "env": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+        },
+        "results": payload,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+    return path

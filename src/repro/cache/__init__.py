@@ -8,14 +8,18 @@ This package turns those counts into a decayed-frequency signal
 their optimizer state (``hotcache``), and exposes a two-tier embedding
 store whose results are bit-identical to the flat table (``tiered``).
 
-See docs/cache.md for the dataflow and ROADMAP.md for the Pallas fused
-cached-gather follow-on.
+The forward bag gather is served by the fused cached-gather Pallas kernel
+(kernels/cached_gather.py): hot rows from the VMEM-resident cache, cold
+rows DMA'd from HBM, tier-resolved via ``split_tiers``. See docs/cache.md
+for the dataflow and ROADMAP.md for the fused cached-SCATTER follow-on.
 """
 from repro.cache.hotcache import (  # noqa: F401
     HotRowCache,
+    TierSplit,
     init_hot_cache,
     promote_evict,
     resolve,
+    split_tiers,
     write_back,
 )
 from repro.cache.stats import (  # noqa: F401

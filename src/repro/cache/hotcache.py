@@ -68,6 +68,30 @@ def resolve(cache_ids: Array, ids: Array) -> tuple[Array, Array]:
     return pos, hit
 
 
+class TierSplit(NamedTuple):
+    """Per-lookup tier resolution in the layout the fused cached-gather
+    kernel scalar-prefetches (kernels/cached_gather.py): every lane is
+    redirected so BOTH tiers see a valid static index — no masking, no
+    dynamic shapes, dead rows/slots absorb the other tier's lanes."""
+
+    slot: Array  # (n,) int32 cache slot; misses -> dead slot C
+    cold_src: Array  # (n,) int32 table row; hits -> dead row V
+    hit: Array  # (n,) int32 1 = hot, 0 = cold
+
+
+def split_tiers(cache_ids: Array, ids: Array, num_rows: int) -> TierSplit:
+    """Resolve each lookup id against the sorted id->slot map once (one
+    ``searchsorted``) and emit the redirected kernel layout. ``ids`` must be
+    flat (n,) — the kernel's grid is one step per lookup."""
+    slots, hit = resolve(cache_ids, ids)
+    dead_slot = cache_ids.shape[0] - 1
+    return TierSplit(
+        slot=jnp.where(hit, slots, dead_slot).astype(jnp.int32),
+        cold_src=jnp.where(hit, num_rows, ids.astype(jnp.int32)),
+        hit=hit.astype(jnp.int32),
+    )
+
+
 def write_back(
     cache: HotRowCache, table: Array, accum: Array
 ) -> tuple[Array, Array]:

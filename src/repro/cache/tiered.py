@@ -18,7 +18,6 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 from jax import Array
 
@@ -27,6 +26,7 @@ from repro.cache.hotcache import (
     init_hot_cache,
     promote_evict,
     resolve,
+    split_tiers,
     write_back,
 )
 from repro.core.embedding import SparseGrad
@@ -57,12 +57,32 @@ class TieredEmbedding(NamedTuple):
         return jnp.where(hit[..., None], hot, cold), hit
 
     def bag_lookup(
-        self, src: Array, dst: Array, num_segments: int
+        self,
+        src: Array,
+        dst: Array,
+        num_segments: int,
+        *,
+        mode: Optional[str] = None,
     ) -> tuple[Array, Array]:
         """Pooled forward (DLRM embedding bag): same contract as
-        core.embedding's bag forward, plus the per-lookup hit mask."""
-        rows, hit = self.lookup(src)
-        return jax.ops.segment_sum(rows, dst, num_segments=num_segments), hit
+        core.embedding's bag forward, plus the per-lookup hit mask.
+
+        Routed through the fused cached-gather primitive: one tier resolve
+        against the sorted id->slot map, then hot rows from the (VMEM-
+        resident) cache and cold rows from the table inside one sorted
+        gather-reduce. ``dst`` must be non-decreasing (the fixed-pooling bag
+        layout and Tensor Casting both guarantee it); ``mode`` is the usual
+        ops dispatch (auto/pallas/pallas_interpret/jnp). Segments that
+        receive no rows are zero on the jnp path but UNSPECIFIED through the
+        Pallas kernel (never-visited output blocks) — the fixed-pooling
+        forward touches every segment; other callers must mask."""
+        view = split_tiers(self.cache.ids, src, self.num_rows)
+        pooled = ops.cached_gather_reduce(
+            self.table, self.cache.rows,
+            view.slot, view.cold_src, dst, view.hit,
+            num_segments, mode=mode,
+        )
+        return pooled, view.hit.astype(bool)
 
     # -- writes -----------------------------------------------------------
 

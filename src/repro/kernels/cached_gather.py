@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused cached gather-reduce over a two-tier store.
+
+This closes the loop the tiered embedding store (``repro.cache``) opened:
+PR 1 made ``system="tc_cached"`` a *semantic* win (bit-identical tiering,
+casting-driven placement) but still gathered every row from the HBM table.
+Here the hot tier is served from VMEM inside the same one-pass sorted
+gather-reduce that ``gather_reduce.py`` runs — the TPU analogue of RecNMP's
+rank-level hot-entry cache sitting next to the gather datapath.
+
+    out[s] = sum_{i : dst[i] == s} row(i)           dst non-decreasing
+    row(i) = cache_rows[slot[i]]   if hit[i]        (VMEM, no HBM traffic)
+           = table[cold_src[i]]    otherwise        (one (1, D) HBM DMA)
+
+Datapath:
+  * The per-lookup tier split (``slot``/``cold_src``/``hit``) is resolved
+    AGAINST THE SORTED id->slot MAP once, outside the grid (one
+    ``searchsorted`` — ``cache.hotcache.split_tiers``), and scalar-prefetched
+    into SMEM alongside ``dst`` — the same metadata-ahead-of-data pattern as
+    the casting indices themselves.
+  * ``cache_rows`` (C+1, D) enters through a constant-index BlockSpec: the
+    whole hot tier is copied HBM->VMEM once per kernel invocation and stays
+    resident; hot rows are dynamic VMEM reads at ``slot[i]`` with zero
+    per-step HBM traffic.
+  * ``table`` keeps the per-row (1, D) BlockSpec of ``gather_reduce.py`` but
+    its index map reads the REDIRECTED ``cold_src``: misses DMA their real
+    row, hits point at the dead sentinel row V, so consecutive hot steps
+    revisit the same block and the pipeline elides the copy.
+  * Reduction is identical to ``gather_reduce.py``: VPU accumulate into a
+    revisited output block, valid because Tensor Casting / the fixed-pooling
+    bag layout guarantee ``dst`` is sorted.
+
+VMEM budget: the resident hot tier costs (C+1) * D * itemsize bytes next to
+the (1, D) streaming blocks — e.g. C=8192, D=64, f32 is ~2 MiB of the
+~16 MiB/core, which is exactly the "small fast tier" operating point the
+cache is sized for (1/16 of table rows).
+
+Padding discipline matches the rest of the stack: sentinel-redirected
+entries land on dead rows/slots (never read back), and output blocks for
+segments that receive no rows are unspecified — callers mask via
+``num_valid`` (see ops.cached_gather_reduce).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(slot_ref, cold_ref, dst_ref, hit_ref, cache_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    cold = table_ref[...]  # (1, D) — DMA'd row (dead row V on hits)
+    hot = cache_ref[pl.ds(slot_ref[i], 1), :]  # (1, D) — VMEM-resident read
+    row = jnp.where(hit_ref[i] > 0, hot, cold)
+    is_new_segment = jnp.logical_or(i == 0, dst_ref[i] != dst_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(is_new_segment)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(jnp.logical_not(is_new_segment))
+    def _accum():
+        out_ref[...] += row
+
+
+@partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def cached_gather_reduce_pallas(
+    table: Array,
+    cache_rows: Array,
+    slot: Array,
+    cold_src: Array,
+    dst: Array,
+    hit: Array,
+    *,
+    num_segments: int,
+    interpret: bool = False,
+) -> Array:
+    """Fused two-tier sorted gather-reduce. ``dst`` MUST be non-decreasing.
+
+    table: (V+1, D) sentinel-padded cold tier; cache_rows: (C+1, D) hot tier
+    (slot C dead). slot/cold_src/dst/hit: (n,) int32 per-lookup tier split
+    from ``cache.hotcache.split_tiers`` — hits carry ``cold_src == V`` and
+    misses ``slot == C``. Returns (num_segments, D); segments that receive
+    no rows are unspecified (padding — mask or drop).
+    """
+    n = slot.shape[0]
+    d = table.shape[-1]
+    c1 = cache_rows.shape[0]
+    if n == 0:
+        return jnp.zeros((num_segments, d), table.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n,),
+        in_specs=[
+            # whole hot tier, constant index map -> copied in once, resident
+            pl.BlockSpec((c1, d), lambda i, slot_ref, cold_ref, dst_ref, hit_ref: (0, 0)),
+            # one cold row per step; hits redirect to the dead row (revisit)
+            pl.BlockSpec((1, d), lambda i, slot_ref, cold_ref, dst_ref, hit_ref: (cold_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, d), lambda i, slot_ref, cold_ref, dst_ref, hit_ref: (dst_ref[i], 0)
+        ),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), table.dtype),
+        interpret=interpret,
+    )(
+        slot.astype(jnp.int32),
+        cold_src.astype(jnp.int32),
+        dst.astype(jnp.int32),
+        hit.astype(jnp.int32),
+        cache_rows.astype(table.dtype),
+        table,
+    )

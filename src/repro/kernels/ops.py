@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.kernels import ref
+from repro.kernels.cached_gather import cached_gather_reduce_pallas
 from repro.kernels.gather_reduce import gather_reduce_pallas
 from repro.kernels.scatter_apply import scatter_apply_adagrad_pallas
 
@@ -63,8 +64,10 @@ def gather_reduce(
     """Unified sorted gather-reduce: out[s] = sum_{dst[i]==s} values[src[i]].
 
     ``dst`` non-decreasing (Tensor Casting invariant). ``num_valid`` — when
-    given, rows >= num_valid are forced to zero (the Pallas kernel leaves
-    never-visited padding segments unspecified; jnp already zeroes them).
+    given, rows >= num_valid are forced to zero on EVERY backend (the Pallas
+    kernel leaves never-visited padding segments unspecified; jnp zeroes
+    them already, so the mask is a no-op there — applying it unconditionally
+    keeps padded outputs byte-identical across backends).
     """
     if num_segments is None:
         num_segments = src.shape[0]
@@ -76,10 +79,50 @@ def gather_reduce(
             values, src, dst, num_segments=num_segments,
             interpret=(resolved == "pallas_interpret"),
         )
-        if num_valid is not None:
-            valid = jnp.arange(num_segments) < num_valid
-            out = jnp.where(valid[:, None], out, 0)
-    return out
+    return _mask_padding_segments(out, num_valid, num_segments)
+
+
+def _mask_padding_segments(out: Array, num_valid: Optional[Array], num_segments: int) -> Array:
+    if num_valid is None:
+        return out
+    valid = jnp.arange(num_segments) < num_valid
+    return jnp.where(valid[:, None], out, 0)
+
+
+def cached_gather_reduce(
+    table: Array,
+    cache_rows: Array,
+    slot: Array,
+    cold_src: Array,
+    dst: Array,
+    hit: Array,
+    num_segments: Optional[int] = None,
+    *,
+    num_valid: Optional[Array] = None,
+    mode: Optional[str] = None,
+) -> Array:
+    """Two-tier sorted gather-reduce: hot rows from the VMEM-resident cache,
+    cold rows from the HBM table (see kernels/cached_gather.py).
+
+    ``slot``/``cold_src``/``hit`` are the per-lookup tier split from
+    ``cache.hotcache.split_tiers`` (hits redirect ``cold_src`` to the dead
+    row V, misses redirect ``slot`` to the dead slot C). ``dst``
+    non-decreasing; ``num_valid`` masks padding segments on every backend.
+    """
+    if num_segments is None:
+        num_segments = dst.shape[0]
+    resolved = _resolve(mode)
+    if resolved == "jnp":
+        out = ref.cached_gather_reduce_ref(
+            table, cache_rows, slot, cold_src, dst, hit, num_segments
+        )
+    else:
+        out = cached_gather_reduce_pallas(
+            table, cache_rows, slot, cold_src, dst, hit,
+            num_segments=num_segments,
+            interpret=(resolved == "pallas_interpret"),
+        )
+    return _mask_padding_segments(out, num_valid, num_segments)
 
 
 def scatter_apply_adagrad(

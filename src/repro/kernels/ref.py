@@ -23,6 +23,28 @@ def gather_reduce_ref(values: Array, src: Array, dst: Array, num_segments: int |
     return jax.ops.segment_sum(rows, dst, num_segments=num_segments)
 
 
+def cached_gather_reduce_ref(
+    table: Array,
+    cache_rows: Array,
+    slot: Array,
+    cold_src: Array,
+    dst: Array,
+    hit: Array,
+    num_segments: int,
+) -> Array:
+    """Two-tier gather-reduce oracle: hot lookups read ``cache_rows[slot]``,
+    cold lookups read ``table[cold_src]``, then one segment-sum over ``dst``.
+
+    Matches ``TieredEmbedding.bag_lookup``'s jnp path row-for-row (same
+    where-select, same segment_sum), so the fused kernel can be tested for
+    bit-identity against the tiered store.
+    """
+    hot = jnp.take(cache_rows, slot, axis=0).astype(table.dtype)
+    cold = jnp.take(table, cold_src, axis=0)
+    rows = jnp.where((hit > 0)[:, None], hot, cold)
+    return jax.ops.segment_sum(rows, dst, num_segments=num_segments)
+
+
 def scatter_apply_adagrad_ref(
     table: Array,
     accum: Array,

@@ -50,6 +50,8 @@ def scatter_apply_adagrad_pallas(
     f32. ids: (n,) int32 sorted, unique except sentinel padding. grads:
     (n, D) coalesced. Returns (new_table, new_accum)."""
     n, d = grads.shape
+    if n == 0:  # a grid=(0,) pallas_call is invalid — the update is a no-op
+        return table, accum
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

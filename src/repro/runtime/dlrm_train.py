@@ -70,15 +70,18 @@ def _tiered_of(state):
     return TieredEmbedding(table, accum, HotRowCache(cids, crows, caccum))
 
 
-def _pooled_from_tiered(cfg: DLRMConfig, tables, accums, cids, crows, caccums, idx):
+def _pooled_from_tiered(cfg: DLRMConfig, tables, accums, cids, crows, caccums, idx, *, mode=None):
     """Cache-aware forward gather-reduce: hot rows come from the cache tier
-    (the authoritative copy while cached). Returns (emb (B,T,D), hit_frac)."""
+    (the authoritative copy while cached), served through the fused
+    cached-gather kernel under the requested dispatch mode (``dst`` is the
+    sorted fixed-pooling bag layout, so the kernel's revisit invariant
+    holds). Returns (emb (B,T,D), hit_frac)."""
     B, T, P = idx.shape
     dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
 
     def one(table, accum, ci, cr, ca, ids):
         te = _tiered_of((table, accum, ci, cr, ca))
-        pooled, hit = te.bag_lookup(ids.reshape(-1), dst, B)
+        pooled, hit = te.bag_lookup(ids.reshape(-1), dst, B, mode=mode)
         return pooled, jnp.mean(hit.astype(jnp.float32))
 
     emb, hits = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 1), out_axes=(1, 0))(
@@ -105,9 +108,13 @@ def make_sparse_train_step(
     CastingServer) when system != baseline. ``decay`` is the hot-row EMA
     decay, used only by ``tc_cached`` (pair with ``make_promote_step``).
     """
-    # tc pins the reference path; tc_nmp auto-dispatches (Mosaic on TPU,
-    # jnp on CPU — kernel equivalence is covered by interpret-mode tests).
-    kernel_mode = {"baseline": None, "tc": "jnp", "tc_nmp": None, "tc_cached": "jnp"}[system]
+    # tc pins the reference path; tc_nmp and tc_cached auto-dispatch (Mosaic
+    # on TPU, jnp on CPU, pallas_interpret under the tests' pinned default —
+    # kernel equivalence is covered by interpret-mode tests). tc_cached's
+    # gathers route through the fused cached-gather kernel; its tier-split
+    # scatter stays pinned to jnp inside sparse_update (fused cached-scatter
+    # is still a ROADMAP open item).
+    kernel_mode = {"baseline": None, "tc": "jnp", "tc_nmp": None, "tc_cached": None}[system]
     dense_opt = adagrad(lr)
 
     def step(state, batch):
@@ -134,7 +141,7 @@ def make_sparse_train_step(
             ema = state["ema"]
             cast = batch["cast"]
             emb, hit_rate = _pooled_from_tiered(
-                cfg, tables, accums, cids, crows, caccums, batch["idx"]
+                cfg, tables, accums, cids, crows, caccums, batch["idx"], mode=kernel_mode
             )
             loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
             d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
@@ -145,8 +152,12 @@ def make_sparse_train_step(
 
             def upd_one(table, accum, ci, cr, ca, e, d_e, c_src, c_dst, uids, nuniq, cnt):
                 te = _tiered_of((table, accum, ci, cr, ca))
-                coal = ops.gather_reduce(d_e, c_src, c_dst, mode=kernel_mode)
-                te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode=kernel_mode)
+                # num_valid: padding segments of the coalesced grad must be
+                # zero on every backend before the tier-split scatter.
+                coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
+                # tier-split scatter violates the Pallas sorted/zero-pad
+                # contract — pinned to the jnp reference (see ROADMAP).
+                te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode="jnp")
                 e = fold_counts(e, decay, uids, cnt)
                 return te.table, te.accum, te.cache.ids, te.cache.rows, te.cache.accum, e
 
@@ -168,17 +179,20 @@ def make_sparse_train_step(
             d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
             cast = batch["cast"]  # each field stacked (T, n)
 
-            def upd_one(table, accum, d_e, c_src, c_dst, uids):
-                coal = ops.gather_reduce(d_e, c_src, c_dst, mode=kernel_mode)
+            def upd_one(table, accum, d_e, c_src, c_dst, uids, nuniq):
+                # num_valid zeroes padding segments on every backend so the
+                # scatter's sentinel-row traffic stays deterministic.
+                coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
                 return ops.scatter_apply_adagrad(table, accum, uids, coal, lr, mode=kernel_mode)
 
-            tables, accums = jax.vmap(upd_one, in_axes=(0, 0, 1, 0, 0, 0))(
+            tables, accums = jax.vmap(upd_one, in_axes=(0, 0, 1, 0, 0, 0, 0))(
                 tables,
                 accums,
                 d_emb,
                 cast["casted_src"],
                 cast["casted_dst"],
                 cast["unique_ids"],
+                cast["num_unique"],
             )
 
         updates, opt_state = dense_opt.update(d_dense, opt_state, dense_params)

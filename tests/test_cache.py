@@ -219,7 +219,9 @@ def _dlrm_batches(cfg, steps):
 
 def test_tc_cached_bit_identical_to_tc_50_steps():
     """Acceptance: >= 50 steps on zipfian data, periodic promotion, tables
-    AND accumulators bit-identical to the flat ``tc`` system."""
+    AND accumulators bit-identical to the flat ``tc`` system — under the new
+    auto dispatch (tc_cached no longer pins jnp: the forward routes through
+    ops.cached_gather_reduce, auto-resolved per backend)."""
     import repro.configs  # registry
     from repro.configs.base import get_config
     from repro.runtime import dlrm_train
@@ -249,3 +251,56 @@ def test_tc_cached_bit_identical_to_tc_50_steps():
     np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
     # zipfian traffic through a 1/16 cache: the hot tier serves most lookups
     assert float(s_ca["hit_rate"]) > 0.3
+
+
+def test_tc_cached_interpret_dispatch_bit_identical_to_tc_50_steps():
+    """The fused cached-gather Pallas kernel IN the jitted train loop
+    (pallas_interpret default, the tests' TPU stand-in): 50 steps with
+    promotion churn every 4 steps, bit-identical to jnp-mode tc throughout —
+    the kernel-path counterpart of the auto-dispatch acceptance test above
+    (auto resolves to jnp on CPU CI, so this is the run that actually keeps
+    the kernel in the loop long enough to cross many promote/evict cycles)."""
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+    from repro.runtime import dlrm_train
+
+    cfg = DLRMConfig(
+        name="cache-interp", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=64, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=2, rows_per_table=64, gathers_per_table=4,
+        batch=4, s=1.05, seed=0,
+    )
+    cs = CastingServer(rows_per_table=64, with_counts=True)
+    batches = [
+        jax.tree_util.tree_map(jnp.asarray, cs(stream.batch_at(i))) for i in range(50)
+    ]
+
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")  # pins jnp
+    ops.set_default_mode("pallas_interpret")
+    try:
+        s_ca = dlrm_train.init_cached_state(cfg, jax.random.key(0), capacity=8)
+        step_ca = dlrm_train.make_sparse_train_step(cfg, system="tc_cached")
+        promote = dlrm_train.make_promote_step()
+        for i, b in enumerate(batches):
+            s_tc, l_tc = step_tc(s_tc, b)
+            s_ca, l_ca = step_ca(s_ca, b)
+            assert float(l_tc) == float(l_ca), f"loss diverged at step {i}"
+            if i % 4 == 3:
+                s_ca = promote(s_ca)
+    finally:
+        ops.set_default_mode("auto")
+
+    V = cfg.rows_per_table
+    tt = np.asarray(s_ca["tables"]).copy()
+    aa = np.asarray(s_ca["accums"]).copy()
+    ids = np.asarray(s_ca["cache_ids"])
+    for t in range(tt.shape[0]):
+        tt[t, ids[t]] = np.asarray(s_ca["cache_rows"])[t]
+        aa[t, ids[t]] = np.asarray(s_ca["cache_accums"])[t]
+    np.testing.assert_array_equal(tt[:, :V], np.asarray(s_tc["tables"])[:, :V])
+    np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
+    assert float(s_ca["hit_rate"]) > 0.0  # the cache actually engaged

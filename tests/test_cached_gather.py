@@ -1,0 +1,231 @@
+"""Fused cached-gather kernel (kernels/cached_gather.py): interpret-mode
+bit-identity vs the TieredEmbedding jnp path across tier mixes, plus the
+tier-split layout contract (cache.hotcache.split_tiers)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.hotcache import init_hot_cache, resolve, split_tiers
+from repro.cache.stats import init_row_stats, update_row_stats
+from repro.cache.tiered import init_tiered
+from repro.core.casting import tensor_casting
+from repro.kernels import ops, ref
+from repro.kernels.cached_gather import cached_gather_reduce_pallas
+from repro.optim.sparse import add_sentinel_row
+
+
+def _store(rng, V, C, D, *, promote_by=None):
+    """Tiered store over a random table; optionally adopt a hot set."""
+    table0 = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    te = init_tiered(add_sentinel_row(table0), C)
+    if promote_by is not None:
+        te = te.promote(jnp.asarray(promote_by, jnp.float32))
+    return te
+
+
+def _bag(rng, V, n, B):
+    """Fixed-pooling bag layout (the DLRM forward): every segment receives
+    n // B rows, so no output block is left unspecified by the kernel."""
+    assert n % B == 0
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), n // B)
+    return src, dst
+
+
+def _both_modes(te, src, dst, B):
+    """bag_lookup through jnp and the interpret-mode kernel."""
+    p_jnp, h_jnp = te.bag_lookup(src, dst, B, mode="jnp")
+    p_pal, h_pal = te.bag_lookup(src, dst, B, mode="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(h_jnp), np.asarray(h_pal))
+    return p_jnp, p_pal, h_jnp
+
+
+# ---------------------------------------------------------------------------
+# tier-split layout contract
+# ---------------------------------------------------------------------------
+
+
+def test_split_tiers_redirects_both_ways(rng):
+    V, C = 64, 8
+    cache = init_hot_cache(C, 4, V)
+    cache = cache._replace(
+        ids=jnp.asarray(sorted([3, 9, 17, 20, 33, 40, 51, 60]) + [V], jnp.int32)
+    )
+    ids = jnp.asarray([3, 4, 17, 63, 60], jnp.int32)
+    view = split_tiers(cache.ids, ids, V)
+    np.testing.assert_array_equal(np.asarray(view.hit), [1, 0, 1, 0, 1])
+    # hits: slot resolved against the sorted map, cold side redirected to V
+    slots, _ = resolve(cache.ids, ids)
+    np.testing.assert_array_equal(
+        np.asarray(view.slot), np.where([1, 0, 1, 0, 1], np.asarray(slots), C)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(view.cold_src), [V, 4, V, 63, V]
+    )
+
+
+def test_split_tiers_fresh_cache_all_cold(rng):
+    V, C = 32, 4
+    cache = init_hot_cache(C, 4, V)
+    ids = jnp.asarray(rng.integers(0, V, size=16).astype(np.int32))
+    view = split_tiers(cache.ids, ids, V)
+    assert not bool(view.hit.any())
+    np.testing.assert_array_equal(np.asarray(view.slot), np.full(16, C))
+    np.testing.assert_array_equal(np.asarray(view.cold_src), np.asarray(ids))
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode bit-identity vs the TieredEmbedding jnp path
+# ---------------------------------------------------------------------------
+
+
+def test_all_cold_fresh_cache(rng):
+    V, C, D, n, B = 48, 8, 16, 48, 6
+    te = _store(rng, V, C, D)  # fresh cache: every lookup misses
+    src, dst = _bag(rng, V, n, B)
+    p_jnp, p_pal, hit = _both_modes(te, src, dst, B)
+    assert not bool(hit.any())
+    np.testing.assert_array_equal(np.asarray(p_jnp), np.asarray(p_pal))
+
+
+def test_all_hot_full_cache(rng):
+    V, D, n, B = 24, 8, 32, 4
+    te = _store(rng, V, V, D, promote_by=np.arange(V) + 1.0)  # C == V
+    src, dst = _bag(rng, V, n, B)
+    p_jnp, p_pal, hit = _both_modes(te, src, dst, B)
+    assert bool(hit.all())
+    np.testing.assert_array_equal(np.asarray(p_jnp), np.asarray(p_pal))
+
+
+def test_mixed_tiers(rng):
+    V, C, D, n, B = 64, 8, 32, 96, 12
+    ema = np.zeros(V)
+    ema[rng.choice(V, size=C, replace=False)] = rng.uniform(1, 10, size=C)
+    te = _store(rng, V, C, D, promote_by=ema)
+    src, dst = _bag(rng, V, n, B)
+    p_jnp, p_pal, hit = _both_modes(te, src, dst, B)
+    assert 0 < int(hit.sum()) < n  # genuinely mixed
+    np.testing.assert_array_equal(np.asarray(p_jnp), np.asarray(p_pal))
+
+
+def test_empty_batch(rng):
+    V, C, D = 16, 4, 8
+    te = _store(rng, V, C, D)
+    empty = jnp.zeros((0,), jnp.int32)
+    for mode in ("jnp", "pallas_interpret"):
+        pooled, hit = te.bag_lookup(empty, empty, 5, mode=mode)
+        assert pooled.shape == (5, D) and hit.shape == (0,)
+        np.testing.assert_array_equal(np.asarray(pooled), 0.0)
+
+
+def test_promotion_boundary(rng):
+    """The same lookup stream stays bit-identical across a promote_evict
+    (rows migrate between tiers in between the two calls)."""
+    V, C, D, n, B = 40, 6, 16, 64, 8
+    te = _store(rng, V, C, D)
+    src, dst = _bag(rng, V, n, B)
+    stats = init_row_stats(V, decay=0.9)
+    casted = tensor_casting(src, jnp.arange(n, dtype=jnp.int32), fill_id=V)
+    stats = update_row_stats(stats, casted.unique_ids, casted_dst=casted.casted_dst)
+
+    before_jnp, before_pal, before_hit = _both_modes(te, src, dst, B)
+    te = te.promote(stats.ema)  # adopt the stream's own top-C
+    after_jnp, after_pal, after_hit = _both_modes(te, src, dst, B)
+
+    np.testing.assert_array_equal(np.asarray(before_jnp), np.asarray(before_pal))
+    np.testing.assert_array_equal(np.asarray(after_jnp), np.asarray(after_pal))
+    # promotion is semantically transparent: pooled values don't move...
+    np.testing.assert_array_equal(np.asarray(before_jnp), np.asarray(after_jnp))
+    # ...but the tier serving them did
+    assert int(after_hit.sum()) > int(before_hit.sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(4, 32),  # V
+    st.integers(1, 32),  # C (clipped to V)
+    st.integers(1, 48),  # n
+    st.integers(1, 8),  # B segments
+    st.integers(0, 2**31 - 1),
+)
+def test_cached_gather_property(V, C, n, B, seed):
+    """Arbitrary sorted dst (segments may be skipped): touched segments are
+    bit-identical across backends; untouched ones are unspecified through
+    the kernel and only compared where visited."""
+    rng = np.random.default_rng(seed)
+    C = min(C, V)
+    te = _store(rng, V, C, 8, promote_by=rng.uniform(size=V))
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, B, size=n)).astype(np.int32))
+    p_jnp, _ = te.bag_lookup(src, dst, B, mode="jnp")
+    p_pal, _ = te.bag_lookup(src, dst, B, mode="pallas_interpret")
+    touched = np.unique(np.asarray(dst))
+    np.testing.assert_array_equal(
+        np.asarray(p_jnp)[touched], np.asarray(p_pal)[touched]
+    )
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper: masking + raw kernel entry point
+# ---------------------------------------------------------------------------
+
+
+def test_cached_gather_num_valid_masks_all_backends(rng):
+    V, C, D, n = 32, 4, 8, 24
+    te = _store(rng, V, C, D, promote_by=rng.uniform(size=V))
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    # only segments < 3 receive rows; 5 segments total -> 2 padding segments
+    dst = jnp.asarray(np.sort(rng.integers(0, 3, size=n)).astype(np.int32))
+    view = split_tiers(te.cache.ids, src, V)
+    outs = [
+        ops.cached_gather_reduce(
+            te.table, te.cache.rows, view.slot, view.cold_src, dst, view.hit,
+            5, num_valid=jnp.asarray(3), mode=mode,
+        )
+        for mode in ("jnp", "pallas_interpret")
+    ]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+    np.testing.assert_array_equal(np.asarray(outs[1])[3:], 0.0)
+
+
+def test_raw_kernel_matches_ref(rng):
+    V, C, D, n, B = 30, 5, 64, 49, 7
+    te = _store(rng, V, C, D, promote_by=rng.uniform(size=V))
+    src, dst = _bag(rng, V, n, B)
+    view = split_tiers(te.cache.ids, src, V)
+    out = cached_gather_reduce_pallas(
+        te.table, te.cache.rows, view.slot, view.cold_src, dst, view.hit,
+        num_segments=B, interpret=True,
+    )
+    want = ref.cached_gather_reduce_ref(
+        te.table, te.cache.rows, view.slot, view.cold_src, dst, view.hit, B
+    )
+    touched = np.unique(np.asarray(dst))  # unvisited segments unspecified
+    np.testing.assert_array_equal(np.asarray(out)[touched], np.asarray(want)[touched])
+
+
+def test_vmapped_interpret_dispatch(rng):
+    """The kernel batches under vmap (the dlrm_train per-table vmap)."""
+    T, V, C, D, n, B = 3, 16, 4, 8, 20, 4
+    tables = jnp.asarray(rng.normal(size=(T, V + 1, D)).astype(np.float32))
+    cache = init_hot_cache(C, D, V)
+    ids = jnp.tile(cache.ids, (T, 1))
+    crows = jnp.tile(cache.rows, (T, 1, 1))
+    src = jnp.asarray(rng.integers(0, V, size=(T, n)).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, B, size=(T, n)), axis=1).astype(np.int32))
+
+    def one(mode):
+        def f(table, cids, cr, s, d):
+            view = split_tiers(cids, s, V)
+            return ops.cached_gather_reduce(
+                table, cr, view.slot, view.cold_src, d, view.hit, B, mode=mode
+            )
+
+        return f
+
+    got = jax.vmap(one("pallas_interpret"))(tables, ids, crows, src, dst)
+    want = jax.vmap(one("jnp"))(tables, ids, crows, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

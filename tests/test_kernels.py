@@ -110,6 +110,42 @@ def test_scatter_apply_untouched_rows_intact(rng):
     assert not np.allclose(np.asarray(nt)[2], np.asarray(table)[2])
 
 
+def test_scatter_apply_empty_batch_noop(rng):
+    """Regression: n == 0 used to build a grid=(0,) pallas_call and crash —
+    the empty update must return table/accum unchanged on every backend."""
+    V, d = 11, 16
+    table = jnp.asarray(rng.normal(size=(V + 1, d)).astype(np.float32))
+    accum = jnp.asarray(rng.uniform(0.1, 1.0, size=(V + 1, 1)).astype(np.float32))
+    ids = jnp.zeros((0,), jnp.int32)
+    grads = jnp.zeros((0, d), jnp.float32)
+    for mode in ("jnp", "pallas_interpret"):
+        nt, na = ops.scatter_apply_adagrad(table, accum, ids, grads, 0.1, mode=mode)
+        np.testing.assert_array_equal(np.asarray(nt), np.asarray(table))
+        np.testing.assert_array_equal(np.asarray(na), np.asarray(accum))
+
+
+def test_gather_reduce_num_valid_masks_all_backends(rng):
+    """num_valid zeroing applies on EVERY backend: with num_valid <
+    num_segments, jnp and interpret outputs are byte-identical over the FULL
+    array, padding segments included."""
+    V, nseg, n, d = 24, 10, 48, 32
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, 6, size=n)).astype(np.int32))
+    grad = jnp.asarray(rng.normal(size=(nseg, d)).astype(np.float32))
+    casted = tensor_casting(src, dst, fill_id=V)
+    num_valid = casted.num_unique
+    assert int(num_valid) < n  # duplicates exist -> real padding to mask
+    outs = {
+        mode: ops.gather_reduce(
+            grad, casted.casted_src, casted.casted_dst,
+            num_valid=num_valid, mode=mode,
+        )
+        for mode in ("jnp", "pallas_interpret")
+    }
+    np.testing.assert_array_equal(np.asarray(outs["jnp"]), np.asarray(outs["pallas_interpret"]))
+    np.testing.assert_array_equal(np.asarray(outs["pallas_interpret"])[int(num_valid):], 0.0)
+
+
 def test_ops_dispatch_modes(rng):
     values = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
     src = jnp.asarray(rng.integers(0, 8, size=12).astype(np.int32))
