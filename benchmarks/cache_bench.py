@@ -21,7 +21,12 @@ and reports:
 
 CSV rows via benchmarks.common.emit:
   cache/tc/alpha<a>,<us>,hit=-;hbm_gather_B=<flat bytes>
-  cache/tc_cached/alpha<a>,<us>,hit=<rate>;hbm_gather_B=<miss bytes>;saved=<frac>;saved_with_fill=<frac>
+  cache/tc_cached/alpha<a>,<us>,hit=<rate>;hbm_gather_B=<miss bytes>;saved=<frac>;saved_with_fill=<frac>;auto_cap80=<C>
+
+``auto_cap80`` is the capacity-autotuning signal (cache.stats
+.choose_capacity): the smallest per-table capacity whose top rows carry
+80% of the converged EMA mass — what the sweep's fixed 1/cap_frac SHOULD
+have been for that table's skew.
 
 A ``BENCH_cache.json`` artifact (benchmarks.common.write_json) carries the
 same numbers machine-readably for the perf trajectory.
@@ -42,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, model_hbm_gather, write_json
+from repro.cache.stats import choose_capacity
 from repro.configs.base import DLRMConfig
 from repro.data.pipeline import CastingServer
 from repro.data.synth import DLRMStream
@@ -90,7 +96,7 @@ def _run_system(cfg, system: str, batches, *, capacity, promote_every, warmup_fr
     med_us = times[len(times) // 2] * 1e6
     # score the converged regime: tail half of the post-warmup window
     hit = float(np.mean(hits[len(hits) // 2:])) if hits else float("nan")
-    return med_us, hit
+    return med_us, hit, state
 
 
 def run(
@@ -118,12 +124,23 @@ def run(
             jax.tree_util.tree_map(jnp.asarray, cs(stream.batch_at(i)))
             for i in range(steps)
         ]
-        us_tc, _ = _run_system(cfg, "tc", batches, capacity=capacity,
-                               promote_every=promote_every)
-        us_ca, hit = _run_system(cfg, "tc_cached", batches, capacity=capacity,
-                                 promote_every=promote_every)
+        us_tc, _, _ = _run_system(cfg, "tc", batches, capacity=capacity,
+                                  promote_every=promote_every)
+        us_ca, hit, state_ca = _run_system(cfg, "tc_cached", batches, capacity=capacity,
+                                           promote_every=promote_every)
         traffic = model_hbm_gather(lookups, emb_dim, capacity, hit)
-        results[alpha] = {"tc_us": us_tc, "tc_cached_us": us_ca, **traffic}
+        # capacity autotuning (cache.stats.choose_capacity): the per-table
+        # capacity the converged EMA mass curve asks for, next to the fixed
+        # 1/cap_frac the sweep ran with — tables differ wildly in skew, so
+        # the right C is a per-table function of the traffic, not a global.
+        ema = np.asarray(state_ca["ema"])[0]
+        autotuned = {
+            str(m): choose_capacity(ema, m, max_capacity=rows) for m in (0.5, 0.8, 0.9)
+        }
+        results[alpha] = {
+            "tc_us": us_tc, "tc_cached_us": us_ca,
+            "autotuned_capacity": autotuned, **traffic,
+        }
         emit(
             f"cache/tc/alpha{alpha}", us_tc,
             f"hit=-;hbm_gather_B={traffic['hbm_gather_bytes_flat']}",
@@ -133,7 +150,8 @@ def run(
             f"hit={hit:.4f};"
             f"hbm_gather_B={traffic['hbm_gather_bytes_cached_resident']:.0f};"
             f"saved={traffic['hbm_gather_saved_frac']:.4f};"
-            f"saved_with_fill={traffic['hbm_gather_saved_frac_with_fill']:.4f}",
+            f"saved_with_fill={traffic['hbm_gather_saved_frac_with_fill']:.4f};"
+            f"auto_cap80={autotuned['0.8']}",
         )
     write_json("cache", {
         "config": {

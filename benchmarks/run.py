@@ -11,13 +11,13 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default="all",
-        help="comma list of: fig4,fig5,fig6,fig12,fig13,fig15,fig16,fig17,kernels,roofline,cache",
+        help="comma list of: fig4,fig5,fig6,fig12,fig13,fig15,fig16,fig17,kernels,roofline,cache,store",
     )
     ap.add_argument("--quick", action="store_true", help="smaller sweeps for CI")
     args, _ = ap.parse_known_args()
     want = set(args.only.split(",")) if args.only != "all" else {
         "fig5", "fig6", "fig12", "fig13", "fig15", "fig16", "fig17", "fig4",
-        "kernels", "roofline", "cache",
+        "kernels", "roofline", "cache", "store",
     }
 
     print("name,us_per_call,derived")
@@ -70,6 +70,10 @@ def main() -> None:
         from benchmarks import cache_bench
 
         cache_bench.run(**(cache_bench.QUICK if args.quick else {}))
+    if "store" in want:
+        from benchmarks import store_bench
+
+        store_bench.run(**(store_bench.QUICK if args.quick else {}))
     print(f"# total_bench_seconds,{time.time() - t0:.1f},", file=sys.stderr)
 
 

@@ -1,0 +1,176 @@
+"""Disk-backed cold tier benchmark: prefetch coverage, faults and disk
+traffic vs. the host resident budget, on the zipf locality streams.
+
+For each (zipf alpha, resident-budget fraction) the same single-table DLRM
+trains with ``system="tc_streamed"`` through the full host pipeline
+(data.pipeline.Prefetcher depth-2 lookahead -> ShardPrefetcher fault-in ->
+working-set gather -> device step -> write-back), with the shard store in a
+fresh temp directory, and reports:
+
+  * ``prefetch_coverage`` — fraction of cold-row reads served from the
+    resident window without a synchronous shard read (the acceptance
+    operating point: alpha=1.05, resident budget rows/8 -> >= 0.9).
+  * ``sync_faults`` / ``evictions`` / ``bytes_read`` / ``bytes_written`` —
+    the disk-tier traffic picture as the budget shrinks.
+  * ``hot_hit_rate`` — the device hot tier still serves the skew head.
+  * ``us/step`` — median wall-clock per step (CPU: dominated by the host
+    gather/write-back python path; the structural signal is the traffic).
+
+CSV rows via benchmarks.common.emit:
+  store/alpha<a>/budget1_<f>,<us>,coverage=<c>;sync_faults=<n>;evict=<n>;readMB=<m>
+
+``BENCH_store.json`` (benchmarks.common.write_json) carries the same
+numbers machine-readably for the perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, write_json
+from repro.configs.base import DLRMConfig
+from repro.data.pipeline import CastingServer, Prefetcher
+from repro.data.synth import DLRMStream
+from repro.runtime import dlrm_train
+
+
+# the one definition of the reduced CI sweep (run.py --quick and --quick here)
+QUICK = dict(rows=4096, steps=32, batch=32, pooling=8, alphas=(1.05,), budget_fracs=(8,))
+
+
+def bench_config(rows: int, pooling: int, emb_dim: int) -> DLRMConfig:
+    return DLRMConfig(
+        name="store-bench",
+        num_tables=1,
+        gathers_per_table=pooling,
+        bottom_mlp=(64, emb_dim),
+        top_mlp=(64, 1),
+        rows_per_table=rows,
+        emb_dim=emb_dim,
+    )
+
+
+def _run_streamed(
+    cfg, *, alpha, batch, steps, capacity, resident_rows, promote_every, warmup_frac=0.25
+):
+    stream = DLRMStream(
+        num_tables=1, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=batch, s=float(alpha), seed=0,
+    )
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    with tempfile.TemporaryDirectory(prefix="store_bench_") as d:
+        state, streamed = dlrm_train.init_streamed(
+            cfg, jax.random.key(0), d, capacity=capacity, resident_rows=resident_rows
+        )
+        step_fn = dlrm_train.make_streamed_train_step(cfg, streamed)
+        promote = dlrm_train.make_streamed_promote(streamed)
+        times, hits = [], []
+        warmup = int(steps * warmup_frac)
+        with streamed, Prefetcher(
+            streamed.wrap_produce(lambda i: cs(stream.batch_at(i))), depth=2
+        ) as pf:
+            for k in range(steps):
+                i, b = pf.get()
+                t0 = time.perf_counter()
+                state, loss = step_fn(state, b, step_index=i)
+                jax.block_until_ready(loss)
+                dt = time.perf_counter() - t0
+                if k >= warmup:
+                    times.append(dt)
+                    hits.append(float(state["hit_rate"]))
+                if promote_every > 0 and k % promote_every == promote_every - 1:
+                    state = promote(state)
+            stats = streamed.stats()
+        times.sort()
+        med_us = times[len(times) // 2] * 1e6
+        hot_hit = float(np.mean(hits[len(hits) // 2 :])) if hits else float("nan")
+        return med_us, hot_hit, stats
+
+
+def run(
+    *,
+    rows: int = 32768,
+    cap_frac: int = 16,
+    budget_fracs=(4, 8, 16),
+    batch: int = 64,
+    pooling: int = 16,
+    emb_dim: int = 32,
+    steps: int = 96,
+    promote_every: int = 16,
+    alphas=(0.95, 1.05),
+) -> dict:
+    cfg = bench_config(rows, pooling, emb_dim)
+    capacity = max(1, rows // cap_frac)
+    results = {}
+    for alpha in alphas:
+        per_budget = {}
+        for frac in budget_fracs:
+            resident = max(1, rows // frac)
+            med_us, hot_hit, stats = _run_streamed(
+                cfg, alpha=alpha, batch=batch, steps=steps,
+                capacity=capacity, resident_rows=resident, promote_every=promote_every,
+            )
+            per_budget[str(frac)] = {
+                "resident_rows": resident,
+                "us_per_step": med_us,
+                "hot_hit_rate": hot_hit,
+                "prefetch_coverage": stats["prefetch_coverage"],
+                "cold_reads": stats["cold_reads"],
+                "sync_faults": stats["sync_faults"],
+                "evictions": stats["evictions"],
+                "bytes_read": stats["bytes_read"],
+                "bytes_written": stats["bytes_written"],
+            }
+            emit(
+                f"store/alpha{alpha}/budget1_{frac}", med_us,
+                f"coverage={stats['prefetch_coverage']:.4f};"
+                f"sync_faults={stats['sync_faults']};"
+                f"evict={stats['evictions']};"
+                f"readMB={stats['bytes_read'] / 1e6:.2f}",
+            )
+        results[str(alpha)] = per_budget
+    write_json("store", {
+        "config": {
+            "rows": rows, "cap_frac": cap_frac, "capacity": capacity,
+            "budget_fracs": list(budget_fracs), "batch": batch, "pooling": pooling,
+            "emb_dim": emb_dim, "steps": steps, "promote_every": promote_every,
+        },
+        "alphas": results,
+    })
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=32768)
+    ap.add_argument("--cap-frac", type=int, default=16, help="hot capacity = rows / cap_frac")
+    ap.add_argument("--budget-fracs", default="4,8,16", help="resident budget = rows / frac")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--pooling", type=int, default=16)
+    ap.add_argument("--emb-dim", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=96)
+    ap.add_argument("--promote-every", type=int, default=16)
+    ap.add_argument("--alphas", default="0.95,1.05")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    kw = dict(
+        rows=args.rows, cap_frac=args.cap_frac,
+        budget_fracs=tuple(int(f) for f in args.budget_fracs.split(",")),
+        batch=args.batch, pooling=args.pooling, emb_dim=args.emb_dim,
+        steps=args.steps, promote_every=args.promote_every,
+        alphas=tuple(float(a) for a in args.alphas.split(",")),
+    )
+    if args.quick:
+        kw.update(QUICK)
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

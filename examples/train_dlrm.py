@@ -8,6 +8,8 @@ tables) for a few hundred steps with the paper's full system —
 Run: PYTHONPATH=src python examples/train_dlrm.py [--steps 300] [--system tc]
 """
 import argparse
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -16,7 +18,7 @@ import jax
 
 import repro.configs
 from repro.configs.base import DLRMConfig, get_config
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, save_coherent
 from repro.data.pipeline import CastingServer, Prefetcher
 from repro.data.synth import DLRMStream
 from repro.runtime import dlrm_train
@@ -27,12 +29,17 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--rows", type=int, default=150_000)
-    ap.add_argument("--system", default="tc", choices=["baseline", "tc", "tc_nmp", "tc_cached"])
+    ap.add_argument("--system", default="tc",
+                    choices=["baseline", "tc", "tc_nmp", "tc_cached", "tc_streamed"])
     ap.add_argument("--profile", default="criteo")
     ap.add_argument("--cache-capacity", type=int, default=0,
-                    help="tc_cached hot rows per table (0 -> rows/16)")
+                    help="tc_cached/tc_streamed hot rows per table (0 -> rows/16)")
     ap.add_argument("--promote-every", type=int, default=20,
-                    help="tc_cached promotion cadence in steps (0 -> never promote)")
+                    help="tc_cached/tc_streamed promotion cadence (0 -> never promote)")
+    ap.add_argument("--store-dir", default="",
+                    help="tc_streamed shard-store directory (default: a temp dir)")
+    ap.add_argument("--resident-rows", type=int, default=0,
+                    help="tc_streamed host working-set budget (0 -> rows/8)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     args = ap.parse_args()
@@ -47,31 +54,63 @@ def main():
         gathers_per_table=cfg.gathers_per_table, batch=args.batch,
         profile=args.profile, seed=0,
     )
-    cast = CastingServer(rows_per_table=args.rows, with_counts=(args.system == "tc_cached"))
+    tiered = args.system in ("tc_cached", "tc_streamed")
+    cast = CastingServer(
+        rows_per_table=args.rows, with_counts=tiered,
+        with_lookup_seg=(args.system == "tc_streamed"),
+    )
 
     def produce(step: int):
         b = stream.batch_at(step)
         if args.system != "baseline":
             b = cast(b)  # host-side casting, overlapped (paper Fig. 9b)
+        if args.system == "tc_streamed":
+            return b  # the streamed host driver consumes the numpy batch
         return jax.tree_util.tree_map(jax.numpy.asarray, b)
 
-    if args.system == "tc_cached":
+    streamed = None
+    tmp_store = None
+    if args.system == "tc_streamed":
+        # cold tier on disk: only hot tier + working set stay resident
+        tmp_store = None if args.store_dir else tempfile.mkdtemp(prefix="dlrm_store_")
+        store_dir = args.store_dir or tmp_store
+        # the window must hold the depth-2 lookahead's working set (current
+        # + prefetched steps, <= B*P unique rows each) or prefetches thrash
+        resident = args.resident_rows or max(
+            args.rows // 8, min(args.rows, 4 * args.batch * cfg.gathers_per_table)
+        )
+        print(f"[dlrm] shard store: {store_dir} (resident {resident}/{args.rows} rows)")
+        state, streamed = dlrm_train.init_streamed(
+            cfg, jax.random.key(0), store_dir,
+            capacity=args.cache_capacity or None,
+            resident_rows=resident,
+        )
+        produce = streamed.wrap_produce(produce)  # schedule shard prefetch
+        raw_step = dlrm_train.make_streamed_train_step(cfg, streamed)
+        step_fn = lambda st, b, i: raw_step(st, b, step_index=i)  # noqa: E731
+        promote_fn = dlrm_train.make_streamed_promote(streamed)
+        flush_fn = None
+    elif args.system == "tc_cached":
         state = dlrm_train.init_cached_state(
             cfg, jax.random.key(0), capacity=args.cache_capacity or None
         )
+        step_fn = dlrm_train.make_sparse_train_step(cfg, system=args.system)
         promote_fn = dlrm_train.make_promote_step()
         flush_fn = dlrm_train.make_flush_step()
     else:
         state = dlrm_train.init_state(cfg, jax.random.key(0))
+        step_fn = dlrm_train.make_sparse_train_step(cfg, system=args.system)
         promote_fn = flush_fn = None
-    step_fn = dlrm_train.make_sparse_train_step(cfg, system=args.system)
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
 
     losses, t0 = [], time.perf_counter()
     with Prefetcher(produce, depth=2) as pf:
         for _ in range(args.steps):
             step_no, batch = pf.get()
-            state, loss = step_fn(state, batch)
+            if streamed is not None:
+                state, loss = step_fn(state, batch, step_no)
+            else:
+                state, loss = step_fn(state, batch)
             losses.append(float(loss))
             promoted = (promote_fn and args.promote_every > 0
                         and (step_no + 1) % args.promote_every == 0)
@@ -81,18 +120,34 @@ def main():
                 hit = f" hit {float(state['hit_rate']):.2f}" if promote_fn else ""
                 print(f"[dlrm] step {step_no} loss {losses[-1]:.4f}{hit}")
             if ckpt and (step_no + 1) % args.ckpt_every == 0:
-                if flush_fn and not promoted:
-                    # hot rows live in the cache tier between promotions; the
-                    # write-back makes state["tables"] authoritative without
-                    # touching the hot set (promote_every=0 stays frozen)
-                    state = flush_fn(state)
-                ckpt.save(step_no + 1, {"tables": state["tables"], "dense": state["dense"]})
+                if streamed is not None:
+                    # demote-all + flush: shard files + snapshot = checkpoint;
+                    # re-promote immediately so the hot tier doesn't run
+                    # empty until the next scheduled promotion
+                    state = save_coherent(ckpt, step_no + 1, state, streamed=streamed)
+                    if promote_fn and args.promote_every > 0:
+                        state = promote_fn(state)
+                else:
+                    if flush_fn and not promoted:
+                        # hot rows live in the cache tier between promotions;
+                        # the write-back makes state["tables"] authoritative
+                        # without touching the hot set
+                        state = flush_fn(state)
+                    ckpt.save(step_no + 1, {"tables": state["tables"], "dense": state["dense"]})
     dt = time.perf_counter() - t0
     if ckpt:
         ckpt.wait()
     ex_s = args.steps * args.batch / dt
     print(f"[dlrm] {args.steps} steps in {dt:.1f}s -> {ex_s:.0f} examples/s; "
           f"final loss {np.mean(losses[-20:]):.4f}")
+    if streamed is not None:
+        st = streamed.stats()
+        print(f"[dlrm] store: coverage {st['prefetch_coverage']:.3f}, "
+              f"sync_faults {st['sync_faults']}, evictions {st['evictions']}, "
+              f"read {st['bytes_read'] / 1e6:.1f}MB, written {st['bytes_written'] / 1e6:.1f}MB")
+        streamed.close()
+        if tmp_store:  # default temp store: don't leak the table into /tmp
+            shutil.rmtree(tmp_store, ignore_errors=True)
 
 
 if __name__ == "__main__":

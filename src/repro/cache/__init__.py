@@ -16,6 +16,7 @@ for the dataflow and ROADMAP.md for the fused cached-SCATTER follow-on.
 from repro.cache.hotcache import (  # noqa: F401
     HotRowCache,
     TierSplit,
+    demote_all,
     init_hot_cache,
     promote_evict,
     resolve,
@@ -24,6 +25,7 @@ from repro.cache.hotcache import (  # noqa: F401
 )
 from repro.cache.stats import (  # noqa: F401
     RowStatsAccumulator,
+    choose_capacity,
     init_row_stats,
     row_counts_from_cast,
     segment_counts,

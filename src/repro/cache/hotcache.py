@@ -104,6 +104,21 @@ def write_back(
     return table, accum
 
 
+def demote_all(
+    cache: HotRowCache, table: Array, accum: Array
+) -> tuple[HotRowCache, Array, Array]:
+    """Checkpoint / restore coherence step: write every cached row +
+    accumulator back and reset the cache to all-empty. Afterwards
+    ``table``/``accum`` alone are authoritative AND the hot set is empty —
+    the state a restored job (possibly on a different mesh or hot-set
+    config) can safely start from. Jittable, static shapes."""
+    table, accum = write_back(cache, table, accum)
+    empty = init_hot_cache(
+        cache.capacity, cache.rows.shape[1], table.shape[0] - 1, cache.rows.dtype
+    )
+    return empty, table, accum
+
+
 def promote_evict(
     cache: HotRowCache,
     table: Array,

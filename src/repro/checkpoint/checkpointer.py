@@ -15,6 +15,19 @@ Properties required for 1000+-node operation, all implemented here:
 
 Leaves are stored as individual .npy files keyed by escaped pytree paths;
 the manifest records structure, dtypes and the training step.
+
+Hot-tier coherence (``save_coherent`` / ``restore_coherent``): tiered
+trainer states (``tc_cached`` / ``tc_streamed``) carry a per-table hot-row
+cache whose rows are authoritative while cached. A snapshot taken
+mid-training must not depend on the hot-set CONFIG surviving the restart
+(elastic restarts may change capacity, mesh, or placement policy), so the
+coherent contract is demote-all-then-flush on BOTH sides: before saving,
+every cached row is written back and the cache emptied (for ``tc_streamed``
+the write-back goes through the disk store, whose shard files are then the
+cold tier's durable copy); on restore the same demote-all runs defensively,
+so even a snapshot taken without the coherent save (live cache rows in the
+.npy leaves) restores to a state where tables/shards alone are
+authoritative and the hot set is empty.
 """
 from __future__ import annotations
 
@@ -27,6 +40,8 @@ from typing import Any, Optional
 import numpy as np
 
 import jax
+
+from repro.cache.hotcache import HotRowCache, demote_all
 
 
 def _escape(path_str: str) -> str:
@@ -54,7 +69,20 @@ class Checkpointer:
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+    def save(
+        self,
+        step: int,
+        tree: Any,
+        *,
+        blocking: bool = False,
+        extra_dirs: Optional[dict] = None,
+    ) -> None:
+        """``extra_dirs`` maps names to directories copied verbatim into the
+        checkpoint (inside the atomic tmp-rename, so a crashed save can
+        never leave a half-copied side dir behind a valid manifest). Used
+        by ``save_coherent`` to snapshot the tc_streamed shard store; the
+        source directories must not mutate until the save completes — pass
+        ``blocking=True`` in that case."""
         self.wait()  # one in-flight save at a time
         named, _ = _leaves_with_paths(tree)
         # device->host pull on caller thread keeps jax.Array lifetimes simple
@@ -64,6 +92,7 @@ class Checkpointer:
             "leaves": [
                 {"path": p, "dtype": str(a.dtype), "shape": list(a.shape)} for p, a in host
             ],
+            "extra_dirs": sorted(extra_dirs) if extra_dirs else [],
         }
 
         def _write():
@@ -75,6 +104,8 @@ class Checkpointer:
                 os.makedirs(tmp)
                 for p, a in host:
                     np.save(os.path.join(tmp, _escape(p) + ".npy"), a)
+                for name, src in (extra_dirs or {}).items():
+                    shutil.copytree(src, os.path.join(tmp, name))
                 with open(os.path.join(tmp, "manifest.json"), "w") as f:
                     json.dump(manifest, f)
                     f.flush()
@@ -141,3 +172,88 @@ class Checkpointer:
             else:
                 leaves.append(jax.numpy.asarray(a))
         return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# hot-tier coherence for tiered trainer states (tc_cached / tc_streamed)
+# ---------------------------------------------------------------------------
+
+
+def _demote_all_cached(state: dict) -> dict:
+    """``tc_cached``: write every per-table cached row + accumulator back
+    into the tables and reset the caches to all-empty (hotcache.demote_all,
+    vmapped over tables)."""
+
+    def one(t, a, ci, cr, ca):
+        cache, t, a = demote_all(HotRowCache(ci, cr, ca), t, a)
+        return t, a, cache.ids, cache.rows, cache.accum
+
+    tables, accums, cids, crows, caccums = jax.vmap(one)(
+        state["tables"], state["accums"], state["cache_ids"],
+        state["cache_rows"], state["cache_accums"],
+    )
+    return dict(
+        state, tables=tables, accums=accums,
+        cache_ids=cids, cache_rows=crows, cache_accums=caccums,
+    )
+
+
+def _demote_flush(state: dict, streamed) -> dict:
+    if "cache_ids" not in state:
+        return state  # flat systems: nothing to demote
+    if streamed is not None:
+        from repro.store.streamed import flush_state  # checkpoint <- store is lazy
+
+        return flush_state(state, streamed)
+    if "tables" in state:
+        return _demote_all_cached(state)
+    raise ValueError(
+        "state has a hot cache but no tables and no `streamed` handle — "
+        "pass the StreamedTables the tc_streamed run trains against"
+    )
+
+
+def save_coherent(
+    ckpt: Checkpointer, step: int, state: dict, *, streamed=None, blocking: bool = False
+) -> dict:
+    """Demote-all + flush the hot tier, then snapshot. Returns the demoted
+    state — continue training with it (the snapshot and the live run must
+    agree on where each row is authoritative). For ``tc_streamed`` pass the
+    run's StreamedTables: hot rows are written back, the shard files
+    fsynced, and the shard directories COPIED into the checkpoint (the live
+    store keeps mutating in place once training resumes, so a reference to
+    it would silently stop being the step-N state — the snapshot must own
+    its bytes). The copy forces ``blocking=True``; production stores would
+    use a reflink/filesystem snapshot here instead."""
+    state = _demote_flush(state, streamed)
+    if streamed is not None:
+        ckpt.save(step, state, blocking=True, extra_dirs={"store": streamed.path})
+    else:
+        ckpt.save(step, state, blocking=blocking)
+    return state
+
+
+def restore_coherent(
+    ckpt: Checkpointer,
+    like: Any,
+    *,
+    step: Optional[int] = None,
+    shardings: Any = None,
+    streamed=None,
+) -> tuple[int, dict]:
+    """Restore, then demote-all-then-flush FIRST — before any training step.
+    A coherent save already stores an empty cache (demote is then a no-op);
+    a legacy/mid-training snapshot stores live cached rows, which this
+    write-back folds into the cold tier so the restored job never trusts a
+    hot set picked under the old run's config.
+
+    For ``tc_streamed``: if the checkpoint carries a shard-store snapshot
+    (``save_coherent(streamed=...)``), it is loaded back into ``streamed``'s
+    live shard files (and the working sets invalidated) — restoring to step
+    N even when the live store has since been mutated by further training."""
+    step, state = ckpt.restore(like, step=step, shardings=shardings)
+    if streamed is not None:
+        snap = os.path.join(ckpt.directory, f"step_{step:08d}", "store")
+        if os.path.isdir(snap):
+            streamed.restore_shards(snap)
+    return step, _demote_flush(state, streamed)

@@ -20,7 +20,12 @@ import numpy as np
 
 
 def numpy_tensor_casting(
-    src: np.ndarray, dst: np.ndarray, fill_id: int, *, with_counts: bool = False
+    src: np.ndarray,
+    dst: np.ndarray,
+    fill_id: int,
+    *,
+    with_counts: bool = False,
+    with_lookup_seg: bool = False,
 ) -> dict:
     """Host-side Alg. 2 (stable sort-by-key on src).
 
@@ -28,8 +33,13 @@ def numpy_tensor_casting(
     n=0 case (empty index arrays, num_unique == 0). ``with_counts`` adds a
     ``counts`` array (lookups per coalesced segment, aligned with
     ``unique_ids``) — the placement signal for the tiered store
-    (repro.cache); skipped by default to keep the hot input path lean for
-    systems that never read it.
+    (repro.cache). ``with_lookup_seg`` adds ``lookup_seg``, the inverse of
+    the sort: ``lookup_seg[p]`` is the coalesced segment of ORIGINAL lookup
+    position ``p`` (so ``gathered_rows[lookup_seg]`` reconstructs the
+    per-lookup rows in batch order) — the forward map for the streamed cold
+    tier (repro.store), which gathers rows per segment, not per lookup.
+    Both are skipped by default to keep the hot input path lean for systems
+    that never read them.
     """
     order = np.argsort(src, kind="stable")
     sorted_src = src[order]
@@ -53,6 +63,10 @@ def numpy_tensor_casting(
         out["counts"] = (
             np.bincount(casted_dst, minlength=n).astype(np.int32) if n else np.zeros(0, np.int32)
         )
+    if with_lookup_seg:
+        lookup_seg = np.empty(n, np.int32)
+        lookup_seg[order] = casted_dst
+        out["lookup_seg"] = lookup_seg
     return out
 
 
@@ -61,12 +75,21 @@ class CastingServer:
     critical path). For LM batches casts the flattened token ids; for DLRM
     batches casts every table's (src, dst) pair."""
 
-    def __init__(self, *, vocab_size: int = 0, rows_per_table: int = 0, with_counts: bool = False):
+    def __init__(
+        self,
+        *,
+        vocab_size: int = 0,
+        rows_per_table: int = 0,
+        with_counts: bool = False,
+        with_lookup_seg: bool = False,
+    ):
         self.vocab_size = vocab_size
         self.rows_per_table = rows_per_table
         # per-row access counts ride along only for tiered-store consumers
-        # (system="tc_cached"); other systems never read them
+        # (system="tc_cached"/"tc_streamed"); the lookup->segment map only
+        # for the streamed cold tier; other systems never read them
         self.with_counts = with_counts
+        self.with_lookup_seg = with_lookup_seg
 
     def __call__(self, batch: dict) -> dict:
         out = dict(batch)
@@ -74,7 +97,8 @@ class CastingServer:
             flat = batch["tokens"].reshape(-1)
             dst = np.arange(flat.shape[0], dtype=np.int32)
             out["cast"] = numpy_tensor_casting(
-                flat, dst, fill_id=self.vocab_size, with_counts=self.with_counts
+                flat, dst, fill_id=self.vocab_size,
+                with_counts=self.with_counts, with_lookup_seg=self.with_lookup_seg,
             )
         if "idx" in batch:
             B, T, P = batch["idx"].shape
@@ -82,7 +106,8 @@ class CastingServer:
             casts = [
                 numpy_tensor_casting(
                     batch["idx"][:, t, :].reshape(-1), dst,
-                    fill_id=self.rows_per_table, with_counts=self.with_counts,
+                    fill_id=self.rows_per_table,
+                    with_counts=self.with_counts, with_lookup_seg=self.with_lookup_seg,
                 )
                 for t in range(T)
             ]
@@ -97,7 +122,13 @@ class Prefetcher:
 
     The produce function runs on the host while the device executes the
     previous step — this is where CastingServer's work overlaps with forward
-    compute, the paper's Fig. 9b timeline."""
+    compute, the paper's Fig. 9b timeline.
+
+    Failure contract: a producer-thread exception is delivered to ``get()``
+    — after any batches produced BEFORE the failure have been drained, so a
+    crash never silently drops good work — instead of leaving the consumer
+    spinning. ``close()`` is idempotent, and ``get()`` after ``close()``
+    raises immediately rather than polling a dead queue forever."""
 
     def __init__(self, produce: Callable[[int], dict], *, depth: int = 2, start_step: int = 0):
         self._produce = produce
@@ -105,6 +136,7 @@ class Prefetcher:
         self._stop = threading.Event()
         self._step = start_step
         self._exc: Optional[BaseException] = None
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -120,13 +152,27 @@ class Prefetcher:
                     except queue.Full:
                         continue
                 step += 1
-        except BaseException as e:  # surfaced on next get()
+        except BaseException as e:  # surfaced on get() once the queue drains
             self._exc = e
 
     def get(self) -> tuple[int, dict]:
         while True:
-            if self._exc is not None:
-                raise self._exc
+            # drain batches produced before any failure first
+            try:
+                return self._q.get_nowait()
+            except queue.Empty:
+                pass
+            if self._exc is not None or self._closed:
+                # one more drain: the producer enqueues each batch BEFORE it
+                # can fail on the next one, so a batch put between the drain
+                # above and the flag becoming visible is still good work —
+                # without this recheck it would be silently dropped
+                try:
+                    return self._q.get_nowait()
+                except queue.Empty:
+                    if self._exc is not None:  # root cause wins over "closed"
+                        raise self._exc
+                    raise RuntimeError("Prefetcher is closed")
             try:
                 return self._q.get(timeout=0.1)
             except queue.Empty:
@@ -134,6 +180,9 @@ class Prefetcher:
                     raise RuntimeError("prefetch thread died")
 
     def close(self):
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
         self._thread.join(timeout=2.0)
 

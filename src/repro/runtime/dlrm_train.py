@@ -21,6 +21,16 @@ Four design points from the paper's evaluation (§VI), selectable as
                         decayed-frequency EMA (fed by the CastingServer's
                         per-batch row counts) periodically re-picks the hot
                         set. Bit-identical to ``tc`` by construction.
+  * ``tc_streamed``   — Ours + the full capacity hierarchy (repro.store):
+                        the cold tier lives on DISK (mmap'd shards) with a
+                        bounded host working set; the device step receives a
+                        static-shape gathered slice of the batch's unique
+                        cold rows (+ accumulators) and returns their updated
+                        values for host write-back. Hot tier + EMA as in
+                        ``tc_cached``. Bit-identical to ``tc`` with any
+                        resident budget >= 1 — use ``init_streamed`` +
+                        ``make_streamed_train_step`` (host driver), not the
+                        raw jitted step.
 
 The dense MLPs always train with dense Adagrad (the GPU side of Fig. 3).
 """
@@ -29,10 +39,18 @@ from __future__ import annotations
 from functools import partial
 from typing import Any
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from repro.cache.hotcache import HotRowCache, init_hot_cache, promote_evict, write_back
+from repro.cache.hotcache import (
+    HotRowCache,
+    init_hot_cache,
+    promote_evict,
+    resolve,
+    write_back,
+)
 from repro.cache.stats import fold_counts, segment_counts
 from repro.cache.tiered import TieredEmbedding
 from repro.configs.base import DLRMConfig
@@ -108,18 +126,22 @@ def make_sparse_train_step(
     CastingServer) when system != baseline. ``decay`` is the hot-row EMA
     decay, used only by ``tc_cached`` (pair with ``make_promote_step``).
     """
-    # tc pins the reference path; tc_nmp and tc_cached auto-dispatch (Mosaic
-    # on TPU, jnp on CPU, pallas_interpret under the tests' pinned default —
-    # kernel equivalence is covered by interpret-mode tests). tc_cached's
-    # gathers route through the fused cached-gather kernel; its tier-split
-    # scatter stays pinned to jnp inside sparse_update (fused cached-scatter
-    # is still a ROADMAP open item).
-    kernel_mode = {"baseline": None, "tc": "jnp", "tc_nmp": None, "tc_cached": None}[system]
+    # tc pins the reference path; tc_nmp, tc_cached and tc_streamed
+    # auto-dispatch (Mosaic on TPU, jnp on CPU, pallas_interpret under the
+    # tests' pinned default — kernel equivalence is covered by
+    # interpret-mode tests). tc_cached's gathers route through the fused
+    # cached-gather kernel; its tier-split scatter stays pinned to jnp
+    # inside sparse_update (fused cached-scatter is still a ROADMAP item).
+    kernel_mode = {
+        "baseline": None, "tc": "jnp", "tc_nmp": None,
+        "tc_cached": None, "tc_streamed": None,
+    }[system]
     dense_opt = adagrad(lr)
 
     def step(state, batch):
-        dense_params, tables, accums = state["dense"], state["tables"], state["accums"]
-        opt_state = state["opt_state"]
+        dense_params, opt_state = state["dense"], state["opt_state"]
+        # tc_streamed state carries no cold tables — they live on disk
+        tables, accums = state.get("tables"), state.get("accums")
 
         if system == "baseline":
             # autodiff through the lookup: framework expand-coalesce + dense update
@@ -172,6 +194,78 @@ def make_sparse_train_step(
                 cast["num_unique"],
                 counts,
             )
+        elif system == "tc_streamed":
+            # capacity hierarchy: cold rows arrive as a host-gathered
+            # static-shape slice aligned with the cast's unique_ids; the
+            # device owns only the hot tier. Updated cold lanes are returned
+            # to the host for write-back through the working set.
+            cids, crows, caccums = state["cache_ids"], state["cache_rows"], state["cache_accums"]
+            ema = state["ema"]
+            cast = batch["cast"]
+            B, T, P = batch["idx"].shape
+            dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+
+            def fwd_one(ci, cr, ids, seg, cold_r):
+                # per-lookup rows: hot from the cache, cold from the slice
+                # via the host's lookup->segment map — bit-equal to
+                # jnp.take(table, ids) on a flat table, so the segment_sum
+                # matches the tc forward exactly.
+                slots, hit = resolve(ci, ids.reshape(-1))
+                hot = jnp.take(cr, slots, axis=0)
+                cold = jnp.take(cold_r, seg, axis=0)
+                rows = jnp.where(hit[:, None], hot, cold)
+                pooled = jax.ops.segment_sum(rows, dst, num_segments=B)
+                return pooled, jnp.mean(hit.astype(jnp.float32))
+
+            emb, hits = jax.vmap(fwd_one, in_axes=(0, 0, 1, 0, 0), out_axes=(1, 0))(
+                cids, crows, batch["idx"], cast["lookup_seg"], batch["cold_rows"]
+            )
+            hit_rate = jnp.mean(hits)
+            loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
+            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
+            if "counts" in cast:
+                counts = cast["counts"]
+            else:
+                counts = jax.vmap(lambda cd: segment_counts(cd, cd.shape[0]))(cast["casted_dst"])
+
+            def upd_one(ci, cr, ca, cold_r, cold_a, e, d_e, c_src, c_dst, uids, nuniq, cnt):
+                coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
+                slots, hit = resolve(ci, uids)
+                # hot tier: the same redirected scatter as
+                # TieredEmbedding.sparse_update's hot half (misses -> dead
+                # slot C); pinned jnp for the same contract reason.
+                hot_ids = jnp.where(hit, slots, ci.shape[0] - 1)
+                cr2, ca2 = ops.scatter_apply_adagrad(cr, ca, hot_ids, coal, lr, mode="jnp")
+                # cold tier: the SAME scatter-apply primitive, run on the
+                # gathered slice padded with one dead row n. Each real cold
+                # unique id occupies exactly one lane (ids = lane index);
+                # hot and padding lanes redirect to the dead row, which
+                # absorbs them and is sliced off. Using the primitive (not
+                # an elementwise rewrite) keeps the op sequence — and
+                # therefore the rounding, no FMA refusion — bit-identical
+                # to the flat table update.
+                n = coal.shape[0]
+                slice_ids = jnp.where(hit, n, jnp.arange(n, dtype=jnp.int32))
+                pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
+                pad_a = jnp.concatenate([cold_a, jnp.zeros((1, 1), cold_a.dtype)])
+                pad_r2, pad_a2 = ops.scatter_apply_adagrad(
+                    pad_r, pad_a, slice_ids, coal, lr, mode="jnp"
+                )
+                e2 = fold_counts(e, decay, uids, cnt)
+                return cr2, ca2, pad_r2[:n], pad_a2[:n], hit.astype(jnp.int32), e2
+
+            crows, caccums, cold_rows_out, cold_accums_out, hit_seg, ema = jax.vmap(
+                upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
+            )(
+                cids, crows, caccums,
+                batch["cold_rows"], batch["cold_accums"], ema,
+                d_emb,
+                cast["casted_src"],
+                cast["casted_dst"],
+                cast["unique_ids"],
+                cast["num_unique"],
+                counts,
+            )
         else:
             # paper system: fwd gather-reduce; bwd = casted gather-reduce + sparse scatter
             emb = _pooled_from_tables(cfg, tables, batch["idx"])
@@ -197,17 +291,22 @@ def make_sparse_train_step(
 
         updates, opt_state = dense_opt.update(d_dense, opt_state, dense_params)
         dense_params = apply_updates(dense_params, updates)
-        new_state = {
-            "dense": dense_params,
-            "tables": tables,
-            "accums": accums,
-            "opt_state": opt_state,
-        }
-        if system == "tc_cached":
+        new_state = {"dense": dense_params, "opt_state": opt_state}
+        if system != "tc_streamed":
+            new_state.update(tables=tables, accums=accums)
+        if system in ("tc_cached", "tc_streamed"):
             new_state.update(
                 cache_ids=cids, cache_rows=crows, cache_accums=caccums,
                 ema=ema, hit_rate=hit_rate,
             )
+        if system == "tc_streamed":
+            # aux payload for the host driver's working-set write-back
+            return new_state, {
+                "loss": loss,
+                "cold_rows": cold_rows_out,
+                "cold_accums": cold_accums_out,
+                "hit_seg": hit_seg,
+            }
         return new_state, loss
 
     return jax.jit(step, donate_argnums=(0,))
@@ -276,3 +375,136 @@ def make_flush_step():
         return dict(state, tables=tables, accums=accums)
 
     return jax.jit(flush, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# tc_streamed: host driver over the disk-backed cold tier (repro.store)
+# ---------------------------------------------------------------------------
+
+
+def init_streamed(
+    cfg: DLRMConfig,
+    key,
+    store_path: str,
+    *,
+    lr: float = 0.01,
+    capacity: int | None = None,
+    resident_rows: int | None = None,
+    num_shards: int = 8,
+    prefetch: bool = True,
+):
+    """``init_cached_state``'s counterpart for ``system="tc_streamed"``.
+
+    Materializes the same initial tables as ``init_state`` (same key -> same
+    values, the bit-identity anchor), writes rows + accumulators to per-table
+    shard stores under ``store_path``, and returns ``(state, streamed)``:
+    the device state holds only dense params, the hot tier and the EMA — the
+    cold tier never resides on device. ``resident_rows`` is the host
+    working-set budget (default rows/8; correctness holds for any budget
+    >= 1, streaming is only exercised when it is < rows)."""
+    from repro.store import StreamedTables
+
+    s = init_sparse_system(cfg, key)
+    tables = np.asarray(s["tables"])  # (T, V+1, D); sentinel row stays off-store
+    accums = np.asarray(s["accums"])
+    T, rows_p1, D = tables.shape
+    V = rows_p1 - 1
+    C = capacity if capacity is not None else max(1, V // 16)
+    R = resident_rows if resident_rows is not None else max(1, V // 8)
+    streamed = StreamedTables.create(
+        store_path, tables[:, :V], accums[:, :V],
+        resident_rows=R, num_shards=min(num_shards, V), prefetch=prefetch,
+    )
+    cache = init_hot_cache(C, D, V, jnp.float32)
+    state = {
+        "dense": s["dense"],
+        "opt_state": adagrad(lr).init(s["dense"]),
+        "cache_ids": jnp.tile(cache.ids, (T, 1)),
+        "cache_rows": jnp.tile(cache.rows, (T, 1, 1)),
+        "cache_accums": jnp.tile(cache.accum, (T, 1, 1)),
+        "ema": jnp.zeros((T, V), jnp.float32),
+        "hit_rate": jnp.zeros((), jnp.float32),
+    }
+    return state, streamed
+
+
+def make_streamed_train_step(cfg: DLRMConfig, streamed, *, lr: float = 0.01, decay: float = 0.98):
+    """Host driver for ``tc_streamed``: returns
+    ``step(state, batch, step_index=None) -> (state, loss)``.
+
+    ``batch`` is the HOST batch (numpy, with ``cast`` from a CastingServer
+    configured with ``with_counts=True, with_lookup_seg=True``). The driver
+    waits on the step's prefetch, assembles the cold slice from the working
+    set (synchronous shard faults for anything missing — counted, never
+    wrong), runs the jitted device step, and writes the updated cold lanes
+    back through the store. ``step_index`` keys the prefetch barrier; pass
+    the pipeline's step id (None skips the wait)."""
+    device_step = make_sparse_train_step(cfg, lr=lr, system="tc_streamed", decay=decay)
+
+    def step(state, batch, *, step_index=None):
+        cast = batch["cast"]
+        cold_rows, cold_accums = streamed.gather(step_index, cast)
+        state, aux = device_step(
+            state, dict(batch, cold_rows=cold_rows, cold_accums=cold_accums)
+        )
+        streamed.write_back(
+            cast,
+            np.asarray(aux["cold_rows"]),
+            np.asarray(aux["cold_accums"]),
+            np.asarray(aux["hit_seg"]),
+        )
+        return state, aux["loss"]
+
+    return step
+
+
+def make_streamed_promote(streamed):
+    """Host placement step for ``tc_streamed`` (cf. ``make_promote_step``):
+    demote every cached row + accumulator through the store, then adopt the
+    EMA's per-table top-C from the working set. Semantically a no-op on the
+    trained values, exactly like ``promote_evict``.
+
+    Window hygiene: rows that STAY hot across the promotion are demoted
+    write-through (straight to their shard — the store never serves them),
+    and promotion reads neither count nor install; only rows LEAVING the
+    hot set enter the working set, since those are the ones future steps
+    will actually read. The hot-set mirror is updated with exactly the ids
+    uploaded to the device cache (the consistency invariant)."""
+
+    def promote(state):
+        C = state["cache_ids"].shape[1] - 1
+        V = streamed.num_rows
+        cids = np.asarray(state["cache_ids"])
+        crows = np.asarray(state["cache_rows"])
+        caccums = np.asarray(state["cache_accums"])
+        ema = np.asarray(state["ema"])
+        T = ema.shape[0]
+        new_ids = np.full((T, C + 1), V, np.int32)
+        new_rows = np.zeros((T, C + 1, streamed.dim), np.float32)
+        new_accums = np.zeros((T, C + 1, 1), np.float32)
+        for t in range(T):
+            # stable argsort on -ema == lax.top_k's lower-index tie-break
+            top = np.argsort(-ema[t], kind="stable")[:C]
+            ids_sorted = np.sort(top).astype(np.int32)
+            # demote: rows staying hot write through, rows leaving install
+            real = cids[t] < V
+            stays = real & np.isin(cids[t], ids_sorted)
+            leaves = real & ~stays
+            for mask, insert in ((stays, False), (leaves, True)):
+                if mask.any():
+                    streamed.demote(
+                        t, cids[t][mask], crows[t][mask], caccums[t][mask], insert=insert
+                    )
+            rows, accs = streamed.gather_rows(t, ids_sorted)  # bypasses the mirror
+            streamed.set_hot_ids(t, ids_sorted)
+            new_ids[t, :C] = ids_sorted
+            new_rows[t, :C] = rows
+            new_accums[t, :C] = accs
+        return dict(
+            state,
+            cache_ids=jnp.asarray(new_ids),
+            cache_rows=jnp.asarray(new_rows),
+            cache_accums=jnp.asarray(new_accums),
+        )
+
+    return promote

@@ -1,0 +1,27 @@
+"""Disk-backed cold tier with casting-driven async prefetch (``repro.store``).
+
+Production DLRM tables exceed every single tier of fast memory (Gupta et
+al. HPCA'20; RecNMP). This package completes the capacity hierarchy the
+PR 1/2 hot-row cache started: ``shards`` holds each table as memory-mapped
+fixed-stride files on disk, ``working_set`` keeps a bounded resident window
+of cold rows in host memory, and ``prefetch`` uses the casting stage's
+already-computed unique ids for FUTURE batches (the input pipeline's
+depth-2 lookahead) to fault rows in before the step needs them. ``streamed``
+glues the tiers together for ``system="tc_streamed"`` — bit-identical to
+the flat ``tc`` trainer while only hot tier + working set stay resident.
+
+See docs/store.md for the shard format, prefetch dataflow and consistency
+rules.
+"""
+from repro.store.prefetch import ShardPrefetcher  # noqa: F401
+from repro.store.shards import (  # noqa: F401
+    EmbeddingShardStore,
+    create_store,
+    open_store,
+)
+from repro.store.streamed import (  # noqa: F401
+    StreamedTables,
+    demote_all_state,
+    flush_state,
+)
+from repro.store.working_set import WorkingSetManager, WorkingSetStats  # noqa: F401

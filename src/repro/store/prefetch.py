@@ -1,0 +1,132 @@
+"""Casting-driven asynchronous shard prefetch.
+
+The host input pipeline (``data.pipeline.Prefetcher``, depth 2) computes
+each future batch's casted unique ids one-to-two steps before the device
+consumes the batch. ``ShardPrefetcher`` turns that lookahead into disk
+overlap: as soon as a batch is produced, its per-table unique ids are
+scheduled here, and a background thread faults the rows into the working
+set while the device is still busy with earlier steps.
+
+``wait(step)`` is the consumption-side barrier: the gather path calls it
+before reading the working set, so a slow disk shows up as bounded latency
+on exactly the step that needed the rows — never as a wrong read (rows the
+prefetcher did not finish, or that were evicted since, fall back to
+synchronous shard faults inside ``WorkingSetManager.gather``, counted in
+its stats).
+
+Failure contract mirrors the hardened ``data.pipeline.Prefetcher``: a
+fault-in error is captured and re-raised on the next ``wait``; ``close`` is
+idempotent.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.store.working_set import WorkingSetManager
+
+
+class ShardPrefetcher:
+    def __init__(self, working_sets: Sequence[WorkingSetManager]):
+        self._working_sets = list(working_sets)
+        self._q: queue.Queue = queue.Queue()
+        self._done: dict[int, threading.Event] = {}
+        self._pending: dict[int, list[np.ndarray]] = {}  # step -> pinned ids
+        self._lock = threading.Lock()
+        self._exc: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._closed = False
+        self._scheduled_rows = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                step, ids_per_table, ev = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            try:
+                if self._exc is None:  # after a failure, drain but do no IO
+                    for ws, ids in zip(self._working_sets, ids_per_table):
+                        ws.fault_in(ids, prefetch=True)
+                    # pin: the rows are spoken for until the step's gather
+                    # consumes them — eviction must not undo the prefetch
+                    # (working_set._alloc skips pins). Pin under the same
+                    # lock release() takes, and only while the step is
+                    # still pending: if the consumer already released
+                    # (wait timeout), pinning now would leak the pins
+                    # forever and shrink the evictable window.
+                    with self._lock:
+                        if step in self._pending:
+                            for ws, ids in zip(self._working_sets, ids_per_table):
+                                ws.pin(ids)
+            except BaseException as e:  # surfaced on wait()
+                self._exc = e
+            finally:
+                ev.set()
+
+    # -- producer side (pipeline thread) -----------------------------------
+
+    def schedule(self, step: int, ids_per_table: Sequence[np.ndarray]) -> None:
+        """Queue one future step's per-table row ids for background fault-in.
+        Safe to call from the input-pipeline producer thread."""
+        if self._closed:
+            raise RuntimeError("ShardPrefetcher is closed")
+        if len(ids_per_table) != len(self._working_sets):
+            raise ValueError(
+                f"expected {len(self._working_sets)} id arrays, got {len(ids_per_table)}"
+            )
+        ids_per_table = [np.asarray(i, np.int64) for i in ids_per_table]
+        ev = threading.Event()
+        with self._lock:
+            self._done[step] = ev
+            self._pending[step] = ids_per_table
+            self._scheduled_rows += int(sum(len(i) for i in ids_per_table))
+        self._q.put((step, ids_per_table, ev))
+
+    # -- consumer side (train loop) ----------------------------------------
+
+    def wait(self, step: int, timeout: float = 60.0) -> bool:
+        """Block until the fault-in scheduled for ``step`` finished (no-op if
+        the step was never scheduled). Returns False on timeout — the gather
+        then proceeds and the unfinished rows become counted sync faults."""
+        with self._lock:
+            ev = self._done.pop(step, None)
+        ok = ev.wait(timeout) if ev is not None else True
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+        return ok
+
+    @property
+    def scheduled_rows(self) -> int:
+        """Total rows scheduled for fault-in since construction (telemetry:
+        compare with the working sets' prefetch_faults to see dedup)."""
+        with self._lock:
+            return self._scheduled_rows
+
+    def release(self, step: int) -> None:
+        """Unpin the rows scheduled for ``step`` (call once the step's
+        gather has consumed them). No-op for unknown steps."""
+        with self._lock:
+            ids_per_table = self._pending.pop(step, None)
+        if ids_per_table is not None:
+            for ws, ids in zip(self._working_sets, ids_per_table):
+                ws.unpin(ids)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

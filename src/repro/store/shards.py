@@ -1,0 +1,216 @@
+"""Memory-mapped sharded on-disk embedding store — the cold (disk) tier.
+
+One table = one directory of fixed-stride shard files plus a JSON shard
+directory. Each shard covers a contiguous row range ``[lo, hi)`` and is a
+flat ``float32`` memmap of shape ``(hi - lo, D + 1)``: columns ``[:D]`` are
+the embedding row, column ``D`` is the row-wise Adagrad accumulator
+(``optim.sparse`` keeps exactly one fp32 scalar per row). Keeping the
+accumulator in-stride means a demoted row and its optimizer state travel in
+one sequential read/write — the same locality argument as the fused
+scatter-apply kernel, applied to disk.
+
+The store is single-writer: the training host owns it, the working-set
+manager (``store.working_set``) and prefetcher (``store.prefetch``) are the
+only readers/writers during a run. Shard ranges are equal-width, so row ->
+shard resolution is one divide; the directory still records explicit ranges
+so future PRs can reshard (multi-host: one host per shard group) without a
+format change.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+DIRECTORY_FILE = "directory.json"
+FORMAT_VERSION = 1
+
+
+@dataclass
+class ShardStoreStats:
+    rows_read: int = 0
+    rows_written: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+@dataclass
+class EmbeddingShardStore:
+    """Open handle on one table's shard directory (see module docstring)."""
+
+    path: str
+    num_rows: int
+    dim: int
+    shard_rows: int  # rows per shard (last shard may be short)
+    _mmaps: list[np.memmap] = field(default_factory=list)
+    stats: ShardStoreStats = field(default_factory=ShardStoreStats)
+    # reads come from both the prefetch thread (lock-free fault path) and
+    # the train thread; += on the counters is not atomic
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._mmaps)
+
+    @property
+    def row_nbytes(self) -> int:
+        return (self.dim + 1) * 4
+
+    def flush(self) -> None:
+        for mm in self._mmaps:
+            mm.flush()
+
+    def close(self) -> None:
+        self.flush()
+        self._mmaps = []
+
+    # -- row IO ------------------------------------------------------------
+
+    def _check_ids(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.num_rows):
+            raise IndexError(
+                f"row ids out of range [0, {self.num_rows}): "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        return ids
+
+    def read_rows(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Gather ``ids`` (any order, duplicates allowed) -> (rows (n, D) f32,
+        accums (n, 1) f32). One fancy-indexed read per touched shard."""
+        ids = self._check_ids(ids)
+        out = np.empty((ids.shape[0], self.dim + 1), np.float32)
+        shard = ids // self.shard_rows
+        for s in np.unique(shard):
+            m = shard == s
+            out[m] = self._mmaps[s][ids[m] - s * self.shard_rows]
+        with self._stats_lock:
+            self.stats.rows_read += ids.shape[0]
+            self.stats.bytes_read += ids.shape[0] * self.row_nbytes
+        return out[:, : self.dim], out[:, self.dim :]
+
+    def write_rows(self, ids: np.ndarray, rows: np.ndarray, accums: np.ndarray) -> None:
+        """Scatter absolute values (set semantics). ``ids`` must be unique —
+        duplicate ids in one write would race within the fancy index."""
+        ids = self._check_ids(ids)
+        packed = np.empty((ids.shape[0], self.dim + 1), np.float32)
+        packed[:, : self.dim] = rows
+        packed[:, self.dim] = np.asarray(accums, np.float32).reshape(-1)
+        shard = ids // self.shard_rows
+        for s in np.unique(shard):
+            m = shard == s
+            self._mmaps[s][ids[m] - s * self.shard_rows] = packed[m]
+        with self._stats_lock:
+            self.stats.rows_written += ids.shape[0]
+            self.stats.bytes_written += ids.shape[0] * self.row_nbytes
+
+    def load_from(self, src_path: str) -> None:
+        """Overwrite this store's contents with another shard directory's
+        (same geometry), through the open memmaps — checkpoint restore uses
+        this to roll the live shard files back to a snapshot without
+        invalidating any open handles."""
+        src = open_store(src_path)
+        try:
+            if (src.num_rows, src.dim, src.shard_rows) != (
+                self.num_rows, self.dim, self.shard_rows
+            ):
+                raise ValueError(
+                    f"shard geometry mismatch: snapshot ({src.num_rows}, {src.dim}, "
+                    f"{src.shard_rows}) vs live ({self.num_rows}, {self.dim}, {self.shard_rows})"
+                )
+            for mm, sm in zip(self._mmaps, src._mmaps):
+                mm[:] = sm[:]
+        finally:
+            src.close()
+        self.flush()
+
+    def read_all(self) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize the full table: (V, D) rows + (V, 1) accums. For
+        tests, checkpoint verification, and (small-table) export only."""
+        rows = np.empty((self.num_rows, self.dim), np.float32)
+        accums = np.empty((self.num_rows, 1), np.float32)
+        for s, mm in enumerate(self._mmaps):
+            lo = s * self.shard_rows
+            hi = lo + mm.shape[0]
+            rows[lo:hi] = mm[:, : self.dim]
+            accums[lo:hi, 0] = mm[:, self.dim]
+        return rows, accums
+
+
+def create_store(
+    path: str,
+    rows: np.ndarray,
+    accums: np.ndarray | None = None,
+    *,
+    num_shards: int = 8,
+) -> EmbeddingShardStore:
+    """Write a (V, D) float32 table (+ optional (V,) / (V, 1) accumulators,
+    default zero) as ``num_shards`` equal-range shard files under ``path``."""
+    rows = np.asarray(rows)
+    if rows.dtype != np.float32:
+        raise TypeError(f"shard store holds float32 rows, got {rows.dtype}")
+    V, D = rows.shape
+    if not 1 <= num_shards <= V:
+        raise ValueError(f"num_shards must be in [1, {V}], got {num_shards}")
+    acc = (
+        np.zeros((V,), np.float32)
+        if accums is None
+        else np.asarray(accums, np.float32).reshape(V)
+    )
+    shard_rows = -(-V // num_shards)  # ceil
+    os.makedirs(path, exist_ok=True)
+    shards = []
+    for s in range(num_shards):
+        lo, hi = s * shard_rows, min((s + 1) * shard_rows, V)
+        if lo >= hi:
+            break
+        fname = f"shard_{s:05d}.bin"
+        mm = np.memmap(
+            os.path.join(path, fname), np.float32, mode="w+", shape=(hi - lo, D + 1)
+        )
+        mm[:, :D] = rows[lo:hi]
+        mm[:, D] = acc[lo:hi]
+        mm.flush()
+        shards.append({"file": fname, "lo": lo, "hi": hi})
+    directory = {
+        "version": FORMAT_VERSION,
+        "num_rows": V,
+        "dim": D,
+        "dtype": "float32",
+        "shard_rows": shard_rows,
+        "shards": shards,
+    }
+    with open(os.path.join(path, DIRECTORY_FILE), "w") as f:
+        json.dump(directory, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    return open_store(path)
+
+
+def open_store(path: str) -> EmbeddingShardStore:
+    """Memory-map an existing shard directory for read/write."""
+    with open(os.path.join(path, DIRECTORY_FILE)) as f:
+        d = json.load(f)
+    if d.get("version") != FORMAT_VERSION:
+        raise ValueError(f"unsupported shard directory version: {d.get('version')}")
+    store = EmbeddingShardStore(
+        path=path, num_rows=d["num_rows"], dim=d["dim"], shard_rows=d["shard_rows"]
+    )
+    for s in d["shards"]:
+        store._mmaps.append(
+            np.memmap(
+                os.path.join(path, s["file"]),
+                np.float32,
+                mode="r+",
+                shape=(s["hi"] - s["lo"], d["dim"] + 1),
+            )
+        )
+    return store

@@ -1,0 +1,315 @@
+"""Host-side glue for ``system="tc_streamed"``: the full capacity hierarchy.
+
+``StreamedTables`` owns, per embedding table, one on-disk shard store
+(``store.shards``) and one bounded resident window (``store.working_set``),
+plus a single background ``ShardPrefetcher`` shared by all tables. It is
+the third tier under the PR 1/2 hot-row cache:
+
+    disk shards  ──fault-in──►  working set  ──per-step slice──►  device
+    (authoritative when         (bounded host      cold_rows/cold_accums
+     flushed)                    memory)           batch inputs
+                                                       ▲
+                           device hot cache ───────────┘ authoritative for
+                           (HotRowCache on HBM/VMEM)     its resident ids
+
+Consistency rules (docs/store.md):
+  * The device hot cache is authoritative for ids currently in
+    ``cache_ids``; the working set + shards are authoritative for all other
+    ids. Gathered slice lanes that resolve hot on device are ignored there
+    and skipped on write-back, so stale store copies of hot rows are never
+    observable.
+  * ``write_back``/``demote`` use set-semantics updates into the working
+    set; eviction and ``flush`` move dirty rows to the shards. After
+    ``flush_state`` (demote-all + flush), the shard files alone hold the
+    complete table + accumulators — the checkpoint-coherent state.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.cache.hotcache import init_hot_cache
+from repro.store.prefetch import ShardPrefetcher
+from repro.store.shards import EmbeddingShardStore, create_store, open_store
+from repro.store.working_set import WorkingSetManager
+
+
+def _table_dir(path: str, t: int) -> str:
+    return os.path.join(path, f"table_{t:03d}")
+
+
+class StreamedTables:
+    def __init__(
+        self,
+        stores: Sequence[EmbeddingShardStore],
+        *,
+        resident_rows: int,
+        prefetch: bool = True,
+    ):
+        if not stores:
+            raise ValueError("need at least one table store")
+        self.stores = list(stores)
+        self.working = [WorkingSetManager(s, resident_rows) for s in self.stores]
+        self.prefetcher: Optional[ShardPrefetcher] = (
+            ShardPrefetcher(self.working) if prefetch else None
+        )
+        # host mirror of the device hot set (per table, sorted): lanes whose
+        # id is hot are served by the device cache, so gather/prefetch skip
+        # them entirely. INVARIANT: the mirror must never contain an id the
+        # device cache does not — the placement paths (promote / demote-all)
+        # update both from the same array, which keeps them exactly equal.
+        self._hot_ids: list[np.ndarray] = [
+            np.zeros((0,), np.int64) for _ in self.stores
+        ]
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        path: str,
+        tables: np.ndarray,
+        accums: Optional[np.ndarray] = None,
+        *,
+        resident_rows: int,
+        num_shards: int = 8,
+        prefetch: bool = True,
+    ) -> "StreamedTables":
+        """Write (T, V, D) float32 tables (+ optional (T, V) / (T, V, 1)
+        accumulators) into per-table shard directories under ``path``."""
+        tables = np.asarray(tables)
+        T = tables.shape[0]
+        stores = [
+            create_store(
+                _table_dir(path, t),
+                tables[t],
+                None if accums is None else np.asarray(accums)[t],
+                num_shards=num_shards,
+            )
+            for t in range(T)
+        ]
+        return cls(stores, resident_rows=resident_rows, prefetch=prefetch)
+
+    @classmethod
+    def open(
+        cls, path: str, num_tables: int, *, resident_rows: int, prefetch: bool = True
+    ) -> "StreamedTables":
+        stores = [open_store(_table_dir(path, t)) for t in range(num_tables)]
+        return cls(stores, resident_rows=resident_rows, prefetch=prefetch)
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.stores)
+
+    @property
+    def path(self) -> str:
+        """The parent directory holding every table's shard directory."""
+        return os.path.dirname(self.stores[0].path)
+
+    def restore_shards(self, src_path: str) -> None:
+        """Roll the live shard files back to a snapshot directory (same
+        layout as ``create`` wrote) and invalidate the working sets — any
+        resident row, dirty or not, is newer than the restored state. The
+        hot mirror is cleared; the caller restores the matching device
+        state (checkpoint.restore_coherent does all of this in order)."""
+        for t in range(self.num_tables):
+            self.working[t].invalidate()
+            self.stores[t].load_from(_table_dir(src_path, t))
+        self.clear_hot_ids()
+
+    @property
+    def num_rows(self) -> int:
+        return self.stores[0].num_rows
+
+    @property
+    def dim(self) -> int:
+        return self.stores[0].dim
+
+    # -- hot-set mirror ----------------------------------------------------
+
+    def set_hot_ids(self, t: int, ids: np.ndarray) -> None:
+        """Record the device hot set for table ``t`` (call with the SAME ids
+        uploaded to the device cache — see the invariant in __init__)."""
+        self._hot_ids[t] = np.unique(np.asarray(ids, np.int64))
+
+    def clear_hot_ids(self) -> None:
+        for t in range(self.num_tables):
+            self._hot_ids[t] = np.zeros((0,), np.int64)
+
+    def _cold_only(self, t: int, ids: np.ndarray) -> np.ndarray:
+        hot = self._hot_ids[t]
+        return ids if hot.size == 0 else ids[~np.isin(ids, hot)]
+
+    # -- prefetch ----------------------------------------------------------
+
+    def _valid_ids(self, cast: dict, t: int) -> np.ndarray:
+        uids = np.asarray(cast["unique_ids"][t])
+        n_valid = int(np.asarray(cast["num_unique"][t]))
+        ids = uids[:n_valid]
+        return self._cold_only(t, ids[ids < self.stores[t].num_rows])
+
+    def schedule_prefetch(self, step: int, cast: dict) -> None:
+        """Queue one future batch's per-table unique ids for background
+        fault-in (call as soon as the cast exists, i.e. at produce time)."""
+        if self.prefetcher is not None:
+            self.prefetcher.schedule(
+                step, [self._valid_ids(cast, t) for t in range(self.num_tables)]
+            )
+
+    def wrap_produce(self, produce: Callable[[int], dict]) -> Callable[[int], dict]:
+        """Wrap a host ``produce(step) -> batch_with_cast`` fn so every
+        produced batch's unique ids are scheduled for prefetch immediately —
+        under ``data.pipeline.Prefetcher`` (depth 2) the fault-in runs one to
+        two steps ahead of the device."""
+
+        def produce_and_schedule(step: int) -> dict:
+            batch = produce(step)
+            self.schedule_prefetch(step, batch["cast"])
+            return batch
+
+        return produce_and_schedule
+
+    # -- per-step slice ----------------------------------------------------
+
+    def gather(self, step: Optional[int], cast: dict) -> tuple[np.ndarray, np.ndarray]:
+        """Assemble the static-shape cold slice for one batch: (T, n, D)
+        rows + (T, n, 1) accums aligned with ``cast['unique_ids']``. Waits
+        for the step's prefetch first (misses fall back to synchronous shard
+        reads inside the working set — counted, never wrong). Padding lanes
+        (>= num_unique, or the fill sentinel) are zero."""
+        if self.prefetcher is not None and step is not None:
+            self.prefetcher.wait(step)
+        uids = np.asarray(cast["unique_ids"])
+        T, n = uids.shape
+        rows = np.zeros((T, n, self.dim), np.float32)
+        accums = np.zeros((T, n, 1), np.float32)
+        for t in range(T):
+            n_valid = int(np.asarray(cast["num_unique"][t]))
+            valid = np.zeros((n,), bool)
+            valid[:n_valid] = uids[t, :n_valid] < self.stores[t].num_rows
+            hot = self._hot_ids[t]
+            if hot.size:  # hot lanes are served by the device cache: skip
+                valid &= ~np.isin(uids[t], hot)
+            if valid.any():
+                r, a = self.working[t].gather(uids[t][valid])
+                rows[t][valid] = r
+                accums[t][valid] = a
+        if self.prefetcher is not None and step is not None:
+            self.prefetcher.release(step)  # consumed: unpin the step's rows
+        return rows, accums
+
+    def write_back(
+        self, cast: dict, rows: np.ndarray, accums: np.ndarray, hit: np.ndarray
+    ) -> None:
+        """Commit the device step's updated cold lanes into the working set:
+        lanes that resolved hot on device (``hit``) stay owned by the device
+        cache; padding/sentinel lanes are dropped."""
+        uids = np.asarray(cast["unique_ids"])
+        hit = np.asarray(hit)
+        rows = np.asarray(rows)
+        accums = np.asarray(accums)
+        for t in range(self.num_tables):
+            n_valid = int(np.asarray(cast["num_unique"][t]))
+            valid = np.zeros((uids.shape[1],), bool)
+            valid[:n_valid] = uids[t, :n_valid] < self.stores[t].num_rows
+            valid &= hit[t] == 0
+            if valid.any():
+                self.working[t].update(uids[t][valid], rows[t][valid], accums[t][valid])
+
+    # -- hot-tier boundary -------------------------------------------------
+
+    def demote(
+        self, t: int, ids: np.ndarray, rows: np.ndarray, accums: np.ndarray,
+        *, insert: bool = True,
+    ) -> None:
+        """Write demoted hot rows (absolute device values) back through the
+        working set — the only path by which hot-tier updates reach disk.
+        ``insert=False`` writes non-resident rows straight to their shard
+        (used for rows that stay hot across a promotion: they will not be
+        read from the store, so claiming window slots would only evict the
+        prefetched working set)."""
+        self.working[t].update(np.asarray(ids, np.int64), rows, accums, insert=insert)
+
+    def gather_rows(self, t: int, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Read rows for promotion into the hot tier: uncounted (placement
+        traffic is not part of the prefetch-coverage metric) and
+        non-installing (placement reads must not evict the working set)."""
+        return self.working[t].gather(np.asarray(ids, np.int64), count=False, install=False)
+
+    # -- lifecycle / stats -------------------------------------------------
+
+    def flush(self) -> None:
+        for ws in self.working:
+            ws.flush()
+
+    def close(self) -> None:
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+        self.flush()
+        for s in self.stores:
+            s.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> dict:
+        per_table = [
+            {**ws.stats.as_dict(), "store": ws.store.stats.as_dict()} for ws in self.working
+        ]
+        cold = sum(ws.stats.cold_reads for ws in self.working)
+        covered = sum(ws.stats.covered_reads for ws in self.working)
+        return {
+            "per_table": per_table,
+            "cold_reads": cold,
+            "prefetch_coverage": covered / cold if cold else 1.0,
+            "sync_faults": sum(ws.stats.sync_faults for ws in self.working),
+            "evictions": sum(ws.stats.evictions for ws in self.working),
+            "bytes_read": sum(s.stats.bytes_read for s in self.stores),
+            "bytes_written": sum(s.stats.bytes_written for s in self.stores),
+            "scheduled_rows": (
+                self.prefetcher.scheduled_rows if self.prefetcher is not None else 0
+            ),
+        }
+
+
+# ---------------------------------------------------------------------------
+# trainer-state helpers (the tc_streamed state dict of runtime.dlrm_train)
+# ---------------------------------------------------------------------------
+
+
+def demote_all_state(state: dict, streamed: StreamedTables) -> dict:
+    """Write every hot row + accumulator back through the store and reset
+    the device cache to all-empty. The streamed analogue of
+    ``hotcache.demote_all``: afterwards the working set + shards are
+    authoritative for every row."""
+    cids = np.asarray(state["cache_ids"])
+    crows = np.asarray(state["cache_rows"])
+    caccums = np.asarray(state["cache_accums"])
+    T, Cp1 = cids.shape
+    for t in range(T):
+        real = cids[t] < streamed.stores[t].num_rows
+        if real.any():
+            streamed.demote(t, cids[t][real], crows[t][real], caccums[t][real])
+    streamed.clear_hot_ids()
+    empty = init_hot_cache(Cp1 - 1, crows.shape[-1], streamed.num_rows, crows.dtype)
+    return dict(
+        state,
+        cache_ids=jnp.tile(empty.ids, (T, 1)),
+        cache_rows=jnp.tile(empty.rows, (T, 1, 1)),
+        cache_accums=jnp.tile(empty.accum, (T, 1, 1)),
+    )
+
+
+def flush_state(state: dict, streamed: StreamedTables) -> dict:
+    """Checkpoint coherence for ``tc_streamed``: demote-all, then flush the
+    working set so the shard files alone hold the complete cold tier."""
+    state = demote_all_state(state, streamed)
+    streamed.flush()
+    return state

@@ -1,0 +1,287 @@
+"""Bounded host-memory resident window over a shard store — the host tier.
+
+``WorkingSetManager`` keeps at most ``resident_rows`` cold-tier rows (plus
+their Adagrad accumulators) in pinned numpy arrays, faulted in from the
+shard store on demand or ahead of time by the prefetcher. Eviction is LRU;
+dirty victims are written back to their shard before the slot is reused, so
+the (shards + working set) pair is always row-consistent.
+
+Semantics that make every interleaving with the prefetch thread safe:
+
+  * ``update`` is SET-semantics (whole row + accumulator overwritten) and
+    never reads the store, so a row evicted between gather and write-back is
+    simply re-installed with its new value.
+  * ``fault_in`` only loads rows that are NOT resident, so it can never
+    clobber a dirty (newer) resident copy with a stale shard read.
+  * every public method holds one lock; the prefetch thread and the train
+    loop interleave at row granularity with no torn rows.
+
+Miss accounting: a row absent at ``gather`` time is a synchronous fault
+(the step blocked on disk); rows already resident — whether prefetched or
+retained from earlier steps — are covered reads. ``stats.prefetch_coverage``
+is covered / (covered + sync faults), the quantity ``benchmarks/
+store_bench.py`` sweeps against the resident budget.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.store.shards import EmbeddingShardStore
+
+
+@dataclass
+class WorkingSetStats:
+    covered_reads: int = 0  # gather rows already resident
+    sync_faults: int = 0  # gather rows read from shards on the spot
+    prefetch_faults: int = 0  # rows faulted in by the prefetch thread
+    demand_faults: int = 0  # rows faulted in by fault_in(prefetch=False)
+    evictions: int = 0
+    dirty_writebacks: int = 0
+
+    @property
+    def cold_reads(self) -> int:
+        return self.covered_reads + self.sync_faults
+
+    @property
+    def prefetch_coverage(self) -> float:
+        n = self.cold_reads
+        return self.covered_reads / n if n else 1.0
+
+    def as_dict(self) -> dict:
+        return {
+            **self.__dict__,
+            "cold_reads": self.cold_reads,
+            "prefetch_coverage": self.prefetch_coverage,
+        }
+
+
+class WorkingSetManager:
+    def __init__(self, store: EmbeddingShardStore, resident_rows: int):
+        if resident_rows < 1:
+            raise ValueError(f"resident_rows must be >= 1, got {resident_rows}")
+        self.store = store
+        self.resident_rows = int(resident_rows)
+        D = store.dim
+        self._rows = np.zeros((self.resident_rows, D), np.float32)
+        self._accums = np.zeros((self.resident_rows, 1), np.float32)
+        self._slot: OrderedDict[int, int] = OrderedDict()  # id -> slot, LRU order
+        self._free = list(range(self.resident_rows))
+        self._dirty = np.zeros((self.resident_rows,), bool)
+        self._pins: dict[int, int] = {}  # id -> in-flight prefetch count
+        # ids written to the SHARDS while a lock-free fault read is in
+        # flight (one set per active fault_in; see fault_in for why)
+        self._active_faults: list[set] = []
+        self._lock = threading.RLock()
+        self.stats = WorkingSetStats()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._slot)
+
+    # -- slot management (lock held) --------------------------------------
+
+    def _alloc(self) -> int:
+        if self._free:
+            return self._free.pop()
+        # LRU victim, skipping rows pinned by an in-flight prefetch (they
+        # are about to be read; evicting them would turn the prefetch into
+        # a guaranteed sync fault). If EVERYTHING is pinned — the window is
+        # smaller than the lookahead — fall back to true LRU: policy never
+        # compromises correctness.
+        for _ in range(len(self._slot)):
+            vid, slot = self._slot.popitem(last=False)
+            if self._pins.get(vid, 0) == 0:
+                break
+            self._slot[vid] = slot  # rotate pinned row to MRU, keep looking
+        else:
+            vid, slot = self._slot.popitem(last=False)
+            self._pins.pop(vid, None)
+        if self._dirty[slot]:
+            self.store.write_rows(
+                np.asarray([vid]), self._rows[slot : slot + 1], self._accums[slot : slot + 1]
+            )
+            self._note_store_write([vid])
+            self._dirty[slot] = False
+            self.stats.dirty_writebacks += 1
+        self.stats.evictions += 1
+        return slot
+
+    def _note_store_write(self, ids) -> None:
+        # lock held: a concurrent lock-free fault read may have read these
+        # rows mid-write — mark them so the install pass discards that read
+        for written in self._active_faults:
+            written.update(int(i) for i in ids)
+
+    def _install(self, rid: int, row: np.ndarray, accum, *, dirty: bool) -> None:
+        slot = self._slot.get(rid)
+        if slot is None:
+            slot = self._alloc()
+            self._slot[rid] = slot
+        else:
+            self._slot.move_to_end(rid)
+        self._rows[slot] = row
+        self._accums[slot] = accum
+        self._dirty[slot] = dirty or self._dirty[slot]
+
+    # -- public API --------------------------------------------------------
+
+    def fault_in(self, ids: np.ndarray, *, prefetch: bool = False, pin: bool = False) -> int:
+        """Make ``ids`` resident (load missing rows from the shards). Returns
+        the number of rows actually read. Resident rows keep their values —
+        a dirty copy is always newer than its shard. ``pin=True`` pins every
+        requested resident row against eviction until the matching
+        ``unpin`` (the prefetcher pins per step, the gather unpins).
+
+        The shard read happens OUTSIDE the lock — holding it would make the
+        background prefetch serialize the train loop's gather/update behind
+        disk latency, the exact latency prefetch exists to hide. Safety: a
+        row evicted (dirty write-back) or written through while the read is
+        in flight is recorded via ``_note_store_write``; the install pass
+        discards such reads (they may be torn), leaving the row to a later
+        clean fault."""
+        uniq = np.unique(np.asarray(ids, np.int64))
+        with self._lock:
+            missing = [int(i) for i in uniq if int(i) not in self._slot]
+            written: set = set()
+            if missing:
+                self._active_faults.append(written)
+        n_read = 0
+        if missing:
+            try:
+                rows, accums = self.store.read_rows(np.asarray(missing))
+            except BaseException:
+                with self._lock:
+                    self._active_faults.remove(written)
+                raise
+        with self._lock:
+            if missing:
+                self._active_faults.remove(written)
+                for k, rid in enumerate(missing):
+                    if rid in self._slot or rid in written:
+                        continue  # installed or rewritten since the read
+                    self._install(rid, rows[k], accums[k], dirty=False)
+                    n_read += 1
+                if prefetch:
+                    self.stats.prefetch_faults += n_read
+                else:
+                    self.stats.demand_faults += n_read
+            if pin:
+                self._pin_locked(uniq)
+        return n_read
+
+    def _pin_locked(self, uniq: np.ndarray) -> None:
+        for i in uniq:
+            rid = int(i)
+            if rid in self._slot:  # may already be (force-)evicted
+                self._pins[rid] = self._pins.get(rid, 0) + 1
+
+    def pin(self, ids: np.ndarray) -> None:
+        """Pin resident ``ids`` against eviction (one count per call; pair
+        with ``unpin``). Absent ids are skipped."""
+        with self._lock:
+            self._pin_locked(np.unique(np.asarray(ids, np.int64)))
+
+    def unpin(self, ids: np.ndarray) -> None:
+        """Release one pin per id (no-op for unknown/evicted ids)."""
+        with self._lock:
+            for i in np.unique(np.asarray(ids, np.int64)):
+                rid = int(i)
+                c = self._pins.get(rid, 0)
+                if c <= 1:
+                    self._pins.pop(rid, None)
+                else:
+                    self._pins[rid] = c - 1
+
+    def gather(
+        self, ids: np.ndarray, *, count: bool = True, install: bool = True
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(n,) ids -> (rows (n, D), accums (n, 1)) copies. Absent rows are
+        synchronous shard faults (counted unless ``count=False``).
+        ``install=False`` reads misses straight through the shards without
+        occupying window slots or touching LRU order — promotion reads use
+        ``count=False, install=False`` so placement traffic neither skews
+        coverage nor evicts the prefetched working set."""
+        ids = np.asarray(ids, np.int64)
+        n = ids.shape[0]
+        rows = np.empty((n, self.store.dim), np.float32)
+        accums = np.empty((n, 1), np.float32)
+        with self._lock:
+            miss_pos = []
+            for k in range(n):
+                rid = int(ids[k])
+                slot = self._slot.get(rid)
+                if slot is None:
+                    miss_pos.append(k)
+                else:
+                    rows[k] = self._rows[slot]
+                    accums[k] = self._accums[slot]
+                    if install:
+                        self._slot.move_to_end(rid)
+            if count:
+                self.stats.covered_reads += n - len(miss_pos)
+                self.stats.sync_faults += len(miss_pos)
+            if miss_pos:
+                # one grouped shard read for all misses, then install + copy out
+                miss_ids = ids[miss_pos]
+                uniq, inv = np.unique(miss_ids, return_inverse=True)
+                u_rows, u_accums = self.store.read_rows(uniq)
+                if install:
+                    for k, rid in enumerate(uniq):
+                        self._install(int(rid), u_rows[k], u_accums[k], dirty=False)
+                rows[miss_pos] = u_rows[inv]
+                accums[miss_pos] = u_accums[inv]
+        return rows, accums
+
+    def update(
+        self, ids: np.ndarray, rows: np.ndarray, accums: np.ndarray, *, insert: bool = True
+    ) -> None:
+        """Absolute overwrite (ids unique): install-or-replace each row as
+        dirty; eviction and flush move dirty rows to the shards. With
+        ``insert=False``, rows NOT currently resident are written straight
+        through to their shard instead of claiming a window slot — used for
+        demotions of rows that stay hot, which would otherwise evict the
+        prefetched working set for no future reads."""
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            through = []
+            for k in range(ids.shape[0]):
+                rid = int(ids[k])
+                if not insert and rid not in self._slot:
+                    through.append(k)
+                else:
+                    self._install(rid, rows[k], accums[k], dirty=True)
+            if through:
+                self.store.write_rows(
+                    ids[through], np.asarray(rows)[through], np.asarray(accums)[through]
+                )
+                self._note_store_write(ids[through])
+
+    def invalidate(self) -> None:
+        """Drop every resident row, pin and dirty bit WITHOUT write-back —
+        for checkpoint restore, where the shards were just rolled back and
+        anything resident (dirty included) is newer than the state being
+        restored to."""
+        with self._lock:
+            self._slot.clear()
+            self._free = list(range(self.resident_rows))
+            self._dirty[:] = False
+            self._pins.clear()
+
+    def flush(self) -> int:
+        """Write every dirty resident row back to its shard (rows stay
+        resident, now clean) and fsync the shard files. Returns the number
+        of rows written. Afterwards the shards alone hold the cold tier."""
+        with self._lock:
+            slots = [(rid, s) for rid, s in self._slot.items() if self._dirty[s]]
+            if slots:
+                ids = np.asarray([rid for rid, _ in slots])
+                sl = np.asarray([s for _, s in slots])
+                self.store.write_rows(ids, self._rows[sl], self._accums[sl])
+                self._dirty[sl] = False
+                self.stats.dirty_writebacks += len(slots)
+            self.store.flush()
+            return len(slots)

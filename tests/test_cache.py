@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.cache.hotcache import init_hot_cache, resolve
 from repro.cache.stats import (
+    choose_capacity,
     init_row_stats,
     row_counts_from_cast,
     segment_counts,
@@ -120,6 +121,59 @@ def test_casting_server_attaches_counts():
 
 
 # ---------------------------------------------------------------------------
+# capacity autotuning from the EMA mass curve
+# ---------------------------------------------------------------------------
+
+
+def _zipf_ema(V: int, s: float) -> np.ndarray:
+    ranks = np.arange(1, V + 1, dtype=np.float64)
+    w = ranks**-s
+    return (1e6 * w / w.sum()).astype(np.float32)
+
+
+def test_choose_capacity_minimal_mass_cover():
+    V = 4096
+    for s in (0.8, 1.05, 1.3):
+        ema = _zipf_ema(V, s)
+        for mass in (0.5, 0.8, 0.95):
+            c = choose_capacity(ema, mass)
+            sorted_desc = np.sort(ema.astype(np.float64))[::-1]
+            total = sorted_desc.sum()
+            assert sorted_desc[:c].sum() / total >= mass  # covers the target
+            if c > 1:  # and is minimal
+                assert sorted_desc[: c - 1].sum() / total < mass
+
+
+def test_choose_capacity_tracks_skew_and_mass():
+    V = 4096
+    # steeper skew -> smaller capacity for the same mass target
+    caps = [choose_capacity(_zipf_ema(V, s), 0.8) for s in (0.8, 1.05, 1.3)]
+    assert caps[0] > caps[1] > caps[2]
+    assert caps[2] < V // 16 < caps[0]  # the global 1/16 fits neither extreme
+    # higher target -> monotonically larger capacity
+    ema = _zipf_ema(V, 1.05)
+    assert choose_capacity(ema, 0.5) <= choose_capacity(ema, 0.8) <= choose_capacity(ema, 0.95)
+
+
+def test_choose_capacity_edges():
+    # no traffic yet -> min_capacity
+    assert choose_capacity(np.zeros(64, np.float32), 0.8, min_capacity=4) == 4
+    # all mass on one row -> 1
+    one_hot = np.zeros(64, np.float32)
+    one_hot[7] = 5.0
+    assert choose_capacity(one_hot, 0.99) == 1
+    # full mass target never exceeds the table
+    assert choose_capacity(np.ones(64, np.float32), 1.0) == 64
+    # rounding + clipping
+    assert choose_capacity(_zipf_ema(1024, 1.05), 0.8, round_to=128) % 128 == 0
+    assert choose_capacity(_zipf_ema(1024, 0.5), 0.9, max_capacity=32) == 32
+    with pytest.raises(ValueError):
+        choose_capacity(np.ones(8, np.float32), 0.0)
+    with pytest.raises(ValueError):
+        choose_capacity(np.ones(8, np.float32), 1.5)
+
+
+# ---------------------------------------------------------------------------
 # exact equivalence to the flat path
 # ---------------------------------------------------------------------------
 
@@ -193,6 +247,39 @@ def test_all_hot_cache_serves_every_lookup(rng):
     ids = jnp.asarray(rng.integers(0, V, size=64).astype(np.int32))
     _, hit = tiered.lookup(ids)
     assert bool(hit.all())
+
+
+@pytest.mark.parametrize("mode", ["jnp", "pallas_interpret"])
+def test_lookup_edge_shapes_scalar_and_empty(mode, rng):
+    """0-d and (0,) id inputs through ``lookup`` under both the jnp and the
+    interpret dispatch defaults: shapes follow the (..., D)/(...) contract
+    and values match the flat view, with no per-shape special cases."""
+    V, C, D = 32, 4, 8
+    tiered = init_tiered(
+        add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), C
+    )
+    tiered = tiered.promote(
+        jnp.zeros((V,)).at[jnp.asarray([3, 7, 20, 31])].set(1.0)
+    )
+    flat = _flat_view(tiered)[0]
+    ops.set_default_mode(mode)
+    try:
+        # 0-d: one hot id, one cold id
+        for rid, want_hit in ((7, True), (5, False)):
+            rows, hit = tiered.lookup(jnp.asarray(rid, jnp.int32))
+            assert rows.shape == (D,) and hit.shape == ()
+            assert bool(hit) is want_hit
+            np.testing.assert_array_equal(np.asarray(rows), flat[rid])
+        # (0,): empty id stream
+        rows, hit = tiered.lookup(jnp.zeros((0,), jnp.int32))
+        assert rows.shape == (0, D) and hit.shape == (0,)
+        # batched shape passes through untouched
+        ids = jnp.asarray(rng.integers(0, V, size=(2, 3)).astype(np.int32))
+        rows, hit = tiered.lookup(ids)
+        assert rows.shape == (2, 3, D) and hit.shape == (2, 3)
+        np.testing.assert_array_equal(np.asarray(rows), flat[np.asarray(ids)])
+    finally:
+        ops.set_default_mode("auto")
 
 
 # ---------------------------------------------------------------------------
@@ -304,3 +391,107 @@ def test_tc_cached_interpret_dispatch_bit_identical_to_tc_50_steps():
     np.testing.assert_array_equal(tt[:, :V], np.asarray(s_tc["tables"])[:, :V])
     np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
     assert float(s_ca["hit_rate"]) > 0.0  # the cache actually engaged
+
+
+# ---------------------------------------------------------------------------
+# checkpoint coherence: demote-all-then-flush on save AND restore
+# ---------------------------------------------------------------------------
+
+
+def test_hotcache_demote_all_empties_and_flushes(rng):
+    from repro.cache.hotcache import HotRowCache, demote_all
+
+    V, C, D = 32, 4, 4
+    tiered = init_tiered(add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), C)
+    tiered = tiered.promote(jnp.arange(V, dtype=jnp.float32))
+    _, _, grad = _one_round(np.random.default_rng(0), V, 16, D)
+    tiered = tiered.sparse_update(grad, lr=0.1)
+    want_t, want_a = _flat_view(tiered)
+    cache, table, accum = demote_all(tiered.cache, tiered.table, tiered.accum)
+    # table alone now carries every row, and the hot set is empty
+    np.testing.assert_array_equal(np.asarray(table)[:V], want_t[:V])
+    np.testing.assert_array_equal(np.asarray(accum)[:V], want_a[:V])
+    np.testing.assert_array_equal(np.asarray(cache.ids), np.full(C + 1, V))
+    _, hit = resolve(cache.ids, jnp.arange(V, dtype=jnp.int32))
+    assert not bool(hit.any())
+
+
+def test_tc_cached_save_restore_bit_identical(tmp_path):
+    """Regression for the checkpoint-coherence ROADMAP item: train tc_cached
+    alongside tc, save_coherent mid-run, restore, continue BOTH — the
+    restored run must stay bit-identical to the uninterrupted flat system
+    (and the restored hot set must start empty)."""
+    from repro.checkpoint import Checkpointer, restore_coherent, save_coherent
+    from repro.configs.base import DLRMConfig
+    from repro.runtime import dlrm_train
+
+    cfg = DLRMConfig(
+        name="ckpt-cache", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=64, emb_dim=8,
+    )
+    batches = list(_dlrm_batches(cfg, 20))
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    s_ca = dlrm_train.init_cached_state(cfg, jax.random.key(0), capacity=8)
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    step_ca = dlrm_train.make_sparse_train_step(cfg, system="tc_cached")
+    promote = dlrm_train.make_promote_step()
+    for k in range(10):
+        s_tc, _ = step_tc(s_tc, batches[k])
+        s_ca, _ = step_ca(s_ca, batches[k])
+        if k == 4:
+            s_ca = promote(s_ca)  # live hot rows exist at save time
+
+    ckpt = Checkpointer(str(tmp_path))
+    s_ca = save_coherent(ckpt, 10, s_ca, blocking=True)
+    V = cfg.rows_per_table
+    # the snapshot (and the returned state) carry an EMPTY hot set
+    assert bool((np.asarray(s_ca["cache_ids"]) == V).all())
+
+    step10, s_re = restore_coherent(ckpt, s_ca)
+    assert step10 == 10
+    for k in range(10, 20):
+        s_tc, l_tc = step_tc(s_tc, batches[k])
+        s_re, l_re = step_ca(s_re, batches[k])
+        assert float(l_tc) == float(l_re), f"loss diverged at step {k}"
+        if k % 4 == 3:
+            s_re = promote(s_re)
+    tt = np.asarray(s_re["tables"]).copy()
+    aa = np.asarray(s_re["accums"]).copy()
+    ids = np.asarray(s_re["cache_ids"])
+    for t in range(tt.shape[0]):
+        tt[t, ids[t]] = np.asarray(s_re["cache_rows"])[t]
+        aa[t, ids[t]] = np.asarray(s_re["cache_accums"])[t]
+    np.testing.assert_array_equal(tt[:, :V], np.asarray(s_tc["tables"])[:, :V])
+    np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
+
+
+def test_restore_coherent_demotes_legacy_snapshot(tmp_path):
+    """A snapshot saved WITHOUT the coherent path (live cached rows in the
+    leaves) restores with the cache folded back into the tables: the flat
+    view is preserved and the restored hot set is empty."""
+    from repro.checkpoint import Checkpointer, restore_coherent
+    from repro.configs.base import DLRMConfig
+    from repro.runtime import dlrm_train
+
+    cfg = DLRMConfig(
+        name="ckpt-legacy", num_tables=1, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=64, emb_dim=8,
+    )
+    s_ca = dlrm_train.init_cached_state(cfg, jax.random.key(0), capacity=8)
+    step_ca = dlrm_train.make_sparse_train_step(cfg, system="tc_cached")
+    promote = dlrm_train.make_promote_step()
+    for k, b in enumerate(_dlrm_batches(cfg, 6)):
+        s_ca, _ = step_ca(s_ca, b)
+        if k == 2:
+            s_ca = promote(s_ca)
+    V = cfg.rows_per_table
+    want = np.asarray(s_ca["tables"]).copy()
+    ids = np.asarray(s_ca["cache_ids"])
+    want[0, ids[0]] = np.asarray(s_ca["cache_rows"])[0]
+    assert bool((ids[0] < V).any())  # the snapshot really has live hot rows
+
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(6, s_ca, blocking=True)  # legacy: no demote before save
+    _, s_re = restore_coherent(ckpt, s_ca)
+    np.testing.assert_array_equal(np.asarray(s_re["tables"])[0, :V], want[0, :V])
+    assert bool((np.asarray(s_re["cache_ids"]) == V).all())

@@ -1,0 +1,374 @@
+"""Disk-backed cold tier (repro.store): shard-file roundtrips, bounded
+working set, casting-driven prefetch, and the tc_streamed DLRM system's
+bit-identity to the flat ``tc`` trainer with a resident budget smaller
+than the table."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.store import (
+    ShardPrefetcher,
+    StreamedTables,
+    WorkingSetManager,
+    create_store,
+    flush_state,
+    open_store,
+)
+
+
+# ---------------------------------------------------------------------------
+# shard store
+# ---------------------------------------------------------------------------
+
+
+def test_shard_store_roundtrip_and_reopen(tmp_path, rng):
+    V, D = 100, 6
+    rows = rng.normal(size=(V, D)).astype(np.float32)
+    accums = rng.uniform(size=(V,)).astype(np.float32)
+    store = create_store(str(tmp_path / "t"), rows, accums, num_shards=7)
+    assert store.num_shards == 7  # uneven last shard: ceil(100/7)=15, 7*15 >= 100
+
+    # arbitrary order, duplicates, cross-shard reads
+    ids = np.asarray([99, 0, 14, 15, 0, 57, 98])
+    got_r, got_a = store.read_rows(ids)
+    np.testing.assert_array_equal(got_r, rows[ids])
+    np.testing.assert_array_equal(got_a[:, 0], accums[ids])
+    assert store.stats.rows_read == len(ids)
+    assert store.stats.bytes_read == len(ids) * (D + 1) * 4
+
+    # write-through + persistence across reopen
+    new = rng.normal(size=(3, D)).astype(np.float32)
+    store.write_rows(np.asarray([5, 14, 95]), new, np.asarray([1.0, 2.0, 3.0], np.float32))
+    store.close()
+    store2 = open_store(str(tmp_path / "t"))
+    all_r, all_a = store2.read_all()
+    expect = rows.copy()
+    expect[[5, 14, 95]] = new
+    np.testing.assert_array_equal(all_r, expect)
+    np.testing.assert_array_equal(all_a[[5, 14, 95], 0], [1.0, 2.0, 3.0])
+
+
+def test_shard_store_rejects_bad_input(tmp_path, rng):
+    rows = rng.normal(size=(10, 4)).astype(np.float32)
+    with pytest.raises(TypeError):
+        create_store(str(tmp_path / "f64"), rows.astype(np.float64))
+    store = create_store(str(tmp_path / "ok"), rows, num_shards=2)
+    with pytest.raises(IndexError):
+        store.read_rows(np.asarray([10]))
+    with pytest.raises(IndexError):
+        store.read_rows(np.asarray([-1]))
+
+
+# ---------------------------------------------------------------------------
+# working set
+# ---------------------------------------------------------------------------
+
+
+def _make_ws(tmp_path, rng, V=32, D=4, resident=8):
+    rows = rng.normal(size=(V, D)).astype(np.float32)
+    store = create_store(str(tmp_path / "ws"), rows, num_shards=4)
+    return rows, store, WorkingSetManager(store, resident)
+
+
+def test_working_set_bounded_lru_eviction_writes_dirty(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng)
+    ws.fault_in(np.arange(8))
+    assert len(ws) == 8
+    # dirty rows 0..3 with new values (set semantics, no disk read)
+    upd = rng.normal(size=(4, 4)).astype(np.float32)
+    ws.update(np.arange(4), upd, np.ones((4, 1), np.float32))
+    # faulting 8..15 overflows the window: LRU victims 4..7 (clean) then
+    # 0..3 (dirty -> written back to their shards before slot reuse)
+    ws.fault_in(np.arange(8, 16))
+    assert len(ws) == 8
+    assert ws.stats.evictions == 8
+    got_r, got_a = store.read_rows(np.arange(4))
+    np.testing.assert_array_equal(got_r, upd)
+    np.testing.assert_array_equal(got_a, np.ones((4, 1), np.float32))
+
+
+def test_working_set_gather_counts_sync_faults(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng)
+    ws.fault_in(np.asarray([1, 2, 3]), prefetch=True)
+    got, _ = ws.gather(np.asarray([1, 2, 3, 9]))
+    np.testing.assert_array_equal(got, rows[[1, 2, 3, 9]])
+    assert ws.stats.covered_reads == 3
+    assert ws.stats.sync_faults == 1
+    assert ws.stats.prefetch_faults == 3
+    assert ws.stats.prefetch_coverage == pytest.approx(0.75)
+    # uncounted gathers (promotion reads) leave the metric alone
+    ws.gather(np.asarray([20]), count=False)
+    assert ws.stats.cold_reads == 4
+
+
+def test_working_set_flush_makes_shards_authoritative(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng)
+    upd = rng.normal(size=(2, 4)).astype(np.float32)
+    ws.update(np.asarray([30, 31]), upd, np.zeros((2, 1), np.float32))
+    assert store.stats.rows_read == 0  # set-semantics update never reads
+    n = ws.flush()
+    assert n == 2
+    np.testing.assert_array_equal(store.read_all()[0][[30, 31]], upd)
+    assert ws.flush() == 0  # now clean
+
+
+def test_working_set_pins_survive_eviction_pressure(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng)  # resident = 8
+    ws.fault_in(np.arange(4), prefetch=True, pin=True)  # in-flight prefetch
+    ws.fault_in(np.arange(4, 16))  # 12 rows through an 8-slot window
+    # the pinned rows were never evicted, despite being LRU
+    got, _ = ws.gather(np.arange(4))
+    assert ws.stats.sync_faults == 0
+    np.testing.assert_array_equal(got, rows[:4])
+    # unpin -> normal LRU again
+    ws.unpin(np.arange(4))
+    ws.fault_in(np.arange(16, 28))
+    assert len(ws) == 8
+    # window smaller than the pinned set: forced eviction keeps it correct
+    ws2 = WorkingSetManager(store, 2)
+    ws2.fault_in(np.arange(6), prefetch=True, pin=True)
+    assert len(ws2) == 2
+    got, _ = ws2.gather(np.asarray([0, 5]))  # evictees sync-fault, values right
+    np.testing.assert_array_equal(got, rows[[0, 5]])
+
+
+def test_working_set_fault_read_discards_rows_written_meanwhile(tmp_path, rng):
+    """The lock-free fault read: a row written to the shards while the read
+    is in flight (eviction write-back / write-through) may be torn — the
+    install pass must discard it rather than cache it."""
+    import threading
+
+    rows, store, ws = _make_ws(tmp_path, rng)
+    in_read = threading.Event()
+    release = threading.Event()
+    orig = store.read_rows
+
+    def slow_read(ids):
+        out = orig(ids)
+        in_read.set()
+        assert release.wait(5.0)
+        return out
+
+    store.read_rows = slow_read
+    fault = threading.Thread(target=lambda: ws.fault_in(np.asarray([5])))
+    fault.start()
+    assert in_read.wait(5.0)
+    # while the read is parked: write-through row 5 with a NEW value
+    store.read_rows = orig
+    new = np.full((1, 4), 7.0, np.float32)
+    ws.update(np.asarray([5]), new, np.zeros((1, 1), np.float32), insert=False)
+    assert len(ws) == 0  # write-through: not resident
+    release.set()
+    fault.join(timeout=5.0)
+    # the stale in-flight read was NOT installed over the newer shard value
+    got, _ = ws.gather(np.asarray([5]))
+    np.testing.assert_array_equal(got, new)
+
+
+def test_shard_prefetcher_release_before_fault_leaks_no_pins(tmp_path, rng):
+    """wait()-timeout path: if the consumer releases a step before the
+    queued fault-in ran, the late fault-in must not pin (the pins would
+    never be released and the rows would become unevictable)."""
+    import threading
+
+    rows, store, ws = _make_ws(tmp_path, rng)
+    in_read = threading.Event()
+    release = threading.Event()
+    orig = store.read_rows
+
+    def slow_read(ids):
+        in_read.set()
+        assert release.wait(5.0)
+        return orig(ids)
+
+    store.read_rows = slow_read
+    with ShardPrefetcher([ws]) as pf:
+        pf.schedule(0, [np.asarray([1, 2, 3])])
+        assert in_read.wait(5.0)  # fault-in started, parked in the read
+        pf.release(0)  # consumer gave up (timeout) before the pins existed
+        release.set()
+        assert pf.wait(0)
+    assert ws._pins == {}  # the late fault-in saw the release and skipped pinning
+
+
+def test_working_set_fault_in_never_clobbers_dirty(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng)
+    upd = rng.normal(size=(1, 4)).astype(np.float32)
+    ws.update(np.asarray([5]), upd, np.ones((1, 1), np.float32))
+    ws.fault_in(np.asarray([5]))  # resident: must NOT re-read the stale shard
+    got, _ = ws.gather(np.asarray([5]))
+    np.testing.assert_array_equal(got, upd)
+
+
+# ---------------------------------------------------------------------------
+# prefetcher
+# ---------------------------------------------------------------------------
+
+
+def test_shard_prefetcher_covers_scheduled_batch(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng, resident=16)
+    with ShardPrefetcher([ws]) as pf:
+        pf.schedule(0, [np.asarray([3, 7, 11])])
+        assert pf.wait(0)
+        got, _ = ws.gather(np.asarray([3, 7, 11]))
+        np.testing.assert_array_equal(got, rows[[3, 7, 11]])
+        assert ws.stats.sync_faults == 0
+        assert ws.stats.prefetch_coverage == 1.0
+        assert pf.wait(99)  # never-scheduled step: no-op
+    pf.close()  # idempotent
+
+
+def test_shard_prefetcher_surfaces_fault_errors(tmp_path, rng):
+    rows, store, ws = _make_ws(tmp_path, rng)
+    with ShardPrefetcher([ws]) as pf:
+        pf.schedule(0, [np.asarray([999])])  # out of range -> IndexError in thread
+        with pytest.raises(IndexError):
+            pf.wait(0)
+
+
+# ---------------------------------------------------------------------------
+# tc_streamed: bit-identical training with the cold tier on disk
+# ---------------------------------------------------------------------------
+
+
+def _streamed_setup(rows=256, tables=2, pooling=4, batch=4, s=1.05):
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+
+    cfg = DLRMConfig(
+        name="store-test", num_tables=tables, gathers_per_table=pooling,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=rows, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=tables, rows_per_table=rows, gathers_per_table=pooling,
+        batch=batch, s=s, seed=0,
+    )
+    cs = CastingServer(rows_per_table=rows, with_counts=True, with_lookup_seg=True)
+    return cfg, stream, cs
+
+
+def _assert_streamed_equals_tc(cfg, state, streamed, s_tc):
+    """flush + compare the full on-disk table/accums to the flat system."""
+    state = flush_state(state, streamed)
+    V = cfg.rows_per_table
+    for t in range(cfg.num_tables):
+        rows, accs = streamed.stores[t].read_all()
+        np.testing.assert_array_equal(rows, np.asarray(s_tc["tables"])[t, :V])
+        np.testing.assert_array_equal(accs, np.asarray(s_tc["accums"])[t, :V])
+    return state
+
+
+def test_tc_streamed_bit_identical_to_tc_50_steps(tmp_path):
+    """Acceptance: >= 50 steps on zipfian data through the FULL host
+    pipeline (depth-2 lookahead -> shard prefetch -> working-set gather ->
+    device step -> write-back), resident budget 1/4 of the table, periodic
+    promotion — losses and the final table+accums bit-identical to ``tc``,
+    with streaming actually exercised (evictions > 0, budget < rows)."""
+    from repro.data.pipeline import Prefetcher
+    from repro.runtime import dlrm_train
+
+    cfg, stream, cs = _streamed_setup()
+    resident = 64
+    assert resident < cfg.rows_per_table  # streaming must actually happen
+
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=16, resident_rows=resident,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    promote = dlrm_train.make_streamed_promote(streamed)
+
+    with streamed, Prefetcher(
+        streamed.wrap_produce(lambda i: cs(stream.batch_at(i))), depth=2
+    ) as pf:
+        for k in range(50):
+            i, b = pf.get()
+            s_tc, l_tc = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, b))
+            state, l_st = step_st(state, b, step_index=i)
+            assert float(l_tc) == float(l_st), f"loss diverged at step {k}"
+            if k % 10 == 9:
+                state = promote(state)
+        stats = streamed.stats()
+        assert stats["evictions"] > 0  # the resident window actually churned
+        assert float(state["hit_rate"]) > 0.0  # the hot tier engaged
+        _assert_streamed_equals_tc(cfg, state, streamed, s_tc)
+
+
+def test_tc_streamed_minimal_resident_budget_still_exact(tmp_path):
+    """Pathological budget (resident_rows=1): every cold row thrashes
+    through the window, yet the result stays bit-identical — misses are
+    synchronous reads, counted, never wrong."""
+    from repro.runtime import dlrm_train
+
+    cfg, stream, cs = _streamed_setup(rows=64, tables=1, pooling=2, batch=2)
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=1, prefetch=False,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    with streamed:
+        for k in range(10):
+            b = cs(stream.batch_at(k))
+            s_tc, l_tc = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, b))
+            state, l_st = step_st(state, b)
+            assert float(l_tc) == float(l_st), f"loss diverged at step {k}"
+        _assert_streamed_equals_tc(cfg, state, streamed, s_tc)
+
+
+def test_tc_streamed_checkpoint_restart_bit_identical(tmp_path):
+    """save_coherent -> training CONTINUES (mutating the live shard files
+    in place) -> crash -> restart (fresh StreamedTables over the same shard
+    dir, restore_coherent) -> the shard snapshot inside the checkpoint
+    rolls the cold tier back to step 10, and continued training stays
+    bit-identical to an uninterrupted ``tc`` run. Without the snapshot copy
+    the post-save steps would silently corrupt the restore point."""
+    from repro.checkpoint import Checkpointer, restore_coherent, save_coherent
+    from repro.runtime import dlrm_train
+
+    cfg, stream, cs = _streamed_setup(rows=128, tables=1, pooling=2, batch=2)
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=8, resident_rows=32, prefetch=False,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    promote = dlrm_train.make_streamed_promote(streamed)
+    batches = [cs(stream.batch_at(i)) for i in range(20)]
+    for k in range(10):
+        s_tc, _ = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, batches[k]))
+        state, _ = step_st(state, batches[k])
+        if k == 4:
+            state = promote(state)  # make sure hot rows exist at save time
+
+    ckpt = Checkpointer(str(tmp_path / "ckpt"))
+    state = save_coherent(ckpt, 10, state, streamed=streamed)
+    # the coherent snapshot stores an EMPTY hot set
+    assert bool((np.asarray(state["cache_ids"]) == cfg.rows_per_table).all())
+    # training continues past the checkpoint: the LIVE shard files mutate
+    for k in range(10, 13):
+        state, _ = step_st(state, batches[k])
+    streamed.close()  # crash at step 13
+
+    # restart: reopen the (now step-13) shard store; restore_coherent must
+    # roll it back to the step-10 snapshot stored inside the checkpoint
+    streamed2 = StreamedTables.open(
+        str(tmp_path / "store"), cfg.num_tables, resident_rows=32, prefetch=False
+    )
+    step10, state2 = restore_coherent(ckpt, state, streamed=streamed2)
+    assert step10 == 10
+    step_st2 = dlrm_train.make_streamed_train_step(cfg, streamed2)
+    with streamed2:
+        for k in range(10, 20):
+            s_tc, l_tc = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, batches[k]))
+            state2, l_st = step_st2(state2, batches[k])
+            assert float(l_tc) == float(l_st), f"loss diverged at step {k}"
+        _assert_streamed_equals_tc(cfg, state2, streamed2, s_tc)
