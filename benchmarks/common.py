@@ -59,6 +59,36 @@ def model_hbm_gather(
     }
 
 
+def model_hbm_scatter(
+    rows_updated: int, d: int, capacity: int, hit: float, itemsize: int = 4
+) -> dict:
+    """The one definition of the cached-SCATTER HBM traffic model — the
+    backward-side twin of ``model_hbm_gather`` (same two accountings, same
+    sharing contract between kernel_bench and the BENCH_*.json artifacts).
+
+    Scatter is a read-modify-write: the flat kernel moves every updated row
+    across HBM twice (one (1, D) DMA in, one back). The fused cached
+    scatter RMWs hot rows in the VMEM-resident cache block, so only misses
+    touch HBM — row-DMA savings == hit rate, exactly the gather-side story
+    "just in the opposite direction". The per-invocation accounting adds
+    the (C+1, D) hot-tier fill AND write-back the kernel as written pays
+    every pallas_call. Accumulator traffic ((n, 1) lanes) is excluded on
+    both sides, as in the gather model.
+    """
+    flat = 2 * rows_updated * d * itemsize
+    miss = (1.0 - hit) * flat
+    fill = 2 * (capacity + 1) * d * itemsize  # hot tier in + out
+    return {
+        "hit_rate": hit,
+        "hbm_scatter_bytes_flat": flat,
+        "hbm_scatter_bytes_cached_resident": miss,
+        "hbm_scatter_saved_frac": 1.0 - miss / flat,
+        "vmem_fill_bytes_per_invocation": fill,
+        "hbm_scatter_bytes_cached_per_invocation": miss + fill,
+        "hbm_scatter_saved_frac_with_fill": 1.0 - (miss + fill) / flat,
+    }
+
+
 def write_json(name: str, payload: dict) -> str:
     """Write ``BENCH_<name>.json`` into $BENCH_OUT_DIR (default: cwd).
 

@@ -3,13 +3,18 @@ gather-scatter kernels, plus structural stats (grid steps, bytes moved per
 step) that transfer to the TPU target. Interpret-mode wall time is NOT a TPU
 prediction — the derived column carries the structural numbers instead.
 
-Covers the three hot primitives:
+Covers the four hot primitives:
   * ``gather_reduce``        — casted gradient coalesce (one HBM row/step).
   * ``scatter_apply_adagrad``— fused sparse optimizer RMW.
   * ``cached_gather_reduce`` — two-tier forward bag gather: hits served from
     the VMEM-resident hot tier (zero HBM row traffic), misses DMA'd — the
     modeled HBM bytes scale with (1 - hit_rate), which is the fused kernel's
     entire point.
+  * ``cached_scatter_apply`` — the backward twin: two-tier sparse Adagrad
+    RMW, hot rows updated in the VMEM-resident cache block, cold rows (1, D)
+    RMW-DMA'd. Swept over hit rate (capacity fraction) x D; modeled HBM
+    scatter bytes via the shared ``common.model_hbm_scatter`` (row-DMA
+    savings == hit rate — acceptance >= 0.40 at alpha=1.05, 1/16 capacity).
 
 Emits CSV via benchmarks.common.emit and a ``BENCH_kernels.json`` artifact
 for the perf trajectory.
@@ -22,10 +27,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.casting import tensor_casting
-from repro.cache.hotcache import init_hot_cache, split_tiers
+from repro.cache.hotcache import init_hot_cache, split_tiers, split_update_tiers
 from repro.data.synth import _zipf_probs
 from repro.kernels import ops
-from benchmarks.common import emit, model_hbm_gather, time_fn, write_json
+from benchmarks.common import (
+    emit,
+    model_hbm_gather,
+    model_hbm_scatter,
+    time_fn,
+    write_json,
+)
 
 
 def run(quick: bool = False) -> dict:
@@ -104,6 +115,72 @@ def run(quick: bool = False) -> dict:
         f"saved_with_fill={traffic['hbm_gather_saved_frac_with_fill']:.3f}",
     )
     results["cached_gather"] = {"jnp_ref_us": t_cg, "grid": n, "capacity": C, **traffic}
+
+    # -- fused cached scatter: hit-rate (capacity fraction) x D sweep ------
+    # The sparse update runs once per batch over the batch's UNIQUE rows, so
+    # its stream is one training batch (half the gather sweep's stream) and
+    # its hit rate is per unique updated row — lower than the per-lookup
+    # gather hit at the same capacity, since the tail contributes one unique
+    # each. Savings == that hit rate (RMW rows skipped), acceptance >= 0.40
+    # at alpha=1.05 with the 1/16 hot tier.
+    n_upd = n // 2
+    upd_src = zipf_src[:n_upd]
+    upd_counts = np.bincount(upd_src, minlength=rows)
+    casted_u = tensor_casting(
+        jnp.asarray(upd_src), jnp.arange(n_upd, dtype=jnp.int32), fill_id=rows
+    )
+    nuniq = int(casted_u.num_unique)
+    uniq_real = np.asarray(casted_u.unique_ids)[:nuniq]
+    sweep = []
+    for cap_frac in (32, 16, 8):
+        Cs = rows // cap_frac
+        hot_s = np.sort(np.argsort(upd_counts)[-Cs:]).astype(np.int32)
+        cache_ids = jnp.concatenate(
+            [jnp.asarray(hot_s), jnp.full((1,), rows, jnp.int32)]
+        )
+        hit_u = float(np.isin(uniq_real, hot_s).mean())
+        for d_s in (32, 64) if quick else (32, 64, 128):
+            table_s = jnp.asarray(rng.normal(size=(rows + 1, d_s)).astype(np.float32))
+            accum_s = jnp.zeros((rows + 1, 1), jnp.float32)
+            crows_s = jnp.concatenate(
+                [jnp.take(table_s, jnp.asarray(hot_s), axis=0), jnp.zeros((1, d_s), jnp.float32)]
+            )
+            caccum_s = jnp.zeros((Cs + 1, 1), jnp.float32)
+            lanes = np.arange(casted_u.unique_ids.shape[0])
+            grads = jnp.asarray(
+                np.where((lanes < nuniq)[:, None], rng.normal(size=(lanes.size, d_s)), 0.0)
+                .astype(np.float32)
+            )
+            view_u = split_update_tiers(cache_ids, casted_u.unique_ids, grads, rows)
+            t_cs = time_fn(
+                jax.jit(lambda t, a, cr, ca: ops.cached_scatter_apply(
+                    t, a, cr, ca,
+                    view_u.hot_slot, view_u.cold_id, view_u.hot_grads, view_u.cold_grads,
+                    0.01, mode="jnp")),
+                table_s, accum_s, crows_s, caccum_s, iters=3,
+            )
+            traffic_s = model_hbm_scatter(nuniq, d_s, Cs, hit_u)
+            emit(
+                f"kernel.cached_scatter.cap1_{cap_frac}.d{d_s}", t_cs,
+                f"uniq={nuniq};hit={hit_u:.3f};"
+                f"hbm_scatter_B={traffic_s['hbm_scatter_bytes_cached_resident']:.0f}"
+                f"(flat={traffic_s['hbm_scatter_bytes_flat']});"
+                f"saved_rows={traffic_s['hbm_scatter_saved_frac']:.3f};"
+                f"saved_with_fill={traffic_s['hbm_scatter_saved_frac_with_fill']:.3f}",
+            )
+            sweep.append({
+                "cap_frac": cap_frac, "capacity": Cs, "d": d_s,
+                "jnp_ref_us": t_cs, "grid": int(casted_u.unique_ids.shape[0]),
+                "rows_updated": nuniq, **traffic_s,
+            })
+    accept = next(e for e in sweep if e["cap_frac"] == 16)
+    emit(
+        "kernel.cached_scatter.structure",
+        0.0,
+        f"grid={accept['grid']};rmw=two_tier;hot=vmem_resident;"
+        f"acceptance_saved_frac={accept['hbm_scatter_saved_frac']:.3f}(>=0.40)",
+    )
+    results["cached_scatter"] = {"sweep": sweep, "acceptance": accept}
 
     write_json("kernels", results)
     return results

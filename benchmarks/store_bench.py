@@ -13,8 +13,12 @@ fresh temp directory, and reports:
   * ``sync_faults`` / ``evictions`` / ``bytes_read`` / ``bytes_written`` —
     the disk-tier traffic picture as the budget shrinks.
   * ``hot_hit_rate`` — the device hot tier still serves the skew head.
-  * ``us/step`` — median wall-clock per step (CPU: dominated by the host
-    gather/write-back python path; the structural signal is the traffic).
+  * ``us/step`` — median wall-clock per step (CPU: includes device compute;
+    the structural signal is the traffic).
+  * ``host_us_per_step`` — host CPU inside the working-set gather +
+    write-back path only (prefetch wait excluded): the number the
+    open-addressing id->slot map drives down vs the dict-walk era, reported
+    so the speedup stays visible in the perf trajectory.
 
 CSV rows via benchmarks.common.emit:
   store/alpha<a>/budget1_<f>,<us>,coverage=<c>;sync_faults=<n>;evict=<n>;readMB=<m>
@@ -120,6 +124,7 @@ def run(
             per_budget[str(frac)] = {
                 "resident_rows": resident,
                 "us_per_step": med_us,
+                "host_us_per_step": stats["host_us_per_step"],
                 "hot_hit_rate": hot_hit,
                 "prefetch_coverage": stats["prefetch_coverage"],
                 "cold_reads": stats["cold_reads"],
@@ -133,7 +138,8 @@ def run(
                 f"coverage={stats['prefetch_coverage']:.4f};"
                 f"sync_faults={stats['sync_faults']};"
                 f"evict={stats['evictions']};"
-                f"readMB={stats['bytes_read'] / 1e6:.2f}",
+                f"readMB={stats['bytes_read'] / 1e6:.2f};"
+                f"host_us_per_step={stats['host_us_per_step']:.1f}",
             )
         results[str(alpha)] = per_budget
     write_json("store", {

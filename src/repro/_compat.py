@@ -61,6 +61,29 @@ if not hasattr(jax.sharding, "get_abstract_mesh"):
     jax.sharding.use_abstract_mesh = _use_abstract_mesh
 
 
+def _register_optimization_barrier_batching():
+    """jax 0.4.x ships ``lax.optimization_barrier`` without a vmap batching
+    rule (added upstream later). The barrier is shape-polymorphic identity,
+    so batching is trivial: bind the batched operands, pass the dims
+    through. Needed because ``kernels.ref`` pins bit-exact reductions with
+    barriers inside per-table ``vmap``'d train steps."""
+    from jax._src.lax import lax as _lax_internal
+    from jax.interpreters import batching
+
+    prim = getattr(_lax_internal, "optimization_barrier_p", None)
+    if prim is None or prim in batching.primitive_batchers:
+        return
+
+    def _batch_rule(batched_args, batch_dims, **params):
+        out = prim.bind(*batched_args, **params)
+        return out, batch_dims
+
+    batching.primitive_batchers[prim] = _batch_rule
+
+
+_register_optimization_barrier_batching()
+
+
 def _normalize_cost_analysis():
     """jax <= 0.4.x returns a one-element list from Compiled.cost_analysis();
     0.5+ returns the dict directly. Normalize to the modern shape."""

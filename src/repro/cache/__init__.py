@@ -8,19 +8,23 @@ This package turns those counts into a decayed-frequency signal
 their optimizer state (``hotcache``), and exposes a two-tier embedding
 store whose results are bit-identical to the flat table (``tiered``).
 
-The forward bag gather is served by the fused cached-gather Pallas kernel
-(kernels/cached_gather.py): hot rows from the VMEM-resident cache, cold
-rows DMA'd from HBM, tier-resolved via ``split_tiers``. See docs/cache.md
-for the dataflow and ROADMAP.md for the fused cached-SCATTER follow-on.
+Both hot primitives are served by fused Pallas kernels: the forward bag
+gather by kernels/cached_gather.py (hot rows from the VMEM-resident cache,
+cold rows DMA'd from HBM, tier-resolved via ``split_tiers``) and the
+backward sparse update by kernels/cached_scatter.py (hot rows RMW'd in the
+VMEM-resident cache block, cold rows RMW'd in the HBM table, streams laid
+out by ``split_update_tiers``). See docs/cache.md for both dataflows.
 """
 from repro.cache.hotcache import (  # noqa: F401
     HotRowCache,
     TierSplit,
+    UpdateTierSplit,
     demote_all,
     init_hot_cache,
     promote_evict,
     resolve,
     split_tiers,
+    split_update_tiers,
     write_back,
 )
 from repro.cache.stats import (  # noqa: F401

@@ -92,6 +92,62 @@ def split_tiers(cache_ids: Array, ids: Array, num_rows: int) -> TierSplit:
     )
 
 
+class UpdateTierSplit(NamedTuple):
+    """Per-tier (id, grad) streams in the layout the fused cached-scatter
+    kernel consumes (kernels/cached_scatter.py). Unlike the forward-side
+    ``TierSplit`` — where redirection alone is enough because gathers never
+    mutate state — the SCATTER kernels demand the ``scatter_apply`` layout
+    contract (ids sorted, real lanes unique, padding g = 0), which naive
+    redirection violates: dead-sentinel lanes would interleave out of order
+    and carry live gradients. Each tier's stream is therefore re-sorted and
+    compacted: real lanes keep their ascending-id order at the front, the
+    other tier's lanes (and SparseGrad padding) collapse to zero-gradient
+    dead-sentinel tails."""
+
+    hot_slot: Array  # (n,) int32 sorted: real hot slots, then sentinel slots
+    hot_grads: Array  # (n, D) permuted; zero on every non-real-hot lane
+    cold_id: Array  # (n,) int32 sorted: real cold rows, then dead row V
+    cold_grads: Array  # (n, D) permuted; zero on every non-real-cold lane
+
+
+def split_update_tiers(
+    cache_ids: Array, unique_ids: Array, grads: Array, num_rows: int
+) -> UpdateTierSplit:
+    """Resolve the coalesced gradient's ids against the sorted id->slot map
+    once and emit both tiers' kernel-legal streams.
+
+    ``unique_ids`` must be the ascending casted unique ids (sentinel
+    ``num_rows`` padding at the tail), ``grads`` the matching (n, D)
+    coalesced rows. Stable partitions preserve each tier's ascending order:
+    hits keep ascending slots (the id->slot map is sorted), misses keep
+    ascending row ids. Gradients of the other tier's lanes AND of padding
+    lanes are zeroed, so sentinel rows/slots see exact no-op RMWs — the
+    property that keeps the fused kernel bit-identical to the reference
+    (and sentinel accumulators pinned at 0)."""
+    slots, hit = resolve(cache_ids, unique_ids)
+    ids32 = unique_ids.astype(jnp.int32)
+    real = ids32 < num_rows
+    hit32 = hit.astype(jnp.int32)
+    dead_slot = cache_ids.shape[0] - 1
+    # stable partition keys: 0 sorts first. Hot stream keeps hits in front
+    # (ascending slots); cold stream keeps misses in front (ascending ids).
+    hot_order = jnp.argsort(1 - hit32, stable=True)
+    cold_order = jnp.argsort(hit32, stable=True)
+    hot_keep = jnp.take(hit & real, hot_order)
+    cold_keep = jnp.take(~hit & real, cold_order)
+    zero = jnp.zeros((), grads.dtype)
+    return UpdateTierSplit(
+        hot_slot=jnp.where(
+            jnp.take(hit, hot_order), jnp.take(slots, hot_order), dead_slot
+        ).astype(jnp.int32),
+        hot_grads=jnp.where(hot_keep[:, None], jnp.take(grads, hot_order, axis=0), zero),
+        cold_id=jnp.where(
+            jnp.take(hit, cold_order), num_rows, jnp.take(ids32, cold_order)
+        ),
+        cold_grads=jnp.where(cold_keep[:, None], jnp.take(grads, cold_order, axis=0), zero),
+    )
+
+
 def write_back(
     cache: HotRowCache, table: Array, accum: Array
 ) -> tuple[Array, Array]:

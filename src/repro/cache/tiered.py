@@ -8,11 +8,12 @@ gather / ``scatter_apply_adagrad`` primitives as the flat path, so every
 result is bit-identical to an untiered table (property-tested in
 tests/test_cache.py, and end-to-end in the ``tc_cached`` DLRM system).
 
-Tier-splitting trick: both tiers receive the FULL coalesced gradient, with
-the rows belonging to the other tier redirected to that tier's dead
-sentinel row (slot C of a padded cache copy / row V of the table). Real rows
-stay unique so the scatter semantics match the flat update exactly; the
-sentinel rows absorb the redirected traffic and are never read back.
+Tier-splitting trick: both tiers receive a full-length (id, grad) stream,
+with the rows belonging to the other tier collapsed onto that tier's dead
+sentinel row (slot C of the cache / row V of the table) carrying zero
+gradient. ``split_update_tiers`` stable-partitions each stream so it stays
+sorted with unique real lanes — the scatter kernels' layout contract — and
+the sentinel rows absorb exact no-op RMWs and are never read back.
 """
 from __future__ import annotations
 
@@ -27,6 +28,7 @@ from repro.cache.hotcache import (
     promote_evict,
     resolve,
     split_tiers,
+    split_update_tiers,
     write_back,
 )
 from repro.core.embedding import SparseGrad
@@ -87,7 +89,7 @@ class TieredEmbedding(NamedTuple):
     # -- writes -----------------------------------------------------------
 
     def sparse_update(
-        self, grad: SparseGrad, *, lr, mode: Optional[str] = "jnp"
+        self, grad: SparseGrad, *, lr, mode: Optional[str] = None
     ) -> "TieredEmbedding":
         """Row-wise Adagrad over the coalesced gradient, split between tiers.
 
@@ -95,32 +97,22 @@ class TieredEmbedding(NamedTuple):
         real row is updated exactly once, by the same primitive, with the
         same coalesced gradient row.
 
-        The redirected id streams are unsorted and their dead-sentinel
-        duplicates carry nonzero gradients, which violates the Pallas
-        scatter-apply kernel's layout contract (sorted ids, zero-grad
-        padding) — so only the jnp reference path is accepted, and anything
-        else raises up front rather than silently corrupting rows. A
-        cache-aware fused kernel is a ROADMAP open item.
+        Routed through the fused cached-scatter primitive under the full
+        auto/pallas/pallas_interpret/jnp dispatch: one tier resolve, then
+        ``split_update_tiers`` re-sorts and compacts each tier's (id, grad)
+        stream into the scatter kernels' sorted/unique/zero-pad layout
+        (naive dead-sentinel redirection violates it — the contract that
+        used to pin this path to the jnp reference). ``grad.unique_ids``
+        must be ascending with sentinel padding at the tail (the casting
+        output layout).
         """
-        if ops.resolve_mode(mode) != "jnp":
-            raise NotImplementedError(
-                "tier-split scatter breaks the Pallas kernel's sorted/zero-pad "
-                "contract; pass mode='jnp' (fused cached-scatter: see ROADMAP)"
-            )
-        V = self.num_rows
-        slots, hit = resolve(self.cache.ids, grad.unique_ids)
-
-        # hot tier: misses redirect to the permanent dead slot C (the cache
-        # is allocated C+1 slots for exactly this — no padding copies here)
-        hot_ids = jnp.where(hit, slots, self.capacity)
-        rows, accum_c = ops.scatter_apply_adagrad(
-            self.cache.rows, self.cache.accum, hot_ids, grad.rows, lr, mode=mode
+        split = split_update_tiers(
+            self.cache.ids, grad.unique_ids, grad.rows, self.num_rows
         )
-
-        # cold tier: hits redirect to the dead sentinel row V
-        cold_ids = jnp.where(hit, V, grad.unique_ids)
-        table, accum = ops.scatter_apply_adagrad(
-            self.table, self.accum, cold_ids, grad.rows, lr, mode=mode
+        table, accum, rows, accum_c = ops.cached_scatter_apply(
+            self.table, self.accum, self.cache.rows, self.cache.accum,
+            split.hot_slot, split.cold_id, split.hot_grads, split.cold_grads,
+            lr, mode=mode,
         )
         return TieredEmbedding(
             table=table,

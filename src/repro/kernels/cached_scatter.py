@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: fused two-tier Adagrad scatter-apply (cached scatter).
+
+The paper's third hot primitive — gradient scatter — runs on the same
+gather-scatter datapath as gather-reduce, "just in the opposite direction"
+(§IV-C). PR 2 fused the cached GATHER; this kernel closes the backward
+half: the tier-split sparse update runs as ONE pass over the coalesced
+gradient, with hot rows read-modify-written in the VMEM-resident cache
+block and cold rows RMW'd in place in the HBM table — after which
+``system="tc_cached"`` is 100% Pallas, forward and backward.
+
+    hot  lane i: cache[slot[i]] += -upd_h[i];  cache_accum[slot[i]] = a_h[i]
+                 (dynamic VMEM RMW — zero per-row HBM traffic)
+    cold lane i: table[cold[i]] += -upd_c[i];  accum[cold[i]]       = a_c[i]
+                 (one (1, D) HBM row DMA, aliased in place)
+
+Datapath:
+  * The per-lane tier split arrives PRE-COMPACTED by
+    ``cache.hotcache.split_update_tiers``: each tier's (id, grad) stream is
+    stable-partitioned so real lanes stay sorted/unique and the other
+    tier's lanes collapse to zero-grad sentinel padding (dead slot C / dead
+    row V) — the same layout contract as ``scatter_apply.py``, restored by
+    construction instead of violated by redirection. ``slot``/``cold`` are
+    scalar-prefetched into SMEM, metadata ahead of data.
+  * The Adagrad scale math — ``A' = A + mean(g^2)`` and
+    ``upd = g * lr / sqrt(A' + eps)`` — happens ONCE per lane outside the
+    grid (O(n) + O(nD) elementwise VPU work, like the tier split itself),
+    through the same fusion-isolated helpers the jnp reference uses
+    (``ref.rowwise_g2`` / ``ref.adagrad_denom``). This is what makes the
+    kernel bit-identical to the reference scatter on every backend: inside
+    a kernel body the reduce lands in a different fusion context (ULP
+    drift) and LLVM contracts the ``g*scale`` multiply into the final add
+    as an FMA straight through optimization barriers. Precomputed update
+    streams enter the kernel as materialized buffers, so the in-grid apply
+    is a pure two-operand add — contraction-proof by construction.
+  * ``cache_rows``/``cache_accum`` enter through constant-index BlockSpecs:
+    the hot tier is copied HBM->VMEM once per invocation, grid step 0 seeds
+    the output block, and every subsequent step RMWs a dynamic row of the
+    OUTPUT block in VMEM — the single write-back to HBM happens when the
+    kernel retires (revisited constant-index output blocks are elided).
+  * ``table``/``accum`` keep the (1, D)/(1, 1) per-row BlockSpecs of
+    ``scatter_apply.py`` with ``input_output_aliasing``; padding lanes
+    revisit the dead row V consecutively, so the pipeline elides the copy.
+
+Contract (enforced by layout in ``split_update_tiers``):
+  * hot: ``slot`` sorted; real slots unique; padding lanes point at a dead
+    sentinel slot (>= first sentinel) and carry g = 0.
+  * cold: ``cold`` sorted; real rows unique; padding lanes point at the
+    dead row V and carry g = 0.
+  * g = 0 lanes are exact no-ops: ``-upd = -0.0`` and ``A' = A + 0`` leave
+    the sentinel row/slot values AND their accumulators bit-identical
+    (regression-pinned in tests/test_kernels.py). Duplicates at sentinel
+    slots with nonzero grads are tolerated on the hot side only (VMEM RMW
+    is sequential) and land on dead state either way.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    slot_ref, cold_ref,  # scalar prefetch (SMEM)
+    hot_nupd_ref, cold_nupd_ref, hot_anew_ref, cold_anew_ref,
+    cache_rows_ref, cache_accum_ref, table_ref, taccum_ref,
+    out_crows_ref, out_caccum_ref, out_table_ref, out_taccum_ref,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _seed_hot_tier():
+        # the hot tier is RMW'd in the OUTPUT block (VMEM-resident via the
+        # constant index map); seed it from the input copy exactly once
+        out_crows_ref[...] = cache_rows_ref[...]
+        out_caccum_ref[...] = cache_accum_ref[...]
+
+    # -- hot lane: dynamic VMEM RMW at slot[i] ------------------------------
+    s = slot_ref[i]
+    w_h = out_crows_ref[pl.ds(s, 1), :].astype(jnp.float32) + hot_nupd_ref[...]
+    out_crows_ref[pl.ds(s, 1), :] = w_h.astype(out_crows_ref.dtype)
+    out_caccum_ref[pl.ds(s, 1), :] = hot_anew_ref[...]
+
+    # -- cold lane: (1, D) HBM row RMW at cold[i] (aliased in place) --------
+    # taccum_ref is only aliased for the untouched rows' contents — the
+    # touched lanes' new values arrive precomputed in cold_anew
+    del taccum_ref
+    w_c = table_ref[...].astype(jnp.float32) + cold_nupd_ref[...]
+    out_table_ref[...] = w_c.astype(out_table_ref.dtype)
+    out_taccum_ref[...] = cold_anew_ref[...]
+
+
+def _lane_updates(accum_col: Array, ids: Array, grads: Array, lr) -> tuple[Array, Array]:
+    """Per-lane Adagrad metadata, bit-identical to the reference scatter:
+    ``a_new = A[id] + mean(g^2)``; ``-upd = -(g * (lr / sqrt(a_new + eps)))``.
+    Every rounding-hazardous op goes through the shared fusion-isolated
+    helpers; the remaining gather/add/mul/neg are elementwise-exact in any
+    context."""
+    from repro.kernels.ref import adagrad_denom, rowwise_g2
+
+    a_new = jnp.take(accum_col, ids, mode="clip") + rowwise_g2(grads)
+    scale = lr / adagrad_denom(a_new)
+    neg_upd = -(grads.astype(jnp.float32) * scale[:, None])
+    return neg_upd, a_new[:, None]
+
+
+# NOTE: donation is left to the caller's train-step jit, as in scatter_apply.
+@partial(jax.jit, static_argnames=("interpret",))
+def cached_scatter_apply_pallas(
+    table: Array,
+    accum: Array,
+    cache_rows: Array,
+    cache_accum: Array,
+    slot: Array,
+    cold: Array,
+    hot_grads: Array,
+    cold_grads: Array,
+    lr: Array,
+    *,
+    interpret: bool = False,
+) -> tuple[Array, Array, Array, Array]:
+    """Fused two-tier sparse Adagrad update.
+
+    table: (V+1, D) sentinel-padded cold tier; accum: (V+1, 1) f32.
+    cache_rows: (C+1, D) hot tier (slot C dead); cache_accum: (C+1, 1) f32.
+    slot/cold: (n,) int32 compacted per-tier id streams and hot_grads/
+    cold_grads: (n, D) matching coalesced gradients — all four from
+    ``cache.hotcache.split_update_tiers`` (see the layout contract above).
+    Returns (new_table, new_accum, new_cache_rows, new_cache_accum).
+    """
+    n, d = hot_grads.shape
+    if n == 0:  # a grid=(0,) pallas_call is invalid — the update is a no-op
+        return table, accum, cache_rows, cache_accum
+    c1 = cache_rows.shape[0]
+    slot = slot.astype(jnp.int32)
+    cold = cold.astype(jnp.int32)
+    lr = jnp.asarray(lr, jnp.float32)
+    hot_nupd, hot_anew = _lane_updates(cache_accum[:, 0], slot, hot_grads, lr)
+    cold_nupd, cold_anew = _lane_updates(accum[:, 0], cold, cold_grads, lr)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            # per-lane negated updates + new accumulator values
+            pl.BlockSpec((1, d), lambda i, slot_ref, cold_ref: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, slot_ref, cold_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, slot_ref, cold_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, slot_ref, cold_ref: (i, 0)),
+            # whole hot tier, constant index map -> copied in once, resident
+            pl.BlockSpec((c1, d), lambda i, slot_ref, cold_ref: (0, 0)),
+            pl.BlockSpec((c1, 1), lambda i, slot_ref, cold_ref: (0, 0)),
+            # one cold row + accumulator per step (padding revisits row V)
+            pl.BlockSpec((1, d), lambda i, slot_ref, cold_ref: (cold_ref[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, slot_ref, cold_ref: (cold_ref[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c1, d), lambda i, slot_ref, cold_ref: (0, 0)),
+            pl.BlockSpec((c1, 1), lambda i, slot_ref, cold_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, slot_ref, cold_ref: (cold_ref[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, slot_ref, cold_ref: (cold_ref[i], 0)),
+        ],
+    )
+    new_crows, new_caccum, new_table, new_taccum = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(cache_rows.shape, cache_rows.dtype),
+            jax.ShapeDtypeStruct(cache_accum.shape, cache_accum.dtype),
+            jax.ShapeDtypeStruct(table.shape, table.dtype),
+            jax.ShapeDtypeStruct(accum.shape, accum.dtype),
+        ],
+        # read-modify-write in place: rows/slots not touched by any grid
+        # step keep their prior contents (cold tier), and the hot tier is
+        # seeded wholesale at step 0.
+        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3},
+        interpret=interpret,
+    )(
+        slot,
+        cold,
+        hot_nupd,
+        cold_nupd,
+        hot_anew,
+        cold_anew,
+        cache_rows,
+        cache_accum,
+        table,
+        accum,
+    )
+    return new_table, new_taccum, new_crows, new_caccum

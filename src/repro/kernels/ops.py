@@ -21,6 +21,7 @@ from jax import Array
 
 from repro.kernels import ref
 from repro.kernels.cached_gather import cached_gather_reduce_pallas
+from repro.kernels.cached_scatter import cached_scatter_apply_pallas
 from repro.kernels.gather_reduce import gather_reduce_pallas
 from repro.kernels.scatter_apply import scatter_apply_adagrad_pallas
 
@@ -147,6 +148,45 @@ def scatter_apply_adagrad(
         return new_table, new_accum[:, None]
     return scatter_apply_adagrad_pallas(
         table, accum, ids, grads, lr, interpret=(resolved == "pallas_interpret")
+    )
+
+
+def cached_scatter_apply(
+    table: Array,
+    accum: Array,
+    cache_rows: Array,
+    cache_accum: Array,
+    slot: Array,
+    cold: Array,
+    hot_grads: Array,
+    cold_grads: Array,
+    lr,
+    *,
+    mode: Optional[str] = None,
+) -> tuple[Array, Array, Array, Array]:
+    """Fused two-tier sparse Adagrad update (see kernels/cached_scatter.py):
+    the hot stream RMWs the VMEM-resident (C+1, D) cache block, the cold
+    stream RMWs the HBM table in place — the backward-side twin of
+    ``cached_gather_reduce``.
+
+    ``slot``/``cold``/``hot_grads``/``cold_grads`` are the compacted
+    per-tier streams from ``cache.hotcache.split_update_tiers`` (each tier
+    sorted, real lanes unique, the other tier's lanes redirected to dead
+    sentinel state with g = 0). Returns
+    ``(new_table, new_accum, new_cache_rows, new_cache_accum)`` —
+    bit-identical across every backend for all real rows and slots.
+    """
+    resolved = _resolve(mode)
+    if resolved == "jnp":
+        return ref.cached_scatter_apply_ref(
+            table, accum, cache_rows, cache_accum,
+            slot, cold, hot_grads, cold_grads,
+            lr=float(lr) if not isinstance(lr, jax.Array) else lr,
+        )
+    return cached_scatter_apply_pallas(
+        table, accum, cache_rows, cache_accum,
+        slot, cold, hot_grads, cold_grads, lr,
+        interpret=(resolved == "pallas_interpret"),
     )
 
 

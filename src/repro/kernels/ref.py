@@ -45,6 +45,41 @@ def cached_gather_reduce_ref(
     return jax.ops.segment_sum(rows, dst, num_segments=num_segments)
 
 
+def rowwise_g2(grads: Array) -> Array:
+    """Per-row mean squared gradient, (n, D) -> (n,), isolated from the
+    surrounding fusion context by optimization barriers.
+
+    This is THE bit-identity anchor between the jnp reference scatter and
+    the fused Pallas scatter kernels: a floating-point reduction compiled
+    inside two different fusion contexts (e.g. fused into a train-step
+    scatter vs. traced inside a kernel body) can legally differ by 1 ULP.
+    Isolating the square+mean into its own fusion island makes its codegen
+    a function of shape alone, so every path that uses this helper — the
+    reference, ``scatter_apply``'s caller-visible semantics, and the
+    cached-scatter kernel's precomputed (n, 1) inputs — agrees bit-for-bit.
+    """
+    # every op gets its own fusion island: a square fused INTO the reduce,
+    # or a divide epilogue fused ONTO it, changes the reduce's vectorization
+    # and legally drifts by 1 ULP between compilation contexts.
+    g = jax.lax.optimization_barrier(grads.astype(jnp.float32))
+    sq = jax.lax.optimization_barrier(jnp.square(g))
+    total = jax.lax.optimization_barrier(jnp.sum(sq, axis=-1))
+    return jax.lax.optimization_barrier(total / jnp.float32(grads.shape[-1]))
+
+
+def adagrad_denom(accum_rows: Array, eps: float = 1e-10) -> Array:
+    """``sqrt(A + eps)``, isolated from the surrounding fusion context.
+
+    XLA's algebraic simplifier rewrites ``x / sqrt(y)`` into ``x *
+    rsqrt(y)`` inside jit programs (rsqrt differs from the true quotient by
+    ULPs) but never in eager per-op dispatch. Hiding the sqrt behind a
+    barrier keeps the Adagrad scale a true IEEE divide in EVERY context —
+    eager, train-step jit, and kernel body alike — which is what lets the
+    fused scatter kernels reproduce the reference update bit-for-bit.
+    """
+    return jax.lax.optimization_barrier(jnp.sqrt(accum_rows + eps))
+
+
 def scatter_apply_adagrad_ref(
     table: Array,
     accum: Array,
@@ -60,13 +95,47 @@ def scatter_apply_adagrad_ref(
     Adagrad keeps one accumulator scalar per table row (mean of g^2).
 
       A[r] += mean(g_r^2);  W[r] -= lr * g_r / sqrt(A[r] + eps)
+
+    Zero-gradient padding lanes are exact no-ops: they add mean(0) == +0.0
+    to the sentinel accumulator and -(0 * scale) == -0.0 to the sentinel
+    row, both of which preserve the stored bits.
     """
-    g2 = jnp.mean(jnp.square(grads.astype(jnp.float32)), axis=-1)
+    g2 = rowwise_g2(grads)
     new_accum = accum.at[ids].add(g2, mode="drop")
-    scale = lr / jnp.sqrt(jnp.take(new_accum, ids, mode="clip") + eps)
+    scale = lr / adagrad_denom(jnp.take(new_accum, ids, mode="clip"), eps)
     upd = grads.astype(jnp.float32) * scale[:, None]
     new_table = table.at[ids].add((-upd).astype(table.dtype), mode="drop")
     return new_table, new_accum
+
+
+def cached_scatter_apply_ref(
+    table: Array,
+    accum: Array,
+    cache_rows: Array,
+    cache_accum: Array,
+    slot: Array,
+    cold: Array,
+    hot_grads: Array,
+    cold_grads: Array,
+    *,
+    lr: float,
+    eps: float = 1e-10,
+) -> tuple[Array, Array, Array, Array]:
+    """Two-tier sparse Adagrad oracle: the hot stream scatters into the
+    (C+1, D) cache block, the cold stream into the (V+1, D) table — both
+    through ``scatter_apply_adagrad_ref``, so each real row sees exactly
+    the flat path's op sequence (the tiered store's bit-identity contract).
+    Streams come from ``cache.hotcache.split_update_tiers``: sorted, real
+    lanes unique, the other tier's lanes redirected to dead sentinel state
+    with g = 0.
+    """
+    new_crows, new_caccum = scatter_apply_adagrad_ref(
+        cache_rows, cache_accum[:, 0], slot, hot_grads, lr=lr, eps=eps
+    )
+    new_table, new_taccum = scatter_apply_adagrad_ref(
+        table, accum[:, 0], cold, cold_grads, lr=lr, eps=eps
+    )
+    return new_table, new_taccum[:, None], new_crows, new_caccum[:, None]
 
 
 def scatter_apply_sgd_ref(table: Array, ids: Array, grads: Array, *, lr: float) -> Array:

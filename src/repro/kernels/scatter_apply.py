@@ -9,10 +9,21 @@ Adagrad update (paper Eq. 2):
 
     A[r] += mean(g_r^2);   W[r] -= lr * g_r / rsqrt-free sqrt(A[r] + eps)
 
-Contract (enforced by ops.scatter_apply_adagrad):
+Contract (enforced by ops.scatter_apply_adagrad; shared with the fused
+cached-scatter kernel, which restores it via split_update_tiers):
   * ``ids`` sorted; real entries unique; padding entries all point at the
     table's dead sentinel row (row V of a (V+1, D) table) and carry g = 0.
   * tables in the sparse-update path are allocated with the sentinel row.
+  * Padding semantics: every padding entry read-modify-writes the sentinel
+    row, once per padding slot (consecutive revisits of row V — the
+    pipeline elides the reloads). Under the g = 0 contract each RMW is an
+    exact no-op: ``A[V] += mean(0^2)`` adds +0.0 and ``W[V] -= lr * 0 /
+    sqrt(A[V] + eps)`` subtracts +0.0, so the sentinel row AND its
+    accumulator keep their stored bits — in particular a sentinel
+    accumulator that starts at exactly 0.0 stays exactly 0.0 no matter how
+    many padding slots revisit it (regression-pinned in
+    tests/test_kernels.py). Nonzero padding gradients would break this and
+    the revisit-elision ordering; they are a caller bug.
 """
 from __future__ import annotations
 

@@ -129,9 +129,11 @@ def make_sparse_train_step(
     # tc pins the reference path; tc_nmp, tc_cached and tc_streamed
     # auto-dispatch (Mosaic on TPU, jnp on CPU, pallas_interpret under the
     # tests' pinned default — kernel equivalence is covered by
-    # interpret-mode tests). tc_cached's gathers route through the fused
-    # cached-gather kernel; its tier-split scatter stays pinned to jnp
-    # inside sparse_update (fused cached-scatter is still a ROADMAP item).
+    # interpret-mode tests). tc_cached is fully fused: the forward routes
+    # through the cached-gather kernel and the backward tier-split update
+    # through the cached-scatter kernel (split_update_tiers restores the
+    # scatter layout contract), so under a Pallas-resolving mode neither
+    # direction falls back to jnp.
     kernel_mode = {
         "baseline": None, "tc": "jnp", "tc_nmp": None,
         "tc_cached": None, "tc_streamed": None,
@@ -177,9 +179,10 @@ def make_sparse_train_step(
                 # num_valid: padding segments of the coalesced grad must be
                 # zero on every backend before the tier-split scatter.
                 coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
-                # tier-split scatter violates the Pallas sorted/zero-pad
-                # contract — pinned to the jnp reference (see ROADMAP).
-                te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode="jnp")
+                # tier-split scatter through the fused cached-scatter
+                # primitive (split_update_tiers restores the sorted/
+                # zero-pad contract the redirected streams used to break)
+                te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode=kernel_mode)
                 e = fold_counts(e, decay, uids, cnt)
                 return te.table, te.accum, te.cache.ids, te.cache.rows, te.cache.accum, e
 
@@ -231,9 +234,11 @@ def make_sparse_train_step(
             def upd_one(ci, cr, ca, cold_r, cold_a, e, d_e, c_src, c_dst, uids, nuniq, cnt):
                 coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
                 slots, hit = resolve(ci, uids)
-                # hot tier: the same redirected scatter as
-                # TieredEmbedding.sparse_update's hot half (misses -> dead
-                # slot C); pinned jnp for the same contract reason.
+                # hot tier: redirected scatter (misses -> dead slot C).
+                # Still pinned jnp: the slice-aligned cold layout below
+                # keys ids by LANE index, not table row, so it cannot
+                # reuse split_update_tiers / the fused cached-scatter the
+                # way tc_cached's update now does (ROADMAP follow-on).
                 hot_ids = jnp.where(hit, slots, ci.shape[0] - 1)
                 cr2, ca2 = ops.scatter_apply_adagrad(cr, ca, hot_ids, coal, lr, mode="jnp")
                 # cold tier: the SAME scatter-apply primitive, run on the

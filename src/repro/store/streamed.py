@@ -26,6 +26,7 @@ Consistency rules (docs/store.md):
 from __future__ import annotations
 
 import os
+import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -65,6 +66,14 @@ class StreamedTables:
         self._hot_ids: list[np.ndarray] = [
             np.zeros((0,), np.int64) for _ in self.stores
         ]
+        # host-side wall time spent assembling/committing the per-step cold
+        # slice (the working-set hot path the open-addressing id->slot map
+        # vectorizes); prefetch WAIT time is excluded — that is disk
+        # latency, not host CPU. benchmarks/store_bench.py reports these
+        # per step so the host-path speedup stays visible in BENCH_store.
+        self._host_gather_s = 0.0
+        self._host_write_back_s = 0.0
+        self._host_steps = 0
 
     # -- construction ------------------------------------------------------
 
@@ -183,6 +192,7 @@ class StreamedTables:
         (>= num_unique, or the fill sentinel) are zero."""
         if self.prefetcher is not None and step is not None:
             self.prefetcher.wait(step)
+        t0 = time.perf_counter()
         uids = np.asarray(cast["unique_ids"])
         T, n = uids.shape
         rows = np.zeros((T, n, self.dim), np.float32)
@@ -198,6 +208,8 @@ class StreamedTables:
                 r, a = self.working[t].gather(uids[t][valid])
                 rows[t][valid] = r
                 accums[t][valid] = a
+        self._host_gather_s += time.perf_counter() - t0
+        self._host_steps += 1
         if self.prefetcher is not None and step is not None:
             self.prefetcher.release(step)  # consumed: unpin the step's rows
         return rows, accums
@@ -208,6 +220,7 @@ class StreamedTables:
         """Commit the device step's updated cold lanes into the working set:
         lanes that resolved hot on device (``hit``) stay owned by the device
         cache; padding/sentinel lanes are dropped."""
+        t0 = time.perf_counter()
         uids = np.asarray(cast["unique_ids"])
         hit = np.asarray(hit)
         rows = np.asarray(rows)
@@ -219,6 +232,7 @@ class StreamedTables:
             valid &= hit[t] == 0
             if valid.any():
                 self.working[t].update(uids[t][valid], rows[t][valid], accums[t][valid])
+        self._host_write_back_s += time.perf_counter() - t0
 
     # -- hot-tier boundary -------------------------------------------------
 
@@ -275,6 +289,15 @@ class StreamedTables:
             "bytes_written": sum(s.stats.bytes_written for s in self.stores),
             "scheduled_rows": (
                 self.prefetcher.scheduled_rows if self.prefetcher is not None else 0
+            ),
+            # host CPU spent in the working-set gather/write-back path, per
+            # step (prefetch wait excluded) — the open-addressing speedup
+            "host_gather_s": self._host_gather_s,
+            "host_write_back_s": self._host_write_back_s,
+            "host_us_per_step": (
+                (self._host_gather_s + self._host_write_back_s) / self._host_steps * 1e6
+                if self._host_steps
+                else 0.0
             ),
         }
 

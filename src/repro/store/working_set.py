@@ -6,6 +6,22 @@ shard store on demand or ahead of time by the prefetcher. Eviction is LRU;
 dirty victims are written back to their shard before the slot is reused, so
 the (shards + working set) pair is always row-consistent.
 
+The id -> slot map is an open-addressing hash table over flat numpy arrays
+(multiplicative hashing, linear probing, tombstone deletes, load factor
+<= 1/2 with periodic tombstone rebuilds). Residency resolution, row copies
+and LRU bumps on ``gather``/``update``/``fault_in`` are vectorized numpy
+ops — no per-id Python loop on the hot path, which is what the
+``tc_streamed`` train loop hits every step at production batch sizes. LRU
+order lives in per-slot monotonic stamps; eviction picks the minimum stamp
+among unpinned slots. The semantics — including the dict-era rotation of
+pinned rows to MRU while scanning for a victim, and the forced eviction of
+the true LRU when everything is pinned — are reproduced exactly
+(randomized op-sequence parity test vs the reference dict implementation in
+tests/test_working_set_parity.py). Batch installs that need evictions
+replay the sequential scan as one stamp-merge; only interleavings whose
+victims can collide with the batch itself (window smaller than the batch)
+fall back to an explicit per-install loop.
+
 Semantics that make every interleaving with the prefetch thread safe:
 
   * ``update`` is SET-semantics (whole row + accumulator overwritten) and
@@ -25,12 +41,16 @@ store_bench.py`` sweeps against the resident budget.
 from __future__ import annotations
 
 import threading
-from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.store.shards import EmbeddingShardStore
+
+_EMPTY = np.int64(-1)
+_TOMB = np.int64(-2)
+# Knuth/Fibonacci multiplicative constant (2^64 / phi), top bits as index
+_HASH_MULT = np.uint64(0x9E3779B97F4A7C15)
 
 
 @dataclass
@@ -68,10 +88,24 @@ class WorkingSetManager:
         D = store.dim
         self._rows = np.zeros((self.resident_rows, D), np.float32)
         self._accums = np.zeros((self.resident_rows, 1), np.float32)
-        self._slot: OrderedDict[int, int] = OrderedDict()  # id -> slot, LRU order
-        self._free = list(range(self.resident_rows))
         self._dirty = np.zeros((self.resident_rows,), bool)
-        self._pins: dict[int, int] = {}  # id -> in-flight prefetch count
+        self._pins = np.zeros((self.resident_rows,), np.int64)  # per-slot count
+        self._slot_id = np.full((self.resident_rows,), -1, np.int64)  # slot -> id
+        self._stamp = np.zeros((self.resident_rows,), np.int64)  # slot -> LRU age
+        self._clock = 0
+        self._free = list(range(self.resident_rows))  # pop() from the end
+        # open-addressing id -> slot table, power-of-two capacity >= 2R
+        cap = 16
+        while cap < 2 * self.resident_rows:
+            cap <<= 1
+        self._hcap = cap
+        self._hmask = np.uint64(cap - 1)
+        self._hshift = np.uint64(64 - cap.bit_length() + 1)
+        self._hkey = np.full((cap,), _EMPTY, np.int64)
+        self._hslot = np.zeros((cap,), np.int64)
+        self._key_pos = np.zeros((self.resident_rows,), np.int64)  # slot -> hkey idx
+        self._live = 0
+        self._tombs = 0
         # ids written to the SHARDS while a lock-free fault read is in
         # flight (one set per active fault_in; see fault_in for why)
         self._active_faults: list[set] = []
@@ -80,26 +114,136 @@ class WorkingSetManager:
 
     def __len__(self) -> int:
         with self._lock:
-            return len(self._slot)
+            return self._live
 
-    # -- slot management (lock held) --------------------------------------
+    # -- open-addressing id -> slot map (lock held) ------------------------
 
-    def _alloc(self) -> int:
-        if self._free:
-            return self._free.pop()
-        # LRU victim, skipping rows pinned by an in-flight prefetch (they
-        # are about to be read; evicting them would turn the prefetch into
-        # a guaranteed sync fault). If EVERYTHING is pinned — the window is
-        # smaller than the lookahead — fall back to true LRU: policy never
-        # compromises correctness.
-        for _ in range(len(self._slot)):
-            vid, slot = self._slot.popitem(last=False)
-            if self._pins.get(vid, 0) == 0:
-                break
-            self._slot[vid] = slot  # rotate pinned row to MRU, keep looking
-        else:
-            vid, slot = self._slot.popitem(last=False)
-            self._pins.pop(vid, None)
+    def _hash(self, ids: np.ndarray) -> np.ndarray:
+        return ((ids.astype(np.uint64) * _HASH_MULT) >> self._hshift) & self._hmask
+
+    def _lookup(self, ids: np.ndarray) -> np.ndarray:
+        """(n,) ids -> (n,) slots, -1 for absent. Vectorized linear probe:
+        the loop runs once per probe distance, not per id."""
+        n = ids.shape[0]
+        out = np.full((n,), -1, np.int64)
+        if n == 0 or self._live == 0:
+            return out
+        pos = self._hash(ids).astype(np.int64)
+        active = np.arange(n)
+        while active.size:
+            k = self._hkey[pos[active]]
+            found = k == ids[active]
+            hit = active[found]
+            out[hit] = self._hslot[pos[hit]]
+            cont = ~found & (k != _EMPTY)  # mismatch or tombstone: keep probing
+            active = active[cont]
+            pos[active] = (pos[active] + 1) & int(self._hmask)
+        return out
+
+    def _hash_insert(self, ids: np.ndarray, slots: np.ndarray) -> None:
+        """Insert distinct, absent ids. Intra-batch collisions resolve by
+        first-occurrence-wins per probe round; losers advance."""
+        m = ids.shape[0]
+        if m == 0:
+            return
+        if (self._live + self._tombs + m) * 10 > self._hcap * 7:
+            self._rebuild_table()
+        pending = np.arange(m)
+        pos = self._hash(ids).astype(np.int64)
+        while pending.size:
+            p = pos[pending]
+            k = self._hkey[p]
+            empty = (k == _EMPTY) | (k == _TOMB)
+            claim = pending[empty]
+            if claim.size:
+                # among claimants of the same cell, the first occurrence wins
+                _, first = np.unique(p[empty], return_index=True)
+                win = claim[first]
+                wp = pos[win]
+                self._tombs -= int((self._hkey[wp] == _TOMB).sum())
+                self._hkey[wp] = ids[win]
+                self._hslot[wp] = slots[win]
+                self._key_pos[slots[win]] = wp
+                placed = np.zeros(m, bool)
+                placed[win] = True
+                pending = pending[~placed[pending]]
+            # everyone unplaced advances (their cell was taken or occupied)
+            pos[pending] = (pos[pending] + 1) & int(self._hmask)
+        self._live += m
+
+    def _hash_delete(self, slots: np.ndarray) -> None:
+        pos = self._key_pos[slots]
+        self._hkey[pos] = _TOMB
+        self._tombs += slots.shape[0]
+        self._live -= slots.shape[0]
+
+    # scalar twins for the sequential (eviction-replay) paths: one python
+    # int probe beats the vectorized machinery's per-call overhead there
+    def _hash1(self, rid: int) -> int:
+        # python-int twin of _hash (numpy warns on scalar uint64 overflow)
+        return (((rid * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) >> int(self._hshift)) & (
+            self._hcap - 1
+        )
+
+    def _hash_insert1(self, rid: int, slot: int) -> None:
+        if (self._live + self._tombs + 1) * 10 > self._hcap * 7:
+            self._rebuild_table()
+        mask = self._hcap - 1
+        pos = self._hash1(rid)
+        hkey = self._hkey
+        while hkey[pos] != _EMPTY and hkey[pos] != _TOMB:
+            pos = (pos + 1) & mask
+        if hkey[pos] == _TOMB:
+            self._tombs -= 1
+        hkey[pos] = rid
+        self._hslot[pos] = slot
+        self._key_pos[slot] = pos
+        self._live += 1
+
+    def _rebuild_table(self) -> None:
+        self._hkey[:] = _EMPTY
+        self._tombs = 0
+        self._live = 0
+        occ = np.flatnonzero(self._slot_id >= 0)
+        if occ.size:
+            self._hash_insert(self._slot_id[occ], occ)
+
+    # -- LRU stamps / slot management (lock held) --------------------------
+
+    def _next_stamps(self, k: int) -> np.ndarray:
+        out = np.arange(self._clock + 1, self._clock + k + 1, dtype=np.int64)
+        self._clock += k
+        return out
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _note_store_write(self, ids) -> None:
+        # lock held: a concurrent lock-free fault read may have read these
+        # rows mid-write — mark them so the install pass discards that read
+        for written in self._active_faults:
+            written.update(int(i) for i in ids)
+
+    def _evict(self, victims: np.ndarray) -> None:
+        """Evict occupied slots: dirty write-back (grouped), stats, map
+        removal. Pins are cleared (forced eviction drops them, like the
+        dict-era ``_pins.pop``)."""
+        d = victims[self._dirty[victims]]
+        if d.size:
+            ids = self._slot_id[d]
+            self.store.write_rows(ids, self._rows[d], self._accums[d])
+            self._note_store_write(ids)
+            self._dirty[d] = False
+            self.stats.dirty_writebacks += int(d.size)
+        self.stats.evictions += int(victims.size)
+        self._hash_delete(victims)
+        self._slot_id[victims] = -1
+        self._pins[victims] = 0
+
+    def _evict1(self, slot: int) -> int:
+        """Scalar eviction for the sequential replay paths; returns the id."""
+        vid = int(self._slot_id[slot])
         if self._dirty[slot]:
             self.store.write_rows(
                 np.asarray([vid]), self._rows[slot : slot + 1], self._accums[slot : slot + 1]
@@ -108,24 +252,117 @@ class WorkingSetManager:
             self._dirty[slot] = False
             self.stats.dirty_writebacks += 1
         self.stats.evictions += 1
-        return slot
+        self._hkey[self._key_pos[slot]] = _TOMB
+        self._tombs += 1
+        self._live -= 1
+        self._slot_id[slot] = -1
+        self._pins[slot] = 0
+        return vid
 
-    def _note_store_write(self, ids) -> None:
-        # lock held: a concurrent lock-free fault read may have read these
-        # rows mid-write — mark them so the install pass discards that read
-        for written in self._active_faults:
-            written.update(int(i) for i in ids)
+    def _rotate_pinned(self, before_stamp: np.int64) -> None:
+        """Move pinned slots older than ``before_stamp`` to MRU, in stamp
+        order — the dict-era eviction scan rotated them one by one."""
+        occ = self._slot_id >= 0
+        bump = np.flatnonzero(occ & (self._pins > 0) & (self._stamp < before_stamp))
+        if bump.size:
+            bump = bump[np.argsort(self._stamp[bump], kind="stable")]
+            self._stamp[bump] = self._next_stamps(bump.size)
 
-    def _install(self, rid: int, row: np.ndarray, accum, *, dirty: bool) -> None:
-        slot = self._slot.get(rid)
-        if slot is None:
-            slot = self._alloc()
-            self._slot[rid] = slot
+    def _pick_victim(self) -> int:
+        """LRU unpinned victim (rotating older pinned rows to MRU), or the
+        forced true-LRU when everything is pinned. Window must be full."""
+        stamps = self._stamp
+        occ = self._slot_id >= 0
+        unpinned = np.flatnonzero(occ & (self._pins == 0))
+        if unpinned.size:
+            victim = int(unpinned[np.argmin(stamps[unpinned])])
+            self._rotate_pinned(stamps[victim])
         else:
-            self._slot.move_to_end(rid)
+            occ_idx = np.flatnonzero(occ)
+            victim = int(occ_idx[np.argmin(stamps[occ_idx])])
+        return victim
+
+    def _alloc_one(self) -> tuple[int, int]:
+        """One slot, dict-equivalent semantics: free list first, then evict.
+        Returns (slot, evicted id or -1) — the eviction-replay paths need
+        the victim to track same-batch casualties."""
+        if self._free:
+            return self._free.pop(), -1
+        victim = self._pick_victim()
+        vid = self._evict1(victim)
+        return victim, vid
+
+    def _alloc_batch(self, need: int) -> tuple[np.ndarray, np.ndarray]:
+        """``need`` slots + install stamps, in install order, replaying the
+        sequential scan exactly: free slots first; then the k LRU unpinned
+        victims, with pinned rows older than each victim rotated to MRU
+        between installs (one stamp merge). Falls back to per-install
+        ``_alloc_one`` when victims could include rows installed by this
+        very batch (need exceeds the evictable window)."""
+        take = min(need, len(self._free))
+        slots = [self._free.pop() for _ in range(take)]
+        stamps = list(self._next_stamps(take))
+        k = need - take
+        if k == 0:
+            return np.asarray(slots, np.int64), np.asarray(stamps, np.int64)
+        # caller (_install_absent) guarantees k <= currently evictable rows
+        unpinned = np.flatnonzero((self._slot_id >= 0) & (self._pins == 0))
+        order = np.argsort(self._stamp[unpinned], kind="stable")
+        victims = unpinned[order[:k]]  # ascending stamp == eviction order
+        vstamps = self._stamp[victims]
+        pinned = np.flatnonzero((self._slot_id >= 0) & (self._pins > 0))
+        bump = pinned[self._stamp[pinned] < vstamps[-1]]
+        # merged MRU sequence: each pinned row rotates right before the
+        # first victim newer than it; each install follows its victim
+        keys = np.concatenate([self._stamp[bump], vstamps])
+        rank = np.argsort(keys, kind="stable")
+        merged = np.empty(keys.size, np.int64)
+        merged[rank] = self._next_stamps(keys.size)  # aligned with keys order
+        if bump.size:
+            self._stamp[bump] = merged[: bump.size]
+        self._evict(victims)
+        slots.extend(victims.tolist())
+        stamps.extend(merged[bump.size :].tolist())
+        return np.asarray(slots, np.int64), np.asarray(stamps, np.int64)
+
+    def _install_one(self, rid: int, row: np.ndarray, accum, *, dirty: bool) -> tuple[int, int]:
+        slot, vid = self._alloc_one()
+        self._hash_insert1(rid, slot)
+        self._slot_id[slot] = rid
+        self._pins[slot] = 0
         self._rows[slot] = row
         self._accums[slot] = accum
-        self._dirty[slot] = dirty or self._dirty[slot]
+        self._dirty[slot] = dirty
+        self._stamp[slot] = self._tick()
+        return slot, vid
+
+    def _install_absent(
+        self, ids: np.ndarray, rows: np.ndarray, accums: np.ndarray, *, dirty: bool
+    ) -> np.ndarray:
+        """Install distinct non-resident ids, in order (evicting as needed).
+        Returns the assigned slots, aligned with ``ids``."""
+        m = ids.shape[0]
+        if m == 0:
+            return np.zeros((0,), np.int64)
+        need_evict = m - len(self._free)
+        if need_evict > 0:
+            evictable = int(((self._slot_id >= 0) & (self._pins == 0)).sum())
+            if need_evict > evictable:
+                # batch larger than the evictable window: victims can be
+                # rows installed by this very batch — replay sequentially
+                out = np.empty((m,), np.int64)
+                for k in range(m):
+                    out[k], _ = self._install_one(int(ids[k]), rows[k], accums[k], dirty=dirty)
+                return out
+        slots, stamps = self._alloc_batch(m)
+        self._hash_insert(ids, slots)
+        self._rows[slots] = rows
+        self._accums[slots] = accums
+        self._dirty[slots] = dirty
+        self._stamp[slots] = stamps
+        self._slot_id[slots] = ids
+        self._pins[slots] = 0
+        return slots
 
     # -- public API --------------------------------------------------------
 
@@ -145,26 +382,28 @@ class WorkingSetManager:
         clean fault."""
         uniq = np.unique(np.asarray(ids, np.int64))
         with self._lock:
-            missing = [int(i) for i in uniq if int(i) not in self._slot]
+            missing = uniq[self._lookup(uniq) < 0]
             written: set = set()
-            if missing:
+            if missing.size:
                 self._active_faults.append(written)
         n_read = 0
-        if missing:
+        if missing.size:
             try:
-                rows, accums = self.store.read_rows(np.asarray(missing))
+                rows, accums = self.store.read_rows(missing)
             except BaseException:
                 with self._lock:
                     self._active_faults.remove(written)
                 raise
         with self._lock:
-            if missing:
+            if missing.size:
                 self._active_faults.remove(written)
-                for k, rid in enumerate(missing):
-                    if rid in self._slot or rid in written:
-                        continue  # installed or rewritten since the read
-                    self._install(rid, rows[k], accums[k], dirty=False)
-                    n_read += 1
+                # discard lanes installed or rewritten since the read
+                ok = self._lookup(missing) < 0
+                if written:
+                    ok &= ~np.isin(missing, np.fromiter(written, np.int64, len(written)))
+                if ok.any():
+                    self._install_absent(missing[ok], rows[ok], accums[ok], dirty=False)
+                n_read = int(ok.sum())
                 if prefetch:
                     self.stats.prefetch_faults += n_read
                 else:
@@ -174,10 +413,9 @@ class WorkingSetManager:
         return n_read
 
     def _pin_locked(self, uniq: np.ndarray) -> None:
-        for i in uniq:
-            rid = int(i)
-            if rid in self._slot:  # may already be (force-)evicted
-                self._pins[rid] = self._pins.get(rid, 0) + 1
+        slots = self._lookup(uniq)
+        slots = slots[slots >= 0]  # absent ids may already be (force-)evicted
+        self._pins[slots] += 1
 
     def pin(self, ids: np.ndarray) -> None:
         """Pin resident ``ids`` against eviction (one count per call; pair
@@ -188,13 +426,14 @@ class WorkingSetManager:
     def unpin(self, ids: np.ndarray) -> None:
         """Release one pin per id (no-op for unknown/evicted ids)."""
         with self._lock:
-            for i in np.unique(np.asarray(ids, np.int64)):
-                rid = int(i)
-                c = self._pins.get(rid, 0)
-                if c <= 1:
-                    self._pins.pop(rid, None)
-                else:
-                    self._pins[rid] = c - 1
+            slots = self._lookup(np.unique(np.asarray(ids, np.int64)))
+            slots = slots[slots >= 0]
+            self._pins[slots] = np.maximum(self._pins[slots] - 1, 0)
+
+    def pinned_ids(self) -> np.ndarray:
+        """Resident ids currently pinned (diagnostics / tests)."""
+        with self._lock:
+            return np.sort(self._slot_id[(self._slot_id >= 0) & (self._pins > 0)])
 
     def gather(
         self, ids: np.ndarray, *, count: bool = True, install: bool = True
@@ -210,30 +449,26 @@ class WorkingSetManager:
         rows = np.empty((n, self.store.dim), np.float32)
         accums = np.empty((n, 1), np.float32)
         with self._lock:
-            miss_pos = []
-            for k in range(n):
-                rid = int(ids[k])
-                slot = self._slot.get(rid)
-                if slot is None:
-                    miss_pos.append(k)
-                else:
-                    rows[k] = self._rows[slot]
-                    accums[k] = self._accums[slot]
-                    if install:
-                        self._slot.move_to_end(rid)
+            slots = self._lookup(ids)
+            hit = slots >= 0
+            hs = slots[hit]
+            rows[hit] = self._rows[hs]
+            accums[hit] = self._accums[hs]
+            if install and hs.size:
+                # bump to MRU in occurrence order (duplicate ids: last wins)
+                self._stamp[hs] = self._next_stamps(hs.size)
             if count:
-                self.stats.covered_reads += n - len(miss_pos)
-                self.stats.sync_faults += len(miss_pos)
-            if miss_pos:
+                self.stats.covered_reads += int(hit.sum())
+                self.stats.sync_faults += int(n - hit.sum())
+            miss = ~hit
+            if miss.any():
                 # one grouped shard read for all misses, then install + copy out
-                miss_ids = ids[miss_pos]
-                uniq, inv = np.unique(miss_ids, return_inverse=True)
+                uniq, inv = np.unique(ids[miss], return_inverse=True)
                 u_rows, u_accums = self.store.read_rows(uniq)
                 if install:
-                    for k, rid in enumerate(uniq):
-                        self._install(int(rid), u_rows[k], u_accums[k], dirty=False)
-                rows[miss_pos] = u_rows[inv]
-                accums[miss_pos] = u_accums[inv]
+                    self._install_absent(uniq, u_rows, u_accums, dirty=False)
+                rows[miss] = u_rows[inv]
+                accums[miss] = u_accums[inv]
         return rows, accums
 
     def update(
@@ -246,19 +481,52 @@ class WorkingSetManager:
         demotions of rows that stay hot, which would otherwise evict the
         prefetched working set for no future reads."""
         ids = np.asarray(ids, np.int64)
+        rows = np.asarray(rows)
+        accums = np.asarray(accums)
+        n = ids.shape[0]
         with self._lock:
-            through = []
-            for k in range(ids.shape[0]):
-                rid = int(ids[k])
-                if not insert and rid not in self._slot:
-                    through.append(k)
-                else:
-                    self._install(rid, rows[k], accums[k], dirty=True)
-            if through:
-                self.store.write_rows(
-                    ids[through], np.asarray(rows)[through], np.asarray(accums)[through]
-                )
-                self._note_store_write(ids[through])
+            slots = self._lookup(ids)
+            res = slots >= 0
+            absent = np.flatnonzero(~res)
+            if insert and absent.size and absent.size > len(self._free):
+                # installs will evict: replay per occurrence so victims that
+                # belong to this very batch behave exactly like the scan
+                # (an install can evict a not-yet-processed resident lane,
+                # which then re-installs — dict-era semantics)
+                id_pos = {int(ids[k]): k for k in range(n)}
+                evicted: set = set()
+                for k in range(n):
+                    rid = int(ids[k])
+                    s = int(slots[k])
+                    if s >= 0 and rid not in evicted:
+                        self._rows[s] = rows[k]
+                        self._accums[s] = accums[k]
+                        self._dirty[s] = True
+                        self._stamp[s] = self._tick()
+                        continue
+                    _, vid = self._install_one(rid, rows[k], accums[k], dirty=True)
+                    if id_pos.get(vid, -1) > k:
+                        evicted.add(vid)
+                return
+            rs = slots[res]
+            if rs.size:
+                self._rows[rs] = rows[res]
+                self._accums[rs] = accums[res]
+                self._dirty[rs] = True
+            if insert:
+                # dict-order stamps: every lane bumps/installs in occurrence
+                # order; with no evictions the final order is exactly that
+                if absent.size:
+                    slots[absent] = self._install_absent(
+                        ids[absent], rows[absent], accums[absent], dirty=True
+                    )
+                self._stamp[slots] = self._next_stamps(n)
+            else:
+                if rs.size:
+                    self._stamp[rs] = self._next_stamps(int(rs.size))
+                if absent.size:
+                    self.store.write_rows(ids[absent], rows[absent], accums[absent])
+                    self._note_store_write(ids[absent])
 
     def invalidate(self) -> None:
         """Drop every resident row, pin and dirty bit WITHOUT write-back —
@@ -266,22 +534,23 @@ class WorkingSetManager:
         anything resident (dirty included) is newer than the state being
         restored to."""
         with self._lock:
-            self._slot.clear()
+            self._hkey[:] = _EMPTY
+            self._live = 0
+            self._tombs = 0
+            self._slot_id[:] = -1
             self._free = list(range(self.resident_rows))
             self._dirty[:] = False
-            self._pins.clear()
+            self._pins[:] = 0
 
     def flush(self) -> int:
         """Write every dirty resident row back to its shard (rows stay
         resident, now clean) and fsync the shard files. Returns the number
         of rows written. Afterwards the shards alone hold the cold tier."""
         with self._lock:
-            slots = [(rid, s) for rid, s in self._slot.items() if self._dirty[s]]
-            if slots:
-                ids = np.asarray([rid for rid, _ in slots])
-                sl = np.asarray([s for _, s in slots])
-                self.store.write_rows(ids, self._rows[sl], self._accums[sl])
+            sl = np.flatnonzero(self._dirty & (self._slot_id >= 0))
+            if sl.size:
+                self.store.write_rows(self._slot_id[sl], self._rows[sl], self._accums[sl])
                 self._dirty[sl] = False
-                self.stats.dirty_writebacks += len(slots)
+                self.stats.dirty_writebacks += int(sl.size)
             self.store.flush()
-            return len(slots)
+            return int(sl.size)

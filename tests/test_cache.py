@@ -232,12 +232,28 @@ def test_flush_makes_table_authoritative_without_changing_hot_set(rng):
     np.testing.assert_array_equal(np.asarray(flushed.table)[:V], _flat_view(tiered)[0][:V])
 
 
-def test_sparse_update_rejects_pallas_modes(rng):
-    V, D = 16, 4
-    tiered = init_tiered(add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), 4)
-    _, _, grad = _one_round(rng, V, 8, D)
-    with pytest.raises(NotImplementedError):
-        tiered.sparse_update(grad, lr=0.1, mode="pallas_interpret")
+def test_sparse_update_dispatches_all_backends(rng):
+    """sparse_update accepts every dispatch mode (the contract that used to
+    pin it to jnp is restored by split_update_tiers): the interpret-mode
+    fused cached-scatter reproduces the jitted jnp reference bit-for-bit
+    across the full state — table, accumulators, cache rows, cache accums."""
+    from functools import partial
+
+    V, C, D = 32, 6, 8
+    tiered = init_tiered(
+        add_sentinel_row(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))), C
+    )
+    tiered = tiered.promote(jnp.asarray(rng.uniform(size=V), jnp.float32))
+    _, _, grad = _one_round(rng, V, 24, D)
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def upd(te, g, *, mode):
+        return te.sparse_update(g, lr=0.1, mode=mode)
+
+    a = upd(tiered, grad, mode="jnp")
+    b = upd(tiered, grad, mode="pallas_interpret")
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 def test_all_hot_cache_serves_every_lookup(rng):
@@ -391,6 +407,77 @@ def test_tc_cached_interpret_dispatch_bit_identical_to_tc_50_steps():
     np.testing.assert_array_equal(tt[:, :V], np.asarray(s_tc["tables"])[:, :V])
     np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
     assert float(s_ca["hit_rate"]) > 0.0  # the cache actually engaged
+
+
+def test_tc_cached_interpret_e2e_fused_backward_zero_jnp_fallback(monkeypatch):
+    """Acceptance for the fused cached-scatter: 16 steps of tc_cached under
+    the pallas_interpret default — now covering the FUSED BACKWARD (the
+    tier-split sparse update runs the cached-scatter kernel, not the pinned
+    jnp reference) — stay bit-identical to the jnp-mode tc system, with
+    promotion churn in between. Every jnp oracle is monkeypatched to raise
+    while the tc_cached step traces and runs, so ZERO jnp fallback in
+    either the gather or the sparse-update path is asserted, not assumed."""
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+    from repro.kernels import ref
+    from repro.runtime import dlrm_train
+
+    cfg = DLRMConfig(
+        name="cache-fused-bwd", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=64, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=2, rows_per_table=64, gathers_per_table=4,
+        batch=4, s=1.05, seed=1,
+    )
+    cs = CastingServer(rows_per_table=64, with_counts=True)
+    batches = [
+        jax.tree_util.tree_map(jnp.asarray, cs(stream.batch_at(i))) for i in range(16)
+    ]
+
+    # the tc reference run first, while the oracles are still callable
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    tc_losses = []
+    for b in batches:
+        s_tc, l_tc = step_tc(s_tc, b)
+        tc_losses.append(float(l_tc))
+
+    def _no_fallback(name):
+        def boom(*args, **kwargs):
+            raise AssertionError(f"tc_cached fell back to the jnp oracle {name}")
+        return boom
+
+    ops.set_default_mode("pallas_interpret")
+    try:
+        s_ca = dlrm_train.init_cached_state(cfg, jax.random.key(0), capacity=8)
+        step_ca = dlrm_train.make_sparse_train_step(cfg, system="tc_cached")
+        promote = dlrm_train.make_promote_step()
+        for name in (
+            "gather_reduce_ref",
+            "cached_gather_reduce_ref",
+            "scatter_apply_adagrad_ref",
+            "cached_scatter_apply_ref",
+        ):
+            monkeypatch.setattr(ref, name, _no_fallback(name))
+        for i, b in enumerate(batches):  # traces (and would fall back) here
+            s_ca, l_ca = step_ca(s_ca, b)
+            assert tc_losses[i] == float(l_ca), f"loss diverged at step {i}"
+            if i % 4 == 3:
+                s_ca = promote(s_ca)
+    finally:
+        ops.set_default_mode("auto")
+
+    V = cfg.rows_per_table
+    tt = np.asarray(s_ca["tables"]).copy()
+    aa = np.asarray(s_ca["accums"]).copy()
+    ids = np.asarray(s_ca["cache_ids"])
+    for t in range(tt.shape[0]):
+        tt[t, ids[t]] = np.asarray(s_ca["cache_rows"])[t]
+        aa[t, ids[t]] = np.asarray(s_ca["cache_accums"])[t]
+    np.testing.assert_array_equal(tt[:, :V], np.asarray(s_tc["tables"])[:, :V])
+    np.testing.assert_array_equal(aa[:, :V], np.asarray(s_tc["accums"])[:, :V])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,305 @@
+"""Fused cached-scatter kernel (kernels/cached_scatter.py): interpret-mode
+bit-identity vs the TieredEmbedding jnp path across tier mixes, plus the
+compacted update-stream layout contract (cache.hotcache.split_update_tiers).
+
+Parity comparisons jit BOTH sides: XLA compiles a standalone eager reduction
+differently from the same reduction inside a program, so eager-vs-jit is not
+a meaningful bit-identity target — jit-vs-jit (the train-step configuration)
+is, and is what these tests pin.
+"""
+from functools import partial
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.hotcache import init_hot_cache, resolve, split_update_tiers
+from repro.cache.tiered import init_tiered
+from repro.core.casting import tensor_casting
+from repro.core.embedding import SparseGrad
+from repro.kernels import ops, ref
+from repro.kernels.cached_scatter import cached_scatter_apply_pallas
+from repro.optim.sparse import add_sentinel_row, init_rowwise_adagrad
+
+
+def _store(rng, V, C, D, *, promote_by=None):
+    """Tiered store over a random table; optionally adopt a hot set."""
+    table0 = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    te = init_tiered(add_sentinel_row(table0), C)
+    if promote_by is not None:
+        te = te.promote(jnp.asarray(promote_by, jnp.float32))
+    return te
+
+
+def _grad(rng, V, n, D):
+    """One synthetic casted batch -> SparseGrad with padding-masked rows."""
+    m = max(1, n // 2)
+    src = jnp.asarray(rng.integers(0, V, size=n).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, m, size=n)).astype(np.int32))
+    casted = tensor_casting(src, dst, fill_id=V)
+    g = jnp.asarray(rng.normal(size=(m, D)).astype(np.float32))
+    coal = ops.gather_reduce(
+        g, casted.casted_src, casted.casted_dst, num_valid=casted.num_unique, mode="jnp"
+    )
+    return SparseGrad(casted.unique_ids, coal, casted.num_unique)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def _upd(te, grad, *, mode):
+    return te.sparse_update(grad, lr=0.1, mode=mode)
+
+
+def _both_modes(te, grad):
+    """sparse_update through jnp and the interpret-mode kernel (both jitted);
+    asserts full-state bit-identity and returns the jnp result."""
+    a = _upd(te, grad, mode="jnp")
+    b = _upd(te, grad, mode="pallas_interpret")
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    return a
+
+
+def _flat_view(te):
+    table = np.asarray(te.table).copy()
+    accum = np.asarray(te.accum).copy()
+    ids = np.asarray(te.cache.ids)
+    real = ids < te.num_rows
+    table[ids[real]] = np.asarray(te.cache.rows)[real]
+    accum[ids[real]] = np.asarray(te.cache.accum)[real]
+    return table, accum
+
+
+@jax.jit
+def _flat_upd(table, accum, grad):
+    return ops.scatter_apply_adagrad(
+        table, accum, grad.unique_ids, grad.rows, 0.1, mode="jnp"
+    )
+
+
+# ---------------------------------------------------------------------------
+# update-stream layout contract
+# ---------------------------------------------------------------------------
+
+
+def test_split_update_tiers_compacts_both_streams(rng):
+    V, C, D = 64, 8, 4
+    cache = init_hot_cache(C, D, V)
+    hot_ids = sorted([3, 9, 17, 20, 33, 40, 51, 60])
+    cache = cache._replace(ids=jnp.asarray(hot_ids + [V], jnp.int32))
+    uids = jnp.asarray([3, 4, 17, 63, V, V], jnp.int32)  # 2 sentinel padding
+    grads = jnp.asarray(rng.normal(size=(6, D)).astype(np.float32))
+    grads = grads.at[4:].set(0.0)  # padding carries g=0 (num_valid masking)
+    split = split_update_tiers(cache.ids, uids, grads, V)
+
+    slots, hit = resolve(cache.ids, uids)
+    # hot stream: real hits first (ascending slots), then sentinel lanes —
+    # sorted overall, so the scatter kernel's layout contract holds
+    hs = np.asarray(split.hot_slot)
+    assert (np.diff(hs) >= 0).all()
+    np.testing.assert_array_equal(hs[:2], np.asarray(slots)[[0, 2]])  # ids 3, 17
+    np.testing.assert_array_equal(hs[2:], C)  # sentinel/dead-slot tail
+    # real hot lanes carry their own grads; everything else is zeroed
+    np.testing.assert_array_equal(np.asarray(split.hot_grads)[:2], np.asarray(grads)[[0, 2]])
+    np.testing.assert_array_equal(np.asarray(split.hot_grads)[2:], 0.0)
+    # cold stream: real misses first (ascending ids), then dead row V
+    cs = np.asarray(split.cold_id)
+    np.testing.assert_array_equal(cs, [4, 63, V, V, V, V])
+    np.testing.assert_array_equal(np.asarray(split.cold_grads)[:2], np.asarray(grads)[[1, 3]])
+    np.testing.assert_array_equal(np.asarray(split.cold_grads)[2:], 0.0)
+
+
+def test_split_update_tiers_fresh_cache_all_cold(rng):
+    V, C, D, n = 32, 4, 4, 8
+    cache = init_hot_cache(C, D, V)
+    uids = jnp.asarray(np.sort(rng.choice(V, size=n, replace=False)).astype(np.int32))
+    grads = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    split = split_update_tiers(cache.ids, uids, grads, V)
+    np.testing.assert_array_equal(np.asarray(split.cold_id), np.asarray(uids))
+    np.testing.assert_array_equal(np.asarray(split.cold_grads), np.asarray(grads))
+    np.testing.assert_array_equal(np.asarray(split.hot_grads), 0.0)
+    assert (np.diff(np.asarray(split.hot_slot)) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode bit-identity vs the jnp tiered path (and the flat table)
+# ---------------------------------------------------------------------------
+
+
+def test_all_cold_fresh_cache(rng):
+    V, C, D = 48, 8, 16
+    te = _store(rng, V, C, D)  # fresh cache: every update lane misses
+    grad = _grad(rng, V, 48, D)
+    flat_t, flat_a = _flat_upd(te.table, te.accum, grad)
+    out = _both_modes(te, grad)
+    tt, aa = _flat_view(out)
+    np.testing.assert_array_equal(tt[:V], np.asarray(flat_t)[:V])
+    np.testing.assert_array_equal(aa[:V], np.asarray(flat_a)[:V])
+
+
+def test_all_hot_full_cache(rng):
+    V, D = 24, 8
+    te = _store(rng, V, V, D, promote_by=np.arange(V) + 1.0)  # C == V
+    grad = _grad(rng, V, 32, D)
+    flat_t, flat_a = _flat_upd(te.flush().table, te.flush().accum, grad)
+    out = _both_modes(te, grad)
+    tt, aa = _flat_view(out)
+    np.testing.assert_array_equal(tt[:V], np.asarray(flat_t)[:V])
+    np.testing.assert_array_equal(aa[:V], np.asarray(flat_a)[:V])
+
+
+def test_mixed_tiers(rng):
+    V, C, D = 64, 8, 32
+    ema = np.zeros(V)
+    ema[rng.choice(V, size=C, replace=False)] = rng.uniform(1, 10, size=C)
+    te = _store(rng, V, C, D, promote_by=ema)
+    grad = _grad(rng, V, 96, D)
+    _, hit = resolve(te.cache.ids, grad.unique_ids)
+    real_hits = np.asarray(hit) & (np.asarray(grad.unique_ids) < V)
+    assert 0 < int(real_hits.sum()) < int(grad.num_unique)  # genuinely mixed
+    flat_t, flat_a = _flat_upd(te.flush().table, te.flush().accum, grad)
+    out = _both_modes(te, grad)
+    tt, aa = _flat_view(out)
+    np.testing.assert_array_equal(tt[:V], np.asarray(flat_t)[:V])
+    np.testing.assert_array_equal(aa[:V], np.asarray(flat_a)[:V])
+
+
+def test_empty_batch(rng):
+    V, C, D = 16, 4, 8
+    te = _store(rng, V, C, D)
+    grad = SparseGrad(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0, D), jnp.float32), jnp.asarray(0)
+    )
+    for mode in ("jnp", "pallas_interpret"):
+        out = _upd(te, grad, mode=mode)
+        for x, y in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(te)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_promotion_boundary(rng):
+    """The same gradient stream applies bit-identically across a
+    promote_evict (rows migrate between tiers in between the two calls)."""
+    V, C, D = 40, 6, 16
+    te = _store(rng, V, C, D)
+    grad = _grad(rng, V, 64, D)
+    before = _both_modes(te, grad)
+    te2 = te.promote(jnp.asarray(rng.uniform(1, 10, size=V), jnp.float32))
+    after = _both_modes(te2, grad)
+    # promotion is semantically transparent: the flat views agree exactly
+    bt, ba = _flat_view(before)
+    at, aa = _flat_view(after)
+    np.testing.assert_array_equal(bt[:V], at[:V])
+    np.testing.assert_array_equal(ba[:V], aa[:V])
+    # ...but the tier that absorbed the update moved
+    _, hit_b = resolve(before.cache.ids, grad.unique_ids)
+    _, hit_a = resolve(after.cache.ids, grad.unique_ids)
+    assert int(hit_a.sum()) != int(hit_b.sum())
+
+
+def test_num_valid_padding_parity_and_sentinels_intact(rng):
+    """num_valid < num_segments: the coalesced grad's padding lanes (zeroed
+    on every backend by ops.gather_reduce) leave the sentinel row, slot and
+    BOTH sentinel accumulators bit-identically untouched on every backend."""
+    V, C, D, n = 32, 4, 8, 24
+    te = _store(rng, V, C, D, promote_by=rng.uniform(size=V))
+    grad = _grad(rng, V, n, D)
+    assert int(grad.num_unique) < grad.unique_ids.shape[0]  # real padding
+    sent_row = np.asarray(te.table)[V].copy()
+    sent_acc = np.asarray(te.accum)[V].copy()
+    dead_slot_row = np.asarray(te.cache.rows)[C].copy()
+    dead_slot_acc = np.asarray(te.cache.accum)[C].copy()
+    out = _both_modes(te, grad)
+    np.testing.assert_array_equal(np.asarray(out.table)[V], sent_row)
+    np.testing.assert_array_equal(np.asarray(out.accum)[V], sent_acc)
+    np.testing.assert_array_equal(np.asarray(out.cache.rows)[C], dead_slot_row)
+    np.testing.assert_array_equal(np.asarray(out.cache.accum)[C], dead_slot_acc)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(4, 32),  # V
+    st.integers(1, 32),  # C (clipped to V)
+    st.integers(1, 48),  # n raw lookups
+    st.integers(0, 2**31 - 1),
+)
+def test_cached_scatter_property(V, C, n, seed):
+    """Arbitrary tier mixes and shapes: the interpret kernel and the jitted
+    jnp path agree bit-for-bit on the FULL state, and both equal the flat
+    sentinel-padded table on the real rows."""
+    rng = np.random.default_rng(seed)
+    C = min(C, V)
+    te = _store(rng, V, C, 8, promote_by=rng.uniform(size=V))
+    grad = _grad(rng, V, n, 8)
+    flat_t, flat_a = _flat_upd(te.flush().table, te.flush().accum, grad)
+    out = _both_modes(te, grad)
+    tt, aa = _flat_view(out)
+    np.testing.assert_array_equal(tt[:V], np.asarray(flat_t)[:V])
+    np.testing.assert_array_equal(aa[:V], np.asarray(flat_a)[:V])
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper: raw kernel entry point + vmap batching
+# ---------------------------------------------------------------------------
+
+
+def test_raw_kernel_matches_ref(rng):
+    V, C, D = 30, 5, 64
+    te = _store(rng, V, C, D, promote_by=rng.uniform(size=V))
+    grad = _grad(rng, V, 49, D)
+    split = split_update_tiers(te.cache.ids, grad.unique_ids, grad.rows, V)
+
+    @jax.jit
+    def kernel(te, split):
+        return cached_scatter_apply_pallas(
+            te.table, te.accum, te.cache.rows, te.cache.accum,
+            split.hot_slot, split.cold_id, split.hot_grads, split.cold_grads,
+            0.05, interpret=True,
+        )
+
+    @jax.jit
+    def oracle(te, split):
+        return ref.cached_scatter_apply_ref(
+            te.table, te.accum, te.cache.rows, te.cache.accum,
+            split.hot_slot, split.cold_id, split.hot_grads, split.cold_grads,
+            lr=0.05,
+        )
+
+    got = kernel(te, split)
+    want = oracle(te, split)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_vmapped_interpret_dispatch(rng):
+    """The kernel batches under vmap (the dlrm_train per-table vmap),
+    aliasing included."""
+    T, V, C, D, n = 3, 16, 4, 8, 10
+    tables = jnp.asarray(rng.normal(size=(T, V + 1, D)).astype(np.float32))
+    accums = jnp.asarray(rng.uniform(0.1, 1.0, size=(T, V + 1, 1)).astype(np.float32))
+    cache = init_hot_cache(C, D, V)
+    cids = jnp.tile(cache.ids, (T, 1))
+    crows = jnp.tile(cache.rows, (T, 1, 1))
+    caccums = jnp.tile(cache.accum, (T, 1, 1))
+    uids = jnp.asarray(
+        np.stack([np.sort(rng.choice(V, size=n, replace=False)) for _ in range(T)]).astype(np.int32)
+    )
+    grads = jnp.asarray(rng.normal(size=(T, n, D)).astype(np.float32))
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def run(mode):
+        def one(t, a, ci, cr, ca, u, g):
+            split = split_update_tiers(ci, u, g, V)
+            return ops.cached_scatter_apply(
+                t, a, cr, ca,
+                split.hot_slot, split.cold_id, split.hot_grads, split.cold_grads,
+                0.1, mode=mode,
+            )
+
+        return jax.vmap(one)(tables, accums, cids, crows, caccums, uids, grads)
+
+    got = run("pallas_interpret")
+    want = run("jnp")
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

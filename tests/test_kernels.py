@@ -110,6 +110,39 @@ def test_scatter_apply_untouched_rows_intact(rng):
     assert not np.allclose(np.asarray(nt)[2], np.asarray(table)[2])
 
 
+def test_scatter_apply_sentinel_accum_stays_exactly_zero(rng):
+    """Contract regression (shared with the fused cached-scatter): padding
+    entries RMW the sentinel row once per padding slot, and under the g = 0
+    padding contract the sentinel row and its accumulator keep their exact
+    bits — an accumulator starting at 0.0 stays 0.0, through many padding
+    slots, on every backend, for the flat AND the fused two-tier kernel."""
+    V, C, d, n = 12, 4, 16, 9
+    table = jnp.asarray(rng.normal(size=(V + 1, d)).astype(np.float32))
+    table = table.at[V].set(0.0)  # dead row as allocated by add_sentinel_row
+    accum = jnp.asarray(rng.uniform(0.1, 1.0, size=(V + 1, 1)).astype(np.float32))
+    accum = accum.at[V].set(0.0)
+    real = np.sort(rng.choice(V, size=3, replace=False)).astype(np.int32)
+    ids = jnp.asarray(np.concatenate([real, [V] * (n - 3)]).astype(np.int32))
+    grads = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)).at[3:].set(0.0)
+    for mode in ("jnp", "pallas_interpret"):
+        nt, na = ops.scatter_apply_adagrad(table, accum, ids, grads, 0.1, mode=mode)
+        assert np.asarray(na)[V, 0].item() == 0.0
+        np.testing.assert_array_equal(np.asarray(nt)[V], 0.0)
+    # the fused two-tier kernel inherits the same contract on BOTH sentinels
+    crows = jnp.asarray(rng.normal(size=(C + 1, d)).astype(np.float32)).at[C].set(0.0)
+    caccum = jnp.asarray(rng.uniform(0.1, 1.0, size=(C + 1, 1)).astype(np.float32)).at[C].set(0.0)
+    slot = jnp.asarray(np.full(n, C).astype(np.int32))  # all-dead hot stream
+    hot_g = jnp.zeros((n, d), jnp.float32)
+    for mode in ("jnp", "pallas_interpret"):
+        t2, a2, cr2, ca2 = ops.cached_scatter_apply(
+            table, accum, crows, caccum, slot, ids, hot_g, grads, 0.1, mode=mode
+        )
+        assert np.asarray(a2)[V, 0].item() == 0.0
+        assert np.asarray(ca2)[C, 0].item() == 0.0
+        np.testing.assert_array_equal(np.asarray(t2)[V], 0.0)
+        np.testing.assert_array_equal(np.asarray(cr2)[C], 0.0)
+
+
 def test_scatter_apply_empty_batch_noop(rng):
     """Regression: n == 0 used to build a grid=(0,) pallas_call and crash —
     the empty update must return table/accum unchanged on every backend."""

@@ -190,7 +190,7 @@ def test_shard_prefetcher_release_before_fault_leaks_no_pins(tmp_path, rng):
         pf.release(0)  # consumer gave up (timeout) before the pins existed
         release.set()
         assert pf.wait(0)
-    assert ws._pins == {}  # the late fault-in saw the release and skipped pinning
+    assert ws.pinned_ids().size == 0  # late fault-in saw the release, skipped pinning
 
 
 def test_working_set_fault_in_never_clobbers_dirty(tmp_path, rng):

@@ -1,0 +1,358 @@
+"""Open-addressing working set vs the reference dict implementation.
+
+The vectorized ``WorkingSetManager`` (numpy open-addressing id->slot table,
+stamp-based LRU) claims BEHAVIOR-IDENTICAL semantics to the dict-era
+implementation it replaced — same LRU order, same pinned-row rotation
+during eviction scans, same forced eviction when everything is pinned, same
+dirty write-back timing, same stats. This file keeps a verbatim copy of the
+dict implementation as the oracle and drives both through randomized op
+sequences (fault_in / gather / update / pin / unpin / flush / invalidate)
+over two stores initialized identically, asserting after every op:
+
+  * identical resident id sets (which implies identical eviction CHOICES —
+    any LRU-order divergence surfaces as a different victim within a few
+    ops at these window sizes),
+  * identical resident row/accum values and dirty sets,
+  * identical pinned sets and ``WorkingSetStats``,
+  * identical gather outputs,
+
+and at the end, identical shard-store contents after flush.
+"""
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.store import WorkingSetManager, create_store
+from repro.store.working_set import WorkingSetStats
+
+
+class DictWorkingSetManager:
+    """The pre-vectorization reference implementation (verbatim semantics:
+    OrderedDict LRU with move_to_end, per-id python walks)."""
+
+    def __init__(self, store, resident_rows: int):
+        self.store = store
+        self.resident_rows = int(resident_rows)
+        D = store.dim
+        self._rows = np.zeros((self.resident_rows, D), np.float32)
+        self._accums = np.zeros((self.resident_rows, 1), np.float32)
+        self._slot: OrderedDict[int, int] = OrderedDict()  # id -> slot, LRU order
+        self._free = list(range(self.resident_rows))
+        self._dirty = np.zeros((self.resident_rows,), bool)
+        self._pins: dict[int, int] = {}
+        self.stats = WorkingSetStats()
+
+    def __len__(self):
+        return len(self._slot)
+
+    def _alloc(self) -> int:
+        if self._free:
+            return self._free.pop()
+        for _ in range(len(self._slot)):
+            vid, slot = self._slot.popitem(last=False)
+            if self._pins.get(vid, 0) == 0:
+                break
+            self._slot[vid] = slot  # rotate pinned row to MRU, keep looking
+        else:
+            vid, slot = self._slot.popitem(last=False)
+            self._pins.pop(vid, None)
+        if self._dirty[slot]:
+            self.store.write_rows(
+                np.asarray([vid]), self._rows[slot : slot + 1], self._accums[slot : slot + 1]
+            )
+            self._dirty[slot] = False
+            self.stats.dirty_writebacks += 1
+        self.stats.evictions += 1
+        return slot
+
+    def _install(self, rid, row, accum, *, dirty):
+        slot = self._slot.get(rid)
+        if slot is None:
+            slot = self._alloc()
+            self._slot[rid] = slot
+        else:
+            self._slot.move_to_end(rid)
+        self._rows[slot] = row
+        self._accums[slot] = accum
+        self._dirty[slot] = dirty or self._dirty[slot]
+
+    def fault_in(self, ids, *, prefetch=False, pin=False):
+        uniq = np.unique(np.asarray(ids, np.int64))
+        missing = [int(i) for i in uniq if int(i) not in self._slot]
+        n_read = 0
+        if missing:
+            rows, accums = self.store.read_rows(np.asarray(missing))
+            for k, rid in enumerate(missing):
+                if rid in self._slot:
+                    continue
+                self._install(rid, rows[k], accums[k], dirty=False)
+                n_read += 1
+            if prefetch:
+                self.stats.prefetch_faults += n_read
+            else:
+                self.stats.demand_faults += n_read
+        if pin:
+            for i in uniq:
+                rid = int(i)
+                if rid in self._slot:
+                    self._pins[rid] = self._pins.get(rid, 0) + 1
+        return n_read
+
+    def pin(self, ids):
+        for i in np.unique(np.asarray(ids, np.int64)):
+            rid = int(i)
+            if rid in self._slot:
+                self._pins[rid] = self._pins.get(rid, 0) + 1
+
+    def unpin(self, ids):
+        for i in np.unique(np.asarray(ids, np.int64)):
+            rid = int(i)
+            c = self._pins.get(rid, 0)
+            if c <= 1:
+                self._pins.pop(rid, None)
+            else:
+                self._pins[rid] = c - 1
+
+    def gather(self, ids, *, count=True, install=True):
+        ids = np.asarray(ids, np.int64)
+        n = ids.shape[0]
+        rows = np.empty((n, self.store.dim), np.float32)
+        accums = np.empty((n, 1), np.float32)
+        miss_pos = []
+        for k in range(n):
+            rid = int(ids[k])
+            slot = self._slot.get(rid)
+            if slot is None:
+                miss_pos.append(k)
+            else:
+                rows[k] = self._rows[slot]
+                accums[k] = self._accums[slot]
+                if install:
+                    self._slot.move_to_end(rid)
+        if count:
+            self.stats.covered_reads += n - len(miss_pos)
+            self.stats.sync_faults += len(miss_pos)
+        if miss_pos:
+            miss_ids = ids[miss_pos]
+            uniq, inv = np.unique(miss_ids, return_inverse=True)
+            u_rows, u_accums = self.store.read_rows(uniq)
+            if install:
+                for k, rid in enumerate(uniq):
+                    self._install(int(rid), u_rows[k], u_accums[k], dirty=False)
+            rows[miss_pos] = u_rows[inv]
+            accums[miss_pos] = u_accums[inv]
+        return rows, accums
+
+    def update(self, ids, rows, accums, *, insert=True):
+        ids = np.asarray(ids, np.int64)
+        through = []
+        for k in range(ids.shape[0]):
+            rid = int(ids[k])
+            if not insert and rid not in self._slot:
+                through.append(k)
+            else:
+                self._install(rid, rows[k], accums[k], dirty=True)
+        if through:
+            self.store.write_rows(
+                ids[through], np.asarray(rows)[through], np.asarray(accums)[through]
+            )
+
+    def invalidate(self):
+        self._slot.clear()
+        self._free = list(range(self.resident_rows))
+        self._dirty[:] = False
+        self._pins.clear()
+
+    def flush(self):
+        slots = [(rid, s) for rid, s in self._slot.items() if self._dirty[s]]
+        if slots:
+            ids = np.asarray([rid for rid, _ in slots])
+            sl = np.asarray([s for _, s in slots])
+            self.store.write_rows(ids, self._rows[sl], self._accums[sl])
+            self._dirty[sl] = False
+            self.stats.dirty_writebacks += len(slots)
+        self.store.flush()
+        return len(slots)
+
+    # state inspection for the parity assertions
+    def resident(self):
+        return np.sort(np.fromiter(self._slot.keys(), np.int64, len(self._slot)))
+
+    def dirty_ids(self):
+        return np.sort(
+            np.asarray([rid for rid, s in self._slot.items() if self._dirty[s]], np.int64)
+        )
+
+    def pinned(self):
+        return np.sort(np.asarray(sorted(self._pins.keys()), np.int64))
+
+    def value_of(self, rid):
+        s = self._slot[int(rid)]
+        return self._rows[s].copy(), self._accums[s].copy()
+
+
+def _vec_state(ws: WorkingSetManager):
+    occ = ws._slot_id >= 0
+    resident = np.sort(ws._slot_id[occ])
+    dirty = np.sort(ws._slot_id[occ & ws._dirty])
+    return resident, dirty
+
+
+def _assert_same_state(vec: WorkingSetManager, ref: DictWorkingSetManager, ctx: str):
+    v_res, v_dirty = _vec_state(vec)
+    np.testing.assert_array_equal(v_res, ref.resident(), err_msg=f"resident sets ({ctx})")
+    np.testing.assert_array_equal(v_dirty, ref.dirty_ids(), err_msg=f"dirty sets ({ctx})")
+    np.testing.assert_array_equal(vec.pinned_ids(), ref.pinned(), err_msg=f"pins ({ctx})")
+    assert vec.stats.as_dict() == ref.stats.as_dict(), f"stats ({ctx})"
+    assert len(vec) == len(ref), f"len ({ctx})"
+    for rid in ref.resident():
+        slot = vec._lookup(np.asarray([rid], np.int64))[0]
+        r_row, r_acc = ref.value_of(rid)
+        np.testing.assert_array_equal(vec._rows[slot], r_row, err_msg=f"row {rid} ({ctx})")
+        np.testing.assert_array_equal(vec._accums[slot], r_acc, err_msg=f"accum {rid} ({ctx})")
+
+
+def _make_pair(tmp_path, rng, V, D, resident, tag):
+    rows = rng.normal(size=(V, D)).astype(np.float32)
+    accums = rng.uniform(size=(V,)).astype(np.float32)
+    s_vec = create_store(str(tmp_path / f"vec_{tag}"), rows, accums, num_shards=4)
+    s_ref = create_store(str(tmp_path / f"ref_{tag}"), rows, accums, num_shards=4)
+    return WorkingSetManager(s_vec, resident), DictWorkingSetManager(s_ref, resident)
+
+
+def _random_ops(rng, V, n_ops, D, *, p_pin=0.15):
+    """One op stream both implementations replay identically."""
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(
+            ["fault_in", "gather", "update", "update_wt", "pin", "unpin", "flush"],
+            p=[0.2, 0.3, 0.2, 0.05, p_pin, 0.05, 0.05],
+        )
+        k = int(rng.integers(1, 9))
+        ids = rng.integers(0, V, size=k).astype(np.int64)
+        if kind in ("update", "update_wt"):
+            ids = np.unique(ids)  # update contract: ids unique
+            payload = (
+                rng.normal(size=(len(ids), D)).astype(np.float32),
+                rng.uniform(size=(len(ids), 1)).astype(np.float32),
+            )
+        else:
+            payload = None
+        flags = (bool(rng.random() < 0.5), bool(rng.random() < 0.5))
+        ops.append((kind, ids, payload, flags))
+    return ops
+
+
+def _apply(ws, kind, ids, payload, flags):
+    if kind == "fault_in":
+        return ws.fault_in(ids, prefetch=flags[0], pin=flags[1])
+    if kind == "gather":
+        return ws.gather(ids, count=flags[0], install=flags[1])
+    if kind == "update":
+        return ws.update(ids, payload[0], payload[1], insert=True)
+    if kind == "update_wt":
+        return ws.update(ids, payload[0], payload[1], insert=False)
+    if kind == "pin":
+        return ws.pin(ids)
+    if kind == "unpin":
+        return ws.unpin(ids)
+    if kind == "flush":
+        return ws.flush()
+    raise AssertionError(kind)
+
+
+@pytest.mark.parametrize("resident", [2, 3, 8, 32])
+def test_randomized_op_sequence_parity(tmp_path, rng, resident):
+    V, D, n_ops = 64, 4, 120
+    vec, ref = _make_pair(tmp_path, rng, V, D, resident, f"r{resident}")
+    ops = _random_ops(rng, V, n_ops, D)
+    for i, (kind, ids, payload, flags) in enumerate(ops):
+        got = _apply(vec, kind, ids, payload, flags)
+        want = _apply(ref, kind, ids, payload, flags)
+        if kind in ("fault_in", "flush"):
+            assert got == want, f"op {i} ({kind}) return"
+        elif kind == "gather":
+            np.testing.assert_array_equal(got[0], want[0], err_msg=f"op {i} gather rows")
+            np.testing.assert_array_equal(got[1], want[1], err_msg=f"op {i} gather accums")
+        _assert_same_state(vec, ref, f"op {i} ({kind})")
+    # end state: flush both, the shard stores must agree byte-for-byte
+    vec.flush()
+    ref.flush()
+    np.testing.assert_array_equal(vec.store.read_all()[0], ref.store.read_all()[0])
+    np.testing.assert_array_equal(vec.store.read_all()[1], ref.store.read_all()[1])
+
+
+def test_all_pinned_forced_eviction_parity(tmp_path, rng):
+    """Window smaller than the pinned set: the forced true-LRU eviction
+    (and its pin drop) must match the dict scan exactly."""
+    V, D, resident = 32, 4, 3
+    vec, ref = _make_pair(tmp_path, rng, V, D, resident, "pinned")
+    for ws in (vec, ref):
+        ws.fault_in(np.arange(6), prefetch=True, pin=True)  # > window, all pinned
+    _assert_same_state(vec, ref, "after pinned overflow")
+    for ws in (vec, ref):
+        ws.fault_in(np.asarray([10, 11]))  # forced evictions of pinned LRU
+    _assert_same_state(vec, ref, "after forced eviction")
+    for ws in (vec, ref):
+        ws.unpin(np.arange(6))
+        ws.gather(np.arange(6))
+    _assert_same_state(vec, ref, "after unpin + regather")
+
+
+def test_invalidate_parity(tmp_path, rng):
+    V, D, resident = 32, 4, 8
+    vec, ref = _make_pair(tmp_path, rng, V, D, resident, "inval")
+    for ws in (vec, ref):
+        ws.fault_in(np.arange(8))
+        ws.update(np.arange(4), np.ones((4, D), np.float32), np.ones((4, 1), np.float32))
+        ws.invalidate()
+    _assert_same_state(vec, ref, "after invalidate")
+    for ws in (vec, ref):
+        ws.gather(np.arange(12))  # rebuild from (unchanged) shards
+    _assert_same_state(vec, ref, "after regather")
+
+
+def test_rotation_interleaves_with_installs(tmp_path, rng):
+    """Pinned rows older than a victim rotate to MRU during the eviction
+    scan — their rotated position relative to same-batch installs decides
+    later victims. Constructed so the stamp merge is actually exercised."""
+    V, D, resident = 64, 4, 6
+    vec, ref = _make_pair(tmp_path, rng, V, D, resident, "rot")
+    for ws in (vec, ref):
+        ws.fault_in(np.asarray([0]))          # LRU-most
+        ws.fault_in(np.asarray([1]), pin=True)  # pinned, older than victims
+        ws.fault_in(np.asarray([2, 3, 4, 5]))
+    _assert_same_state(vec, ref, "seeded")
+    for ws in (vec, ref):
+        ws.fault_in(np.asarray([10, 11, 12]))  # evicts 0,2,3; rotates 1
+    _assert_same_state(vec, ref, "after rotating evictions")
+    for ws in (vec, ref):
+        ws.fault_in(np.asarray([20, 21, 22]))  # next victims depend on rotation
+    _assert_same_state(vec, ref, "after follow-up evictions")
+
+
+def test_gather_update_have_no_per_id_python_loop():
+    """Guard the vectorization claim structurally: the hot-path methods
+    must not iterate python-level over ids (the dict-era pattern was
+    ``for k in range(n)`` / dict walks). The only sanctioned per-row loop
+    is the eviction-overflow replay in _install_absent/_update_one."""
+    import ast
+    import inspect
+    import textwrap
+
+    def loops(meth):
+        tree = ast.parse(textwrap.dedent(inspect.getsource(meth)))
+        return [
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.For, ast.While, ast.comprehension))
+        ]
+
+    assert not loops(WorkingSetManager.gather)
+    assert not loops(WorkingSetManager._pin_locked)
+    # update's only statement-level loop is the eviction-overflow replay
+    upd_for = [
+        n for n in ast.walk(ast.parse(textwrap.dedent(inspect.getsource(WorkingSetManager.update))))
+        if isinstance(n, (ast.For, ast.While))
+    ]
+    assert len(upd_for) == 1
