@@ -15,16 +15,23 @@ fresh temp directory, and reports:
   * ``hot_hit_rate`` — the device hot tier still serves the skew head.
   * ``us/step`` — median wall-clock per step (CPU: includes device compute;
     the structural signal is the traffic).
-  * ``host_us_per_step`` — host CPU inside the working-set gather +
-    write-back path only (prefetch wait excluded): the number the
-    open-addressing id->slot map drives down vs the dict-walk era, reported
-    so the speedup stays visible in the perf trajectory.
+  * ``host_us_per_step`` — host CPU on the step CRITICAL PATH (working-set
+    gather + write-back barrier waits, prefetch wait excluded), with the
+    double-buffered write-back and the device slice ring ENABLED — the
+    production configuration. ``host_us_per_step_sync`` is the same run
+    with both disabled (synchronous commit, every cold lane re-uploaded),
+    and ``wb_overlap_speedup`` their ratio: the acceptance signal that the
+    overlap actually removes the commit from the critical path.
+  * ``ring_hit_rate`` / ``pcie_mb_saved_model`` — fraction of cold-lane
+    reads served by the device slice ring (each one skips the host gather
+    AND its (D+1)*4-byte modeled PCIe upload; savings fraction == hit
+    rate, the same modeled-traffic accounting BENCH_kernels uses for HBM).
 
 CSV rows via benchmarks.common.emit:
   store/alpha<a>/budget1_<f>,<us>,coverage=<c>;sync_faults=<n>;evict=<n>;readMB=<m>
 
 ``BENCH_store.json`` (benchmarks.common.write_json) carries the same
-numbers machine-readably for the perf trajectory.
+numbers machine-readably for the perf trajectory (CI quick lane artifact).
 """
 from __future__ import annotations
 
@@ -43,8 +50,15 @@ from repro.data.synth import DLRMStream
 from repro.runtime import dlrm_train
 
 
-# the one definition of the reduced CI sweep (run.py --quick and --quick here)
-QUICK = dict(rows=4096, steps=32, batch=32, pooling=8, alphas=(1.05,), budget_fracs=(8,))
+# the one definition of the reduced CI sweep (run.py --quick and --quick
+# here). Sized so the per-step cold working set is real numpy work (not
+# python overhead): that is the regime where the double-buffered write-back
+# measurably shortens the host critical path (acceptance: host_us_per_step
+# improves vs the synchronous commit at this point).
+QUICK = dict(
+    rows=16384, steps=24, batch=128, pooling=16, emb_dim=64,
+    promote_every=12, alphas=(1.05,), budget_fracs=(8,),
+)
 
 
 def bench_config(rows: int, pooling: int, emb_dim: int) -> DLRMConfig:
@@ -60,7 +74,8 @@ def bench_config(rows: int, pooling: int, emb_dim: int) -> DLRMConfig:
 
 
 def _run_streamed(
-    cfg, *, alpha, batch, steps, capacity, resident_rows, promote_every, warmup_frac=0.25
+    cfg, *, alpha, batch, steps, capacity, resident_rows, promote_every,
+    warmup_frac=0.25, ring_depth=2, overlap_write_back=True,
 ):
     stream = DLRMStream(
         num_tables=1, rows_per_table=cfg.rows_per_table,
@@ -71,7 +86,8 @@ def _run_streamed(
     )
     with tempfile.TemporaryDirectory(prefix="store_bench_") as d:
         state, streamed = dlrm_train.init_streamed(
-            cfg, jax.random.key(0), d, capacity=capacity, resident_rows=resident_rows
+            cfg, jax.random.key(0), d, capacity=capacity, resident_rows=resident_rows,
+            ring_depth=ring_depth, overlap_write_back=overlap_write_back,
         )
         step_fn = dlrm_train.make_streamed_train_step(cfg, streamed)
         promote = dlrm_train.make_streamed_promote(streamed)
@@ -117,14 +133,33 @@ def run(
         per_budget = {}
         for frac in budget_fracs:
             resident = max(1, rows // frac)
+            # production config: double-buffered write-back + slice ring
             med_us, hot_hit, stats = _run_streamed(
                 cfg, alpha=alpha, batch=batch, steps=steps,
                 capacity=capacity, resident_rows=resident, promote_every=promote_every,
             )
+            # comparison point: synchronous commit, no ring (the PR 3/4 path)
+            med_us_sync, _, stats_sync = _run_streamed(
+                cfg, alpha=alpha, batch=batch, steps=steps,
+                capacity=capacity, resident_rows=resident, promote_every=promote_every,
+                ring_depth=0, overlap_write_back=False,
+            )
+            host_us = stats["host_us_per_step"]
+            host_us_sync = stats_sync["host_us_per_step"]
+            # each ring hit skips one (D+1)-float32 lane of the host->device
+            # slice upload: modeled PCIe savings == ring hit rate
+            pcie_mb_saved = stats["ring_hits"] * (emb_dim + 1) * 4 / 1e6
             per_budget[str(frac)] = {
                 "resident_rows": resident,
                 "us_per_step": med_us,
-                "host_us_per_step": stats["host_us_per_step"],
+                "us_per_step_sync": med_us_sync,
+                "host_us_per_step": host_us,
+                "host_us_per_step_sync": host_us_sync,
+                "wb_overlap_speedup": host_us_sync / host_us if host_us else float("nan"),
+                "host_wb_wait_us_per_step": stats["host_wb_wait_s"] / max(1, steps) * 1e6,
+                "ring_hit_rate": stats["ring_hit_rate"],
+                "ring_hits": stats["ring_hits"],
+                "pcie_mb_saved_model": pcie_mb_saved,
                 "hot_hit_rate": hot_hit,
                 "prefetch_coverage": stats["prefetch_coverage"],
                 "cold_reads": stats["cold_reads"],
@@ -139,7 +174,10 @@ def run(
                 f"sync_faults={stats['sync_faults']};"
                 f"evict={stats['evictions']};"
                 f"readMB={stats['bytes_read'] / 1e6:.2f};"
-                f"host_us_per_step={stats['host_us_per_step']:.1f}",
+                f"host_us_per_step={host_us:.1f};"
+                f"host_us_per_step_sync={host_us_sync:.1f};"
+                f"ring_hit_rate={stats['ring_hit_rate']:.4f};"
+                f"pcieMBsaved={pcie_mb_saved:.2f}",
             )
         results[str(alpha)] = per_budget
     write_json("store", {

@@ -18,12 +18,14 @@ out by ``split_update_tiers``). See docs/cache.md for both dataflows.
 from repro.cache.hotcache import (  # noqa: F401
     HotRowCache,
     TierSplit,
+    UpdateLaneSplit,
     UpdateTierSplit,
     demote_all,
     init_hot_cache,
     promote_evict,
     resolve,
     split_tiers,
+    split_update_lanes,
     split_update_tiers,
     write_back,
 )

@@ -110,6 +110,52 @@ class UpdateTierSplit(NamedTuple):
     cold_grads: Array  # (n, D) permuted; zero on every non-real-cold lane
 
 
+class _UpdateSplitParts(NamedTuple):
+    """Shared machinery of both update splits: one resolve, the stable
+    partitions, and the compacted hot stream + cold gradients. The ONLY
+    thing that differs between ``split_update_tiers`` and
+    ``split_update_lanes`` is how the cold stream is keyed (table rows vs
+    slice lanes), built by each from ``cold_order``/``cold_keep``."""
+
+    slots: Array
+    hit: Array
+    ids32: Array
+    cold_order: Array
+    cold_keep: Array
+    hot_slot: Array
+    hot_grads: Array
+    cold_grads: Array
+
+
+def _split_update_parts(
+    cache_ids: Array, unique_ids: Array, grads: Array, num_rows: int
+) -> _UpdateSplitParts:
+    slots, hit = resolve(cache_ids, unique_ids)
+    ids32 = unique_ids.astype(jnp.int32)
+    real = ids32 < num_rows
+    hit32 = hit.astype(jnp.int32)
+    dead_slot = cache_ids.shape[0] - 1
+    # stable partition keys: 0 sorts first. Hot stream keeps hits in front
+    # (ascending slots); cold stream keeps misses in front (ascending ids).
+    hot_order = jnp.argsort(1 - hit32, stable=True)
+    cold_order = jnp.argsort(hit32, stable=True)
+    hot_keep = jnp.take(hit & real, hot_order)
+    cold_keep = jnp.take(~hit & real, cold_order)
+    zero = jnp.zeros((), grads.dtype)
+    return _UpdateSplitParts(
+        slots=slots,
+        hit=hit,
+        ids32=ids32,
+        cold_order=cold_order,
+        cold_keep=cold_keep,
+        hot_slot=jnp.where(
+            jnp.take(hit, hot_order), jnp.take(slots, hot_order), dead_slot
+        ).astype(jnp.int32),
+        hot_grads=jnp.where(hot_keep[:, None], jnp.take(grads, hot_order, axis=0), zero),
+        cold_grads=jnp.where(cold_keep[:, None], jnp.take(grads, cold_order, axis=0), zero),
+    )
+
+
 def split_update_tiers(
     cache_ids: Array, unique_ids: Array, grads: Array, num_rows: int
 ) -> UpdateTierSplit:
@@ -124,27 +170,66 @@ def split_update_tiers(
     lanes are zeroed, so sentinel rows/slots see exact no-op RMWs — the
     property that keeps the fused kernel bit-identical to the reference
     (and sentinel accumulators pinned at 0)."""
-    slots, hit = resolve(cache_ids, unique_ids)
-    ids32 = unique_ids.astype(jnp.int32)
-    real = ids32 < num_rows
-    hit32 = hit.astype(jnp.int32)
-    dead_slot = cache_ids.shape[0] - 1
-    # stable partition keys: 0 sorts first. Hot stream keeps hits in front
-    # (ascending slots); cold stream keeps misses in front (ascending ids).
-    hot_order = jnp.argsort(1 - hit32, stable=True)
-    cold_order = jnp.argsort(hit32, stable=True)
-    hot_keep = jnp.take(hit & real, hot_order)
-    cold_keep = jnp.take(~hit & real, cold_order)
-    zero = jnp.zeros((), grads.dtype)
+    p = _split_update_parts(cache_ids, unique_ids, grads, num_rows)
     return UpdateTierSplit(
-        hot_slot=jnp.where(
-            jnp.take(hit, hot_order), jnp.take(slots, hot_order), dead_slot
-        ).astype(jnp.int32),
-        hot_grads=jnp.where(hot_keep[:, None], jnp.take(grads, hot_order, axis=0), zero),
+        hot_slot=p.hot_slot,
+        hot_grads=p.hot_grads,
         cold_id=jnp.where(
-            jnp.take(hit, cold_order), num_rows, jnp.take(ids32, cold_order)
+            jnp.take(p.hit, p.cold_order), num_rows, jnp.take(p.ids32, p.cold_order)
         ),
-        cold_grads=jnp.where(cold_keep[:, None], jnp.take(grads, cold_order, axis=0), zero),
+        cold_grads=p.cold_grads,
+    )
+
+
+class UpdateLaneSplit(NamedTuple):
+    """``split_update_tiers``'s sibling for the STREAMED cold layout
+    (runtime ``tc_streamed``): the cold tier there is not a (V+1, D) table
+    but the per-step gathered slice, whose update stream is keyed by slice
+    LANE index (lane i holds unique id ``unique_ids[i]``), padded with one
+    dead lane ``n``. Naive lane redirection (``where(hit, n, arange(n))``)
+    interleaves dead lanes out of order and carries live gradients — the
+    same scatter-layout violation redirection caused on the tiered path.
+    This split re-sorts/compacts both streams back into the kernel-legal
+    layout, so the SAME fused cached-scatter kernel applies unchanged with
+    the dead-lane-padded slice standing in for the table."""
+
+    hot_slot: Array  # (n,) int32 sorted: real hot slots, then sentinel slots
+    hot_grads: Array  # (n, D) permuted; zero on every non-real-hot lane
+    cold_lane: Array  # (n,) int32 sorted: real cold LANES, then dead lane n
+    cold_grads: Array  # (n, D) permuted; zero on every non-real-cold lane
+    cold_ids: Array  # (n,) int32 sorted real cold TABLE rows, sentinel-padded
+    hit: Array  # (n,) bool in LANE order — the resolve the split was built
+    # from, exported so callers (hit_seg, ring-hit metrics) can never
+    # desynchronize from the streams the kernel consumed
+
+
+def split_update_lanes(
+    cache_ids: Array, unique_ids: Array, grads: Array, num_rows: int
+) -> UpdateLaneSplit:
+    """Lane->row compaction for the streamed cold slice (see UpdateLaneSplit).
+
+    ``unique_ids`` must be the ascending casted unique ids (sentinel
+    ``num_rows`` padding at the tail) and ``grads`` the matching (n, D)
+    coalesced rows — slice lane ``i`` holds the row for ``unique_ids[i]``,
+    so ascending lanes ARE ascending table rows and one stable partition
+    restores both tiers' sorted/unique/zero-pad scatter contract: hits keep
+    ascending slots at the front of the hot stream, misses keep ascending
+    lanes at the front of the cold stream, and the other tier's lanes (plus
+    sentinel padding, which resolves hot by the ``resolve`` contract)
+    collapse to zero-gradient dead-sentinel tails. ``cold_ids`` is the same
+    cold stream keyed by TABLE row (what the lanes re-key back to) — the
+    sorted identity of this batch's updated cold rows, which the slice ring
+    stores as its per-entry directory."""
+    p = _split_update_parts(cache_ids, unique_ids, grads, num_rows)
+    n = unique_ids.shape[0]
+    lanes = jnp.arange(n, dtype=jnp.int32)
+    return UpdateLaneSplit(
+        hot_slot=p.hot_slot,
+        hot_grads=p.hot_grads,
+        cold_lane=jnp.where(p.cold_keep, jnp.take(lanes, p.cold_order), n).astype(jnp.int32),
+        cold_grads=p.cold_grads,
+        cold_ids=jnp.where(p.cold_keep, jnp.take(p.ids32, p.cold_order), num_rows),
+        hit=p.hit,
     )
 
 

@@ -26,7 +26,13 @@ Four design points from the paper's evaluation (§VI), selectable as
                         bounded host working set; the device step receives a
                         static-shape gathered slice of the batch's unique
                         cold rows (+ accumulators) and returns their updated
-                        values for host write-back. Hot tier + EMA as in
+                        values for host write-back. The device step is fully
+                        fused like ``tc_cached`` (cached-gather forward /
+                        lane-compacted cached-scatter backward over the
+                        dead-lane-padded slice), the write-back commits on a
+                        background thread overlapped with the next step, and
+                        a device-side ring of recent slices serves re-faulted
+                        rows without re-upload. Hot tier + EMA as in
                         ``tc_cached``. Bit-identical to ``tc`` with any
                         resident budget >= 1 — use ``init_streamed`` +
                         ``make_streamed_train_step`` (host driver), not the
@@ -49,6 +55,7 @@ from repro.cache.hotcache import (
     init_hot_cache,
     promote_evict,
     resolve,
+    split_update_lanes,
     write_back,
 )
 from repro.cache.stats import fold_counts, segment_counts
@@ -129,11 +136,13 @@ def make_sparse_train_step(
     # tc pins the reference path; tc_nmp, tc_cached and tc_streamed
     # auto-dispatch (Mosaic on TPU, jnp on CPU, pallas_interpret under the
     # tests' pinned default — kernel equivalence is covered by
-    # interpret-mode tests). tc_cached is fully fused: the forward routes
-    # through the cached-gather kernel and the backward tier-split update
-    # through the cached-scatter kernel (split_update_tiers restores the
-    # scatter layout contract), so under a Pallas-resolving mode neither
-    # direction falls back to jnp.
+    # interpret-mode tests). tc_cached AND tc_streamed are fully fused:
+    # the forward routes through the cached-gather kernel and the backward
+    # tier-split update through the cached-scatter kernel — tc_cached via
+    # split_update_tiers, tc_streamed via its lane-keyed sibling
+    # split_update_lanes with the dead-lane-padded cold slice standing in
+    # for the table — so under a Pallas-resolving mode neither system
+    # falls back to jnp in either direction.
     kernel_mode = {
         "baseline": None, "tc": "jnp", "tc_nmp": None,
         "tc_cached": None, "tc_streamed": None,
@@ -200,28 +209,77 @@ def make_sparse_train_step(
         elif system == "tc_streamed":
             # capacity hierarchy: cold rows arrive as a host-gathered
             # static-shape slice aligned with the cast's unique_ids; the
-            # device owns only the hot tier. Updated cold lanes are returned
-            # to the host for write-back through the working set.
+            # device owns only the hot tier (plus, optionally, a ring of
+            # recent cold slices). Updated cold lanes are returned to the
+            # host for write-back through the working set.
             cids, crows, caccums = state["cache_ids"], state["cache_rows"], state["cache_accums"]
             ema = state["ema"]
             cast = batch["cast"]
             B, T, P = batch["idx"].shape
+            V = cfg.rows_per_table
             dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
 
+            cold_rows_in = batch["cold_rows"]
+            cold_accums_in = batch["cold_accums"]
+            has_ring = "ring_ids" in state
+            if has_ring:
+                # device-side slice ring: lanes whose id was updated in one
+                # of the last K steps are served from that step's retained
+                # (and therefore current) device copy — the host skipped
+                # their gather and their PCIe upload (their slice lanes are
+                # zero). Entries' id arrays are sorted with sentinel-V
+                # tails (split_update_lanes.cold_ids), so membership is one
+                # searchsorted per entry; walking oldest -> newest and
+                # overwriting makes the newest copy win, which is what
+                # keeps a row updated on step N from being served stale on
+                # step N+1 (write-invalidate semantics without mutating
+                # older entries).
+                ring_pos = state["ring_pos"]
+                Kr = state["ring_ids"].shape[0]
+
+                def ring_one(r_ids, r_rows, r_accums, uids, cold_r, cold_a):
+                    rows, accums = cold_r, cold_a
+                    found = jnp.zeros(uids.shape, bool)
+                    for j in range(Kr):
+                        k = (ring_pos + j) % Kr  # oldest entry first
+                        e_ids = jax.lax.dynamic_index_in_dim(r_ids, k, 0, keepdims=False)
+                        e_rows = jax.lax.dynamic_index_in_dim(r_rows, k, 0, keepdims=False)
+                        e_acc = jax.lax.dynamic_index_in_dim(r_accums, k, 0, keepdims=False)
+                        pos = jnp.searchsorted(e_ids, uids).astype(jnp.int32)
+                        pos = jnp.minimum(pos, e_ids.shape[0] - 1)
+                        e_hit = (jnp.take(e_ids, pos) == uids) & (uids < V)
+                        rows = jnp.where(e_hit[:, None], jnp.take(e_rows, pos, axis=0), rows)
+                        accums = jnp.where(e_hit[:, None], jnp.take(e_acc, pos, axis=0), accums)
+                        found = found | e_hit
+                    return rows, accums, found
+
+                cold_rows_in, cold_accums_in, ring_found = jax.vmap(
+                    ring_one, in_axes=(1, 1, 1, 0, 0, 0)
+                )(
+                    state["ring_ids"], state["ring_rows"], state["ring_accums"],
+                    cast["unique_ids"], cold_rows_in, cold_accums_in,
+                )
+
             def fwd_one(ci, cr, ids, seg, cold_r):
-                # per-lookup rows: hot from the cache, cold from the slice
-                # via the host's lookup->segment map — bit-equal to
-                # jnp.take(table, ids) on a flat table, so the segment_sum
+                # fused two-tier bag gather over the dead-lane-padded slice:
+                # the slice stands in for the table (cold_src = the host's
+                # lookup->segment map; hits redirect to the dead lane n),
+                # hot rows come from the VMEM-resident cache — bit-equal to
+                # jnp.take(table, ids) + segment_sum on a flat table, so it
                 # matches the tc forward exactly.
                 slots, hit = resolve(ci, ids.reshape(-1))
-                hot = jnp.take(cr, slots, axis=0)
-                cold = jnp.take(cold_r, seg, axis=0)
-                rows = jnp.where(hit[:, None], hot, cold)
-                pooled = jax.ops.segment_sum(rows, dst, num_segments=B)
+                n = cold_r.shape[0]
+                pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
+                pooled = ops.cached_gather_reduce(
+                    pad_r, cr,
+                    jnp.where(hit, slots, ci.shape[0] - 1).astype(jnp.int32),
+                    jnp.where(hit, n, seg).astype(jnp.int32),
+                    dst, hit.astype(jnp.int32), B, mode=kernel_mode,
+                )
                 return pooled, jnp.mean(hit.astype(jnp.float32))
 
             emb, hits = jax.vmap(fwd_one, in_axes=(0, 0, 1, 0, 0), out_axes=(1, 0))(
-                cids, crows, batch["idx"], cast["lookup_seg"], batch["cold_rows"]
+                cids, crows, batch["idx"], cast["lookup_seg"], cold_rows_in
             )
             hit_rate = jnp.mean(hits)
             loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
@@ -233,37 +291,44 @@ def make_sparse_train_step(
 
             def upd_one(ci, cr, ca, cold_r, cold_a, e, d_e, c_src, c_dst, uids, nuniq, cnt):
                 coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
-                slots, hit = resolve(ci, uids)
-                # hot tier: redirected scatter (misses -> dead slot C).
-                # Still pinned jnp: the slice-aligned cold layout below
-                # keys ids by LANE index, not table row, so it cannot
-                # reuse split_update_tiers / the fused cached-scatter the
-                # way tc_cached's update now does (ROADMAP follow-on).
-                hot_ids = jnp.where(hit, slots, ci.shape[0] - 1)
-                cr2, ca2 = ops.scatter_apply_adagrad(cr, ca, hot_ids, coal, lr, mode="jnp")
-                # cold tier: the SAME scatter-apply primitive, run on the
-                # gathered slice padded with one dead row n. Each real cold
-                # unique id occupies exactly one lane (ids = lane index);
-                # hot and padding lanes redirect to the dead row, which
-                # absorbs them and is sliced off. Using the primitive (not
-                # an elementwise rewrite) keeps the op sequence — and
-                # therefore the rounding, no FMA refusion — bit-identical
-                # to the flat table update.
                 n = coal.shape[0]
-                slice_ids = jnp.where(hit, n, jnp.arange(n, dtype=jnp.int32))
+                # lane->row compaction: the slice's per-LANE update stream
+                # is re-sorted/compacted back into the scatter layout
+                # contract (ascending lanes ARE ascending table rows), so
+                # the SAME fused cached-scatter kernel updates both tiers
+                # in one pass — hot rows RMW'd in the VMEM cache block,
+                # cold rows in the dead-lane-padded slice standing in for
+                # the HBM table. Per-lane Adagrad math goes through the
+                # fusion-isolated helpers, so rounding stays bit-identical
+                # to the flat table update on every backend.
+                split = split_update_lanes(ci, uids, coal, V)
                 pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
                 pad_a = jnp.concatenate([cold_a, jnp.zeros((1, 1), cold_a.dtype)])
-                pad_r2, pad_a2 = ops.scatter_apply_adagrad(
-                    pad_r, pad_a, slice_ids, coal, lr, mode="jnp"
+                pad_r2, pad_a2, cr2, ca2 = ops.cached_scatter_apply(
+                    pad_r, pad_a, cr, ca,
+                    split.hot_slot, split.cold_lane, split.hot_grads, split.cold_grads,
+                    lr, mode=kernel_mode,
                 )
+                hit = split.hit  # the resolve the kernel streams were built from
                 e2 = fold_counts(e, decay, uids, cnt)
-                return cr2, ca2, pad_r2[:n], pad_a2[:n], hit.astype(jnp.int32), e2
+                # ring entry: this step's updated cold rows in compacted
+                # (sorted-by-table-row) order + their id directory
+                entry_rows = jnp.take(pad_r2, split.cold_lane, axis=0)
+                entry_accums = jnp.take(pad_a2, split.cold_lane, axis=0)
+                real_cold = (uids < V) & ~hit
+                return (
+                    cr2, ca2, pad_r2[:n], pad_a2[:n], hit.astype(jnp.int32),
+                    split.cold_ids, entry_rows, entry_accums, real_cold, e2,
+                )
 
-            crows, caccums, cold_rows_out, cold_accums_out, hit_seg, ema = jax.vmap(
+            (
+                crows, caccums, cold_rows_out, cold_accums_out, hit_seg,
+                entry_ids, entry_rows, entry_accums, real_cold, ema,
+            ) = jax.vmap(
                 upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
             )(
                 cids, crows, caccums,
-                batch["cold_rows"], batch["cold_accums"], ema,
+                cold_rows_in, cold_accums_in, ema,
                 d_emb,
                 cast["casted_src"],
                 cast["casted_dst"],
@@ -305,6 +370,19 @@ def make_sparse_train_step(
                 ema=ema, hit_rate=hit_rate,
             )
         if system == "tc_streamed":
+            if has_ring:
+                # push this step's entry into the round-robin slot (the
+                # oldest entry is overwritten) and report the fraction of
+                # real cold lanes the ring served this step
+                upd_ring = partial(jax.lax.dynamic_update_index_in_dim, index=ring_pos, axis=0)
+                n_cold = jnp.maximum(jnp.sum(real_cold), 1)
+                new_state.update(
+                    ring_ids=upd_ring(state["ring_ids"], update=entry_ids),
+                    ring_rows=upd_ring(state["ring_rows"], update=entry_rows),
+                    ring_accums=upd_ring(state["ring_accums"], update=entry_accums),
+                    ring_pos=(ring_pos + 1) % Kr,
+                    ring_hit_rate=jnp.sum(ring_found & real_cold) / n_cold,
+                )
             # aux payload for the host driver's working-set write-back
             return new_state, {
                 "loss": loss,
@@ -397,6 +475,8 @@ def init_streamed(
     resident_rows: int | None = None,
     num_shards: int = 8,
     prefetch: bool = True,
+    ring_depth: int = 2,
+    overlap_write_back: bool = True,
 ):
     """``init_cached_state``'s counterpart for ``system="tc_streamed"``.
 
@@ -406,7 +486,14 @@ def init_streamed(
     the device state holds only dense params, the hot tier and the EMA — the
     cold tier never resides on device. ``resident_rows`` is the host
     working-set budget (default rows/8; correctness holds for any budget
-    >= 1, streaming is only exercised when it is < rows)."""
+    >= 1, streaming is only exercised when it is < rows).
+
+    ``ring_depth`` keeps that many recent cold slices resident ON DEVICE so
+    re-faulted rows skip the PCIe upload (0 disables; the ring state is
+    allocated lazily by the driver once the lane width is known), and
+    ``overlap_write_back`` commits each step's cold lanes on a background
+    thread overlapped with the next step — both default on and both are
+    semantically free: training stays bit-identical to ``tc``."""
     from repro.store import StreamedTables
 
     s = init_sparse_system(cfg, key)
@@ -419,6 +506,7 @@ def init_streamed(
     streamed = StreamedTables.create(
         store_path, tables[:, :V], accums[:, :V],
         resident_rows=R, num_shards=min(num_shards, V), prefetch=prefetch,
+        ring_depth=ring_depth, overlap_write_back=overlap_write_back,
     )
     cache = init_hot_cache(C, D, V, jnp.float32)
     state = {
@@ -438,26 +526,63 @@ def make_streamed_train_step(cfg: DLRMConfig, streamed, *, lr: float = 0.01, dec
     ``step(state, batch, step_index=None) -> (state, loss)``.
 
     ``batch`` is the HOST batch (numpy, with ``cast`` from a CastingServer
-    configured with ``with_counts=True, with_lookup_seg=True``). The driver
-    waits on the step's prefetch, assembles the cold slice from the working
-    set (synchronous shard faults for anything missing — counted, never
-    wrong), runs the jitted device step, and writes the updated cold lanes
-    back through the store. ``step_index`` keys the prefetch barrier; pass
-    the pipeline's step id (None skips the wait)."""
+    configured with ``with_counts=True, with_lookup_seg=True``). Per step
+    the driver: (1) fences against the in-flight write-back only if its
+    uncommitted lanes overlap what this gather will read (with the ring on,
+    last step's updated rows are ring-served and skip the gather, so the
+    fence rarely fires); (2) waits on the step's prefetch and assembles the
+    cold slice from the working set (synchronous shard faults for anything
+    missing — counted, never wrong); (3) runs the jitted device step; and
+    (4) hands the updated cold lanes to the background write-back thread
+    (or commits synchronously when overlap is off) and rotates the ring
+    mirror. ``step_index`` keys the prefetch barrier; pass the pipeline's
+    step id (None skips the wait)."""
     device_step = make_sparse_train_step(cfg, lr=lr, system="tc_streamed", decay=decay)
+    V, D = streamed.num_rows, streamed.dim
+    K = streamed.ring_depth
 
     def step(state, batch, *, step_index=None):
         cast = batch["cast"]
+        if "ring_ids" in state and int(state["ring_ids"].shape[0]) < K:
+            # a mirror SHALLOWER than the device ring only forgoes skipped
+            # gathers (the device still serves its hits, same values); a
+            # DEEPER one would skip lanes the device ring already evicted
+            raise ValueError(
+                f"state carries a depth-{int(state['ring_ids'].shape[0])} slice ring "
+                f"but the StreamedTables mirror is depth {K} — a mirror deeper than "
+                "the device ring would skip gathers for lanes the ring no longer "
+                "holds (open the store with ring_depth <= the state's)"
+            )
+        if K > 0 and "ring_ids" not in state:
+            # lazy ring allocation: the lane width is the cast's static
+            # unique-id width, known only once the first batch arrives
+            T, n = np.asarray(cast["unique_ids"]).shape
+            state = dict(
+                state,
+                ring_ids=jnp.full((K, T, n), V, jnp.int32),
+                ring_rows=jnp.zeros((K, T, n, D), jnp.float32),
+                ring_accums=jnp.zeros((K, T, n, 1), jnp.float32),
+                ring_pos=jnp.zeros((), jnp.int32),
+                ring_hit_rate=jnp.zeros((), jnp.float32),
+            )
+        streamed.write_back_barrier(cast)
         cold_rows, cold_accums = streamed.gather(step_index, cast)
+        # the gather is off the working-set lock: let the previous step's
+        # queued write-back commit now, overlapped with the device step
+        streamed.release_write_back()
         state, aux = device_step(
             state, dict(batch, cold_rows=cold_rows, cold_accums=cold_accums)
         )
-        streamed.write_back(
-            cast,
-            np.asarray(aux["cold_rows"]),
-            np.asarray(aux["cold_accums"]),
-            np.asarray(aux["hit_seg"]),
-        )
+        if streamed.overlap_write_back:
+            streamed.write_back_async(cast, aux)
+        else:
+            streamed.write_back(
+                cast,
+                np.asarray(aux["cold_rows"]),
+                np.asarray(aux["cold_accums"]),
+                np.asarray(aux["hit_seg"]),
+            )
+        streamed.ring_push(cast)
         return state, aux["loss"]
 
     return step
@@ -474,9 +599,17 @@ def make_streamed_promote(streamed):
     and promotion reads neither count nor install; only rows LEAVING the
     hot set enter the working set, since those are the ones future steps
     will actually read. The hot-set mirror is updated with exactly the ids
-    uploaded to the device cache (the consistency invariant)."""
+    uploaded to the device cache (the consistency invariant).
+
+    Fences: in-flight write-backs drain first (demotion and promotion reads
+    must see every committed row), and the slice ring is invalidated on
+    both sides — rows crossing the hot-tier boundary in either direction
+    make ring entries stale."""
+    from repro.store.streamed import ring_reset_state
 
     def promote(state):
+        streamed.drain_write_back()
+        state = ring_reset_state(state, streamed)
         C = state["cache_ids"].shape[1] - 1
         V = streamed.num_rows
         cids = np.asarray(state["cache_ids"])

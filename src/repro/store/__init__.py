@@ -23,5 +23,6 @@ from repro.store.streamed import (  # noqa: F401
     StreamedTables,
     demote_all_state,
     flush_state,
+    ring_reset_state,
 )
 from repro.store.working_set import WorkingSetManager, WorkingSetStats  # noqa: F401

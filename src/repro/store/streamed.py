@@ -18,15 +18,29 @@ Consistency rules (docs/store.md):
     ids. Gathered slice lanes that resolve hot on device are ignored there
     and skipped on write-back, so stale store copies of hot rows are never
     observable.
+  * With the slice ring enabled, the device additionally retains the last K
+    steps' updated cold lanes; the host mirror (``ring_push``/``_ring``)
+    tracks exactly those id sets, and ``gather`` skips mirrored lanes —
+    they are served (newest copy wins) on device, so they need neither the
+    working set nor the modeled PCIe upload.
   * ``write_back``/``demote`` use set-semantics updates into the working
-    set; eviction and ``flush`` move dirty rows to the shards. After
-    ``flush_state`` (demote-all + flush), the shard files alone hold the
-    complete table + accumulators — the checkpoint-coherent state.
+    set; eviction and ``flush`` move dirty rows to the shards. The
+    overlapped path (``write_back_async`` + the worker thread) commits
+    non-installing: still-resident rows update in place, already-evicted
+    rows write through to their shard — no eviction cascade under the
+    working-set lock. ``write_back_barrier`` fences a gather whose lanes
+    overlap an uncommitted job; ``drain_write_back`` is the full fence.
+  * After ``flush_state`` (drain + demote-all + ring reset + flush), the
+    shard files alone hold the complete table + accumulators — the
+    checkpoint-coherent state.
 """
 from __future__ import annotations
 
 import os
+import queue
+import threading
 import time
+from collections import deque
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -43,6 +57,18 @@ def _table_dir(path: str, t: int) -> str:
     return os.path.join(path, f"table_{t:03d}")
 
 
+def _isin_sorted(values: np.ndarray, sorted_ref: np.ndarray) -> np.ndarray:
+    """np.isin(values, sorted_ref) for an already-sorted reference — one
+    searchsorted instead of numpy's sort-based set machinery (the per-step
+    metadata path calls this several times; np.isin's overhead on these
+    small arrays was the dominant host cost)."""
+    if sorted_ref.size == 0:
+        return np.zeros(values.shape, bool)
+    pos = np.searchsorted(sorted_ref, values)
+    pos = np.minimum(pos, sorted_ref.size - 1)
+    return sorted_ref[pos] == values
+
+
 class StreamedTables:
     def __init__(
         self,
@@ -50,14 +76,57 @@ class StreamedTables:
         *,
         resident_rows: int,
         prefetch: bool = True,
+        ring_depth: int = 0,
+        overlap_write_back: bool = False,
     ):
         if not stores:
             raise ValueError("need at least one table store")
+        if ring_depth < 0:
+            raise ValueError(f"ring_depth must be >= 0, got {ring_depth}")
         self.stores = list(stores)
         self.working = [WorkingSetManager(s, resident_rows) for s in self.stores]
         self.prefetcher: Optional[ShardPrefetcher] = (
             ShardPrefetcher(self.working) if prefetch else None
         )
+        # host mirror of the device-side slice ring (docs/store.md): one
+        # entry per recent step, each a per-table array of the cold unique
+        # ids that step updated. Lanes found here are served from the
+        # device ring, so gather skips them (they need neither the working
+        # set nor the modeled PCIe upload). INVARIANT: the mirror rotates
+        # in lockstep with the device ring — same depth, same pushed id
+        # sets, same reset points (promotion / restore / demote-all) — so
+        # every skipped lane is guaranteed a device ring hit.
+        self.ring_depth = int(ring_depth)
+        self._ring: deque[list[np.ndarray]] = deque(maxlen=max(1, self.ring_depth))
+        # per-table sorted union of the mirrored entries (membership is one
+        # searchsorted on the hot path) + the lanes served so far
+        self._ring_union: list[np.ndarray] = [
+            np.zeros((0,), np.int64) for _ in self.stores
+        ]
+        self._ring_hits = 0  # lanes served by the ring (skipped host gathers)
+        # per-cast memo of the valid cold unique ids (barrier, write-back
+        # enqueue and ring push all need them for the SAME cast each step)
+        self._cast_ids_memo: tuple = (None, None)
+        # double-buffered write-back (docs/store.md): the driver hands the
+        # device step's aux output to a background thread, which pulls it to
+        # host (device sync) and commits it through the working set while
+        # the device runs the NEXT step. At most WB_DEPTH jobs are in
+        # flight; `write_back_barrier` is the consumption-side fence the
+        # next gather takes when its lanes could overlap an uncommitted
+        # job, and `drain_write_back` the full fence checkpoint/promotion/
+        # flush take. A worker exception is re-raised on the next barrier/
+        # enqueue — never swallowed, never deadlocked (jobs keep draining
+        # without IO after a failure).
+        self.overlap_write_back = bool(overlap_write_back)
+        self._wb_cond = threading.Condition()
+        self._wb_inflight: deque[list[np.ndarray]] = deque()
+        self._wb_gates: list[threading.Event] = []
+        self._wb_exc: Optional[BaseException] = None
+        self._wb_q: queue.Queue = queue.Queue()
+        self._wb_thread: Optional[threading.Thread] = None
+        if self.overlap_write_back:
+            self._wb_thread = threading.Thread(target=self._wb_run, daemon=True)
+            self._wb_thread.start()
         # host mirror of the device hot set (per table, sorted): lanes whose
         # id is hot are served by the device cache, so gather/prefetch skip
         # them entirely. INVARIANT: the mirror must never contain an id the
@@ -71,8 +140,15 @@ class StreamedTables:
         # vectorizes); prefetch WAIT time is excluded — that is disk
         # latency, not host CPU. benchmarks/store_bench.py reports these
         # per step so the host-path speedup stays visible in BENCH_store.
+        # With overlap enabled the commit runs on the worker thread OFF the
+        # step critical path: _host_write_back_s then accrues there (single
+        # writer per counter either way), while the critical path pays only
+        # _host_wb_wait_s — the time the main thread spent blocked on the
+        # barrier or on a free buffer slot.
         self._host_gather_s = 0.0
-        self._host_write_back_s = 0.0
+        self._host_write_back_s = 0.0  # total commit time, sync + background
+        self._host_wb_sync_s = 0.0  # the subset spent on the caller thread
+        self._host_wb_wait_s = 0.0
         self._host_steps = 0
 
     # -- construction ------------------------------------------------------
@@ -87,6 +163,8 @@ class StreamedTables:
         resident_rows: int,
         num_shards: int = 8,
         prefetch: bool = True,
+        ring_depth: int = 0,
+        overlap_write_back: bool = False,
     ) -> "StreamedTables":
         """Write (T, V, D) float32 tables (+ optional (T, V) / (T, V, 1)
         accumulators) into per-table shard directories under ``path``."""
@@ -101,14 +179,27 @@ class StreamedTables:
             )
             for t in range(T)
         ]
-        return cls(stores, resident_rows=resident_rows, prefetch=prefetch)
+        return cls(
+            stores, resident_rows=resident_rows, prefetch=prefetch,
+            ring_depth=ring_depth, overlap_write_back=overlap_write_back,
+        )
 
     @classmethod
     def open(
-        cls, path: str, num_tables: int, *, resident_rows: int, prefetch: bool = True
+        cls,
+        path: str,
+        num_tables: int,
+        *,
+        resident_rows: int,
+        prefetch: bool = True,
+        ring_depth: int = 0,
+        overlap_write_back: bool = False,
     ) -> "StreamedTables":
         stores = [open_store(_table_dir(path, t)) for t in range(num_tables)]
-        return cls(stores, resident_rows=resident_rows, prefetch=prefetch)
+        return cls(
+            stores, resident_rows=resident_rows, prefetch=prefetch,
+            ring_depth=ring_depth, overlap_write_back=overlap_write_back,
+        )
 
     @property
     def num_tables(self) -> int:
@@ -123,12 +214,17 @@ class StreamedTables:
         """Roll the live shard files back to a snapshot directory (same
         layout as ``create`` wrote) and invalidate the working sets — any
         resident row, dirty or not, is newer than the restored state. The
-        hot mirror is cleared; the caller restores the matching device
-        state (checkpoint.restore_coherent does all of this in order)."""
+        hot mirror and slice-ring mirror are cleared; the caller restores
+        the matching device state (checkpoint.restore_coherent does all of
+        this in order). In-flight write-backs are drained first — a
+        post-restore commit of pre-restore lanes would resurrect exactly
+        the state being rolled back."""
+        self.drain_write_back()
         for t in range(self.num_tables):
             self.working[t].invalidate()
             self.stores[t].load_from(_table_dir(src_path, t))
         self.clear_hot_ids()
+        self.ring_reset()
 
     @property
     def num_rows(self) -> int:
@@ -144,18 +240,61 @@ class StreamedTables:
         """Record the device hot set for table ``t`` (call with the SAME ids
         uploaded to the device cache — see the invariant in __init__)."""
         self._hot_ids[t] = np.unique(np.asarray(ids, np.int64))
+        self._cast_ids_memo = (None, None)  # valid ids depend on the hot set
 
     def clear_hot_ids(self) -> None:
         for t in range(self.num_tables):
             self._hot_ids[t] = np.zeros((0,), np.int64)
+        self._cast_ids_memo = (None, None)
 
     def _cold_only(self, t: int, ids: np.ndarray) -> np.ndarray:
-        hot = self._hot_ids[t]
-        return ids if hot.size == 0 else ids[~np.isin(ids, hot)]
+        hot = self._hot_ids[t]  # sorted (set_hot_ids uses np.unique)
+        return ids if hot.size == 0 else ids[~_isin_sorted(ids, hot)]
+
+    # -- slice-ring mirror -------------------------------------------------
+
+    def ring_push(self, cast: dict) -> None:
+        """Record one step's updated cold unique ids in the ring mirror
+        (call once per step, with the step's cast, AFTER the device step was
+        issued — the same lanes the device pushes into its ring entry)."""
+        if self.ring_depth <= 0:
+            return
+        self._ring.append([self._valid_ids(cast, t) for t in range(self.num_tables)])
+        for t in range(self.num_tables):
+            entries = [e[t] for e in self._ring if e[t].size]
+            self._ring_union[t] = (
+                np.unique(np.concatenate(entries)) if entries else np.zeros((0,), np.int64)
+            )
+
+    def ring_reset(self) -> None:
+        """Forget every mirrored entry (promotion / restore / demote-all:
+        the device ring is reset at the same points, because rows crossing
+        the hot-tier boundary make ring entries stale)."""
+        self._ring.clear()
+        self._ring_union = [np.zeros((0,), np.int64) for _ in self.stores]
+
+    def _ring_member(self, t: int, ids: np.ndarray) -> np.ndarray:
+        """(n,) bool: which of ``ids`` the device ring currently serves."""
+        return _isin_sorted(ids, self._ring_union[t])
 
     # -- prefetch ----------------------------------------------------------
 
-    def _valid_ids(self, cast: dict, t: int) -> np.ndarray:
+    def _valid_ids(self, cast: dict, t: int, *, memo: bool = True) -> np.ndarray:
+        """Valid cold unique ids for one table (sorted: the cast's ascending
+        uniques, filtered in order). Memoized per cast object — the barrier,
+        the write-back enqueue and the ring push all need the same arrays
+        within one step. Main-thread only; the prefetch producer thread must
+        pass ``memo=False`` (its calls interleave with other casts AND see a
+        possibly different hot set than consume time)."""
+        if memo:
+            key, per_table = self._cast_ids_memo
+            if key is not cast:
+                per_table = {}
+                self._cast_ids_memo = (cast, per_table)
+            got = per_table.get(t)
+            if got is None:
+                got = per_table[t] = self._valid_ids(cast, t, memo=False)
+            return got
         uids = np.asarray(cast["unique_ids"][t])
         n_valid = int(np.asarray(cast["num_unique"][t]))
         ids = uids[:n_valid]
@@ -166,7 +305,8 @@ class StreamedTables:
         fault-in (call as soon as the cast exists, i.e. at produce time)."""
         if self.prefetcher is not None:
             self.prefetcher.schedule(
-                step, [self._valid_ids(cast, t) for t in range(self.num_tables)]
+                step,
+                [self._valid_ids(cast, t, memo=False) for t in range(self.num_tables)],
             )
 
     def wrap_produce(self, produce: Callable[[int], dict]) -> Callable[[int], dict]:
@@ -203,7 +343,12 @@ class StreamedTables:
             valid[:n_valid] = uids[t, :n_valid] < self.stores[t].num_rows
             hot = self._hot_ids[t]
             if hot.size:  # hot lanes are served by the device cache: skip
-                valid &= ~np.isin(uids[t], hot)
+                valid &= ~_isin_sorted(uids[t], hot)
+            if self._ring:  # ring lanes are served on device too: skip the
+                ring = self._ring_member(t, uids[t]) & valid  # gather AND the
+                if ring.any():  # modeled PCIe upload (their slice lanes stay 0)
+                    self._ring_hits += int(ring.sum())
+                    valid &= ~ring
             if valid.any():
                 r, a = self.working[t].gather(uids[t][valid])
                 rows[t][valid] = r
@@ -214,12 +359,15 @@ class StreamedTables:
             self.prefetcher.release(step)  # consumed: unpin the step's rows
         return rows, accums
 
-    def write_back(
-        self, cast: dict, rows: np.ndarray, accums: np.ndarray, hit: np.ndarray
+    def _commit_write_back(
+        self,
+        cast: dict,
+        rows: np.ndarray,
+        accums: np.ndarray,
+        hit: np.ndarray,
+        *,
+        insert: bool = True,
     ) -> None:
-        """Commit the device step's updated cold lanes into the working set:
-        lanes that resolved hot on device (``hit``) stay owned by the device
-        cache; padding/sentinel lanes are dropped."""
         t0 = time.perf_counter()
         uids = np.asarray(cast["unique_ids"])
         hit = np.asarray(hit)
@@ -231,8 +379,137 @@ class StreamedTables:
             valid[:n_valid] = uids[t, :n_valid] < self.stores[t].num_rows
             valid &= hit[t] == 0
             if valid.any():
-                self.working[t].update(uids[t][valid], rows[t][valid], accums[t][valid])
+                self.working[t].update(
+                    uids[t][valid], rows[t][valid], accums[t][valid], insert=insert
+                )
         self._host_write_back_s += time.perf_counter() - t0
+
+    def write_back(
+        self, cast: dict, rows: np.ndarray, accums: np.ndarray, hit: np.ndarray
+    ) -> None:
+        """Commit the device step's updated cold lanes into the working set:
+        lanes that resolved hot on device (``hit``) stay owned by the device
+        cache; padding/sentinel lanes are dropped. Synchronous (caller
+        thread) — the overlapped path is ``write_back_async``."""
+        t0 = time.perf_counter()
+        self._commit_write_back(cast, rows, accums, hit)
+        self._host_wb_sync_s += time.perf_counter() - t0
+
+    # -- double-buffered write-back ----------------------------------------
+
+    WB_DEPTH = 2  # one job committing + one buffered behind it
+
+    def _wb_run(self) -> None:
+        while True:
+            job = self._wb_q.get()
+            if job is None:
+                return
+            cast, aux, gate = job
+            gate.wait()  # released once the NEXT gather is off the WS lock
+            try:
+                if self._wb_exc is None:  # after a failure: drain, no IO
+                    # device sync happens HERE, off the train loop's thread
+                    rows = np.asarray(aux["cold_rows"])
+                    accums = np.asarray(aux["cold_accums"])
+                    hit = np.asarray(aux["hit_seg"])
+                    # non-installing commit: rows still resident (the common
+                    # case — they were gathered one step ago) update in
+                    # place; rows the NEXT step's installs already evicted
+                    # write straight through to their shard. Installing them
+                    # here instead would replay the eviction cascade under
+                    # the working-set lock right when the next gather wants
+                    # it (the deferred-commit LRU inversion), and the slice
+                    # ring already serves their near-term re-reads.
+                    self._commit_write_back(cast, rows, accums, hit, insert=False)
+            except BaseException as e:  # surfaced on the next barrier/enqueue
+                with self._wb_cond:
+                    self._wb_exc = e
+            finally:
+                with self._wb_cond:
+                    self._wb_inflight.popleft()  # FIFO: head is this job
+                    self._wb_cond.notify_all()
+
+    def _raise_wb_exc_locked(self) -> None:
+        if self._wb_exc is not None:
+            exc, self._wb_exc = self._wb_exc, None
+            raise exc
+
+    def write_back_async(self, cast: dict, aux: dict) -> None:
+        """Queue the device step's aux output (jax arrays: ``cold_rows``,
+        ``cold_accums``, ``hit_seg``) for background commit. The job stays
+        GATED until ``release_write_back`` (the driver calls it right after
+        the next step's gather), so the commit overlaps the device step —
+        the long phase — instead of contending with the gather for the
+        working-set lock. Blocks only when WB_DEPTH jobs are already in
+        flight; re-raises any pending worker exception."""
+        if self._wb_thread is None:
+            raise RuntimeError("StreamedTables built with overlap_write_back=False")
+        ids = [self._valid_ids(cast, t) for t in range(self.num_tables)]
+        gate = threading.Event()
+        t0 = time.perf_counter()
+        with self._wb_cond:
+            self._raise_wb_exc_locked()
+            while len(self._wb_inflight) >= self.WB_DEPTH:
+                self._release_gates_locked()  # a gated job can never drain
+                self._wb_cond.wait(1.0)
+                self._raise_wb_exc_locked()
+            self._wb_inflight.append(ids)
+            self._wb_gates.append(gate)
+        self._host_wb_wait_s += time.perf_counter() - t0
+        self._wb_q.put((cast, aux, gate))
+
+    def _release_gates_locked(self) -> None:
+        for g in self._wb_gates:
+            g.set()
+        self._wb_gates.clear()
+
+    def release_write_back(self) -> None:
+        """Open the gate for every queued write-back job (call once the
+        step's gather has released the working-set lock)."""
+        with self._wb_cond:
+            self._release_gates_locked()
+
+    def write_back_barrier(self, cast: Optional[dict] = None) -> None:
+        """Fence the working set against in-flight write-backs. With a
+        ``cast``, waits only while an uncommitted job's lanes intersect the
+        lanes this batch's gather will actually read (hot and ring lanes
+        never touch the working set, so with the ring enabled consecutive
+        steps' natural overlap — last step's updated rows — is already
+        excluded and the fence rarely fires); with None, drains everything.
+        Re-raises a worker exception either way."""
+        needed = (
+            None
+            if cast is None
+            else [self._gather_ids(cast, t) for t in range(self.num_tables)]
+        )
+        t0 = time.perf_counter()
+        with self._wb_cond:
+            while True:
+                self._raise_wb_exc_locked()
+                if not self._wb_inflight:
+                    break
+                if needed is not None and not any(
+                    ids.size and job[t].size and _isin_sorted(ids, job[t]).any()
+                    for job in self._wb_inflight
+                    for t, ids in enumerate(needed)
+                ):
+                    break
+                self._release_gates_locked()  # gated jobs can't commit
+                self._wb_cond.wait(1.0)
+        self._host_wb_wait_s += time.perf_counter() - t0
+
+    def drain_write_back(self) -> None:
+        """Block until every queued write-back is committed (checkpoint /
+        promotion / flush fence) and surface any worker exception."""
+        self.write_back_barrier(None)
+
+    def _gather_ids(self, cast: dict, t: int) -> np.ndarray:
+        """The ids ``gather`` would actually read for table ``t``: valid
+        cold unique ids minus hot-mirror and ring-mirror lanes."""
+        ids = self._valid_ids(cast, t)
+        if self._ring:
+            ids = ids[~self._ring_member(t, ids)]
+        return ids
 
     # -- hot-tier boundary -------------------------------------------------
 
@@ -257,15 +534,34 @@ class StreamedTables:
     # -- lifecycle / stats -------------------------------------------------
 
     def flush(self) -> None:
+        self.drain_write_back()
         for ws in self.working:
             ws.flush()
 
     def close(self) -> None:
+        wb_exc: Optional[BaseException] = None
+        if self._wb_thread is not None:
+            self.release_write_back()  # a gated job must not block the join
+            try:
+                self.drain_write_back()
+            except BaseException as e:
+                # a FINAL-step failure has no later barrier to surface at —
+                # swallowing it here would silently drop that step's cold
+                # updates from the shards; finish teardown, then re-raise
+                wb_exc = e
+            self._wb_q.put(None)
+            # unbounded join: the drain above already waited out real
+            # commits, and any jobs it left behind (exception path) must
+            # finish BEFORE flush() below or their rows never reach disk
+            self._wb_thread.join()
+            self._wb_thread = None
         if self.prefetcher is not None:
             self.prefetcher.close()
         self.flush()
         for s in self.stores:
             s.close()
+        if wb_exc is not None:
+            raise wb_exc
 
     def __enter__(self):
         return self
@@ -274,11 +570,24 @@ class StreamedTables:
         self.close()
 
     def stats(self) -> dict:
+        """Aggregate store/working-set/write-back/ring statistics.
+
+        FENCES the write-back pipeline first (drain_write_back) so the
+        counters are settled and the shard/working-set numbers include
+        every committed step — polling this every step therefore
+        serializes the overlapped commit back onto the caller; read it at
+        episode boundaries (benchmarks do) or accept the stall."""
+        self.drain_write_back()  # settle the background commit counters
         per_table = [
             {**ws.stats.as_dict(), "store": ws.store.stats.as_dict()} for ws in self.working
         ]
         cold = sum(ws.stats.cold_reads for ws in self.working)
         covered = sum(ws.stats.covered_reads for ws in self.working)
+        # host CPU on the step CRITICAL PATH: gather + barrier/slot waits +
+        # only the commit time that actually ran on the caller thread
+        # (host_wb_sync_s); background commits stay visible separately in
+        # host_write_back_s without being misattributed to the step.
+        critical_s = self._host_gather_s + self._host_wb_wait_s + self._host_wb_sync_s
         return {
             "per_table": per_table,
             "cold_reads": cold,
@@ -294,9 +603,20 @@ class StreamedTables:
             # step (prefetch wait excluded) — the open-addressing speedup
             "host_gather_s": self._host_gather_s,
             "host_write_back_s": self._host_write_back_s,
+            "host_wb_sync_s": self._host_wb_sync_s,
+            "host_wb_wait_s": self._host_wb_wait_s,
+            "write_back_overlapped": self.overlap_write_back
+            and self._host_wb_sync_s == 0.0,
             "host_us_per_step": (
-                (self._host_gather_s + self._host_write_back_s) / self._host_steps * 1e6
-                if self._host_steps
+                critical_s / self._host_steps * 1e6 if self._host_steps else 0.0
+            ),
+            # lanes the device slice ring served (skipped host gather AND
+            # modeled PCIe upload); hit rate is over all lanes the host
+            # WOULD have gathered: ring hits + actual working-set reads
+            "ring_hits": self._ring_hits,
+            "ring_hit_rate": (
+                self._ring_hits / (self._ring_hits + cold)
+                if (self._ring_hits + cold)
                 else 0.0
             ),
         }
@@ -307,11 +627,28 @@ class StreamedTables:
 # ---------------------------------------------------------------------------
 
 
+def ring_reset_state(state: dict, streamed: StreamedTables) -> dict:
+    """Invalidate the device slice ring (ids -> sentinel, pos -> 0) and the
+    host mirror together — the two must rotate in lockstep. No-op for
+    states without a ring."""
+    streamed.ring_reset()
+    if "ring_ids" not in state:
+        return state
+    return dict(
+        state,
+        ring_ids=jnp.full_like(state["ring_ids"], streamed.num_rows),
+        ring_pos=jnp.zeros((), jnp.int32),
+    )
+
+
 def demote_all_state(state: dict, streamed: StreamedTables) -> dict:
     """Write every hot row + accumulator back through the store and reset
     the device cache to all-empty. The streamed analogue of
     ``hotcache.demote_all``: afterwards the working set + shards are
-    authoritative for every row."""
+    authoritative for every row. Drains in-flight write-backs first (the
+    coherence fence) and invalidates the slice ring — demoted rows entering
+    the cold tier must never be served from a pre-promotion ring entry."""
+    streamed.drain_write_back()
     cids = np.asarray(state["cache_ids"])
     crows = np.asarray(state["cache_rows"])
     caccums = np.asarray(state["cache_accums"])
@@ -321,6 +658,7 @@ def demote_all_state(state: dict, streamed: StreamedTables) -> dict:
         if real.any():
             streamed.demote(t, cids[t][real], crows[t][real], caccums[t][real])
     streamed.clear_hot_ids()
+    state = ring_reset_state(state, streamed)
     empty = init_hot_cache(Cp1 - 1, crows.shape[-1], streamed.num_rows, crows.dtype)
     return dict(
         state,

@@ -22,15 +22,22 @@ replay the sequential scan as one stamp-merge; only interleavings whose
 victims can collide with the batch itself (window smaller than the batch)
 fall back to an explicit per-install loop.
 
-Semantics that make every interleaving with the prefetch thread safe:
+Semantics that make every interleaving with the prefetch thread AND the
+double-buffered write-back thread (store/streamed.py) safe:
 
   * ``update`` is SET-semantics (whole row + accumulator overwritten) and
     never reads the store, so a row evicted between gather and write-back is
-    simply re-installed with its new value.
+    simply re-installed with its new value. The overlapped write-back
+    commits with ``insert=False``: still-resident rows update in place and
+    already-evicted rows write straight through to their shard — no install
+    churn under this lock while the next step's gather wants it (the
+    write-through-during-fault race is covered by ``_note_store_write``).
   * ``fault_in`` only loads rows that are NOT resident, so it can never
     clobber a dirty (newer) resident copy with a stale shard read.
-  * every public method holds one lock; the prefetch thread and the train
-    loop interleave at row granularity with no torn rows.
+  * every public method holds one lock; the prefetch thread, the write-back
+    thread and the train loop interleave at row granularity with no torn
+    rows (value-level ordering between them is the streamed driver's
+    ``write_back_barrier`` / ring contract, not this module's concern).
 
 Miss accounting: a row absent at ``gather`` time is a synchronous fault
 (the step blocked on disk); rows already resident — whether prefetched or
@@ -474,16 +481,25 @@ class WorkingSetManager:
     def update(
         self, ids: np.ndarray, rows: np.ndarray, accums: np.ndarray, *, insert: bool = True
     ) -> None:
-        """Absolute overwrite (ids unique): install-or-replace each row as
-        dirty; eviction and flush move dirty rows to the shards. With
+        """Absolute overwrite: install-or-replace each row as dirty;
+        eviction and flush move dirty rows to the shards. With
         ``insert=False``, rows NOT currently resident are written straight
         through to their shard instead of claiming a window slot — used for
         demotions of rows that stay hot, which would otherwise evict the
-        prefetched working set for no future reads."""
+        prefetched working set for no future reads. Duplicate ids collapse
+        last-write-wins (the dict-era loop's outcome); the vectorized paths
+        below require distinct ids — without the dedup a duplicate would
+        claim a second slot and leak a stale hash entry."""
         ids = np.asarray(ids, np.int64)
         rows = np.asarray(rows)
         accums = np.asarray(accums)
         n = ids.shape[0]
+        if n > 1:
+            uniq, last_rev = np.unique(ids[::-1], return_index=True)
+            if uniq.size != n:  # keep each id's LAST occurrence, in order
+                keep = np.sort(n - 1 - last_rev)
+                ids, rows, accums = ids[keep], rows[keep], accums[keep]
+                n = keep.size
         with self._lock:
             slots = self._lookup(ids)
             res = slots >= 0

@@ -1,0 +1,224 @@
+"""Lane->row compaction for the streamed cold slice
+(``cache.hotcache.split_update_lanes``): randomized property suite over the
+scatter layout contract that ``split_update_tiers`` established — each
+tier's stream sorted, real lanes unique, every other lane collapsed to
+zero-gradient dead-sentinel padding — plus exact semantic equivalence to
+the naive per-lane redirection it replaces, through both the jnp oracle and
+the interpret-mode fused cached-scatter kernel."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.cache.hotcache import init_hot_cache, resolve, split_update_lanes
+from repro.data.pipeline import numpy_tensor_casting
+from repro.kernels import ops, ref
+
+
+def _hot_set(rng, V: int, C: int, ids=None) -> jnp.ndarray:
+    """Sorted sentinel-padded (C+1,) id map; optionally force ``ids`` hot."""
+    cache = np.full((C + 1,), V, np.int32)
+    pick = rng.choice(V, size=min(C, V), replace=False) if ids is None else np.asarray(ids)
+    pick = np.sort(pick[:C]).astype(np.int32)
+    cache[: pick.size] = pick
+    return jnp.asarray(cache)
+
+
+def _casted_stream(rng, V: int, n: int, D: int):
+    """unique_ids (ascending, sentinel-tail) + matching coalesced rows from
+    a raw lookup stream WITH duplicate rows across lanes."""
+    src = rng.integers(0, V, size=n).astype(np.int32)
+    cast = numpy_tensor_casting(src, np.arange(n, dtype=np.int32), fill_id=V)
+    grads = rng.normal(size=(n, D)).astype(np.float32)
+    grads[int(cast["num_unique"]):] = 0.0  # padding segments carry g = 0
+    return jnp.asarray(cast["unique_ids"]), jnp.asarray(grads)
+
+
+def _naive_reference(cache_ids, uids, grads, V, cr, ca, pad_r, pad_a, lr):
+    """The pre-compaction tc_streamed update: per-lane redirection with the
+    full gradient stream into each tier (legal only for the jnp oracle)."""
+    slots, hit = resolve(cache_ids, uids)
+    n = grads.shape[0]
+    hot_ids = jnp.where(hit, slots, cache_ids.shape[0] - 1)
+    cr2, ca2 = ref.scatter_apply_adagrad_ref(cr, ca[:, 0], hot_ids, grads, lr=lr)
+    slice_ids = jnp.where(hit, n, jnp.arange(n, dtype=jnp.int32))
+    pr2, pa2 = ref.scatter_apply_adagrad_ref(pad_r, pad_a[:, 0], slice_ids, grads, lr=lr)
+    return cr2, ca2[:, None], pr2, pa2[:, None]
+
+
+def _check_contract(split, cache_ids, uids, grads, V):
+    n = uids.shape[0]
+    slots, hit = resolve(cache_ids, uids)
+    hit = np.asarray(hit)
+    real = np.asarray(uids) < V
+    hot_slot = np.asarray(split.hot_slot)
+    cold_lane = np.asarray(split.cold_lane)
+    cold_ids = np.asarray(split.cold_ids)
+    hot_g = np.asarray(split.hot_grads)
+    cold_g = np.asarray(split.cold_grads)
+
+    # both streams sorted (the scatter kernels' metadata contract)
+    assert (np.diff(hot_slot) >= 0).all()
+    assert (np.diff(cold_lane) >= 0).all()
+    assert (np.diff(cold_ids) >= 0).all()
+
+    # hot stream: real hot lanes first, unique ascending slots; everything
+    # else points at dead sentinel slots (>= first sentinel) with g = 0
+    n_hot = int((hit & real).sum())
+    first_sentinel = int(np.searchsorted(np.asarray(cache_ids), V))
+    assert (hot_slot[:n_hot] < first_sentinel).all() if n_hot else True
+    assert np.unique(hot_slot[:n_hot]).size == n_hot
+    assert (hot_slot[n_hot:] >= first_sentinel).all()
+    np.testing.assert_array_equal(hot_g[n_hot:], 0.0)
+
+    # cold stream: real cold lanes first (unique ascending lanes == unique
+    # ascending table rows), dead lane n / sentinel id V tails with g = 0
+    n_cold = int((~hit & real).sum())
+    assert (cold_lane[:n_cold] < n).all() if n_cold else True
+    assert np.unique(cold_lane[:n_cold]).size == n_cold
+    assert (cold_lane[n_cold:] == n).all()
+    assert (cold_ids[n_cold:] == V).all()
+    np.testing.assert_array_equal(cold_g[n_cold:], 0.0)
+
+    # the cold directory re-keys lanes back to table rows, sorted
+    np.testing.assert_array_equal(
+        cold_ids[:n_cold], np.sort(np.asarray(uids)[~hit & real])
+    )
+    np.testing.assert_array_equal(
+        cold_ids[:n_cold], np.asarray(uids)[cold_lane[:n_cold]]
+    )
+
+    # gradients travel with their lane: the stable partition keeps hit
+    # lanes in lane order (ascending slots), so stream position j maps back
+    # to the j-th hit lane — and each real lane's gradient row is preserved
+    g = np.asarray(grads)
+    hit_lanes = np.flatnonzero(hit & real)
+    np.testing.assert_array_equal(hot_slot[:n_hot], np.asarray(slots)[hit_lanes])
+    np.testing.assert_array_equal(hot_g[:n_hot], g[hit_lanes])
+    np.testing.assert_array_equal(cold_g[:n_cold], g[cold_lane[:n_cold]])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(4, 32),  # V table rows
+    st.integers(1, 32),  # C cache capacity
+    st.integers(1, 48),  # n lookups (duplicates across lanes guaranteed dense)
+    st.integers(0, 2**31 - 1),
+)
+def test_split_update_lanes_contract_and_equivalence(V, C, n, seed):
+    C = min(C, V)
+    D = 4
+    rng = np.random.default_rng(seed)
+    uids, grads = _casted_stream(rng, V, n, D)
+    cache_ids = _hot_set(rng, V, C)
+    lr = 0.1
+
+    split = split_update_lanes(cache_ids, uids, grads, V)
+    _check_contract(split, cache_ids, uids, grads, V)
+
+    # applying the compacted streams through the fused primitive must equal
+    # the naive redirected update on every REAL row and slot — jnp oracle
+    # and interpret-mode kernel alike (dead sentinel state is free to
+    # differ: the naive path parks live gradients there, compaction zeroes)
+    cr = jnp.asarray(rng.normal(size=(C + 1, D)).astype(np.float32))
+    ca = jnp.asarray(rng.uniform(size=(C + 1, 1)).astype(np.float32))
+    pad_r = jnp.asarray(rng.normal(size=(n + 1, D)).astype(np.float32))
+    pad_a = jnp.asarray(rng.uniform(size=(n + 1, 1)).astype(np.float32))
+    want_cr, want_ca, want_pr, want_pa = _naive_reference(
+        cache_ids, uids, grads, V, cr, ca, pad_r, pad_a, lr
+    )
+    for mode in ("jnp", "pallas_interpret"):
+        got_pr, got_pa, got_cr, got_ca = ops.cached_scatter_apply(
+            pad_r, pad_a, cr, ca,
+            split.hot_slot, split.cold_lane, split.hot_grads, split.cold_grads,
+            lr, mode=mode,
+        )
+        slots, hit = resolve(cache_ids, uids)
+        real_slots = np.asarray(slots)[np.asarray(hit) & (np.asarray(uids) < V)]
+        real_lanes = np.flatnonzero(~np.asarray(hit) & (np.asarray(uids) < V))
+        np.testing.assert_array_equal(
+            np.asarray(got_cr)[real_slots], np.asarray(want_cr)[real_slots]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got_ca)[real_slots], np.asarray(want_ca)[real_slots]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got_pr)[real_lanes], np.asarray(want_pr)[real_lanes]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got_pa)[real_lanes], np.asarray(want_pa)[real_lanes]
+        )
+
+
+def test_split_update_lanes_all_pad_stream():
+    """num_unique == 0: every lane is sentinel padding — both streams must
+    be pure dead-sentinel tails with zero gradients."""
+    V, C, n, D = 16, 4, 8, 4
+    cache_ids = init_hot_cache(C, D, V).ids
+    uids = jnp.full((n,), V, jnp.int32)
+    grads = jnp.zeros((n, D), jnp.float32)
+    split = split_update_lanes(cache_ids, uids, grads, V)
+    assert (np.asarray(split.cold_lane) == n).all()
+    assert (np.asarray(split.cold_ids) == V).all()
+    np.testing.assert_array_equal(np.asarray(split.hot_grads), 0.0)
+    np.testing.assert_array_equal(np.asarray(split.cold_grads), 0.0)
+    _check_contract(split, cache_ids, uids, grads, V)
+
+
+def test_split_update_lanes_all_hot_stream(rng):
+    """Every real id resolves hot: the cold stream is all dead lanes."""
+    V, C, D = 16, 16, 4
+    uids, grads = _casted_stream(rng, V, 12, D)
+    real = np.asarray(uids)[np.asarray(uids) < V]
+    cache_ids = _hot_set(rng, V, C, ids=np.arange(V))  # all-hot cache
+    split = split_update_lanes(cache_ids, uids, grads, V)
+    assert (np.asarray(split.cold_lane) == 12).all()
+    np.testing.assert_array_equal(np.asarray(split.cold_grads), 0.0)
+    n_hot = real.size
+    assert (np.asarray(split.hot_slot)[:n_hot] == real).all()  # identity map
+    _check_contract(split, cache_ids, uids, grads, V)
+
+
+def test_split_update_lanes_all_cold_stream(rng):
+    """Fresh (all-sentinel) cache: every real lane lands in the cold
+    stream, lanes strictly ascending — the layout the ring directory and
+    the fused scatter's dead-row elision both rely on."""
+    V, C, D = 32, 4, 4
+    uids, grads = _casted_stream(rng, V, 24, D)
+    cache_ids = init_hot_cache(C, D, V).ids
+    split = split_update_lanes(cache_ids, uids, grads, V)
+    n_cold = int((np.asarray(uids) < V).sum())
+    np.testing.assert_array_equal(
+        np.asarray(split.cold_lane)[:n_cold], np.arange(n_cold)
+    )
+    np.testing.assert_array_equal(np.asarray(split.hot_grads), 0.0)
+    _check_contract(split, cache_ids, uids, grads, V)
+
+
+def test_split_update_lanes_empty_stream():
+    V, C, D = 8, 2, 4
+    cache_ids = init_hot_cache(C, D, V).ids
+    split = split_update_lanes(
+        cache_ids, jnp.zeros((0,), jnp.int32), jnp.zeros((0, D), jnp.float32), V
+    )
+    for leaf in split:
+        assert np.asarray(leaf).shape[0] == 0
+
+
+@pytest.mark.parametrize("promote_mid", [False, True])
+def test_split_update_lanes_matches_tiers_hot_side(rng, promote_mid):
+    """The hot stream is IDENTICAL to ``split_update_tiers``' (same resolve,
+    same partition): the streamed and tiered systems must drive the fused
+    kernel's hot tier with the same metadata."""
+    from repro.cache.hotcache import split_update_tiers
+
+    V, C, D = 24, 6, 4
+    uids, grads = _casted_stream(rng, V, 16, D)
+    cache_ids = _hot_set(rng, V, C)
+    if promote_mid:
+        cache_ids = _hot_set(rng, V, C)  # a different generation's hot set
+    lanes = split_update_lanes(cache_ids, uids, grads, V)
+    tiers = split_update_tiers(cache_ids, uids, grads, V)
+    np.testing.assert_array_equal(np.asarray(lanes.hot_slot), np.asarray(tiers.hot_slot))
+    np.testing.assert_array_equal(np.asarray(lanes.hot_grads), np.asarray(tiers.hot_grads))

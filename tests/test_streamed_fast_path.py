@@ -1,0 +1,382 @@
+"""Streamed fast path: the fully-fused ``tc_streamed`` device step, the
+double-buffered host write-back, and the device-side slice ring.
+
+Covers the PR's acceptance contract: zero-jnp-fallback e2e bit-identity
+under the interpret-mode kernels (forward AND backward), fault injection on
+the write-back thread (exception propagation without deadlock; checkpoint
+save draining the in-flight buffer), and ring eviction/staleness (a row
+updated on step N is never served from a stale ring entry)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.data.pipeline import CastingServer
+from repro.data.synth import DLRMStream
+from repro.kernels import ops, ref
+from repro.runtime import dlrm_train
+from repro.store import StreamedTables, flush_state
+
+
+def _cfg(rows=64, tables=2, pooling=4):
+    return DLRMConfig(
+        name="streamed-fast", num_tables=tables, gathers_per_table=pooling,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=rows, emb_dim=8,
+    )
+
+
+def _batches(cfg, steps, *, batch=4, s=1.05, seed=1):
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=batch, s=s, seed=seed,
+    )
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    return [cs(stream.batch_at(i)) for i in range(steps)]
+
+
+def _tc_run(cfg, batches):
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    losses = []
+    for b in batches:
+        s_tc, l = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, b))
+        losses.append(float(l))
+    return s_tc, losses
+
+
+def _assert_store_equals_tc(cfg, state, streamed, s_tc):
+    state = flush_state(state, streamed)
+    V = cfg.rows_per_table
+    for t in range(cfg.num_tables):
+        rows, accs = streamed.stores[t].read_all()
+        np.testing.assert_array_equal(rows, np.asarray(s_tc["tables"])[t, :V])
+        np.testing.assert_array_equal(accs, np.asarray(s_tc["accums"])[t, :V])
+    return state
+
+
+# ---------------------------------------------------------------------------
+# zero-fallback e2e: 16 steps, fused kernels on every forward AND backward
+# ---------------------------------------------------------------------------
+
+
+def test_tc_streamed_interpret_e2e_fused_zero_jnp_fallback(tmp_path, monkeypatch):
+    """Acceptance for the fully-fused streamed step: 16 steps of tc_streamed
+    under the pallas_interpret default — write-back overlap AND slice ring
+    enabled — stay bit-identical to the jnp-mode tc system across promotion
+    churn, while every jnp oracle is monkeypatched to raise: the forward
+    cached-gather over the dead-lane-padded slice and the lane-compacted
+    cached-scatter over both tiers are PROVEN to run the fused kernels
+    (the tc_streamed mirror of test_cache.py's tc_cached guard)."""
+    cfg = _cfg()
+    batches = _batches(cfg, 16)
+    s_tc, tc_losses = _tc_run(cfg, batches)
+
+    def _no_fallback(name):
+        def boom(*args, **kwargs):
+            raise AssertionError(f"tc_streamed fell back to the jnp oracle {name}")
+        return boom
+
+    ops.set_default_mode("pallas_interpret")
+    try:
+        state, streamed = dlrm_train.init_streamed(
+            cfg, jax.random.key(0), str(tmp_path / "store"),
+            capacity=8, resident_rows=16,  # budget < rows: streaming is real
+        )
+        assert streamed.overlap_write_back and streamed.ring_depth > 0  # defaults
+        step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+        promote = dlrm_train.make_streamed_promote(streamed)
+        for name in (
+            "gather_reduce_ref",
+            "cached_gather_reduce_ref",
+            "scatter_apply_adagrad_ref",
+            "cached_scatter_apply_ref",
+        ):
+            monkeypatch.setattr(ref, name, _no_fallback(name))
+        with streamed:
+            for i, b in enumerate(batches):  # traces (and would fall back) here
+                state, l_st = step_st(state, b, step_index=i)
+                assert tc_losses[i] == float(l_st), f"loss diverged at step {i}"
+                if i % 5 == 4:
+                    state = promote(state)
+            assert float(state["ring_hit_rate"]) >= 0.0  # ring state engaged
+            _assert_store_equals_tc(cfg, state, streamed, s_tc)
+    finally:
+        ops.set_default_mode("auto")
+
+
+# ---------------------------------------------------------------------------
+# fault injection: the double-buffered write-back
+# ---------------------------------------------------------------------------
+
+
+def test_write_back_thread_exception_propagates_no_deadlock(tmp_path):
+    """A failure inside the background commit surfaces on the train loop's
+    next step (barrier or enqueue) within bounded time — never swallowed,
+    never a hang — and the store still tears down cleanly afterwards."""
+    cfg = _cfg(rows=32, tables=1, pooling=2)
+    batches = _batches(cfg, 6, batch=2)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+
+    def boom(*a, **k):
+        raise RuntimeError("wb boom")
+
+    streamed.working[0].update = boom
+    with pytest.raises(RuntimeError, match="wb boom"):
+        # identical batches force a gather/write-back conflict, so the very
+        # next step's barrier must block on — and then surface — the failure
+        for k in range(4):
+            state, _ = step_st(state, batches[0])
+    # drained, not deadlocked: the failed job was popped, nothing in flight
+    assert len(streamed._wb_inflight) == 0
+    streamed.drain_write_back()  # exception already consumed: clean
+    streamed.close()
+
+
+def test_checkpoint_save_mid_flight_drains_then_restores_exact(tmp_path):
+    """save_coherent issued while a write-back is still in flight must
+    drain it BEFORE demote-all/flush — then a save -> keep-training ->
+    crash -> restore cycle stays step-N-exact (bit-identical to an
+    uninterrupted tc run)."""
+    from repro.checkpoint import Checkpointer, restore_coherent, save_coherent
+
+    cfg = _cfg(rows=128, tables=1, pooling=2)
+    batches = _batches(cfg, 20, batch=2)
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=8, resident_rows=32, prefetch=False,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    gate = threading.Event()
+    gate.set()
+    orig_update = streamed.working[0].update
+
+    def gated_update(*a, **k):
+        assert gate.wait(10.0), "write-back gate never released"
+        return orig_update(*a, **k)
+
+    streamed.working[0].update = gated_update
+
+    for k in range(9):
+        s_tc, _ = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, batches[k]))
+        state, _ = step_st(state, batches[k])
+    gate.clear()  # park the NEXT commit: step 9's write-back stays in flight
+    s_tc, _ = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, batches[9]))
+    state, _ = step_st(state, batches[9])
+    assert len(streamed._wb_inflight) >= 1  # genuinely mid-flight at save time
+
+    ckpt = Checkpointer(str(tmp_path / "ckpt"))
+    threading.Timer(0.3, gate.set).start()  # release while save is draining
+    t0 = time.perf_counter()
+    state = save_coherent(ckpt, 10, state, streamed=streamed)
+    assert time.perf_counter() - t0 >= 0.25  # the save actually waited
+    assert len(streamed._wb_inflight) == 0  # ...for the drain
+
+    # training continues past the checkpoint, then the job "crashes"
+    for k in range(10, 13):
+        state, _ = step_st(state, batches[k])
+    streamed.close()
+
+    streamed2 = StreamedTables.open(
+        str(tmp_path / "store"), cfg.num_tables, resident_rows=32,
+        prefetch=False, ring_depth=2, overlap_write_back=True,
+    )
+    step10, state2 = restore_coherent(ckpt, state, streamed=streamed2)
+    assert step10 == 10
+    step_st2 = dlrm_train.make_streamed_train_step(cfg, streamed2)
+    with streamed2:
+        for k in range(10, 20):
+            s_tc, l_tc = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, batches[k]))
+            state2, l_st = step_st2(state2, batches[k])
+            assert float(l_tc) == float(l_st), f"loss diverged at step {k}"
+        _assert_store_equals_tc(cfg, state2, streamed2, s_tc)
+
+
+def test_write_back_barrier_fences_conflicting_gather(tmp_path):
+    """Ring disabled + a deliberately slow commit: consecutive steps touch
+    the SAME cold rows, so each gather must fence on the previous step's
+    uncommitted write-back — losses stay bit-identical to tc even though
+    every commit races the next step."""
+    cfg = _cfg(rows=32, tables=1, pooling=2)
+    batches = [_batches(cfg, 1, batch=2, seed=7)[0]] * 6  # same rows every step
+    s_tc, tc_losses = _tc_run(cfg, batches)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+    )
+    orig_update = streamed.working[0].update
+
+    def slow_update(*a, **k):
+        time.sleep(0.05)
+        return orig_update(*a, **k)
+
+    streamed.working[0].update = slow_update
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    with streamed:
+        for i, b in enumerate(batches):
+            state, l_st = step_st(state, b)
+            assert tc_losses[i] == float(l_st), f"loss diverged at step {i}"
+        stats = streamed.stats()
+        assert stats["host_wb_wait_s"] > 0.0  # the fence actually fired
+        _assert_store_equals_tc(cfg, state, streamed, s_tc)
+
+
+def test_close_surfaces_final_step_write_back_failure(tmp_path):
+    """A write-back failure on the LAST step has no later barrier to
+    surface at — close() must re-raise it (after finishing teardown)
+    instead of silently dropping that step's cold updates."""
+    cfg = _cfg(rows=32, tables=1, pooling=2)
+    batches = _batches(cfg, 1, batch=2)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    state, _ = step_st(state, batches[0])  # commits fine: baseline step
+    streamed.drain_write_back()
+
+    def boom(*a, **k):
+        raise RuntimeError("final wb boom")
+
+    streamed.working[0].update = boom
+    state, _ = step_st(state, batches[0])  # last step: failure stays queued
+    with pytest.raises(RuntimeError, match="final wb boom"):
+        streamed.close()
+
+
+# ---------------------------------------------------------------------------
+# slice ring: eviction / staleness
+# ---------------------------------------------------------------------------
+
+
+def _pinned_row_batches(cfg, steps, *, pinned_row=5, batch=2, seed=3):
+    """Batches where ``pinned_row`` is looked up EVERY step (so its value is
+    updated on step N and re-faulted on step N+1 — the staleness hazard)
+    alongside rotating filler rows that churn the ring entries."""
+    rng = np.random.default_rng(seed)
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    out = []
+    V = cfg.rows_per_table
+    P = cfg.gathers_per_table
+    for k in range(steps):
+        idx = rng.integers(0, V, size=(batch, cfg.num_tables, P)).astype(np.int32)
+        idx[0, :, 0] = pinned_row  # updated every single step
+        out.append(cs({
+            "dense": rng.normal(size=(batch, 13)).astype(np.float32),
+            "idx": idx,
+            "labels": rng.integers(0, 2, size=(batch,)).astype(np.float32),
+        }))
+    return out
+
+
+def test_ring_serves_fresh_value_for_row_updated_every_step(tmp_path):
+    """Write-invalidate semantics: a row updated on step N and re-faulted
+    on step N+1 must be served the step-N value (the NEWEST ring entry),
+    never a stale older entry — asserted as bit-identity to tc with the
+    ring actually hitting, plus parity against a ring-disabled run."""
+    cfg = _cfg(rows=64, tables=1, pooling=4)
+    batches = _pinned_row_batches(cfg, 10)
+    s_tc, tc_losses = _tc_run(cfg, batches)
+
+    ring_rates = []
+    final_rows = {}
+    for ring_depth in (2, 0):
+        state, streamed = dlrm_train.init_streamed(
+            cfg, jax.random.key(0), str(tmp_path / f"store{ring_depth}"),
+            capacity=8, resident_rows=16, prefetch=False,
+            ring_depth=ring_depth,
+        )
+        step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+        with streamed:
+            for i, b in enumerate(batches):
+                state, l_st = step_st(state, b)
+                assert tc_losses[i] == float(l_st), (
+                    f"ring_depth={ring_depth}: loss diverged at step {i}"
+                )
+            if ring_depth:
+                ring_rates.append(float(state["ring_hit_rate"]))
+                assert streamed.stats()["ring_hits"] > 0  # host skipped gathers
+            state = _assert_store_equals_tc(cfg, state, streamed, s_tc)
+            final_rows[ring_depth] = streamed.stores[0].read_all()
+    # the pinned row guarantees hits: it is ALWAYS in the previous entry
+    assert ring_rates[0] > 0.0
+    # write-invalidate parity: ring on == ring off, bit for bit
+    for a, b in zip(final_rows[2], final_rows[0]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ring_reset_on_promotion_boundary(tmp_path):
+    """Rows crossing the hot-tier boundary invalidate the ring (both the
+    device entries and the host mirror): training across promotions with a
+    deep ring stays bit-identical to tc."""
+    cfg = _cfg(rows=64, tables=1, pooling=4)
+    batches = _pinned_row_batches(cfg, 12)
+    s_tc, tc_losses = _tc_run(cfg, batches)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=16, prefetch=False, ring_depth=3,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    promote = dlrm_train.make_streamed_promote(streamed)
+    with streamed:
+        for i, b in enumerate(batches):
+            state, l_st = step_st(state, b)
+            assert tc_losses[i] == float(l_st), f"loss diverged at step {i}"
+            if i % 4 == 3:  # the pinned hot row crosses the boundary
+                state = promote(state)
+                assert len(streamed._ring) == 0  # mirror invalidated
+                assert bool(
+                    (np.asarray(state["ring_ids"]) == cfg.rows_per_table).all()
+                )  # device entries invalidated
+        assert float(state["hit_rate"]) > 0.0  # the hot tier engaged
+        _assert_store_equals_tc(cfg, state, streamed, s_tc)
+
+
+def test_ring_wraparound_evicts_oldest_entry(tmp_path):
+    """Depth-K ring over a row stream with period > K: a row re-faulted
+    after its entry was overwritten is a ring MISS (served by the working
+    set), still bit-identical — and the mirror never claims more than K
+    entries."""
+    cfg = _cfg(rows=64, tables=1, pooling=2)
+    # rotate through disjoint row groups with period 4 > ring depth 2
+    rng = np.random.default_rng(11)
+    cs = CastingServer(rows_per_table=64, with_counts=True, with_lookup_seg=True)
+    batches = []
+    for k in range(12):
+        lo = 8 * (k % 4)
+        idx = rng.integers(lo, lo + 8, size=(2, 1, 2)).astype(np.int32)
+        batches.append(cs({
+            "dense": rng.normal(size=(2, 13)).astype(np.float32),
+            "idx": idx,
+            "labels": rng.integers(0, 2, size=(2,)).astype(np.float32),
+        }))
+    s_tc, tc_losses = _tc_run(cfg, batches)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=16, prefetch=False, ring_depth=2,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    with streamed:
+        for i, b in enumerate(batches):
+            state, l_st = step_st(state, b)
+            assert tc_losses[i] == float(l_st), f"loss diverged at step {i}"
+            assert len(streamed._ring) <= 2
+        # period-4 rotation through a depth-2 ring: every re-fault comes
+        # after eviction, so the ring never hits — and never serves stale
+        assert streamed.stats()["ring_hits"] == 0
+        _assert_store_equals_tc(cfg, state, streamed, s_tc)

@@ -332,6 +332,41 @@ def test_rotation_interleaves_with_installs(tmp_path, rng):
     _assert_same_state(vec, ref, "after follow-up evictions")
 
 
+def test_update_duplicate_ids_last_write_wins(tmp_path, rng):
+    """Duplicate ids in one update() batch must collapse onto ONE slot with
+    the final value (the dict-era loop's outcome). Regression: the
+    vectorized install path used to give each duplicate its own slot,
+    leaking a stale hash entry, overcounting _live, and serving the FIRST
+    occurrence's value on gather."""
+    from repro.store.shards import create_store
+    from repro.store.working_set import WorkingSetManager
+
+    V, D = 16, 4
+    store = create_store(
+        str(tmp_path / "dup"), rng.normal(size=(V, D)).astype(np.float32), num_shards=2
+    )
+    ws = WorkingSetManager(store, 4)
+    rows = np.stack([np.full((D,), 1.0), np.full((D,), 2.0)]).astype(np.float32)
+    ws.update(np.asarray([5, 5]), rows, np.asarray([[1.0], [2.0]], np.float32))
+    assert len(ws) == 1  # one slot, not two
+    got, acc = ws.gather(np.asarray([5]))
+    np.testing.assert_array_equal(got[0], rows[1])  # last write won
+    np.testing.assert_array_equal(acc[0], [2.0])
+    # the map stays intact: eviction pressure flushes the WINNING value
+    ws.fault_in(np.arange(4, 9))
+    np.testing.assert_array_equal(store.read_rows(np.asarray([5]))[0][0], rows[1])
+    # duplicates mixed with resident/absent lanes under eviction pressure
+    # (the sequential replay path) collapse the same way
+    ws2 = WorkingSetManager(store, 2)
+    ids = np.asarray([3, 7, 3, 9, 7])
+    vals = np.arange(5 * D, dtype=np.float32).reshape(5, D)
+    ws2.update(ids, vals, np.arange(5, dtype=np.float32)[:, None])
+    for rid, want in ((3, 2), (7, 4), (9, 3)):
+        got, acc = ws2.gather(np.asarray([rid]))
+        np.testing.assert_array_equal(got[0], vals[want])
+        np.testing.assert_array_equal(acc[0], [float(want)])
+
+
 def test_gather_update_have_no_per_id_python_loop():
     """Guard the vectorization claim structurally: the hot-path methods
     must not iterate python-level over ids (the dict-era pattern was
