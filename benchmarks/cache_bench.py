@@ -46,7 +46,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, model_hbm_gather, write_json
+from benchmarks.common import emit, model_hbm_gather, publish_model, write_json
 from repro.cache.stats import choose_capacity
 from repro.configs.base import DLRMConfig
 from repro.data.pipeline import CastingServer
@@ -128,7 +128,10 @@ def run(
                                   promote_every=promote_every)
         us_ca, hit, state_ca = _run_system(cfg, "tc_cached", batches, capacity=capacity,
                                            promote_every=promote_every)
-        traffic = model_hbm_gather(lookups, emb_dim, capacity, hit)
+        traffic = publish_model(
+            model_hbm_gather(lookups, emb_dim, capacity, hit),
+            prefix="model.hbm_gather", alpha=alpha,
+        )
         # capacity autotuning (cache.stats.choose_capacity): the per-table
         # capacity the converged EMA mass curve asks for, next to the fixed
         # 1/cap_frac the sweep ran with — tables differ wildly in skew, so

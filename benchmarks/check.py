@@ -1,0 +1,161 @@
+"""Baseline regression check for the ``BENCH_*.json`` artifacts.
+
+``python -m benchmarks.run --quick --check`` (the CI quick-bench lane)
+compares every freshly-written ``BENCH_<name>.json`` in ``$BENCH_OUT_DIR``
+against the committed baseline in ``benchmarks/baselines/`` with
+PER-METRIC tolerance bands instead of exact equality, because two classes
+of metric move between runners:
+
+  * **wall-clock** (``*_us*``, ``*_ms*``, ``*_ns``, ``*seconds*``,
+    ``*speedup*``, ``*tok_per_s*``, ``*overhead*``) — machine-dependent,
+    SKIPPED entirely; the artifact upload is the trajectory record, the
+    check only guards structure and the structural metrics below.
+  * **rates in [0, 1]** (``*rate*``, ``*coverage*``, ``*frac*``,
+    ``*hit*``) — compared with an ABSOLUTE band (default 0.1): thread
+    timing shifts prefetch coverage / ring hits a little, a correctness
+    regression shifts them a lot.
+  * **counts and bytes** (everything else numeric) — compared with a
+    RELATIVE band (default 50%): eviction/fault totals depend on
+    prefetch-thread interleaving but stay the same order of magnitude.
+
+Keys present in the baseline but missing fresh (or vice versa) are
+structural violations — a silently-dropped metric is exactly the
+regression this exists to catch. ``env`` headers are ignored.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+SKIP_SUBSTRINGS = (
+    "_us", "us_", "_ms", "ms_", "_ns", "seconds", "speedup", "tok_per_s",
+    "overhead", "_s_",
+)
+SKIP_SUFFIXES = ("_s",)
+RATE_SUBSTRINGS = ("rate", "coverage", "frac", "hit", "saved")
+RATE_ABS_TOL = 0.1
+COUNT_REL_TOL = 0.5
+
+
+def _is_timing_key(key: str) -> bool:
+    k = key.lower()
+    return any(s in k for s in SKIP_SUBSTRINGS) or k.endswith(SKIP_SUFFIXES)
+
+
+def _is_rate_key(key: str) -> bool:
+    k = key.lower()
+    return any(s in k for s in RATE_SUBSTRINGS)
+
+
+def compare_values(
+    path: str, fresh, base, violations: list[str],
+    *, rate_abs_tol: float = RATE_ABS_TOL, count_rel_tol: float = COUNT_REL_TOL,
+) -> None:
+    """Recursively compare a fresh results tree against the baseline,
+    appending human-readable violation strings."""
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            violations.append(f"{path}: expected dict, got {type(fresh).__name__}")
+            return
+        for k, bv in base.items():
+            if k == "env" or _is_timing_key(k):
+                continue
+            if k not in fresh:
+                violations.append(f"{path}.{k}: missing from fresh results")
+                continue
+            compare_values(
+                f"{path}.{k}", fresh[k], bv, violations,
+                rate_abs_tol=rate_abs_tol, count_rel_tol=count_rel_tol,
+            )
+        for k in fresh:
+            if k == "env" or _is_timing_key(k):
+                continue
+            if k not in base:
+                violations.append(
+                    f"{path}.{k}: new key not in baseline (refresh baselines)"
+                )
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list) or len(fresh) != len(base):
+            violations.append(f"{path}: list shape changed")
+            return
+        for i, (fv, bv) in enumerate(zip(fresh, base)):
+            compare_values(
+                f"{path}[{i}]", fv, bv, violations,
+                rate_abs_tol=rate_abs_tol, count_rel_tol=count_rel_tol,
+            )
+        return
+    if isinstance(base, bool) or isinstance(fresh, bool):
+        if fresh != base:
+            violations.append(f"{path}: {fresh!r} != baseline {base!r}")
+        return
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        key = path.rsplit(".", 1)[-1]
+        if _is_rate_key(key):
+            if abs(fresh - base) > rate_abs_tol:
+                violations.append(
+                    f"{path}: {fresh:.4f} vs baseline {base:.4f} "
+                    f"(abs tol {rate_abs_tol})"
+                )
+        else:
+            scale = max(abs(base), 1.0)
+            if abs(fresh - base) > count_rel_tol * scale:
+                violations.append(
+                    f"{path}: {fresh} vs baseline {base} (rel tol {count_rel_tol})"
+                )
+        return
+    if fresh != base:
+        violations.append(f"{path}: {fresh!r} != baseline {base!r}")
+
+
+def compare_file(fresh_path: str, baseline_path: str) -> list[str]:
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    violations: list[str] = []
+    name = os.path.basename(fresh_path)
+    compare_values(name, fresh.get("results"), base.get("results"), violations)
+    return violations
+
+
+def check_dir(fresh_dir: str, baseline_dir: str) -> int:
+    """Compare every BENCH_*.json with a committed baseline; print a
+    report; return the number of violations (0 == pass). Fresh artifacts
+    without a baseline warn (new bench: commit its baseline); baselines
+    without a fresh artifact are violations only when the bench ran."""
+    total = 0
+    fresh_files = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
+    if not fresh_files:
+        print(f"check: no BENCH_*.json under {fresh_dir}", file=sys.stderr)
+        return 1
+    for fp in fresh_files:
+        bp = os.path.join(baseline_dir, os.path.basename(fp))
+        if not os.path.exists(bp):
+            print(f"check: {os.path.basename(fp)}: no baseline (commit one)")
+            continue
+        v = compare_file(fp, bp)
+        status = "OK" if not v else f"{len(v)} violation(s)"
+        print(f"check: {os.path.basename(fp)}: {status}")
+        for line in v:
+            print(f"  {line}")
+        total += len(v)
+    return total
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=os.environ.get("BENCH_OUT_DIR", "."))
+    ap.add_argument(
+        "--baseline-dir",
+        default=os.path.join(os.path.dirname(__file__), "baselines"),
+    )
+    args = ap.parse_args()
+    sys.exit(1 if check_dir(args.fresh_dir, args.baseline_dir) else 0)
+
+
+if __name__ == "__main__":
+    main()

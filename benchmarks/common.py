@@ -89,6 +89,20 @@ def model_hbm_scatter(
     }
 
 
+def publish_model(model: dict, *, prefix: str, registry=None, **labels) -> dict:
+    """Publish a traffic-model dict (``model_hbm_gather`` /
+    ``model_hbm_scatter`` output) as ``repro.obs`` registry gauges named
+    ``<prefix>.<key>`` — the benches set these right before snapshotting so
+    the modeled bytes ride the same artifact as the measured counters.
+    Returns ``model`` unchanged for chaining."""
+    from repro.obs.registry import default_registry
+
+    reg = registry if registry is not None else default_registry()
+    for k, v in model.items():
+        reg.gauge(f"{prefix}.{k}", **labels).set(float(v))
+    return model
+
+
 def write_json(name: str, payload: dict) -> str:
     """Write ``BENCH_<name>.json`` into $BENCH_OUT_DIR (default: cwd).
 

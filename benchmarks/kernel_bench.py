@@ -34,6 +34,7 @@ from benchmarks.common import (
     emit,
     model_hbm_gather,
     model_hbm_scatter,
+    publish_model,
     time_fn,
     write_json,
 )
@@ -104,7 +105,9 @@ def run(quick: bool = False) -> dict:
         table, cache.rows, iters=3,
     )
     emit("kernel.cached_gather.jnp_ref", t_cg, f"n={n} d={d} hit={hit_rate:.3f}")
-    traffic = model_hbm_gather(n, d, C, hit_rate)
+    traffic = publish_model(
+        model_hbm_gather(n, d, C, hit_rate), prefix="model.hbm_gather"
+    )
     emit(
         "kernel.cached_gather.structure",
         0.0,
@@ -159,7 +162,10 @@ def run(quick: bool = False) -> dict:
                     0.01, mode="jnp")),
                 table_s, accum_s, crows_s, caccum_s, iters=3,
             )
-            traffic_s = model_hbm_scatter(nuniq, d_s, Cs, hit_u)
+            traffic_s = publish_model(
+                model_hbm_scatter(nuniq, d_s, Cs, hit_u),
+                prefix="model.hbm_scatter", cap_frac=cap_frac, d=d_s,
+            )
             emit(
                 f"kernel.cached_scatter.cap1_{cap_frac}.d{d_s}", t_cs,
                 f"uniq={nuniq};hit={hit_u:.3f};"

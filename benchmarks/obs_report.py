@@ -1,0 +1,126 @@
+"""Render the repro.obs artifacts human-readably.
+
+Consumes the per-step JSONL (``obs.StepMetricsWriter``) and, optionally,
+the Chrome trace (``Tracer.export_chrome_trace``) a tc_streamed run (or
+``benchmarks/store_bench.py``) produced, and prints:
+
+  * step-metrics summary — steps, loss trajectory endpoints, final
+    hit/ring-hit rates, prefetch coverage, fault/eviction totals, host
+    critical-path us/step, modeled PCIe traffic;
+  * trace summary — per-span total/mean wall time by thread, plus the
+    write-back overlap: how many us of ``wb.commit`` ran while a
+    ``step.streamed`` span was open on ANOTHER thread (the double-buffered
+    commit demonstrably riding under the device step).
+
+Usage:
+    python -m benchmarks.obs_report --steps bench-out/store_steps.jsonl \
+        --trace bench-out/store_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+from repro.obs import read_step_metrics
+from repro.obs.tracing import overlap_us
+
+
+def summarize_steps(records: list[dict]) -> dict:
+    """Aggregate a step-metrics JSONL into the report dict (empty input ->
+    zeroed summary, the zero-step contract)."""
+    if not records:
+        return {"steps": 0}
+    last = records[-1]
+    losses = [r["loss"] for r in records if "loss" in r]
+    out = {
+        "steps": len(records),
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+    }
+    # cumulative fields: the LAST record holds the totals
+    for k in (
+        "hit_rate", "ring_hit_rate", "prefetch_coverage", "sync_faults",
+        "prefetch_faults", "evictions", "host_us_per_step", "wb_gate_wait_s",
+        "pcie_uploaded_bytes", "pcie_ring_saved_bytes",
+    ):
+        if k in last:
+            out[k] = last[k]
+    if "hbm_gather_bytes_flat" in last:
+        out["hbm_gather_bytes_flat"] = last["hbm_gather_bytes_flat"]
+        out["hbm_gather_bytes_cached_resident"] = last.get(
+            "hbm_gather_bytes_cached_resident"
+        )
+    return out
+
+
+def summarize_trace(doc: dict) -> dict:
+    """Per-span totals + the wb.commit / step.streamed cross-thread
+    overlap from a Chrome-trace document."""
+    evs = [e for e in doc.get("traceEvents", []) if e.get("ph") == "X"]
+    tnames = {
+        e["tid"]: e["args"]["name"]
+        for e in doc.get("traceEvents", [])
+        if e.get("ph") == "M" and e.get("name") == "thread_name"
+    }
+    spans = defaultdict(lambda: {"count": 0, "total_us": 0.0, "threads": set()})
+    for e in evs:
+        s = spans[e["name"]]
+        s["count"] += 1
+        s["total_us"] += float(e["dur"])
+        s["threads"].add(tnames.get(e["tid"], str(e["tid"])))
+    steps = [e for e in evs if e["name"] == "step.streamed"]
+    step_tids = {e["tid"] for e in steps}
+    commit_overlap = sum(
+        max((overlap_us(c, s) for s in steps), default=0.0)
+        for c in evs
+        if c["name"] == "wb.commit" and c["tid"] not in step_tids
+    )
+    return {
+        "spans": {
+            name: {
+                "count": s["count"],
+                "total_us": s["total_us"],
+                "mean_us": s["total_us"] / s["count"],
+                "threads": sorted(s["threads"]),
+            }
+            for name, s in sorted(spans.items())
+        },
+        "wb_commit_overlap_us": commit_overlap,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", required=True, help="step-metrics JSONL path")
+    ap.add_argument("--trace", default=None, help="Chrome trace JSON path")
+    ap.add_argument("--json", action="store_true", help="emit one JSON doc")
+    args = ap.parse_args()
+
+    report = {"steps": summarize_steps(read_step_metrics(args.steps))}
+    if args.trace:
+        with open(args.trace) as f:
+            report["trace"] = summarize_trace(json.load(f))
+
+    if args.json:
+        print(json.dumps(report, indent=2, sort_keys=True))
+        return
+    s = report["steps"]
+    print(f"steps: {s.get('steps', 0)}")
+    for k, v in s.items():
+        if k == "steps":
+            continue
+        print(f"  {k}: {v:.6g}" if isinstance(v, float) else f"  {k}: {v}")
+    if "trace" in report:
+        t = report["trace"]
+        print("spans (total us / count / threads):")
+        for name, sp in t["spans"].items():
+            print(
+                f"  {name:18s} {sp['total_us']:12.1f} {sp['count']:6d}  "
+                f"{','.join(sp['threads'])}"
+            )
+        print(f"wb.commit overlap with step.streamed: {t['wb_commit_overlap_us']:.1f} us")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -14,6 +15,16 @@ def main() -> None:
         help="comma list of: fig4,fig5,fig6,fig12,fig13,fig15,fig16,fig17,kernels,roofline,cache,store",
     )
     ap.add_argument("--quick", action="store_true", help="smaller sweeps for CI")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="after running, compare fresh BENCH_*.json in $BENCH_OUT_DIR "
+             "against --baseline-dir with per-metric tolerance bands "
+             "(benchmarks/check.py); exit 1 on violations",
+    )
+    ap.add_argument(
+        "--baseline-dir",
+        default=os.path.join(os.path.dirname(__file__), "baselines"),
+    )
     args, _ = ap.parse_known_args()
     want = set(args.only.split(",")) if args.only != "all" else {
         "fig5", "fig6", "fig12", "fig13", "fig15", "fig16", "fig17", "fig4",
@@ -75,6 +86,12 @@ def main() -> None:
 
         store_bench.run(**(store_bench.QUICK if args.quick else {}))
     print(f"# total_bench_seconds,{time.time() - t0:.1f},", file=sys.stderr)
+    if args.check:
+        from benchmarks.check import check_dir
+
+        fresh_dir = os.environ.get("BENCH_OUT_DIR", ".")
+        if check_dir(fresh_dir, args.baseline_dir):
+            sys.exit(1)
 
 
 if __name__ == "__main__":

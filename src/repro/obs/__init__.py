@@ -1,0 +1,30 @@
+"""Unified observability for the tier stack (``repro.obs``).
+
+Three pieces, documented in docs/observability.md:
+
+  * ``registry`` — typed counters / gauges / fixed-bucket histograms with
+    per-thread-sharded lock-free increments and ``snapshot()``/``delta()``
+    semantics; the one query surface over the hot cache, working set,
+    prefetcher, write-back worker and device slice ring.
+  * ``tracing`` — ``with span("wb.commit"):`` thread-attributed timing
+    with Chrome-trace / Perfetto JSON export, so the gather → device step
+    → gated write-back → prefetch overlap is visible as a timeline.
+  * ``stepmetrics`` — per-step JSONL sink consumed by
+    ``benchmarks/obs_report.py`` and uploaded by the CI quick lane.
+"""
+from repro.obs.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    HistogramSnapshot,
+    Registry,
+    Snapshot,
+    base_name,
+    default_registry,
+)
+from repro.obs.stepmetrics import (  # noqa: F401
+    StepMetricsWriter,
+    iter_step_metrics,
+    read_step_metrics,
+)
+from repro.obs.tracing import TRACER, Tracer, overlap_us, span  # noqa: F401

@@ -1,0 +1,364 @@
+"""Unified telemetry registry: typed counters, gauges and fixed-bucket
+histograms with ``snapshot()``/``delta()`` semantics.
+
+Design constraints (the tier stack hits these instruments on the host
+critical path every step):
+
+  * **No locks on increment.** ``Counter.inc`` and ``Histogram.observe``
+    write a per-thread shard (one dict slot per thread, keyed by
+    ``threading.get_ident()``); shards are merged only at ``snapshot()``
+    time. Under CPython each thread mutates exactly one slot, so the GIL
+    makes the write race-free without any lock, and a concurrent snapshot
+    sees a value that is at worst a few increments stale — never torn and
+    never double-counted. After ``join()``-ing the writer threads a
+    snapshot is exact (asserted under the real write-back + prefetch
+    threads in ``tests/test_obs.py``).
+  * **Collectors.** Subsystems that already keep cheap counters under
+    their own lock (``WorkingSetStats``, ``ShardStoreStats``) register a
+    *collector* — a callable returning ``{instrument_name: cumulative
+    value}`` pulled at snapshot time. Their hot path stays exactly as
+    cheap as before, and the registry is still the one query surface.
+    Collector values must be cumulative (monotonic) for ``delta()`` to
+    mean anything.
+  * **Instances, not globals.** ``default_registry()`` returns the
+    process-wide registry (ad-hoc instrumentation, benchmark model
+    gauges). Systems that are constructed repeatedly in one process —
+    ``StreamedTables``, ``serve_loop.Server`` — default to a *private*
+    ``Registry`` per instance so two runs never cross-count; pass
+    ``registry=`` explicitly to unify them onto one surface.
+
+Naming convention: ``tier.event_unit`` — e.g. ``ws.sync_fault_rows``,
+``store.read_bytes``, ``wb.gate_wait_seconds``, ``serve.request_ms``.
+Per-table (or otherwise per-entity) instruments carry labels, rendered
+into the flat snapshot key as ``name{table=0}``; ``Snapshot.sum(name)``
+aggregates across labels. See docs/observability.md for the catalog.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from bisect import bisect_right
+from typing import Callable, Iterable, Optional, Sequence
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _render(name: str, lkey: tuple) -> str:
+    if not lkey:
+        return name
+    return name + "{" + ",".join(f"{k}={v}" for k, v in lkey) + "}"
+
+
+def base_name(key: str) -> str:
+    """Strip the ``{label=...}`` suffix from a snapshot key."""
+    i = key.find("{")
+    return key if i < 0 else key[:i]
+
+
+class Counter:
+    """Monotonic cumulative counter (int or float adds)."""
+
+    __slots__ = ("name", "_shards")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._shards: dict[int, float] = {}
+
+    def inc(self, n: float = 1) -> None:
+        tid = threading.get_ident()
+        shards = self._shards
+        shards[tid] = shards.get(tid, 0) + n
+
+    def value(self) -> float:
+        return sum(list(self._shards.values()))
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self._value = float(v)
+
+    def value(self) -> float:
+        return self._value
+
+
+# default bucket boundaries: 4 per decade, 1e-6 .. 1e3 (covers ns spans
+# through multi-minute waits when the unit is seconds, and sub-ms requests
+# through ~17min when the unit is ms)
+DEFAULT_BUCKETS: tuple[float, ...] = tuple(
+    round(10 ** (k / 4.0), 10) for k in range(-24, 13)
+)
+
+
+class _HistShard:
+    __slots__ = ("counts", "n", "total", "min", "max")
+
+    def __init__(self, nbuckets: int):
+        self.counts = [0] * nbuckets
+        self.n = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+
+class HistogramSnapshot:
+    """Merged (or delta'd) histogram state + percentile extraction."""
+
+    __slots__ = ("bounds", "counts", "n", "total", "min", "max")
+
+    def __init__(self, bounds, counts, n, total, mn, mx):
+        self.bounds = bounds
+        self.counts = counts
+        self.n = n
+        self.total = total
+        self.min = mn
+        self.max = mx
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Bucket-interpolated quantile, q in [0, 1]. Returns 0.0 when
+        empty (the zero-step hazard contract: never NaN, never raise)."""
+        if self.n == 0:
+            return 0.0
+        target = q * self.n
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            lo = self.bounds[i - 1] if i > 0 else max(0.0, min(self.min, self.bounds[0]))
+            hi = self.bounds[i] if i < len(self.bounds) else max(self.max, self.bounds[-1])
+            if seen + c >= target:
+                frac = (target - seen) / c
+                est = lo + (hi - lo) * max(0.0, min(1.0, frac))
+                # clamp into the observed range (min/max are exact)
+                return max(self.min, min(self.max, est))
+            seen += c
+        return self.max
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(0.50)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(0.95)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(0.99)
+
+    def as_dict(self) -> dict:
+        return {
+            "count": self.n,
+            "sum": self.total,
+            "min": self.min if self.n else 0.0,
+            "max": self.max if self.n else 0.0,
+            "mean": self.mean,
+            "p50": self.p50,
+            "p95": self.p95,
+            "p99": self.p99,
+        }
+
+    def delta(self, prev: "HistogramSnapshot") -> "HistogramSnapshot":
+        counts = [a - b for a, b in zip(self.counts, prev.counts)]
+        # min/max are not delta-able; keep the current window-inclusive ones
+        return HistogramSnapshot(
+            self.bounds, counts, self.n - prev.n, self.total - prev.total,
+            self.min, self.max,
+        )
+
+
+class Histogram:
+    """Fixed-bucket histogram with per-thread shards (see module doc).
+
+    Bucket ``i`` counts observations in ``(bounds[i-1], bounds[i]]``; the
+    last bucket is the ``> bounds[-1]`` overflow. Percentiles interpolate
+    linearly within a bucket and clamp to the exact observed min/max.
+    """
+
+    __slots__ = ("name", "bounds", "_shards")
+
+    def __init__(self, name: str, bounds: Sequence[float] = DEFAULT_BUCKETS):
+        if list(bounds) != sorted(bounds) or len(bounds) < 1:
+            raise ValueError("histogram bounds must be a non-empty ascending sequence")
+        self.name = name
+        self.bounds = tuple(float(b) for b in bounds)
+        self._shards: dict[int, _HistShard] = {}
+
+    def observe(self, v: float) -> None:
+        tid = threading.get_ident()
+        shard = self._shards.get(tid)
+        if shard is None:
+            # racing threads each create their OWN tid's shard: safe
+            shard = self._shards[tid] = _HistShard(len(self.bounds) + 1)
+        shard.counts[bisect_right(self.bounds, v)] += 1
+        shard.n += 1
+        shard.total += v
+        if v < shard.min:
+            shard.min = v
+        if v > shard.max:
+            shard.max = v
+
+    def state(self) -> HistogramSnapshot:
+        counts = [0] * (len(self.bounds) + 1)
+        n = 0
+        total = 0.0
+        mn, mx = float("inf"), float("-inf")
+        for shard in list(self._shards.values()):
+            for i, c in enumerate(shard.counts):
+                counts[i] += c
+            n += shard.n
+            total += shard.total
+            mn = min(mn, shard.min)
+            mx = max(mx, shard.max)
+        if n == 0:
+            mn = mx = 0.0
+        return HistogramSnapshot(self.bounds, counts, n, total, mn, mx)
+
+
+class Snapshot:
+    """Point-in-time view of a registry: flat ``key -> value`` scalars
+    (counters, gauges, collector entries) plus histogram states."""
+
+    __slots__ = ("at", "values", "hists", "kinds")
+
+    def __init__(self, at: float, values: dict, hists: dict, kinds: dict):
+        self.at = at
+        self.values = values
+        self.hists = hists
+        self.kinds = kinds
+
+    def get(self, key: str, default: float = 0.0) -> float:
+        return self.values.get(key, default)
+
+    def sum(self, name: str) -> float:
+        """Sum a scalar instrument across all label sets."""
+        return sum(v for k, v in self.values.items() if base_name(k) == name)
+
+    def hist(self, key: str) -> Optional[HistogramSnapshot]:
+        return self.hists.get(key)
+
+    def delta(self, prev: "Snapshot") -> "Snapshot":
+        """This snapshot minus ``prev``: cumulative instruments (counters,
+        collectors) subtract; gauges keep their current value; histograms
+        subtract bucket-wise. Keys absent from ``prev`` keep their value."""
+        values = {}
+        for k, v in self.values.items():
+            if self.kinds.get(k) == "gauge":
+                values[k] = v
+            else:
+                values[k] = v - prev.values.get(k, 0)
+        hists = {}
+        for k, h in self.hists.items():
+            ph = prev.hists.get(k)
+            hists[k] = h.delta(ph) if ph is not None and ph.bounds == h.bounds else h
+        return Snapshot(self.at, values, hists, dict(self.kinds))
+
+    def as_dict(self) -> dict:
+        out = dict(self.values)
+        for k, h in self.hists.items():
+            for field, v in h.as_dict().items():
+                out[f"{k}.{field}"] = v
+        return out
+
+
+class Registry:
+    """Instrument factory + snapshot surface (see module docstring)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()  # creation / collector registration only
+        self._instruments: dict[tuple, object] = {}
+        self._collectors: list[Callable[[], dict]] = []
+
+    # -- instrument creation (get-or-create; idempotent per name+labels) ---
+
+    def _get(self, kind: str, name: str, labels: dict, factory):
+        key = (kind, name, _label_key(labels))
+        inst = self._instruments.get(key)
+        if inst is None:
+            with self._lock:
+                inst = self._instruments.get(key)
+                if inst is None:
+                    for other_kind in ("counter", "gauge", "histogram"):
+                        if other_kind != kind and (other_kind, name, key[2]) in self._instruments:
+                            raise TypeError(
+                                f"instrument {name!r} already registered as {other_kind}"
+                            )
+                    inst = self._instruments[key] = factory()
+        return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, lambda: Counter(name))
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, lambda: Gauge(name))
+
+    def histogram(
+        self, name: str, bounds: Sequence[float] = DEFAULT_BUCKETS, **labels
+    ) -> Histogram:
+        h = self._get("histogram", name, labels, lambda: Histogram(name, bounds))
+        return h
+
+    def register_collector(self, fn: Callable[[], dict], **labels) -> Callable[[], dict]:
+        """Register ``fn() -> {name: cumulative_value}``, pulled at every
+        snapshot. ``labels`` are rendered into each returned key. Returns
+        the wrapped callable (pass it to ``unregister_collector``)."""
+        lkey = _label_key(labels)
+
+        def wrapped() -> dict:
+            return {_render(k, lkey): v for k, v in fn().items()}
+
+        with self._lock:
+            self._collectors.append(wrapped)
+        return wrapped
+
+    def unregister_collector(self, wrapped: Callable[[], dict]) -> None:
+        with self._lock:
+            if wrapped in self._collectors:
+                self._collectors.remove(wrapped)
+
+    # -- snapshot / delta ---------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        values: dict[str, float] = {}
+        hists: dict[str, HistogramSnapshot] = {}
+        kinds: dict[str, str] = {}
+        with self._lock:
+            items = list(self._instruments.items())
+            collectors = list(self._collectors)
+        for (kind, name, lkey), inst in items:
+            key = _render(name, lkey)
+            if kind == "histogram":
+                hists[key] = inst.state()
+            else:
+                values[key] = inst.value()
+            kinds[key] = kind
+        for fn in collectors:
+            for key, v in fn().items():
+                values[key] = values.get(key, 0) + v
+                kinds[key] = "collector"
+        return Snapshot(time.time(), values, hists, kinds)
+
+    def delta(self, prev: Snapshot) -> Snapshot:
+        return self.snapshot().delta(prev)
+
+
+_DEFAULT = Registry()
+
+
+def default_registry() -> Registry:
+    """The process-wide registry (see module docstring for when NOT to
+    use it)."""
+    return _DEFAULT

@@ -1,0 +1,86 @@
+"""Structured per-step JSONL sink.
+
+One json object per line, one line per training step (or serving wave).
+The writer sanitizes numpy / jax scalars into plain python so the file is
+readable by anything (``benchmarks/obs_report.py`` is the in-repo
+consumer; the CI quick lane uploads the file as an artifact).
+
+Reading a 0-d device array forces a host sync — the writer is therefore
+OPT-IN on the streamed driver (``step_writer=``): enabling step metrics
+trades a per-step device sync for the record, exactly like printing the
+loss would.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+def _to_py(v):
+    """Best-effort scalar/array -> plain python (jax arrays included via
+    __array__)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, dict):
+        return {str(k): _to_py(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_to_py(x) for x in v]
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        return arr.item()
+    return arr.tolist()
+
+
+class StepMetricsWriter:
+    """Append-per-step JSONL writer. ``flush_every=1`` (default) flushes
+    each line so a crashed run still leaves a readable file."""
+
+    def __init__(self, path: str, *, flush_every: int = 1):
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self.path = path
+        self._f = open(path, "w")
+        self._flush_every = max(1, int(flush_every))
+        self._since_flush = 0
+        self.records_written = 0
+
+    def write(self, record: dict) -> None:
+        self._f.write(json.dumps(_to_py(record), sort_keys=True))
+        self._f.write("\n")
+        self.records_written += 1
+        self._since_flush += 1
+        if self._since_flush >= self._flush_every:
+            self._f.flush()
+            self._since_flush = 0
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_step_metrics(path: str) -> list[dict]:
+    """Load every record of a step-metrics JSONL file."""
+    return list(iter_step_metrics(path))
+
+
+def iter_step_metrics(path: str) -> Iterator[dict]:
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                yield json.loads(line)

@@ -1,0 +1,170 @@
+"""Span-based, thread-attributed step tracing with Chrome-trace export.
+
+``with span("wb.commit"): ...`` records one *complete* event (name, start,
+duration, thread) into the process-wide ``TRACER``. Tracing is OFF by
+default and the disabled fast path is a slot access + branch (no clock
+read, no allocation beyond the tiny span object), so spans are safe to
+leave on the host hot path permanently.
+
+Events are buffered per thread (one list per ``threading.get_ident()``,
+appended without a lock — each thread owns its own list) and merged at
+export. ``export_chrome_trace`` writes the Chrome ``traceEvents`` JSON
+(also loadable in Perfetto: ui.perfetto.dev → Open trace file): one ``M``
+``thread_name`` metadata event per thread plus ``X`` complete events with
+microsecond timestamps. Nesting needs no explicit parent ids — Chrome
+nests ``X`` events on the same thread by interval containment, which is
+exactly the call structure since spans are context managers.
+
+This is how the gather → device step → gated write-back → prefetch
+overlap becomes *visible* as a timeline instead of inferred from
+``host_us_per_step``: the ``wb.commit`` span on the ``wb-worker`` thread
+sits under the next ``step.streamed`` span on the main thread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+
+class _Span:
+    """Context manager recording one complete event (cheap: __slots__,
+    no generator machinery)."""
+
+    __slots__ = ("_tracer", "name", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str):
+        self._tracer = tracer
+        self.name = name
+        self._t0 = None
+
+    def __enter__(self):
+        if self._tracer.enabled:
+            self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc):
+        t0 = self._t0
+        if t0 is not None:
+            self._tracer._record(self.name, t0, time.perf_counter_ns() - t0)
+        return False
+
+
+class Tracer:
+    def __init__(self):
+        self.enabled = False
+        self._buffers: dict[int, list] = {}  # tid -> [(name, t0_ns, dur_ns)]
+        self._tnames: dict[int, str] = {}
+        self._pid = os.getpid()
+
+    # -- recording ----------------------------------------------------------
+
+    def span(self, name: str) -> _Span:
+        return _Span(self, name)
+
+    def instant(self, name: str) -> None:
+        if self.enabled:
+            self._record(name, time.perf_counter_ns(), -1)
+
+    def _record(self, name: str, t0_ns: int, dur_ns: int) -> None:
+        tid = threading.get_ident()
+        buf = self._buffers.get(tid)
+        if buf is None:
+            # each thread creates only its OWN buffer: race-free under GIL
+            buf = self._buffers[tid] = []
+            self._tnames[tid] = threading.current_thread().name
+        buf.append((name, t0_ns, dur_ns))
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self, clear: bool = True) -> None:
+        if clear:
+            self.clear()
+        self.enabled = True
+
+    def stop(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        self._buffers = {}
+        self._tnames = {}
+
+    # -- export -------------------------------------------------------------
+
+    def events(self) -> list[dict]:
+        """Merged events sorted by start time: {name, tid, tname, ts_us,
+        dur_us} (dur_us is None for instants)."""
+        out = []
+        for tid, buf in list(self._buffers.items()):
+            tname = self._tnames.get(tid, f"thread-{tid}")
+            for name, t0_ns, dur_ns in list(buf):
+                out.append({
+                    "name": name,
+                    "tid": tid,
+                    "tname": tname,
+                    "ts_us": t0_ns / 1e3,
+                    "dur_us": None if dur_ns < 0 else dur_ns / 1e3,
+                })
+        out.sort(key=lambda e: e["ts_us"])
+        return out
+
+    def export_chrome_trace(self, path: str) -> str:
+        """Write the Chrome ``traceEvents`` JSON (open in chrome://tracing
+        or Perfetto). Returns ``path``."""
+        evs = []
+        for tid, tname in sorted(self._tnames.items()):
+            evs.append({
+                "name": "thread_name", "ph": "M", "pid": self._pid, "tid": tid,
+                "args": {"name": tname},
+            })
+        for e in self.events():
+            if e["dur_us"] is None:
+                evs.append({
+                    "name": e["name"], "ph": "i", "s": "t",
+                    "pid": self._pid, "tid": e["tid"], "ts": e["ts_us"],
+                })
+            else:
+                evs.append({
+                    "name": e["name"], "ph": "X",
+                    "pid": self._pid, "tid": e["tid"],
+                    "ts": e["ts_us"], "dur": e["dur_us"],
+                })
+        doc = {"traceEvents": evs, "displayTimeUnit": "ms"}
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+            f.write("\n")
+        return path
+
+
+TRACER = Tracer()
+
+
+def span(name: str, tracer: Optional[Tracer] = None) -> _Span:
+    """``with span("tier.event"): ...`` against the process tracer (or an
+    explicit one)."""
+    return (tracer or TRACER).span(name)
+
+
+def _interval(e: dict) -> Optional[tuple[float, float]]:
+    """(start, end) in us from either an ``events()`` dict (ts_us/dur_us)
+    or a Chrome-trace ``X`` event (ts/dur); None for instants."""
+    ts = e.get("ts_us", e.get("ts"))
+    dur = e.get("dur_us", e.get("dur"))
+    if ts is None or dur is None:
+        return None
+    return float(ts), float(ts) + float(dur)
+
+
+def overlap_us(a: dict, b: dict) -> float:
+    """Overlap (us) between two span events — the quantity the obs report
+    uses to show the write-back commit riding under the device step.
+    Accepts both ``Tracer.events()`` dicts and Chrome-trace ``X`` events."""
+    ia, ib = _interval(a), _interval(b)
+    if ia is None or ib is None:
+        return 0.0
+    return max(0.0, min(ia[1], ib[1]) - max(ia[0], ib[0]))

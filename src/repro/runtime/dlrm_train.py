@@ -477,6 +477,8 @@ def init_streamed(
     prefetch: bool = True,
     ring_depth: int = 2,
     overlap_write_back: bool = True,
+    registry=None,
+    tracer=None,
 ):
     """``init_cached_state``'s counterpart for ``system="tc_streamed"``.
 
@@ -507,6 +509,7 @@ def init_streamed(
         store_path, tables[:, :V], accums[:, :V],
         resident_rows=R, num_shards=min(num_shards, V), prefetch=prefetch,
         ring_depth=ring_depth, overlap_write_back=overlap_write_back,
+        registry=registry, tracer=tracer,
     )
     cache = init_hot_cache(C, D, V, jnp.float32)
     state = {
@@ -521,7 +524,10 @@ def init_streamed(
     return state, streamed
 
 
-def make_streamed_train_step(cfg: DLRMConfig, streamed, *, lr: float = 0.01, decay: float = 0.98):
+def make_streamed_train_step(
+    cfg: DLRMConfig, streamed, *, lr: float = 0.01, decay: float = 0.98,
+    step_writer=None,
+):
     """Host driver for ``tc_streamed``: returns
     ``step(state, batch, step_index=None) -> (state, loss)``.
 
@@ -536,12 +542,73 @@ def make_streamed_train_step(cfg: DLRMConfig, streamed, *, lr: float = 0.01, dec
     (4) hands the updated cold lanes to the background write-back thread
     (or commits synchronously when overlap is off) and rotates the ring
     mirror. ``step_index`` keys the prefetch barrier; pass the pipeline's
-    step id (None skips the wait)."""
+    step id (None skips the wait).
+
+    ``step_writer`` (an ``obs.StepMetricsWriter``) is OPT-IN per-step
+    telemetry: each step appends one JSONL record (loss / hit rates /
+    fault + eviction counters / modeled PCIe+HBM bytes — see
+    docs/observability.md). Reading the loss and hit_rate forces a device
+    sync per step, exactly like printing the loss would; leave it None on
+    the throughput path. The cumulative fields are computed from the same
+    main-thread registry counters ``streamed.stats()`` derives from, so
+    the last record agrees with a post-run ``stats()`` call."""
     device_step = make_sparse_train_step(cfg, lr=lr, system="tc_streamed", decay=decay)
     V, D = streamed.num_rows, streamed.dim
     K = streamed.ring_depth
+    tracer = streamed.tracer
+    reg = streamed.registry
+    # main-thread instruments the per-step record derives rates from
+    # (get-or-create returns the store's own instances)
+    c_steps = reg.counter("st.steps_total")
+    c_gather_s = reg.counter("st.gather_seconds")
+    c_wait_s = reg.counter("wb.gate_wait_seconds")
+    c_sync_s = reg.counter("wb.sync_commit_seconds")
+    c_ring = reg.counter("ring.hit_lanes")
+    c_pcie_up = reg.counter("pcie.uploaded_bytes")
+    c_pcie_saved = reg.counter("pcie.ring_saved_bytes")
+
+    def write_record(state, aux, step_index, batch):
+        covered = sum(ws.stats.covered_reads for ws in streamed.working)
+        sync_faults = sum(ws.stats.sync_faults for ws in streamed.working)
+        cold = covered + sync_faults
+        ring_hits = c_ring.value()
+        steps = c_steps.value()
+        critical_s = c_gather_s.value() + c_wait_s.value() + c_sync_s.value()
+        hit_rate = float(state["hit_rate"])  # device sync (opt-in cost)
+        B, T, P = batch["idx"].shape
+        # modeled HBM gather traffic, resident accounting — the same
+        # formula as benchmarks/common.model_hbm_gather (flat row DMA vs
+        # hot-tier misses only)
+        hbm_flat = B * T * P * D * 4
+        record = {
+            "step": int(step_index) if step_index is not None else int(steps) - 1,
+            "loss": float(aux["loss"]),
+            "hit_rate": hit_rate,
+            "ring_hit_rate": (
+                ring_hits / (ring_hits + cold) if (ring_hits + cold) else 0.0
+            ),
+            "ring_step_hit_rate": float(state.get("ring_hit_rate", 0.0)),
+            "prefetch_coverage": covered / cold if cold else 1.0,
+            "sync_faults": int(sync_faults),
+            "prefetch_faults": int(
+                sum(ws.stats.prefetch_faults for ws in streamed.working)
+            ),
+            "evictions": int(sum(ws.stats.evictions for ws in streamed.working)),
+            "wb_gate_wait_s": c_wait_s.value(),
+            "host_us_per_step": critical_s / steps * 1e6 if steps else 0.0,
+            "pcie_uploaded_bytes": int(c_pcie_up.value()),
+            "pcie_ring_saved_bytes": int(c_pcie_saved.value()),
+            "hbm_gather_bytes_flat": hbm_flat,
+            "hbm_gather_bytes_cached_resident": (1.0 - hit_rate) * hbm_flat,
+        }
+        step_writer.write(record)
 
     def step(state, batch, *, step_index=None):
+        with tracer.span("step.streamed"):
+            state, loss = _step_inner(state, batch, step_index)
+        return state, loss
+
+    def _step_inner(state, batch, step_index):
         cast = batch["cast"]
         if "ring_ids" in state and int(state["ring_ids"].shape[0]) < K:
             # a mirror SHALLOWER than the device ring only forgoes skipped
@@ -570,9 +637,10 @@ def make_streamed_train_step(cfg: DLRMConfig, streamed, *, lr: float = 0.01, dec
         # the gather is off the working-set lock: let the previous step's
         # queued write-back commit now, overlapped with the device step
         streamed.release_write_back()
-        state, aux = device_step(
-            state, dict(batch, cold_rows=cold_rows, cold_accums=cold_accums)
-        )
+        with tracer.span("step.device"):
+            state, aux = device_step(
+                state, dict(batch, cold_rows=cold_rows, cold_accums=cold_accums)
+            )
         if streamed.overlap_write_back:
             streamed.write_back_async(cast, aux)
         else:
@@ -583,6 +651,8 @@ def make_streamed_train_step(cfg: DLRMConfig, streamed, *, lr: float = 0.01, dec
                 np.asarray(aux["hit_seg"]),
             )
         streamed.ring_push(cast)
+        if step_writer is not None:
+            write_record(state, aux, step_index, batch)
         return state, aux["loss"]
 
     return step
@@ -607,7 +677,15 @@ def make_streamed_promote(streamed):
     make ring entries stale."""
     from repro.store.streamed import ring_reset_state
 
+    c_runs = streamed.registry.counter("promote.runs_total")
+    c_demoted = streamed.registry.counter("promote.demoted_rows")
+
     def promote(state):
+        with streamed.tracer.span("promote.streamed"):
+            return _promote_inner(state)
+
+    def _promote_inner(state):
+        c_runs.inc()
         streamed.drain_write_back()
         state = ring_reset_state(state, streamed)
         C = state["cache_ids"].shape[1] - 1
@@ -630,6 +708,7 @@ def make_streamed_promote(streamed):
             leaves = real & ~stays
             for mask, insert in ((stays, False), (leaves, True)):
                 if mask.any():
+                    c_demoted.inc(int(mask.sum()))
                     streamed.demote(
                         t, cids[t][mask], crows[t][mask], caccums[t][mask], insert=insert
                     )

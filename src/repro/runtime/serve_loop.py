@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import api
+from repro.obs import tracing
+from repro.obs.registry import Registry
 
 
 @dataclass
@@ -29,9 +31,18 @@ class Server:
 
     All slots share one cache pytree; prefill runs per intake wave (padded
     to the slot batch), decode steps run for everyone simultaneously.
+
+    Telemetry lives on a ``repro.obs`` registry (a private one per Server
+    by default — pass ``registry=`` to unify with other systems): call
+    counters plus request/prefill/decode latency histograms, surfaced as
+    p50/p99 by ``summary()``. ``metrics`` is kept as a read-only dict view
+    over the counters for existing callers.
     """
 
-    def __init__(self, cfg, params, *, slots: int = 8, max_len: int = 256, eos_id: int = 1):
+    def __init__(
+        self, cfg, params, *, slots: int = 8, max_len: int = 256, eos_id: int = 1,
+        registry: Optional[Registry] = None, tracer: Optional[tracing.Tracer] = None,
+    ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -39,7 +50,26 @@ class Server:
         self.eos_id = eos_id
         self._prefill = jax.jit(lambda p, t, c: api.prefill_step(cfg, p, t, c))
         self._decode = jax.jit(lambda p, c, t: api.decode_step(cfg, p, c, t))
-        self.metrics = {"prefill_calls": 0, "decode_steps": 0, "tokens_out": 0}
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else tracing.TRACER
+        self._c_prefill = self.registry.counter("serve.prefill_calls")
+        self._c_decode = self.registry.counter("serve.decode_steps")
+        self._c_tokens = self.registry.counter("serve.tokens_out")
+        self._c_requests = self.registry.counter("serve.requests_total")
+        # request latency = wave start -> the request's last generated token
+        self._h_request_ms = self.registry.histogram("serve.request_ms")
+        self._h_prefill_ms = self.registry.histogram("serve.prefill_ms")
+        self._h_decode_ms = self.registry.histogram("serve.decode_step_ms")
+
+    @property
+    def metrics(self) -> dict:
+        """Legacy counter view (``metrics["decode_steps"]`` etc.) — a thin
+        snapshot adapter over the registry counters."""
+        return {
+            "prefill_calls": int(self._c_prefill.value()),
+            "decode_steps": int(self._c_decode.value()),
+            "tokens_out": int(self._c_tokens.value()),
+        }
 
     def generate(self, requests: list[Request], *, greedy: bool = True, seed: int = 0) -> list[Request]:
         """Serve a wave of requests (len <= slots), lockstep decode."""
@@ -50,10 +80,19 @@ class Server:
         for i, r in enumerate(requests):
             toks[i, S - len(r.prompt) :] = r.prompt  # left-pad
         cache = api.init_cache(self.cfg, B, self.max_len)
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
-        self.metrics["prefill_calls"] += 1
+        t_wave = time.perf_counter()
+        with self.tracer.span("serve.prefill"):
+            logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+            # the argmax pull is the sync point: charge it to prefill
+            cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        self._c_prefill.inc()
+        self._h_prefill_ms.observe((time.perf_counter() - t_wave) * 1e3)
         key = jax.random.key(seed)
-        cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        done_ms: dict[int, float] = {}  # rid -> latency at completion
+
+        def finished(r: Request, step: int) -> bool:
+            return r.done or len(r.generated) >= r.max_new_tokens
+
         max_new = max(r.max_new_tokens for r in requests)
         for step in range(max_new):
             for i, r in enumerate(requests):
@@ -61,21 +100,46 @@ class Server:
                     r.generated.append(int(cur[i]))
                     if cur[i] == self.eos_id:
                         r.done = True
-            if all(r.done or len(r.generated) >= r.max_new_tokens for r in requests):
+                if finished(r, step) and r.rid not in done_ms:
+                    done_ms[r.rid] = (time.perf_counter() - t_wave) * 1e3
+            if all(finished(r, step) for r in requests):
                 break
-            logits, cache = self._decode(self.params, cache, jnp.asarray(cur[:, None]))
-            self.metrics["decode_steps"] += 1
-            if greedy:
-                cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-            else:
-                key, sub = jax.random.split(key)
-                cur = np.asarray(jax.random.categorical(sub, logits[:, -1]), np.int32)
-        self.metrics["tokens_out"] += sum(len(r.generated) for r in requests)
+            t0 = time.perf_counter()
+            with self.tracer.span("serve.decode"):
+                logits, cache = self._decode(self.params, cache, jnp.asarray(cur[:, None]))
+                if greedy:
+                    cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+                else:
+                    key, sub = jax.random.split(key)
+                    cur = np.asarray(jax.random.categorical(sub, logits[:, -1]), np.int32)
+            self._c_decode.inc()
+            self._h_decode_ms.observe((time.perf_counter() - t0) * 1e3)
+        self._c_tokens.inc(sum(len(r.generated) for r in requests))
+        self._c_requests.inc(len(requests))
+        wave_ms = (time.perf_counter() - t_wave) * 1e3
+        for r in requests:
+            self._h_request_ms.observe(done_ms.get(r.rid, wave_ms))
         return requests
 
-    def throughput_report(self, seconds: float) -> dict:
+    def summary(self) -> dict:
+        """Counter totals + latency percentiles (0.0 when nothing was
+        served yet — the histograms' empty contract)."""
+        snap = self.registry.snapshot()
+        req = snap.hist("serve.request_ms")
+        dec = snap.hist("serve.decode_step_ms")
         return {
-            "tokens_out": self.metrics["tokens_out"],
-            "decode_steps": self.metrics["decode_steps"],
-            "tok_per_s": self.metrics["tokens_out"] / max(seconds, 1e-9),
+            **self.metrics,
+            "requests": int(snap.get("serve.requests_total")),
+            "p50_ms": req.p50,
+            "p99_ms": req.p99,
+            "decode_p50_ms": dec.p50,
+            "decode_p99_ms": dec.p99,
+        }
+
+    def throughput_report(self, seconds: float) -> dict:
+        m = self.metrics
+        return {
+            "tokens_out": m["tokens_out"],
+            "decode_steps": m["decode_steps"],
+            "tok_per_s": m["tokens_out"] / max(seconds, 1e-9),
         }

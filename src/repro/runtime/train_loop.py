@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from repro.checkpoint import Checkpointer
 from repro.data.pipeline import Prefetcher
 from repro.models import api
+from repro.obs import tracing
+from repro.obs.stepmetrics import StepMetricsWriter
 from repro.optim import apply_updates
 from repro.optim.compression import apply_ef, make_ef_state
 from repro.optim.optimizers import Transform
@@ -90,7 +92,11 @@ def train(
     seed: int = 0,
     log_every: int = 10,
     log: Callable[[str], None] = print,
+    step_writer: Optional[StepMetricsWriter] = None,
 ) -> TrainState:
+    """``step_writer`` (obs.StepMetricsWriter) appends one JSONL record per
+    step — step / loss / wall ms / straggler flag. The loop already syncs
+    on the loss every step, so enabling it costs nothing extra."""
     params = api.init_params(cfg, jax.random.key(seed))
     opt_state = optimizer.init(params)
     ef_state = make_ef_state(params) if compression != "none" else 0
@@ -114,12 +120,23 @@ def train(
         for i in range(start_step, num_steps):
             step_no, batch = pf.get()
             t0 = time.perf_counter()
-            params, opt_state, ef_state, metrics = step_fn(params, opt_state, ef_state, batch)
-            jax.block_until_ready(metrics["loss"])
+            with tracing.TRACER.span("step.train"):
+                params, opt_state, ef_state, metrics = step_fn(params, opt_state, ef_state, batch)
+                jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
-            if detector.record(step_no, dt):
+            is_straggler = detector.record(step_no, dt)
+            if is_straggler:
                 log(f"[train] straggler step {step_no}: {dt * 1e3:.1f}ms")
             losses.append(float(metrics["loss"]))
+            if step_writer is not None:
+                step_writer.write(
+                    {
+                        "step": step_no,
+                        "loss": losses[-1],
+                        "step_ms": dt * 1e3,
+                        "straggler": bool(is_straggler),
+                    }
+                )
             if log_every and step_no % log_every == 0:
                 log(f"[train] step {step_no} loss {losses[-1]:.4f} ({dt * 1e3:.1f}ms)")
             if ckpt and ckpt_every and (step_no + 1) % ckpt_every == 0:

@@ -26,11 +26,19 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import tracing
+from repro.obs.registry import Registry
 from repro.store.working_set import WorkingSetManager
 
 
 class ShardPrefetcher:
-    def __init__(self, working_sets: Sequence[WorkingSetManager]):
+    def __init__(
+        self,
+        working_sets: Sequence[WorkingSetManager],
+        *,
+        registry: Optional[Registry] = None,
+        tracer: Optional[tracing.Tracer] = None,
+    ):
         self._working_sets = list(working_sets)
         self._q: queue.Queue = queue.Queue()
         self._done: dict[int, threading.Event] = {}
@@ -39,8 +47,13 @@ class ShardPrefetcher:
         self._exc: Optional[BaseException] = None
         self._stop = threading.Event()
         self._closed = False
-        self._scheduled_rows = 0
-        self._thread = threading.Thread(target=self._run, daemon=True)
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else tracing.TRACER
+        self._c_scheduled = self.registry.counter("prefetch.scheduled_rows")
+        # the thread name is what attributes fault-in spans in the trace
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="shard-prefetch"
+        )
         self._thread.start()
 
     def _run(self):
@@ -51,8 +64,9 @@ class ShardPrefetcher:
                 continue
             try:
                 if self._exc is None:  # after a failure, drain but do no IO
-                    for ws, ids in zip(self._working_sets, ids_per_table):
-                        ws.fault_in(ids, prefetch=True)
+                    with self.tracer.span("prefetch.fault_in"):
+                        for ws, ids in zip(self._working_sets, ids_per_table):
+                            ws.fault_in(ids, prefetch=True)
                     # pin: the rows are spoken for until the step's gather
                     # consumes them — eviction must not undo the prefetch
                     # (working_set._alloc skips pins). Pin under the same
@@ -85,7 +99,9 @@ class ShardPrefetcher:
         with self._lock:
             self._done[step] = ev
             self._pending[step] = ids_per_table
-            self._scheduled_rows += int(sum(len(i) for i in ids_per_table))
+        # registry counter: sharded per thread, no lock needed even though
+        # schedule() runs on the pipeline producer thread
+        self._c_scheduled.inc(int(sum(len(i) for i in ids_per_table)))
         self._q.put((step, ids_per_table, ev))
 
     # -- consumer side (train loop) ----------------------------------------
@@ -105,9 +121,9 @@ class ShardPrefetcher:
     @property
     def scheduled_rows(self) -> int:
         """Total rows scheduled for fault-in since construction (telemetry:
-        compare with the working sets' prefetch_faults to see dedup)."""
-        with self._lock:
-            return self._scheduled_rows
+        compare with the working sets' prefetch_faults to see dedup). Thin
+        adapter over the ``prefetch.scheduled_rows`` registry counter."""
+        return int(self._c_scheduled.value())
 
     def release(self, step: int) -> None:
         """Unpin the rows scheduled for ``step`` (call once the step's

@@ -39,6 +39,19 @@ class ShardStoreStats:
     def as_dict(self) -> dict:
         return dict(self.__dict__)
 
+    # registry instrument names (tier.event_unit); pulled as an obs
+    # collector so the counting above stays under _stats_lock unchanged
+    METRIC_NAMES = {
+        "rows_read": "store.read_rows",
+        "rows_written": "store.write_rows",
+        "bytes_read": "store.read_bytes",
+        "bytes_written": "store.write_bytes",
+    }
+
+    def metrics(self) -> dict:
+        """Cumulative values under registry names (obs collector hook)."""
+        return {name: getattr(self, f) for f, name in self.METRIC_NAMES.items()}
+
 
 @dataclass
 class EmbeddingShardStore:

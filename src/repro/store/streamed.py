@@ -48,6 +48,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.cache.hotcache import init_hot_cache
+from repro.obs import tracing
+from repro.obs.registry import Registry, Snapshot
 from repro.store.prefetch import ShardPrefetcher
 from repro.store.shards import EmbeddingShardStore, create_store, open_store
 from repro.store.working_set import WorkingSetManager
@@ -78,6 +80,8 @@ class StreamedTables:
         prefetch: bool = True,
         ring_depth: int = 0,
         overlap_write_back: bool = False,
+        registry: Optional[Registry] = None,
+        tracer: Optional[tracing.Tracer] = None,
     ):
         if not stores:
             raise ValueError("need at least one table store")
@@ -85,9 +89,23 @@ class StreamedTables:
             raise ValueError(f"ring_depth must be >= 0, got {ring_depth}")
         self.stores = list(stores)
         self.working = [WorkingSetManager(s, resident_rows) for s in self.stores]
+        # telemetry surface (repro.obs): a PRIVATE registry per instance by
+        # default, so repeatedly-constructed StreamedTables (tests, bench
+        # sweeps) never cross-count; pass registry= to unify several systems
+        # onto one snapshot. The tracer defaults to the process tracer so
+        # driver- and store-level spans land in one timeline.
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else tracing.TRACER
         self.prefetcher: Optional[ShardPrefetcher] = (
-            ShardPrefetcher(self.working) if prefetch else None
+            ShardPrefetcher(self.working, registry=self.registry, tracer=self.tracer)
+            if prefetch
+            else None
         )
+        # working-set / shard-store counters stay plain ints under their own
+        # locks; the registry pulls them as per-table collectors at snapshot
+        for t, ws in enumerate(self.working):
+            self.registry.register_collector(ws.stats.metrics, table=t)
+            self.registry.register_collector(ws.store.stats.metrics, table=t)
         # host mirror of the device-side slice ring (docs/store.md): one
         # entry per recent step, each a per-table array of the cold unique
         # ids that step updated. Lanes found here are served from the
@@ -103,7 +121,8 @@ class StreamedTables:
         self._ring_union: list[np.ndarray] = [
             np.zeros((0,), np.int64) for _ in self.stores
         ]
-        self._ring_hits = 0  # lanes served by the ring (skipped host gathers)
+        # lanes served by the ring (skipped host gathers + saved uploads)
+        self._c_ring_hits = self.registry.counter("ring.hit_lanes")
         # per-cast memo of the valid cold unique ids (barrier, write-back
         # enqueue and ring push all need them for the SAME cast each step)
         self._cast_ids_memo: tuple = (None, None)
@@ -125,7 +144,9 @@ class StreamedTables:
         self._wb_q: queue.Queue = queue.Queue()
         self._wb_thread: Optional[threading.Thread] = None
         if self.overlap_write_back:
-            self._wb_thread = threading.Thread(target=self._wb_run, daemon=True)
+            self._wb_thread = threading.Thread(
+                target=self._wb_run, daemon=True, name="wb-worker"
+            )
             self._wb_thread.start()
         # host mirror of the device hot set (per table, sorted): lanes whose
         # id is hot are served by the device cache, so gather/prefetch skip
@@ -141,15 +162,26 @@ class StreamedTables:
         # latency, not host CPU. benchmarks/store_bench.py reports these
         # per step so the host-path speedup stays visible in BENCH_store.
         # With overlap enabled the commit runs on the worker thread OFF the
-        # step critical path: _host_write_back_s then accrues there (single
-        # writer per counter either way), while the critical path pays only
-        # _host_wb_wait_s — the time the main thread spent blocked on the
-        # barrier or on a free buffer slot.
-        self._host_gather_s = 0.0
-        self._host_write_back_s = 0.0  # total commit time, sync + background
-        self._host_wb_sync_s = 0.0  # the subset spent on the caller thread
-        self._host_wb_wait_s = 0.0
-        self._host_steps = 0
+        # step critical path: wb.commit_seconds then accrues there (the
+        # registry counters are per-thread sharded, so that write is
+        # lock-free too), while the critical path pays only
+        # wb.gate_wait_seconds — the time the main thread spent blocked on
+        # the barrier or on a free buffer slot.
+        self._c_gather_s = self.registry.counter("st.gather_seconds")
+        # total commit time, sync + background
+        self._c_wb_commit_s = self.registry.counter("wb.commit_seconds")
+        # the subset spent on the caller thread
+        self._c_wb_sync_s = self.registry.counter("wb.sync_commit_seconds")
+        self._c_wb_wait_s = self.registry.counter("wb.gate_wait_seconds")
+        self._c_steps = self.registry.counter("st.steps_total")
+        self._h_gather_ms = self.registry.histogram("st.gather_ms")
+        # modeled PCIe traffic (benchmarks/common.py unit costs): bytes the
+        # per-step cold slice actually uploads vs bytes the device slice
+        # ring saved by serving lanes on device
+        self._c_pcie_up = self.registry.counter("pcie.uploaded_bytes")
+        self._c_pcie_saved = self.registry.counter("pcie.ring_saved_bytes")
+        # windowed-stats baseline (stats_window); None = since construction
+        self._window_base: Optional[Snapshot] = None
 
     # -- construction ------------------------------------------------------
 
@@ -165,6 +197,8 @@ class StreamedTables:
         prefetch: bool = True,
         ring_depth: int = 0,
         overlap_write_back: bool = False,
+        registry: Optional[Registry] = None,
+        tracer: Optional[tracing.Tracer] = None,
     ) -> "StreamedTables":
         """Write (T, V, D) float32 tables (+ optional (T, V) / (T, V, 1)
         accumulators) into per-table shard directories under ``path``."""
@@ -182,6 +216,7 @@ class StreamedTables:
         return cls(
             stores, resident_rows=resident_rows, prefetch=prefetch,
             ring_depth=ring_depth, overlap_write_back=overlap_write_back,
+            registry=registry, tracer=tracer,
         )
 
     @classmethod
@@ -194,11 +229,14 @@ class StreamedTables:
         prefetch: bool = True,
         ring_depth: int = 0,
         overlap_write_back: bool = False,
+        registry: Optional[Registry] = None,
+        tracer: Optional[tracing.Tracer] = None,
     ) -> "StreamedTables":
         stores = [open_store(_table_dir(path, t)) for t in range(num_tables)]
         return cls(
             stores, resident_rows=resident_rows, prefetch=prefetch,
             ring_depth=ring_depth, overlap_write_back=overlap_write_back,
+            registry=registry, tracer=tracer,
         )
 
     @property
@@ -331,30 +369,38 @@ class StreamedTables:
         reads inside the working set — counted, never wrong). Padding lanes
         (>= num_unique, or the fill sentinel) are zero."""
         if self.prefetcher is not None and step is not None:
-            self.prefetcher.wait(step)
+            with self.tracer.span("prefetch.wait"):
+                self.prefetcher.wait(step)
         t0 = time.perf_counter()
-        uids = np.asarray(cast["unique_ids"])
-        T, n = uids.shape
-        rows = np.zeros((T, n, self.dim), np.float32)
-        accums = np.zeros((T, n, 1), np.float32)
-        for t in range(T):
-            n_valid = int(np.asarray(cast["num_unique"][t]))
-            valid = np.zeros((n,), bool)
-            valid[:n_valid] = uids[t, :n_valid] < self.stores[t].num_rows
-            hot = self._hot_ids[t]
-            if hot.size:  # hot lanes are served by the device cache: skip
-                valid &= ~_isin_sorted(uids[t], hot)
-            if self._ring:  # ring lanes are served on device too: skip the
-                ring = self._ring_member(t, uids[t]) & valid  # gather AND the
-                if ring.any():  # modeled PCIe upload (their slice lanes stay 0)
-                    self._ring_hits += int(ring.sum())
-                    valid &= ~ring
-            if valid.any():
-                r, a = self.working[t].gather(uids[t][valid])
-                rows[t][valid] = r
-                accums[t][valid] = a
-        self._host_gather_s += time.perf_counter() - t0
-        self._host_steps += 1
+        with self.tracer.span("st.gather"):
+            uids = np.asarray(cast["unique_ids"])
+            T, n = uids.shape
+            rows = np.zeros((T, n, self.dim), np.float32)
+            accums = np.zeros((T, n, 1), np.float32)
+            for t in range(T):
+                lane_bytes = self.stores[t].row_nbytes  # row + in-stride accum
+                n_valid = int(np.asarray(cast["num_unique"][t]))
+                valid = np.zeros((n,), bool)
+                valid[:n_valid] = uids[t, :n_valid] < self.stores[t].num_rows
+                hot = self._hot_ids[t]
+                if hot.size:  # hot lanes are served by the device cache: skip
+                    valid &= ~_isin_sorted(uids[t], hot)
+                if self._ring:  # ring lanes are served on device too: skip the
+                    ring = self._ring_member(t, uids[t]) & valid  # gather AND the
+                    if ring.any():  # modeled PCIe upload (their lanes stay 0)
+                        hits = int(ring.sum())
+                        self._c_ring_hits.inc(hits)
+                        self._c_pcie_saved.inc(hits * lane_bytes)
+                        valid &= ~ring
+                if valid.any():
+                    self._c_pcie_up.inc(int(valid.sum()) * lane_bytes)
+                    r, a = self.working[t].gather(uids[t][valid])
+                    rows[t][valid] = r
+                    accums[t][valid] = a
+        dt = time.perf_counter() - t0
+        self._c_gather_s.inc(dt)
+        self._h_gather_ms.observe(dt * 1e3)
+        self._c_steps.inc()
         if self.prefetcher is not None and step is not None:
             self.prefetcher.release(step)  # consumed: unpin the step's rows
         return rows, accums
@@ -382,7 +428,7 @@ class StreamedTables:
                 self.working[t].update(
                     uids[t][valid], rows[t][valid], accums[t][valid], insert=insert
                 )
-        self._host_write_back_s += time.perf_counter() - t0
+        self._c_wb_commit_s.inc(time.perf_counter() - t0)
 
     def write_back(
         self, cast: dict, rows: np.ndarray, accums: np.ndarray, hit: np.ndarray
@@ -392,8 +438,9 @@ class StreamedTables:
         cache; padding/sentinel lanes are dropped. Synchronous (caller
         thread) — the overlapped path is ``write_back_async``."""
         t0 = time.perf_counter()
-        self._commit_write_back(cast, rows, accums, hit)
-        self._host_wb_sync_s += time.perf_counter() - t0
+        with self.tracer.span("wb.commit"):
+            self._commit_write_back(cast, rows, accums, hit)
+        self._c_wb_sync_s.inc(time.perf_counter() - t0)
 
     # -- double-buffered write-back ----------------------------------------
 
@@ -408,19 +455,21 @@ class StreamedTables:
             gate.wait()  # released once the NEXT gather is off the WS lock
             try:
                 if self._wb_exc is None:  # after a failure: drain, no IO
-                    # device sync happens HERE, off the train loop's thread
-                    rows = np.asarray(aux["cold_rows"])
-                    accums = np.asarray(aux["cold_accums"])
-                    hit = np.asarray(aux["hit_seg"])
-                    # non-installing commit: rows still resident (the common
-                    # case — they were gathered one step ago) update in
-                    # place; rows the NEXT step's installs already evicted
-                    # write straight through to their shard. Installing them
-                    # here instead would replay the eviction cascade under
-                    # the working-set lock right when the next gather wants
-                    # it (the deferred-commit LRU inversion), and the slice
-                    # ring already serves their near-term re-reads.
-                    self._commit_write_back(cast, rows, accums, hit, insert=False)
+                    with self.tracer.span("wb.commit"):
+                        # device sync happens HERE, off the train loop thread
+                        rows = np.asarray(aux["cold_rows"])
+                        accums = np.asarray(aux["cold_accums"])
+                        hit = np.asarray(aux["hit_seg"])
+                        # non-installing commit: rows still resident (the
+                        # common case — they were gathered one step ago)
+                        # update in place; rows the NEXT step's installs
+                        # already evicted write straight through to their
+                        # shard. Installing them here instead would replay
+                        # the eviction cascade under the working-set lock
+                        # right when the next gather wants it (the
+                        # deferred-commit LRU inversion), and the slice ring
+                        # already serves their near-term re-reads.
+                        self._commit_write_back(cast, rows, accums, hit, insert=False)
             except BaseException as e:  # surfaced on the next barrier/enqueue
                 with self._wb_cond:
                     self._wb_exc = e
@@ -447,15 +496,16 @@ class StreamedTables:
         ids = [self._valid_ids(cast, t) for t in range(self.num_tables)]
         gate = threading.Event()
         t0 = time.perf_counter()
-        with self._wb_cond:
-            self._raise_wb_exc_locked()
-            while len(self._wb_inflight) >= self.WB_DEPTH:
-                self._release_gates_locked()  # a gated job can never drain
-                self._wb_cond.wait(1.0)
+        with self.tracer.span("wb.enqueue_wait"):
+            with self._wb_cond:
                 self._raise_wb_exc_locked()
-            self._wb_inflight.append(ids)
-            self._wb_gates.append(gate)
-        self._host_wb_wait_s += time.perf_counter() - t0
+                while len(self._wb_inflight) >= self.WB_DEPTH:
+                    self._release_gates_locked()  # a gated job can never drain
+                    self._wb_cond.wait(1.0)
+                    self._raise_wb_exc_locked()
+                self._wb_inflight.append(ids)
+                self._wb_gates.append(gate)
+        self._c_wb_wait_s.inc(time.perf_counter() - t0)
         self._wb_q.put((cast, aux, gate))
 
     def _release_gates_locked(self) -> None:
@@ -483,20 +533,21 @@ class StreamedTables:
             else [self._gather_ids(cast, t) for t in range(self.num_tables)]
         )
         t0 = time.perf_counter()
-        with self._wb_cond:
-            while True:
-                self._raise_wb_exc_locked()
-                if not self._wb_inflight:
-                    break
-                if needed is not None and not any(
-                    ids.size and job[t].size and _isin_sorted(ids, job[t]).any()
-                    for job in self._wb_inflight
-                    for t, ids in enumerate(needed)
-                ):
-                    break
-                self._release_gates_locked()  # gated jobs can't commit
-                self._wb_cond.wait(1.0)
-        self._host_wb_wait_s += time.perf_counter() - t0
+        with self.tracer.span("wb.barrier"):
+            with self._wb_cond:
+                while True:
+                    self._raise_wb_exc_locked()
+                    if not self._wb_inflight:
+                        break
+                    if needed is not None and not any(
+                        ids.size and job[t].size and _isin_sorted(ids, job[t]).any()
+                        for job in self._wb_inflight
+                        for t, ids in enumerate(needed)
+                    ):
+                        break
+                    self._release_gates_locked()  # gated jobs can't commit
+                    self._wb_cond.wait(1.0)
+        self._c_wb_wait_s.inc(time.perf_counter() - t0)
 
     def drain_write_back(self) -> None:
         """Block until every queued write-back is committed (checkpoint /
@@ -569,6 +620,59 @@ class StreamedTables:
     def __exit__(self, *exc):
         self.close()
 
+    def metric_totals(self, *, drain: bool = True) -> Snapshot:
+        """Raw registry snapshot of every instrument this stack owns
+        (``drain=True`` fences the write-back pipeline first so cumulative
+        totals are settled — same caveat as ``stats``)."""
+        if drain:
+            self.drain_write_back()
+        return self.registry.snapshot()
+
+    def _derive(self, snap: Snapshot) -> dict:
+        """The legacy aggregate stats dict, computed from a registry
+        snapshot (cumulative) or snapshot delta (windowed). All ratios are
+        zero-guarded: a zero-step window yields 0.0 defaults, never NaN
+        and never a ZeroDivisionError."""
+        covered = snap.sum("ws.covered_rows")
+        cold = covered + snap.sum("ws.sync_fault_rows")
+        gather_s = snap.get("st.gather_seconds")
+        wb_sync_s = snap.get("wb.sync_commit_seconds")
+        wb_wait_s = snap.get("wb.gate_wait_seconds")
+        steps = snap.get("st.steps_total")
+        ring_hits = snap.get("ring.hit_lanes")
+        # host CPU on the step CRITICAL PATH: gather + barrier/slot waits +
+        # only the commit time that actually ran on the caller thread
+        # (host_wb_sync_s); background commits stay visible separately in
+        # host_write_back_s without being misattributed to the step.
+        critical_s = gather_s + wb_wait_s + wb_sync_s
+        return {
+            "cold_reads": int(cold),
+            "prefetch_coverage": covered / cold if cold else 0.0,
+            "sync_faults": int(snap.sum("ws.sync_fault_rows")),
+            "evictions": int(snap.sum("ws.evicted_rows")),
+            "bytes_read": int(snap.sum("store.read_bytes")),
+            "bytes_written": int(snap.sum("store.write_bytes")),
+            "scheduled_rows": int(snap.sum("prefetch.scheduled_rows")),
+            # host CPU spent in the working-set gather/write-back path, per
+            # step (prefetch wait excluded) — the open-addressing speedup
+            "host_gather_s": gather_s,
+            "host_write_back_s": snap.get("wb.commit_seconds"),
+            "host_wb_sync_s": wb_sync_s,
+            "host_wb_wait_s": wb_wait_s,
+            "write_back_overlapped": self.overlap_write_back and wb_sync_s == 0.0,
+            "host_us_per_step": critical_s / steps * 1e6 if steps else 0.0,
+            # lanes the device slice ring served (skipped host gather AND
+            # modeled PCIe upload); hit rate is over all lanes the host
+            # WOULD have gathered: ring hits + actual working-set reads
+            "ring_hits": int(ring_hits),
+            "ring_hit_rate": (
+                ring_hits / (ring_hits + cold) if (ring_hits + cold) else 0.0
+            ),
+            # modeled PCIe slice traffic (lane bytes = (D + 1) * 4)
+            "pcie_uploaded_bytes": int(snap.get("pcie.uploaded_bytes")),
+            "pcie_ring_saved_bytes": int(snap.get("pcie.ring_saved_bytes")),
+        }
+
     def stats(self) -> dict:
         """Aggregate store/working-set/write-back/ring statistics.
 
@@ -576,50 +680,46 @@ class StreamedTables:
         counters are settled and the shard/working-set numbers include
         every committed step — polling this every step therefore
         serializes the overlapped commit back onto the caller; read it at
-        episode boundaries (benchmarks do) or accept the stall."""
-        self.drain_write_back()  # settle the background commit counters
+        episode boundaries (benchmarks do) or accept the stall. For a
+        per-step poll WITHOUT the fence, read the main-thread instruments
+        off ``self.registry`` directly (the streamed driver's step-metrics
+        records do)."""
+        snap = self.metric_totals(drain=True)
         per_table = [
             {**ws.stats.as_dict(), "store": ws.store.stats.as_dict()} for ws in self.working
         ]
-        cold = sum(ws.stats.cold_reads for ws in self.working)
-        covered = sum(ws.stats.covered_reads for ws in self.working)
-        # host CPU on the step CRITICAL PATH: gather + barrier/slot waits +
-        # only the commit time that actually ran on the caller thread
-        # (host_wb_sync_s); background commits stay visible separately in
-        # host_write_back_s without being misattributed to the step.
-        critical_s = self._host_gather_s + self._host_wb_wait_s + self._host_wb_sync_s
-        return {
-            "per_table": per_table,
-            "cold_reads": cold,
-            "prefetch_coverage": covered / cold if cold else 1.0,
-            "sync_faults": sum(ws.stats.sync_faults for ws in self.working),
-            "evictions": sum(ws.stats.evictions for ws in self.working),
-            "bytes_read": sum(s.stats.bytes_read for s in self.stores),
-            "bytes_written": sum(s.stats.bytes_written for s in self.stores),
-            "scheduled_rows": (
-                self.prefetcher.scheduled_rows if self.prefetcher is not None else 0
-            ),
-            # host CPU spent in the working-set gather/write-back path, per
-            # step (prefetch wait excluded) — the open-addressing speedup
-            "host_gather_s": self._host_gather_s,
-            "host_write_back_s": self._host_write_back_s,
-            "host_wb_sync_s": self._host_wb_sync_s,
-            "host_wb_wait_s": self._host_wb_wait_s,
-            "write_back_overlapped": self.overlap_write_back
-            and self._host_wb_sync_s == 0.0,
-            "host_us_per_step": (
-                critical_s / self._host_steps * 1e6 if self._host_steps else 0.0
-            ),
-            # lanes the device slice ring served (skipped host gather AND
-            # modeled PCIe upload); hit rate is over all lanes the host
-            # WOULD have gathered: ring hits + actual working-set reads
-            "ring_hits": self._ring_hits,
-            "ring_hit_rate": (
-                self._ring_hits / (self._ring_hits + cold)
-                if (self._ring_hits + cold)
-                else 0.0
-            ),
-        }
+        return {"per_table": per_table, **self._derive(snap)}
+
+    def reset_stats_window(self) -> None:
+        """Start a fresh stats window at the current totals (the cumulative
+        counters themselves never reset — windowing is snapshot deltas)."""
+        self._window_base = self.metric_totals(drain=True)
+
+    def stats_window(self) -> dict:
+        """Like ``stats`` but over the window since the last
+        ``stats_window()`` / ``reset_stats_window()`` call (since
+        construction for the first call), then advances the window. The
+        per-table dicts are reconstructed from the labeled snapshot delta.
+        A zero-step window returns clean 0.0-rate defaults."""
+        snap = self.metric_totals(drain=True)
+        prev, self._window_base = self._window_base, snap
+        d = snap.delta(prev) if prev is not None else snap
+        per_table = []
+        for t in range(self.num_tables):
+            ws = {
+                f: int(d.get(f"{name}{{table={t}}}"))
+                for f, name in type(self.working[t].stats).METRIC_NAMES.items()
+            }
+            ws["cold_reads"] = ws["covered_reads"] + ws["sync_faults"]
+            ws["prefetch_coverage"] = (
+                ws["covered_reads"] / ws["cold_reads"] if ws["cold_reads"] else 1.0
+            )
+            ws["store"] = {
+                f: int(d.get(f"{name}{{table={t}}}"))
+                for f, name in type(self.stores[t].stats).METRIC_NAMES.items()
+            }
+            per_table.append(ws)
+        return {"per_table": per_table, **self._derive(d)}
 
 
 # ---------------------------------------------------------------------------

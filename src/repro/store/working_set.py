@@ -85,6 +85,22 @@ class WorkingSetStats:
             "prefetch_coverage": self.prefetch_coverage,
         }
 
+    # registry instrument names (convention: tier.event_unit) for each
+    # field — repro.obs pulls these as a snapshot-time collector, so the
+    # hot-path increments above stay plain ints under the manager's lock
+    METRIC_NAMES = {
+        "covered_reads": "ws.covered_rows",
+        "sync_faults": "ws.sync_fault_rows",
+        "prefetch_faults": "ws.prefetch_fault_rows",
+        "demand_faults": "ws.demand_fault_rows",
+        "evictions": "ws.evicted_rows",
+        "dirty_writebacks": "ws.dirty_writeback_rows",
+    }
+
+    def metrics(self) -> dict:
+        """Cumulative values under registry names (obs collector hook)."""
+        return {name: getattr(self, f) for f, name in self.METRIC_NAMES.items()}
+
 
 class WorkingSetManager:
     def __init__(self, store: EmbeddingShardStore, resident_rows: int):
