@@ -27,6 +27,11 @@ fresh temp directory, and reports:
     AND its (D+1)*4-byte modeled PCIe upload; savings fraction == hit
     rate, the same modeled-traffic accounting BENCH_kernels uses for HBM).
 
+  * ``sharding`` — modeled multi-host layout (repro.dist.sparse): for each
+    shard count the per-shard resident budget (the working set splits with
+    the row ranges) and the modeled all-to-all exchange bytes per step from
+    a cast-only sweep (the ``dist.alltoall_bytes`` gauge's formula).
+
 CSV rows via benchmarks.common.emit:
   store/alpha<a>/budget1_<f>,<us>,coverage=<c>;sync_faults=<n>;evict=<n>;readMB=<m>
 
@@ -131,6 +136,42 @@ def _run_streamed(
         med_us = times[len(times) // 2] * 1e6
         hot_hit = float(np.mean(hits[len(hits) // 2 :])) if hits else float("nan")
         return med_us, hot_hit, stats
+
+
+def model_sharding(
+    cfg, *, alpha, batch, steps, resident_rows, shard_counts=(1, 2, 4, 8),
+) -> dict:
+    """Model the multi-host sharded layout (repro.dist.sparse) from a
+    cast-only sweep — no multi-device mesh needed. Per shard count S:
+    the per-shard resident budget (the working set splits with the row
+    ranges) and the modeled all-to-all exchange bytes per step (every
+    valid unique row's merged (D,) float32 value reaches the S - 1
+    non-owner shards — the ``dist.alltoall_bytes`` gauge's formula,
+    averaged over the sweep)."""
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=batch,
+        s=float(alpha), seed=0,
+    )
+    cs = CastingServer(rows_per_table=cfg.rows_per_table)
+    valid = [
+        int(np.asarray(cs(stream.batch_at(i))["cast"]["num_unique"]).sum())
+        for i in range(steps)
+    ]
+    mean_valid = float(np.mean(valid))
+    out = {"mean_valid_unique_lanes": mean_valid, "num_shards": {}}
+    for S in shard_counts:
+        a2a = mean_valid * (S - 1) * cfg.emb_dim * 4
+        out["num_shards"][str(S)] = {
+            "per_shard_resident_rows": max(1, resident_rows // S),
+            "alltoall_bytes_per_step_model": a2a,
+        }
+        emit(
+            f"store/sharding/S{S}", a2a,
+            f"per_shard_resident={max(1, resident_rows // S)};"
+            f"mean_valid_lanes={mean_valid:.1f}",
+        )
+    return out
 
 
 def measure_obs_overhead(host_us_per_step: float) -> dict:
@@ -258,6 +299,10 @@ def run(
                 f"pcieMBsaved={pcie_mb_saved:.2f}",
             )
         results[str(alpha)] = per_budget
+    sharding = model_sharding(
+        cfg, alpha=alphas[0], batch=batch, steps=min(steps, 24),
+        resident_rows=max(1, rows // budget_fracs[0]),
+    )
     obs_overhead = measure_obs_overhead(host_us_first)
     emit(
         "store/obs_overhead", obs_overhead["obs_us_per_step_est"],
@@ -272,6 +317,7 @@ def run(
             "emb_dim": emb_dim, "steps": steps, "promote_every": promote_every,
         },
         "alphas": results,
+        "sharding": sharding,
         "obs_overhead": obs_overhead,
         # basenames, not paths: the artifact dir is runner-dependent
         "obs_artifacts": {k: os.path.basename(p) for k, p in obs_paths.items()},

@@ -202,6 +202,10 @@ def _demote_flush(state: dict, streamed) -> dict:
     if "cache_ids" not in state:
         return state  # flat systems: nothing to demote
     if streamed is not None:
+        # sharded stores (repro.dist.sparse.ShardedStreamedTables) own their
+        # per-rank demote-all + flush; duck-type rather than import dist here
+        if hasattr(streamed, "flush_state"):
+            return streamed.flush_state(state)
         from repro.store.streamed import flush_state  # checkpoint <- store is lazy
 
         return flush_state(state, streamed)

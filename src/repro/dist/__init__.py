@@ -1,2 +1,4 @@
-"""Distribution layer: logical-axis sharding rules and pipeline parallelism."""
+"""Distribution layer: logical-axis sharding rules, pipeline parallelism,
+and the sharded streamed embedding stack (``dist.sparse`` — per-table tier
+stacks partitioned over the ``model`` axis with elastic checkpointing)."""
 from repro import _compat  # noqa: F401  (jax API shims must be in place first)

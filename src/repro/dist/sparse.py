@@ -1,0 +1,764 @@
+"""Multi-host sharded streamed training: the ``tc_streamed`` tier stack
+partitioned over the ``model`` mesh axis.
+
+Every embedding table is split into ``S`` contiguous row ranges
+``[lo_s, hi_s)`` of equal width ``W = ceil(V / S)`` — one range per mesh
+shard. Each shard owns the FULL tier stack for its range: a shard-local
+hot-row cache on its device, a shard-local host working set, and
+shard-local disk files (one ``StreamedTables`` per rank, holding rows in
+LOCAL coordinates ``global_id - lo``). Casting is shard-local by
+construction: the cast's ``unique_ids`` are ascending, so each shard's
+owned lanes are one contiguous span ``[a, b) = searchsorted(uids, lo),
+searchsorted(uids, hi)`` — the host passes just ``(a, m=b-a)`` per
+(shard, table) and the device re-derives its local lane layout with one
+roll (ascending + sentinel-tail, exactly the ``split_update_lanes``
+contract).
+
+The whole device step runs inside ONE ``shard_map`` body (dense compute
+replicated per device — keeping it inside the body stops GSPMD from
+re-partitioning the dense matmuls and changing reduction order):
+
+  1. each shard merges its hot-cache rows into its gathered cold slice
+     for its owned lanes,
+  2. the merged unique-row values are exchanged — ``all_gather`` over
+     ``model`` + a per-lane take from the owner shard (the all-to-all of
+     casted lookups; an exact value exchange, no reductions that could
+     flip ``-0.0``),
+  3. forward pools from the assembled full rows with the SAME
+     take + segment-sum reduction as the flat table (bit-equal),
+  4. the casted backward coalesces replicated, each shard rolls out its
+     owned gradient span and updates its cache + cold slice through the
+     same fused cached-scatter kernel as single-host ``tc_streamed``.
+
+Because the hot/cold Adagrad paths are bit-identical to the flat
+``scatter_apply_adagrad`` (PR 4's fusion-isolated helpers), tier placement
+AND shard placement are semantically transparent: sharded training is
+bit-identical to single-host ``tc_streamed`` (and therefore to ``tc``) —
+property-tested on simulated meshes in ``tests/test_sharded.py``.
+
+Elastic checkpointing: ``save_coherent`` demotes + flushes every rank and
+snapshots the whole store tree (``layout.json`` records the row-range
+directory); ``restore_coherent`` rebuilds a checkpoint taken on H shards
+onto H' live shards by walking the overlaps of the two range directories
+(a single-host ``StreamedTables`` snapshot restores onto any shard count
+the same way — its layout is one implicit range ``[0, V)``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import _compat  # noqa: F401  (jax.shard_map shim on 0.4.x)
+from repro.cache.hotcache import init_hot_cache, resolve, split_update_lanes
+from repro.cache.stats import fold_counts, segment_counts
+from repro.configs.base import DLRMConfig
+from repro.kernels import ops
+from repro.obs import tracing
+from repro.obs.registry import Registry
+from repro.optim import adagrad, apply_updates
+from repro.stack.base import dense_fn
+from repro.stack.flat import init_sparse_system
+from repro.store.shards import open_store
+from repro.store.streamed import StreamedTables
+
+LAYOUT_FILE = "layout.json"
+LAYOUT_VERSION = 1
+_COPY_CHUNK = 65536  # rows per elastic-restore copy chunk
+
+
+def shard_ranges(num_rows: int, num_shards: int) -> list[tuple[int, int]]:
+    """Equal-width contiguous row ranges: shard ``s`` owns ``[s*W, min((s+1)*W,
+    V))`` with ``W = ceil(V / S)`` — so ``owner(id) = min(id // W, S - 1)``
+    is one divide, matching the shard-file convention of ``store.shards``."""
+    if not 1 <= num_shards <= num_rows:
+        raise ValueError(f"num_shards must be in [1, {num_rows}], got {num_shards}")
+    W = -(-num_rows // num_shards)
+    return [(s * W, min((s + 1) * W, num_rows)) for s in range(num_shards)]
+
+
+def _rank_dir(path: str, s: int) -> str:
+    return os.path.join(path, f"rank_{s:02d}")
+
+
+class ShardedStreamedTables:
+    """S shard-local ``StreamedTables`` + the row-range directory.
+
+    Each rank holds its range in LOCAL row coordinates (``global - lo``)
+    under ``path/rank_{s:02d}/table_{t:03d}``; ``path/layout.json`` is the
+    authoritative range directory (elastic restore walks it). All ranks
+    share one registry, with every instrument labeled ``shard=s`` —
+    ``Snapshot.sum(name)`` aggregates fleet-wide, per-rank ``stats()``
+    stays exact."""
+
+    def __init__(
+        self,
+        ranks: list[StreamedTables],
+        ranges: list[tuple[int, int]],
+        num_rows: int,
+        *,
+        path: str,
+        registry: Registry,
+        tracer,
+    ):
+        self.ranks = list(ranks)
+        self.ranges = [(int(lo), int(hi)) for lo, hi in ranges]
+        self._num_rows = int(num_rows)
+        self._path = path
+        self.registry = registry
+        self.tracer = tracer
+        # modeled all-to-all exchange traffic of the last step: every valid
+        # unique row's merged value reaches the S-1 non-owner shards
+        self._g_a2a = self.registry.gauge("dist.alltoall_bytes")
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        path: str,
+        tables: np.ndarray,
+        accums: Optional[np.ndarray] = None,
+        *,
+        num_shards: int,
+        resident_rows: int,
+        store_shards: int = 8,
+        registry: Optional[Registry] = None,
+        tracer=None,
+    ) -> "ShardedStreamedTables":
+        """Split (T, V, D) float32 tables into ``num_shards`` rank stores.
+        ``resident_rows`` is the PER-SHARD working-set budget (the bench's
+        per-shard resident column); ``store_shards`` the file count per
+        table per rank. Rank stores run synchronous write-back without a
+        ring or prefetcher — the sharded driver owns step overlap."""
+        tables = np.asarray(tables)
+        accums = None if accums is None else np.asarray(accums)
+        T, V, D = tables.shape
+        ranges = shard_ranges(V, num_shards)
+        registry = registry if registry is not None else Registry()
+        tracer = tracer if tracer is not None else tracing.TRACER
+        os.makedirs(path, exist_ok=True)
+        ranks = []
+        for s, (lo, hi) in enumerate(ranges):
+            ranks.append(
+                StreamedTables.create(
+                    _rank_dir(path, s),
+                    tables[:, lo:hi],
+                    None if accums is None else accums[:, lo:hi],
+                    resident_rows=max(1, resident_rows),
+                    num_shards=min(store_shards, hi - lo),
+                    prefetch=False,
+                    ring_depth=0,
+                    overlap_write_back=False,
+                    registry=registry,
+                    tracer=tracer,
+                    shard=s,
+                )
+            )
+        layout = {
+            "version": LAYOUT_VERSION,
+            "num_shards": num_shards,
+            "num_rows": V,
+            "dim": D,
+            "num_tables": T,
+            "ranges": [[lo, hi] for lo, hi in ranges],
+        }
+        with open(os.path.join(path, LAYOUT_FILE), "w") as f:
+            json.dump(layout, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        return cls(ranks, ranges, V, path=path, registry=registry, tracer=tracer)
+
+    @classmethod
+    def open(
+        cls,
+        path: str,
+        *,
+        resident_rows: int,
+        registry: Optional[Registry] = None,
+        tracer=None,
+    ) -> "ShardedStreamedTables":
+        with open(os.path.join(path, LAYOUT_FILE)) as f:
+            layout = json.load(f)
+        registry = registry if registry is not None else Registry()
+        tracer = tracer if tracer is not None else tracing.TRACER
+        ranks = [
+            StreamedTables.open(
+                _rank_dir(path, s),
+                layout["num_tables"],
+                resident_rows=max(1, resident_rows),
+                prefetch=False,
+                ring_depth=0,
+                overlap_write_back=False,
+                registry=registry,
+                tracer=tracer,
+                shard=s,
+            )
+            for s in range(layout["num_shards"])
+        ]
+        return cls(
+            ranks, [tuple(r) for r in layout["ranges"]], layout["num_rows"],
+            path=path, registry=registry, tracer=tracer,
+        )
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.ranks)
+
+    @property
+    def num_tables(self) -> int:
+        return self.ranks[0].num_tables
+
+    @property
+    def num_rows(self) -> int:
+        """GLOBAL rows per table (each rank holds its local slice)."""
+        return self._num_rows
+
+    @property
+    def dim(self) -> int:
+        return self.ranks[0].dim
+
+    @property
+    def path(self) -> str:
+        return self._path
+
+    # -- per-step host path ------------------------------------------------
+
+    def local_casts(self, cast: dict):
+        """Project a global cast onto every shard: per-rank local casts
+        (ascending LOCAL unique ids packed from lane 0, ``num_unique`` =
+        owned-lane count) plus the (S, T) ``lane_start``/``lane_count``
+        arrays the device step rebuilds its lane layout from. Owned lanes
+        of the ascending global uniques are one contiguous span per shard
+        — two searchsorteds, no per-lane scan."""
+        uids = np.asarray(cast["unique_ids"])
+        num_unique = np.asarray(cast["num_unique"])
+        T, n = uids.shape
+        S = self.num_shards
+        lane_start = np.zeros((S, T), np.int32)
+        lane_count = np.zeros((S, T), np.int32)
+        locals_ = []
+        for s, (lo, hi) in enumerate(self.ranges):
+            W = hi - lo
+            l_uids = np.full((T, n), W, np.int32)  # local sentinel tail
+            l_num = np.zeros((T,), np.int32)
+            for t in range(T):
+                valid = uids[t, : int(num_unique[t])]
+                a = int(np.searchsorted(valid, lo))
+                b = int(np.searchsorted(valid, hi))
+                m = b - a
+                lane_start[s, t] = a
+                lane_count[s, t] = m
+                l_uids[t, :m] = valid[a:b] - lo
+                l_num[t] = m
+            locals_.append({"unique_ids": l_uids, "num_unique": l_num})
+        return locals_, lane_start, lane_count
+
+    def gather(self, locals_: list) -> tuple[np.ndarray, np.ndarray]:
+        """Assemble every shard's cold slice: (S, T, n, D) rows +
+        (S, T, n, 1) accums, lanes ``[0, m)`` per (shard, table), hot-mirror
+        lanes left zero (served by that shard's device cache)."""
+        rows = []
+        accums = []
+        for s, rank in enumerate(self.ranks):
+            r, a = rank.gather(None, locals_[s])
+            rows.append(r)
+            accums.append(a)
+        return np.stack(rows), np.stack(accums)
+
+    def write_back(self, locals_: list, aux: dict) -> None:
+        """Commit every shard's updated cold lanes ((S, T, n, ...) device
+        aux) through its rank's working set. Synchronous per rank."""
+        rows = np.asarray(aux["cold_rows"])
+        accums = np.asarray(aux["cold_accums"])
+        hit = np.asarray(aux["hit_seg"])
+        for s, rank in enumerate(self.ranks):
+            rank.write_back(locals_[s], rows[s], accums[s], hit[s])
+
+    def record_alltoall(self, cast: dict) -> None:
+        """Model the step's exchange traffic: every valid unique row's
+        merged (D, float32) value reaches the S - 1 non-owner shards."""
+        valid = int(np.asarray(cast["num_unique"]).sum())
+        self._g_a2a.set(valid * (self.num_shards - 1) * self.dim * 4)
+
+    # -- coherence ---------------------------------------------------------
+
+    def flush_state(self, state: dict) -> dict:
+        """Demote every shard's hot rows through its rank store and flush:
+        afterwards the rank shard files alone hold the complete global
+        table (checkpoint coherence; cf. store.streamed.flush_state)."""
+        cids = np.asarray(state["cache_ids"])  # (S, T, C+1) GLOBAL ids
+        crows = np.asarray(state["cache_rows"])
+        caccums = np.asarray(state["cache_accums"])
+        S, T, _ = cids.shape
+        for s, (lo, hi) in enumerate(self.ranges):
+            rank = self.ranks[s]
+            for t in range(T):
+                real = (cids[s, t] >= lo) & (cids[s, t] < hi)
+                if real.any():
+                    rank.demote(
+                        t, cids[s, t][real] - lo, crows[s, t][real], caccums[s, t][real]
+                    )
+            rank.clear_hot_ids()
+            rank.flush()
+        return dict(
+            state,
+            cache_ids=jnp.full_like(state["cache_ids"], self.num_rows),
+            cache_rows=jnp.zeros_like(state["cache_rows"]),
+            cache_accums=jnp.zeros_like(state["cache_accums"]),
+        )
+
+    def read_all(self) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize the full GLOBAL tables: (T, V, D) + (T, V, 1). Test/
+        export path; call after ``flush_state``."""
+        T, V, D = self.num_tables, self.num_rows, self.dim
+        rows = np.empty((T, V, D), np.float32)
+        accums = np.empty((T, V, 1), np.float32)
+        for s, (lo, hi) in enumerate(self.ranges):
+            for t in range(T):
+                r, a = self.ranks[s].stores[t].read_all()
+                rows[t, lo:hi] = r
+                accums[t, lo:hi] = a
+        return rows, accums
+
+    def close(self) -> None:
+        for rank in self.ranks:
+            rank.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- elastic restore ---------------------------------------------------
+
+    def _snapshot_layout(self, src_path: str):
+        """Read a snapshot's range directory. A sharded snapshot carries
+        ``layout.json``; a single-host ``StreamedTables`` snapshot (table
+        dirs at the root) is one implicit range ``[0, V)``."""
+        lp = os.path.join(src_path, LAYOUT_FILE)
+        if os.path.isfile(lp):
+            with open(lp) as f:
+                layout = json.load(f)
+            ranges = [tuple(r) for r in layout["ranges"]]
+            dirs = [_rank_dir(src_path, s) for s in range(len(ranges))]
+            return layout["num_rows"], layout["num_tables"], ranges, dirs
+        # single-host layout: probe table 0's shard directory for geometry
+        probe = open_store(os.path.join(src_path, "table_000"))
+        num_rows = probe.num_rows
+        probe.close()
+        num_tables = len(
+            [d for d in os.listdir(src_path) if d.startswith("table_")]
+        )
+        return num_rows, num_tables, [(0, num_rows)], [src_path]
+
+    def restore_shards(self, src_path: str) -> None:
+        """Roll every rank's shard files back to a snapshot taken under ANY
+        shard count (elastic resharding): walk the snapshot's row-range
+        directory, copy each overlap of (old range, live range) through
+        local-coordinate reads/writes, and invalidate the working sets +
+        hot mirrors. Fails loudly when the snapshot's ranges do not tile
+        this store's configured table size."""
+        num_rows, num_tables, src_ranges, src_dirs = self._snapshot_layout(src_path)
+        if num_rows != self.num_rows or num_tables != self.num_tables:
+            raise ValueError(
+                f"snapshot {src_path!r} holds {num_tables} table(s) x "
+                f"{num_rows} row(s) but this store is configured for "
+                f"{self.num_tables} x {self.num_rows} — refusing to restore"
+            )
+        expect_lo = 0
+        for lo, hi in src_ranges:
+            if lo != expect_lo or hi <= lo:
+                raise ValueError(
+                    f"snapshot {src_path!r} has a corrupt row-range directory: "
+                    f"range [{lo}, {hi}) follows row {expect_lo} — ranges must "
+                    f"tile [0, {num_rows}) contiguously"
+                )
+            expect_lo = hi
+        if expect_lo != num_rows:
+            raise ValueError(
+                f"snapshot {src_path!r} row-range directory ends at row "
+                f"{expect_lo} of {num_rows} — rows [{expect_lo}, {num_rows}) "
+                "are missing"
+            )
+        for rank in self.ranks:
+            rank.drain_write_back()
+            for ws in rank.working:
+                ws.invalidate()
+            rank.clear_hot_ids()
+            rank.ring_reset()
+        for t in range(self.num_tables):
+            for (slo, shi), sdir in zip(src_ranges, src_dirs):
+                src = open_store(os.path.join(sdir, f"table_{t:03d}"))
+                try:
+                    for d, (dlo, dhi) in enumerate(self.ranges):
+                        ov_lo, ov_hi = max(slo, dlo), min(shi, dhi)
+                        for c_lo in range(ov_lo, ov_hi, _COPY_CHUNK):
+                            c_hi = min(c_lo + _COPY_CHUNK, ov_hi)
+                            ids = np.arange(c_lo, c_hi, dtype=np.int64)
+                            rows, accums = src.read_rows(ids - slo)
+                            self.ranks[d].stores[t].write_rows(
+                                ids - dlo, rows, accums
+                            )
+                finally:
+                    src.close()
+        for rank in self.ranks:
+            for s in rank.stores:
+                s.flush()
+
+    # -- stats -------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Fleet view: per-rank aggregate stats + the modeled exchange."""
+        return {
+            "alltoall_bytes": self._g_a2a.value(),
+            "per_shard": [rank.stats() for rank in self.ranks],
+        }
+
+
+# ---------------------------------------------------------------------------
+# device step: the whole sharded tier stack inside one shard_map body
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_device_step(
+    cfg: DLRMConfig, mesh, *, num_shards: int, lr: float = 0.01,
+    decay: float = 0.98, mode: Optional[str] = None, axis: str = "model",
+):
+    """Jitted ``(repl_state, shard_state, batch, slice_in) -> (repl_state,
+    shard_state, loss, aux)`` under ``shard_map`` over ``axis``. See the
+    module docstring for the four phases. ``repl_state`` =
+    {dense, opt_state, ema}; ``shard_state`` = the (S, ...) cache blocks;
+    ``slice_in`` = the (S, ...) cold slices + (S, T) lane spans."""
+    if dict(mesh.shape)[axis] != num_shards:
+        raise ValueError(
+            f"mesh axis {axis!r} has {dict(mesh.shape)[axis]} device(s) but the "
+            f"store is sharded {num_shards}-way — one shard per device"
+        )
+    V = cfg.rows_per_table
+    S = num_shards
+    W = -(-V // S)  # equal range width (shard_ranges)
+    dense_opt = adagrad(lr)
+
+    def body(repl, shd, batch, sl):
+        dense_params, opt_state, ema = repl["dense"], repl["opt_state"], repl["ema"]
+        cast = batch["cast"]
+        idx = batch["idx"]
+        B = idx.shape[0]
+        dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), idx.shape[2])
+        cids = shd["cache_ids"][0]  # (T, C+1) global ids, this shard's range
+        crows = shd["cache_rows"][0]
+        caccums = shd["cache_accums"][0]
+        cold_rows = sl["cold_rows"][0]  # (T, n, D) local lanes [0, m)
+        cold_accums = sl["cold_accums"][0]
+        a_s = sl["lane_start"][0]  # (T,) owned-span start in global lanes
+        m_s = sl["lane_count"][0]  # (T,) owned-lane count
+        uids = cast["unique_ids"]  # (T, n) global, replicated
+        n = uids.shape[1]
+        lane = jnp.arange(n, dtype=jnp.int32)
+
+        # phase 1+2: merge hot rows into owned lanes, exchange full rows.
+        # roll(uids, -a) packs the owned span [a, b) into lanes [0, m) —
+        # still ascending with a sentinel-V tail, the resolve/split
+        # contract — and roll(.., +a) puts contributions back at global
+        # lane positions for the exchange.
+        def fwd_one(ci, cr, u, a, m, cold_r):
+            mask = lane < m
+            l_u = jnp.where(mask, jnp.roll(u, -a), V)
+            slots, lhit = resolve(ci, l_u)
+            hot = lhit & (l_u < V)
+            merged = jnp.where(hot[:, None], jnp.take(cr, slots, axis=0), cold_r)
+            contrib = jnp.roll(jnp.where(mask[:, None], merged, 0.0), a, axis=0)
+            ghit = jnp.roll((hot & mask).astype(jnp.float32), a, axis=0)
+            return contrib, ghit
+
+        contrib, ghit = jax.vmap(fwd_one)(cids, crows, uids, a_s, m_s, cold_rows)
+        gathered = jax.lax.all_gather(contrib, axis)  # (S, T, n, D)
+        owner = jnp.clip(uids // W, 0, S - 1).astype(jnp.int32)
+        # per-lane take from the owner shard: an exact value exchange (a
+        # psum would add S-1 zero terms per lane — and +0.0 + -0.0 flips
+        # the sign bit, breaking bit-identity)
+        full = jnp.take_along_axis(gathered, owner[None, :, :, None], axis=0)[0]
+        hit_lane = jax.lax.psum(ghit, axis)  # (T, n): owner resolved hot?
+
+        # phase 3: pool with the flat table's exact reduction
+        def pool_one(rows_t, seg):
+            return jax.ops.segment_sum(
+                jnp.take(rows_t, seg, axis=0), dst, num_segments=B
+            )
+
+        emb = jax.vmap(pool_one, in_axes=(0, 0), out_axes=1)(
+            full, cast["lookup_seg"]
+        )
+        hit_rate = jnp.mean(
+            jax.vmap(lambda hl, seg: jnp.mean(jnp.take(hl, seg)))(
+                hit_lane, cast["lookup_seg"]
+            )
+        )
+
+        loss, pullback = jax.vjp(
+            lambda dp, e: dense_fn(cfg, dp, e, batch), dense_params, emb
+        )
+        d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
+
+        if "counts" in cast:
+            counts = cast["counts"]
+        else:
+            counts = jax.vmap(lambda cd: segment_counts(cd, cd.shape[0]))(
+                cast["casted_dst"]
+            )
+        ema = jax.vmap(lambda e, u, c: fold_counts(e, decay, u, c))(ema, uids, counts)
+
+        # phase 4: replicated coalesce, shard-local fused tier-split update
+        def upd_one(ci, cr, ca, cold_r, cold_a, d_e, c_src, c_dst, u, a, m, nuniq):
+            coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=mode)
+            mask = lane < m
+            l_u = jnp.where(mask, jnp.roll(u, -a), V)
+            l_g = jnp.where(mask[:, None], jnp.roll(coal, -a, axis=0), 0.0)
+            split = split_update_lanes(ci, l_u, l_g, V)
+            pad_r = jnp.concatenate(
+                [cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)]
+            )
+            pad_a = jnp.concatenate([cold_a, jnp.zeros((1, 1), cold_a.dtype)])
+            pad_r2, pad_a2, cr2, ca2 = ops.cached_scatter_apply(
+                pad_r, pad_a, cr, ca,
+                split.hot_slot, split.cold_lane, split.hot_grads, split.cold_grads,
+                lr, mode=mode,
+            )
+            return cr2, ca2, pad_r2[:n], pad_a2[:n], split.hit.astype(jnp.int32)
+
+        crows2, caccums2, cold_out_r, cold_out_a, hit_seg = jax.vmap(
+            upd_one, in_axes=(0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0)
+        )(
+            cids, crows, caccums, cold_rows, cold_accums, d_emb,
+            cast["casted_src"], cast["casted_dst"], uids, a_s, m_s,
+            cast["num_unique"],
+        )
+
+        du, opt_state = dense_opt.update(d_dense, opt_state, dense_params)
+        dense_params = apply_updates(dense_params, du)
+        new_repl = {
+            "dense": dense_params, "opt_state": opt_state,
+            "ema": ema, "hit_rate": hit_rate,
+        }
+        new_shd = {
+            "cache_ids": cids[None],
+            "cache_rows": crows2[None],
+            "cache_accums": caccums2[None],
+        }
+        aux = {
+            "cold_rows": cold_out_r[None],
+            "cold_accums": cold_out_a[None],
+            "hit_seg": hit_seg[None],
+        }
+        return new_repl, new_shd, loss, aux
+
+    smap = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(axis), P(), P(axis)),
+        out_specs=(P(), P(axis), P(), P(axis)),
+        check_rep=False,
+    )
+    return jax.jit(smap)
+
+
+# ---------------------------------------------------------------------------
+# host driver + lifecycle (the sharded analogues of stack.streamed)
+# ---------------------------------------------------------------------------
+
+
+def init_sharded(
+    cfg: DLRMConfig,
+    key,
+    store_path: str,
+    *,
+    num_shards: int,
+    lr: float = 0.01,
+    capacity: int | None = None,
+    resident_rows: int | None = None,
+    store_shards: int = 8,
+    registry: Optional[Registry] = None,
+    tracer=None,
+):
+    """``init_streamed``'s sharded counterpart: same key -> same initial
+    tables (the bit-identity anchor), split into per-rank stores, device
+    state carrying PER-SHARD hot caches ``(S, T, C+1, ...)`` in GLOBAL id
+    coordinates. ``capacity`` is per shard (default rows/16 like
+    single-host); ``resident_rows`` the per-shard working-set budget
+    (default the single-host rows/8 split evenly)."""
+    s = init_sparse_system(cfg, key)
+    tables = np.asarray(s["tables"])  # (T, V+1, D); sentinel stays off-store
+    accums = np.asarray(s["accums"])
+    T, rows_p1, D = tables.shape
+    V = rows_p1 - 1
+    C = capacity if capacity is not None else max(1, V // 16)
+    R = resident_rows if resident_rows is not None else max(1, V // 8 // num_shards)
+    sharded = ShardedStreamedTables.create(
+        store_path, tables[:, :V], accums[:, :V],
+        num_shards=num_shards, resident_rows=R, store_shards=store_shards,
+        registry=registry, tracer=tracer,
+    )
+    cache = init_hot_cache(C, D, V, jnp.float32)
+    state = {
+        "dense": s["dense"],
+        "opt_state": adagrad(lr).init(s["dense"]),
+        "cache_ids": jnp.tile(cache.ids, (num_shards, T, 1)),
+        "cache_rows": jnp.tile(cache.rows, (num_shards, T, 1, 1)),
+        "cache_accums": jnp.tile(cache.accum, (num_shards, T, 1, 1)),
+        "ema": jnp.zeros((T, V), jnp.float32),
+        "hit_rate": jnp.zeros((), jnp.float32),
+    }
+    return state, sharded
+
+
+def make_sharded_train_step(
+    cfg: DLRMConfig, sharded: ShardedStreamedTables, mesh, *,
+    lr: float = 0.01, decay: float = 0.98, axis: str = "model",
+):
+    """Host driver: ``step(state, batch, step_index=None) -> (state, loss)``.
+    ``batch`` is the host batch with a cast from a CastingServer configured
+    ``with_lookup_seg=True`` (counts optional). Per step: project the cast
+    onto shards, assemble per-rank cold slices, run the fused sharded
+    device step, write each rank's updated lanes back, record the modeled
+    exchange bytes."""
+    device_step = make_sharded_device_step(
+        cfg, mesh, num_shards=sharded.num_shards, lr=lr, decay=decay, axis=axis
+    )
+
+    def step(state, batch, *, step_index=None):
+        cast = batch["cast"]
+        if "lookup_seg" not in cast:
+            raise ValueError(
+                "sharded tc_streamed needs cast['lookup_seg'] — run the "
+                "CastingServer with with_lookup_seg=True"
+            )
+        with sharded.tracer.span("step.sharded"):
+            locals_, lane_start, lane_count = sharded.local_casts(cast)
+            rows, accums = sharded.gather(locals_)
+            repl = {k: state[k] for k in ("dense", "opt_state", "ema")}
+            shd = {k: state[k] for k in ("cache_ids", "cache_rows", "cache_accums")}
+            sl = {
+                "cold_rows": jnp.asarray(rows),
+                "cold_accums": jnp.asarray(accums),
+                "lane_start": jnp.asarray(lane_start),
+                "lane_count": jnp.asarray(lane_count),
+            }
+            dev_batch = {
+                "idx": batch["idx"], "dense": batch["dense"],
+                "labels": batch["labels"], "cast": cast,
+            }
+            with sharded.tracer.span("step.device"):
+                new_repl, new_shd, loss, aux = device_step(repl, shd, dev_batch, sl)
+            sharded.write_back(locals_, aux)
+            sharded.record_alltoall(cast)
+        return {**new_repl, **new_shd}, loss
+
+    return step
+
+
+def make_sharded_promote(sharded: ShardedStreamedTables):
+    """Shard-local placement (cf. ``stack.streamed.make_streamed_promote``):
+    each shard demotes its hot rows through its rank store and adopts the
+    EMA's top-C WITHIN ITS ROW RANGE. Placement only — trained values stay
+    bit-identical whatever each shard's hot set is."""
+    c_runs = sharded.registry.counter("promote.runs_total")
+    c_demoted = sharded.registry.counter("promote.demoted_rows")
+
+    def promote(state):
+        with sharded.tracer.span("promote.sharded"):
+            c_runs.inc()
+            cids = np.asarray(state["cache_ids"])  # (S, T, C+1) global
+            crows = np.asarray(state["cache_rows"])
+            caccums = np.asarray(state["cache_accums"])
+            ema = np.asarray(state["ema"])  # (T, V) replicated
+            S, T, Cp1 = cids.shape
+            C = Cp1 - 1
+            V = sharded.num_rows
+            new_ids = np.full((S, T, Cp1), V, np.int32)
+            new_rows = np.zeros((S, T, Cp1, sharded.dim), np.float32)
+            new_accums = np.zeros((S, T, Cp1, 1), np.float32)
+            for s, (lo, hi) in enumerate(sharded.ranges):
+                rank = sharded.ranks[s]
+                for t in range(T):
+                    # stable argsort on -ema == lax.top_k tie-break, over
+                    # this shard's range only
+                    top = np.argsort(-ema[t, lo:hi], kind="stable")[:C]
+                    local_sorted = np.sort(top).astype(np.int64)
+                    real = (cids[s, t] >= lo) & (cids[s, t] < hi)
+                    local_cached = cids[s, t] - lo
+                    stays = real & np.isin(local_cached, local_sorted)
+                    leaves = real & ~stays
+                    for mask, insert in ((stays, False), (leaves, True)):
+                        if mask.any():
+                            c_demoted.inc(int(mask.sum()))
+                            rank.demote(
+                                t, local_cached[mask], crows[s, t][mask],
+                                caccums[s, t][mask], insert=insert,
+                            )
+                    rows, accs = rank.gather_rows(t, local_sorted)
+                    rank.set_hot_ids(t, local_sorted)
+                    k = local_sorted.shape[0]
+                    new_ids[s, t, :k] = local_sorted + lo
+                    new_rows[s, t, :k] = rows
+                    new_accums[s, t, :k] = accs
+            return dict(
+                state,
+                cache_ids=jnp.asarray(new_ids),
+                cache_rows=jnp.asarray(new_rows),
+                cache_accums=jnp.asarray(new_accums),
+            )
+
+    return promote
+
+
+# ---------------------------------------------------------------------------
+# elastic checkpointing
+# ---------------------------------------------------------------------------
+
+
+def save_coherent(ckpt, step: int, state: dict, *, sharded: ShardedStreamedTables):
+    """Demote + flush every rank, snapshot leaves + the whole store tree
+    (including ``layout.json``, the row-range directory ``restore_coherent``
+    walks). Returns the demoted state — keep training with it."""
+    from repro.checkpoint import save_coherent as _save
+
+    # checkpoint's _demote_flush duck-types sharded.flush_state; the store
+    # copy pins blocking=True exactly as for single-host streamed
+    return _save(ckpt, step, state, streamed=sharded, blocking=True)
+
+
+def restore_coherent(
+    ckpt, like: dict, *, sharded: ShardedStreamedTables, step: Optional[int] = None
+):
+    """Restore a coherent checkpoint taken under ANY shard count onto this
+    store's layout. The cache blocks are rebuilt empty in the LIVE layout
+    (their snapshot shapes belong to the old shard count; a coherent save
+    stores them empty anyway); the shard files are rebuilt by the elastic
+    range walk. Returns ``(step, state)`` ready to train."""
+    cache_keys = ("cache_ids", "cache_rows", "cache_accums")
+    lk = {k: v for k, v in like.items() if k not in cache_keys}
+    step, state = ckpt.restore(lk, step=step)
+    snap = os.path.join(ckpt.directory, f"step_{step:08d}", "store")
+    if not os.path.isdir(snap):
+        raise FileNotFoundError(
+            f"checkpoint step {step} carries no store snapshot — it was not "
+            "written by save_coherent(sharded=...)"
+        )
+    sharded.restore_shards(snap)
+    state = dict(
+        state,
+        cache_ids=jnp.full_like(like["cache_ids"], sharded.num_rows),
+        cache_rows=jnp.zeros_like(like["cache_rows"]),
+        cache_accums=jnp.zeros_like(like["cache_accums"]),
+    )
+    return step, state

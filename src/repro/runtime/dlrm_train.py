@@ -1,6 +1,6 @@
 """The paper's full training system for DLRM (Fig. 9b / Fig. 10), TPU-adapted.
 
-Four design points from the paper's evaluation (§VI), selectable as
+Five design points from the paper's evaluation (§VI), selectable as
 ``system=``:
 
   * ``baseline``      — Baseline(CPU): autodiff embedding backward
@@ -26,373 +26,42 @@ Four design points from the paper's evaluation (§VI), selectable as
                         bounded host working set; the device step receives a
                         static-shape gathered slice of the batch's unique
                         cold rows (+ accumulators) and returns their updated
-                        values for host write-back. The device step is fully
-                        fused like ``tc_cached`` (cached-gather forward /
-                        lane-compacted cached-scatter backward over the
-                        dead-lane-padded slice), the write-back commits on a
-                        background thread overlapped with the next step, and
-                        a device-side ring of recent slices serves re-faulted
-                        rows without re-upload. Hot tier + EMA as in
-                        ``tc_cached``. Bit-identical to ``tc`` with any
-                        resident budget >= 1 — use ``init_streamed`` +
-                        ``make_streamed_train_step`` (host driver), not the
+                        values for host write-back. Bit-identical to ``tc``
+                        with any resident budget >= 1 — use ``init_streamed``
+                        + ``make_streamed_train_step`` (host driver), not the
                         raw jitted step.
 
 The dense MLPs always train with dense Adagrad (the GPU side of Fig. 3).
+
+This module is the stable entry point; the implementations live in
+``repro.stack`` — ``stack.base`` (the TierStack contract), ``stack.flat`` /
+``stack.cached`` / ``stack.streamed`` (one system each), ``stack.trainer``
+(the dense/sparse composition and ``MultiTableTrainer``). Multi-host
+sharding of the streamed stack lives in ``repro.dist.sparse``. Everything
+below is config + dispatch glue kept for compatibility; new code should
+import from ``repro.stack`` directly.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.cache.hotcache import (
-    HotRowCache,
-    init_hot_cache,
-    promote_evict,
-    resolve,
-    split_update_lanes,
-    write_back,
-)
-from repro.cache.stats import fold_counts, segment_counts
-from repro.cache.tiered import TieredEmbedding
 from repro.configs.base import DLRMConfig
-from repro.core.casting import CastedIndices
-from repro.core.embedding import SparseGrad
-from repro.kernels import ops
-from repro.models import dlrm
-from repro.optim import adagrad, apply_updates
-from repro.optim.sparse import add_sentinel_row, init_rowwise_adagrad
-
-
-def init_sparse_system(cfg: DLRMConfig, key):
-    """Params with sentinel-padded tables + row-wise accumulators."""
-    params = dlrm.init_params(cfg, key)
-    tables = jax.vmap(add_sentinel_row)(params.pop("tables"))  # (T, R+1, D)
-    accums = jax.vmap(init_rowwise_adagrad)(tables)  # (T, R+1, 1)
-    return {"dense": params, "tables": tables, "accums": accums}
-
-
-def _pooled_from_tables(cfg: DLRMConfig, tables, idx):
-    """Forward gather-reduce for all tables: (B,T,P) ids -> (B,T,D)."""
-    B, T, P = idx.shape
-    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
-
-    def one(table, ids):
-        rows = jnp.take(table, ids.reshape(-1), axis=0)
-        return jax.ops.segment_sum(rows, dst, num_segments=B)
-
-    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, idx)
-
-
-def _tiered_of(state):
-    """View per-table state slices as a TieredEmbedding (used under vmap)."""
-    table, accum, cids, crows, caccum = state
-    return TieredEmbedding(table, accum, HotRowCache(cids, crows, caccum))
-
-
-def _pooled_from_tiered(cfg: DLRMConfig, tables, accums, cids, crows, caccums, idx, *, mode=None):
-    """Cache-aware forward gather-reduce: hot rows come from the cache tier
-    (the authoritative copy while cached), served through the fused
-    cached-gather kernel under the requested dispatch mode (``dst`` is the
-    sorted fixed-pooling bag layout, so the kernel's revisit invariant
-    holds). Returns (emb (B,T,D), hit_frac)."""
-    B, T, P = idx.shape
-    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
-
-    def one(table, accum, ci, cr, ca, ids):
-        te = _tiered_of((table, accum, ci, cr, ca))
-        pooled, hit = te.bag_lookup(ids.reshape(-1), dst, B, mode=mode)
-        return pooled, jnp.mean(hit.astype(jnp.float32))
-
-    emb, hits = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 1), out_axes=(1, 0))(
-        tables, accums, cids, crows, caccums, idx
-    )
-    return emb, jnp.mean(hits)
-
-
-def _dense_fn(cfg: DLRMConfig, dense_params, emb, batch):
-    bot = dlrm._apply_mlp(dense_params["bot_mlp"], batch["dense"], final_act=True)
-    x = dlrm._interact(bot, emb)
-    logits = dlrm._apply_mlp(dense_params["top_mlp"], x, final_act=False)[:, 0]
-    labels = batch["labels"].astype(jnp.float32)
-    lf = logits.astype(jnp.float32)
-    return jnp.mean(jnp.maximum(lf, 0) - lf * labels + jnp.log1p(jnp.exp(-jnp.abs(lf))))
-
-
-def make_sparse_train_step(
-    cfg: DLRMConfig, *, lr: float = 0.01, system: str = "tc", decay: float = 0.98
-):
-    """Returns jitted (state, batch_with_cast) -> (state, loss).
-
-    batch must carry ``cast`` stacked per table (from data.pipeline
-    CastingServer) when system != baseline. ``decay`` is the hot-row EMA
-    decay, used only by ``tc_cached`` (pair with ``make_promote_step``).
-    """
-    # tc pins the reference path; tc_nmp, tc_cached and tc_streamed
-    # auto-dispatch (Mosaic on TPU, jnp on CPU, pallas_interpret under the
-    # tests' pinned default — kernel equivalence is covered by
-    # interpret-mode tests). tc_cached AND tc_streamed are fully fused:
-    # the forward routes through the cached-gather kernel and the backward
-    # tier-split update through the cached-scatter kernel — tc_cached via
-    # split_update_tiers, tc_streamed via its lane-keyed sibling
-    # split_update_lanes with the dead-lane-padded cold slice standing in
-    # for the table — so under a Pallas-resolving mode neither system
-    # falls back to jnp in either direction.
-    kernel_mode = {
-        "baseline": None, "tc": "jnp", "tc_nmp": None,
-        "tc_cached": None, "tc_streamed": None,
-    }[system]
-    dense_opt = adagrad(lr)
-
-    def step(state, batch):
-        dense_params, opt_state = state["dense"], state["opt_state"]
-        # tc_streamed state carries no cold tables — they live on disk
-        tables, accums = state.get("tables"), state.get("accums")
-
-        if system == "baseline":
-            # autodiff through the lookup: framework expand-coalesce + dense update
-            def loss_fn(dp, tb):
-                emb = _pooled_from_tables(cfg, tb, batch["idx"])
-                return _dense_fn(cfg, dp, emb, batch)
-
-            loss, (d_dense, d_tables) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-                dense_params, tables
-            )
-            # dense row-wise Adagrad over the *whole* table (untouched rows
-            # add zero) — numerically identical to the sparse path.
-            accums = accums + jnp.mean(jnp.square(d_tables.astype(jnp.float32)), -1, keepdims=True)
-            tables = (tables - lr * d_tables / jnp.sqrt(accums + 1e-10)).astype(tables.dtype)
-        elif system == "tc_cached":
-            # tiered store: cache-aware forward, tier-split sparse update,
-            # EMA fed by the CastingServer's per-batch row counts
-            cids, crows, caccums = state["cache_ids"], state["cache_rows"], state["cache_accums"]
-            ema = state["ema"]
-            cast = batch["cast"]
-            emb, hit_rate = _pooled_from_tiered(
-                cfg, tables, accums, cids, crows, caccums, batch["idx"], mode=kernel_mode
-            )
-            loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
-            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
-            if "counts" in cast:  # host-computed (CastingServer); else derive
-                counts = cast["counts"]
-            else:
-                counts = jax.vmap(lambda cd: segment_counts(cd, cd.shape[0]))(cast["casted_dst"])
-
-            def upd_one(table, accum, ci, cr, ca, e, d_e, c_src, c_dst, uids, nuniq, cnt):
-                te = _tiered_of((table, accum, ci, cr, ca))
-                # num_valid: padding segments of the coalesced grad must be
-                # zero on every backend before the tier-split scatter.
-                coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
-                # tier-split scatter through the fused cached-scatter
-                # primitive (split_update_tiers restores the sorted/
-                # zero-pad contract the redirected streams used to break)
-                te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode=kernel_mode)
-                e = fold_counts(e, decay, uids, cnt)
-                return te.table, te.accum, te.cache.ids, te.cache.rows, te.cache.accum, e
-
-            tables, accums, cids, crows, caccums, ema = jax.vmap(
-                upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
-            )(
-                tables, accums, cids, crows, caccums, ema,
-                d_emb,
-                cast["casted_src"],
-                cast["casted_dst"],
-                cast["unique_ids"],
-                cast["num_unique"],
-                counts,
-            )
-        elif system == "tc_streamed":
-            # capacity hierarchy: cold rows arrive as a host-gathered
-            # static-shape slice aligned with the cast's unique_ids; the
-            # device owns only the hot tier (plus, optionally, a ring of
-            # recent cold slices). Updated cold lanes are returned to the
-            # host for write-back through the working set.
-            cids, crows, caccums = state["cache_ids"], state["cache_rows"], state["cache_accums"]
-            ema = state["ema"]
-            cast = batch["cast"]
-            B, T, P = batch["idx"].shape
-            V = cfg.rows_per_table
-            dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
-
-            cold_rows_in = batch["cold_rows"]
-            cold_accums_in = batch["cold_accums"]
-            has_ring = "ring_ids" in state
-            if has_ring:
-                # device-side slice ring: lanes whose id was updated in one
-                # of the last K steps are served from that step's retained
-                # (and therefore current) device copy — the host skipped
-                # their gather and their PCIe upload (their slice lanes are
-                # zero). Entries' id arrays are sorted with sentinel-V
-                # tails (split_update_lanes.cold_ids), so membership is one
-                # searchsorted per entry; walking oldest -> newest and
-                # overwriting makes the newest copy win, which is what
-                # keeps a row updated on step N from being served stale on
-                # step N+1 (write-invalidate semantics without mutating
-                # older entries).
-                ring_pos = state["ring_pos"]
-                Kr = state["ring_ids"].shape[0]
-
-                def ring_one(r_ids, r_rows, r_accums, uids, cold_r, cold_a):
-                    rows, accums = cold_r, cold_a
-                    found = jnp.zeros(uids.shape, bool)
-                    for j in range(Kr):
-                        k = (ring_pos + j) % Kr  # oldest entry first
-                        e_ids = jax.lax.dynamic_index_in_dim(r_ids, k, 0, keepdims=False)
-                        e_rows = jax.lax.dynamic_index_in_dim(r_rows, k, 0, keepdims=False)
-                        e_acc = jax.lax.dynamic_index_in_dim(r_accums, k, 0, keepdims=False)
-                        pos = jnp.searchsorted(e_ids, uids).astype(jnp.int32)
-                        pos = jnp.minimum(pos, e_ids.shape[0] - 1)
-                        e_hit = (jnp.take(e_ids, pos) == uids) & (uids < V)
-                        rows = jnp.where(e_hit[:, None], jnp.take(e_rows, pos, axis=0), rows)
-                        accums = jnp.where(e_hit[:, None], jnp.take(e_acc, pos, axis=0), accums)
-                        found = found | e_hit
-                    return rows, accums, found
-
-                cold_rows_in, cold_accums_in, ring_found = jax.vmap(
-                    ring_one, in_axes=(1, 1, 1, 0, 0, 0)
-                )(
-                    state["ring_ids"], state["ring_rows"], state["ring_accums"],
-                    cast["unique_ids"], cold_rows_in, cold_accums_in,
-                )
-
-            def fwd_one(ci, cr, ids, seg, cold_r):
-                # fused two-tier bag gather over the dead-lane-padded slice:
-                # the slice stands in for the table (cold_src = the host's
-                # lookup->segment map; hits redirect to the dead lane n),
-                # hot rows come from the VMEM-resident cache — bit-equal to
-                # jnp.take(table, ids) + segment_sum on a flat table, so it
-                # matches the tc forward exactly.
-                slots, hit = resolve(ci, ids.reshape(-1))
-                n = cold_r.shape[0]
-                pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
-                pooled = ops.cached_gather_reduce(
-                    pad_r, cr,
-                    jnp.where(hit, slots, ci.shape[0] - 1).astype(jnp.int32),
-                    jnp.where(hit, n, seg).astype(jnp.int32),
-                    dst, hit.astype(jnp.int32), B, mode=kernel_mode,
-                )
-                return pooled, jnp.mean(hit.astype(jnp.float32))
-
-            emb, hits = jax.vmap(fwd_one, in_axes=(0, 0, 1, 0, 0), out_axes=(1, 0))(
-                cids, crows, batch["idx"], cast["lookup_seg"], cold_rows_in
-            )
-            hit_rate = jnp.mean(hits)
-            loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
-            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
-            if "counts" in cast:
-                counts = cast["counts"]
-            else:
-                counts = jax.vmap(lambda cd: segment_counts(cd, cd.shape[0]))(cast["casted_dst"])
-
-            def upd_one(ci, cr, ca, cold_r, cold_a, e, d_e, c_src, c_dst, uids, nuniq, cnt):
-                coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
-                n = coal.shape[0]
-                # lane->row compaction: the slice's per-LANE update stream
-                # is re-sorted/compacted back into the scatter layout
-                # contract (ascending lanes ARE ascending table rows), so
-                # the SAME fused cached-scatter kernel updates both tiers
-                # in one pass — hot rows RMW'd in the VMEM cache block,
-                # cold rows in the dead-lane-padded slice standing in for
-                # the HBM table. Per-lane Adagrad math goes through the
-                # fusion-isolated helpers, so rounding stays bit-identical
-                # to the flat table update on every backend.
-                split = split_update_lanes(ci, uids, coal, V)
-                pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
-                pad_a = jnp.concatenate([cold_a, jnp.zeros((1, 1), cold_a.dtype)])
-                pad_r2, pad_a2, cr2, ca2 = ops.cached_scatter_apply(
-                    pad_r, pad_a, cr, ca,
-                    split.hot_slot, split.cold_lane, split.hot_grads, split.cold_grads,
-                    lr, mode=kernel_mode,
-                )
-                hit = split.hit  # the resolve the kernel streams were built from
-                e2 = fold_counts(e, decay, uids, cnt)
-                # ring entry: this step's updated cold rows in compacted
-                # (sorted-by-table-row) order + their id directory
-                entry_rows = jnp.take(pad_r2, split.cold_lane, axis=0)
-                entry_accums = jnp.take(pad_a2, split.cold_lane, axis=0)
-                real_cold = (uids < V) & ~hit
-                return (
-                    cr2, ca2, pad_r2[:n], pad_a2[:n], hit.astype(jnp.int32),
-                    split.cold_ids, entry_rows, entry_accums, real_cold, e2,
-                )
-
-            (
-                crows, caccums, cold_rows_out, cold_accums_out, hit_seg,
-                entry_ids, entry_rows, entry_accums, real_cold, ema,
-            ) = jax.vmap(
-                upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
-            )(
-                cids, crows, caccums,
-                cold_rows_in, cold_accums_in, ema,
-                d_emb,
-                cast["casted_src"],
-                cast["casted_dst"],
-                cast["unique_ids"],
-                cast["num_unique"],
-                counts,
-            )
-        else:
-            # paper system: fwd gather-reduce; bwd = casted gather-reduce + sparse scatter
-            emb = _pooled_from_tables(cfg, tables, batch["idx"])
-            loss, pullback = jax.vjp(lambda dp, e: _dense_fn(cfg, dp, e, batch), dense_params, emb)
-            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
-            cast = batch["cast"]  # each field stacked (T, n)
-
-            def upd_one(table, accum, d_e, c_src, c_dst, uids, nuniq):
-                # num_valid zeroes padding segments on every backend so the
-                # scatter's sentinel-row traffic stays deterministic.
-                coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=kernel_mode)
-                return ops.scatter_apply_adagrad(table, accum, uids, coal, lr, mode=kernel_mode)
-
-            tables, accums = jax.vmap(upd_one, in_axes=(0, 0, 1, 0, 0, 0, 0))(
-                tables,
-                accums,
-                d_emb,
-                cast["casted_src"],
-                cast["casted_dst"],
-                cast["unique_ids"],
-                cast["num_unique"],
-            )
-
-        updates, opt_state = dense_opt.update(d_dense, opt_state, dense_params)
-        dense_params = apply_updates(dense_params, updates)
-        new_state = {"dense": dense_params, "opt_state": opt_state}
-        if system != "tc_streamed":
-            new_state.update(tables=tables, accums=accums)
-        if system in ("tc_cached", "tc_streamed"):
-            new_state.update(
-                cache_ids=cids, cache_rows=crows, cache_accums=caccums,
-                ema=ema, hit_rate=hit_rate,
-            )
-        if system == "tc_streamed":
-            if has_ring:
-                # push this step's entry into the round-robin slot (the
-                # oldest entry is overwritten) and report the fraction of
-                # real cold lanes the ring served this step
-                upd_ring = partial(jax.lax.dynamic_update_index_in_dim, index=ring_pos, axis=0)
-                n_cold = jnp.maximum(jnp.sum(real_cold), 1)
-                new_state.update(
-                    ring_ids=upd_ring(state["ring_ids"], update=entry_ids),
-                    ring_rows=upd_ring(state["ring_rows"], update=entry_rows),
-                    ring_accums=upd_ring(state["ring_accums"], update=entry_accums),
-                    ring_pos=(ring_pos + 1) % Kr,
-                    ring_hit_rate=jnp.sum(ring_found & real_cold) / n_cold,
-                )
-            # aux payload for the host driver's working-set write-back
-            return new_state, {
-                "loss": loss,
-                "cold_rows": cold_rows_out,
-                "cold_accums": cold_accums_out,
-                "hit_seg": hit_seg,
-            }
-        return new_state, loss
-
-    return jax.jit(step, donate_argnums=(0,))
+from repro.optim import adagrad
+from repro.stack import (  # noqa: F401  (public re-exports)
+    MultiTableTrainer,
+    build_stack,
+    init_sparse_system,
+    init_streamed,
+    make_device_step,
+    make_flush_step,
+    make_promote_step,
+    make_sparse_train_step,
+    make_streamed_promote,
+    make_streamed_train_step,
+)
+from repro.stack.base import dense_fn as _dense_fn  # noqa: F401  (legacy alias)
+from repro.stack.base import pooled_from_tables as _pooled_from_tables  # noqa: F401
+from repro.stack.cached import CachedStack
+from repro.stack.cached import pooled_from_tiered as _pooled_from_tiered  # noqa: F401
+from repro.stack.cached import tiered_of as _tiered_of  # noqa: F401
 
 
 def init_state(cfg: DLRMConfig, key, *, lr: float = 0.01):
@@ -406,322 +75,4 @@ def init_cached_state(cfg: DLRMConfig, key, *, lr: float = 0.01, capacity: int |
 
     ``capacity`` defaults to rows/16 — the paper-adjacent 'small fast tier'
     operating point (RecNMP's hot-entry working set)."""
-    s = init_state(cfg, key, lr=lr)
-    T, rows_p1, D = s["tables"].shape
-    V = rows_p1 - 1
-    C = capacity if capacity is not None else max(1, V // 16)
-    # one source of truth for the cache layout/validation: hotcache.init
-    cache = init_hot_cache(C, D, V, s["tables"].dtype)
-    s["cache_ids"] = jnp.tile(cache.ids, (T, 1))
-    s["cache_rows"] = jnp.tile(cache.rows, (T, 1, 1))
-    s["cache_accums"] = jnp.tile(cache.accum, (T, 1, 1))
-    s["ema"] = jnp.zeros((T, V), jnp.float32)
-    s["hit_rate"] = jnp.zeros((), jnp.float32)
-    return s
-
-
-def make_promote_step():
-    """Jitted placement step for ``tc_cached``: per table, demote the current
-    hot set (write-back of rows + accumulators) and adopt the EMA's top-C.
-    Run every N steps off the critical path; semantically a no-op (the
-    tiered store stays bit-identical to the flat table). Shape-polymorphic
-    over the state — no config needed."""
-
-    def promote(state):
-        def one(table, accum, ci, cr, ca, ema):
-            cache, table, accum = promote_evict(HotRowCache(ci, cr, ca), table, accum, ema)
-            return table, accum, cache.ids, cache.rows, cache.accum
-
-        tables, accums, cids, crows, caccums = jax.vmap(one)(
-            state["tables"], state["accums"], state["cache_ids"],
-            state["cache_rows"], state["cache_accums"], state["ema"],
-        )
-        return dict(
-            state,
-            tables=tables, accums=accums,
-            cache_ids=cids, cache_rows=crows, cache_accums=caccums,
-        )
-
-    return jax.jit(promote, donate_argnums=(0,))
-
-
-def make_flush_step():
-    """Jitted write-back WITHOUT hot-set adoption: after this,
-    state["tables"]/["accums"] alone are checkpoint-complete while the
-    cache stays as configured (e.g. frozen under promote_every=0)."""
-
-    def flush(state):
-        tables, accums = jax.vmap(lambda t, a, ci, cr, ca: write_back(HotRowCache(ci, cr, ca), t, a))(
-            state["tables"], state["accums"], state["cache_ids"],
-            state["cache_rows"], state["cache_accums"],
-        )
-        return dict(state, tables=tables, accums=accums)
-
-    return jax.jit(flush, donate_argnums=(0,))
-
-
-# ---------------------------------------------------------------------------
-# tc_streamed: host driver over the disk-backed cold tier (repro.store)
-# ---------------------------------------------------------------------------
-
-
-def init_streamed(
-    cfg: DLRMConfig,
-    key,
-    store_path: str,
-    *,
-    lr: float = 0.01,
-    capacity: int | None = None,
-    resident_rows: int | None = None,
-    num_shards: int = 8,
-    prefetch: bool = True,
-    ring_depth: int = 2,
-    overlap_write_back: bool = True,
-    registry=None,
-    tracer=None,
-):
-    """``init_cached_state``'s counterpart for ``system="tc_streamed"``.
-
-    Materializes the same initial tables as ``init_state`` (same key -> same
-    values, the bit-identity anchor), writes rows + accumulators to per-table
-    shard stores under ``store_path``, and returns ``(state, streamed)``:
-    the device state holds only dense params, the hot tier and the EMA — the
-    cold tier never resides on device. ``resident_rows`` is the host
-    working-set budget (default rows/8; correctness holds for any budget
-    >= 1, streaming is only exercised when it is < rows).
-
-    ``ring_depth`` keeps that many recent cold slices resident ON DEVICE so
-    re-faulted rows skip the PCIe upload (0 disables; the ring state is
-    allocated lazily by the driver once the lane width is known), and
-    ``overlap_write_back`` commits each step's cold lanes on a background
-    thread overlapped with the next step — both default on and both are
-    semantically free: training stays bit-identical to ``tc``."""
-    from repro.store import StreamedTables
-
-    s = init_sparse_system(cfg, key)
-    tables = np.asarray(s["tables"])  # (T, V+1, D); sentinel row stays off-store
-    accums = np.asarray(s["accums"])
-    T, rows_p1, D = tables.shape
-    V = rows_p1 - 1
-    C = capacity if capacity is not None else max(1, V // 16)
-    R = resident_rows if resident_rows is not None else max(1, V // 8)
-    streamed = StreamedTables.create(
-        store_path, tables[:, :V], accums[:, :V],
-        resident_rows=R, num_shards=min(num_shards, V), prefetch=prefetch,
-        ring_depth=ring_depth, overlap_write_back=overlap_write_back,
-        registry=registry, tracer=tracer,
-    )
-    cache = init_hot_cache(C, D, V, jnp.float32)
-    state = {
-        "dense": s["dense"],
-        "opt_state": adagrad(lr).init(s["dense"]),
-        "cache_ids": jnp.tile(cache.ids, (T, 1)),
-        "cache_rows": jnp.tile(cache.rows, (T, 1, 1)),
-        "cache_accums": jnp.tile(cache.accum, (T, 1, 1)),
-        "ema": jnp.zeros((T, V), jnp.float32),
-        "hit_rate": jnp.zeros((), jnp.float32),
-    }
-    return state, streamed
-
-
-def make_streamed_train_step(
-    cfg: DLRMConfig, streamed, *, lr: float = 0.01, decay: float = 0.98,
-    step_writer=None,
-):
-    """Host driver for ``tc_streamed``: returns
-    ``step(state, batch, step_index=None) -> (state, loss)``.
-
-    ``batch`` is the HOST batch (numpy, with ``cast`` from a CastingServer
-    configured with ``with_counts=True, with_lookup_seg=True``). Per step
-    the driver: (1) fences against the in-flight write-back only if its
-    uncommitted lanes overlap what this gather will read (with the ring on,
-    last step's updated rows are ring-served and skip the gather, so the
-    fence rarely fires); (2) waits on the step's prefetch and assembles the
-    cold slice from the working set (synchronous shard faults for anything
-    missing — counted, never wrong); (3) runs the jitted device step; and
-    (4) hands the updated cold lanes to the background write-back thread
-    (or commits synchronously when overlap is off) and rotates the ring
-    mirror. ``step_index`` keys the prefetch barrier; pass the pipeline's
-    step id (None skips the wait).
-
-    ``step_writer`` (an ``obs.StepMetricsWriter``) is OPT-IN per-step
-    telemetry: each step appends one JSONL record (loss / hit rates /
-    fault + eviction counters / modeled PCIe+HBM bytes — see
-    docs/observability.md). Reading the loss and hit_rate forces a device
-    sync per step, exactly like printing the loss would; leave it None on
-    the throughput path. The cumulative fields are computed from the same
-    main-thread registry counters ``streamed.stats()`` derives from, so
-    the last record agrees with a post-run ``stats()`` call."""
-    device_step = make_sparse_train_step(cfg, lr=lr, system="tc_streamed", decay=decay)
-    V, D = streamed.num_rows, streamed.dim
-    K = streamed.ring_depth
-    tracer = streamed.tracer
-    reg = streamed.registry
-    # main-thread instruments the per-step record derives rates from
-    # (get-or-create returns the store's own instances)
-    c_steps = reg.counter("st.steps_total")
-    c_gather_s = reg.counter("st.gather_seconds")
-    c_wait_s = reg.counter("wb.gate_wait_seconds")
-    c_sync_s = reg.counter("wb.sync_commit_seconds")
-    c_ring = reg.counter("ring.hit_lanes")
-    c_pcie_up = reg.counter("pcie.uploaded_bytes")
-    c_pcie_saved = reg.counter("pcie.ring_saved_bytes")
-
-    def write_record(state, aux, step_index, batch):
-        covered = sum(ws.stats.covered_reads for ws in streamed.working)
-        sync_faults = sum(ws.stats.sync_faults for ws in streamed.working)
-        cold = covered + sync_faults
-        ring_hits = c_ring.value()
-        steps = c_steps.value()
-        critical_s = c_gather_s.value() + c_wait_s.value() + c_sync_s.value()
-        hit_rate = float(state["hit_rate"])  # device sync (opt-in cost)
-        B, T, P = batch["idx"].shape
-        # modeled HBM gather traffic, resident accounting — the same
-        # formula as benchmarks/common.model_hbm_gather (flat row DMA vs
-        # hot-tier misses only)
-        hbm_flat = B * T * P * D * 4
-        record = {
-            "step": int(step_index) if step_index is not None else int(steps) - 1,
-            "loss": float(aux["loss"]),
-            "hit_rate": hit_rate,
-            "ring_hit_rate": (
-                ring_hits / (ring_hits + cold) if (ring_hits + cold) else 0.0
-            ),
-            "ring_step_hit_rate": float(state.get("ring_hit_rate", 0.0)),
-            "prefetch_coverage": covered / cold if cold else 1.0,
-            "sync_faults": int(sync_faults),
-            "prefetch_faults": int(
-                sum(ws.stats.prefetch_faults for ws in streamed.working)
-            ),
-            "evictions": int(sum(ws.stats.evictions for ws in streamed.working)),
-            "wb_gate_wait_s": c_wait_s.value(),
-            "host_us_per_step": critical_s / steps * 1e6 if steps else 0.0,
-            "pcie_uploaded_bytes": int(c_pcie_up.value()),
-            "pcie_ring_saved_bytes": int(c_pcie_saved.value()),
-            "hbm_gather_bytes_flat": hbm_flat,
-            "hbm_gather_bytes_cached_resident": (1.0 - hit_rate) * hbm_flat,
-        }
-        step_writer.write(record)
-
-    def step(state, batch, *, step_index=None):
-        with tracer.span("step.streamed"):
-            state, loss = _step_inner(state, batch, step_index)
-        return state, loss
-
-    def _step_inner(state, batch, step_index):
-        cast = batch["cast"]
-        if "ring_ids" in state and int(state["ring_ids"].shape[0]) < K:
-            # a mirror SHALLOWER than the device ring only forgoes skipped
-            # gathers (the device still serves its hits, same values); a
-            # DEEPER one would skip lanes the device ring already evicted
-            raise ValueError(
-                f"state carries a depth-{int(state['ring_ids'].shape[0])} slice ring "
-                f"but the StreamedTables mirror is depth {K} — a mirror deeper than "
-                "the device ring would skip gathers for lanes the ring no longer "
-                "holds (open the store with ring_depth <= the state's)"
-            )
-        if K > 0 and "ring_ids" not in state:
-            # lazy ring allocation: the lane width is the cast's static
-            # unique-id width, known only once the first batch arrives
-            T, n = np.asarray(cast["unique_ids"]).shape
-            state = dict(
-                state,
-                ring_ids=jnp.full((K, T, n), V, jnp.int32),
-                ring_rows=jnp.zeros((K, T, n, D), jnp.float32),
-                ring_accums=jnp.zeros((K, T, n, 1), jnp.float32),
-                ring_pos=jnp.zeros((), jnp.int32),
-                ring_hit_rate=jnp.zeros((), jnp.float32),
-            )
-        streamed.write_back_barrier(cast)
-        cold_rows, cold_accums = streamed.gather(step_index, cast)
-        # the gather is off the working-set lock: let the previous step's
-        # queued write-back commit now, overlapped with the device step
-        streamed.release_write_back()
-        with tracer.span("step.device"):
-            state, aux = device_step(
-                state, dict(batch, cold_rows=cold_rows, cold_accums=cold_accums)
-            )
-        if streamed.overlap_write_back:
-            streamed.write_back_async(cast, aux)
-        else:
-            streamed.write_back(
-                cast,
-                np.asarray(aux["cold_rows"]),
-                np.asarray(aux["cold_accums"]),
-                np.asarray(aux["hit_seg"]),
-            )
-        streamed.ring_push(cast)
-        if step_writer is not None:
-            write_record(state, aux, step_index, batch)
-        return state, aux["loss"]
-
-    return step
-
-
-def make_streamed_promote(streamed):
-    """Host placement step for ``tc_streamed`` (cf. ``make_promote_step``):
-    demote every cached row + accumulator through the store, then adopt the
-    EMA's per-table top-C from the working set. Semantically a no-op on the
-    trained values, exactly like ``promote_evict``.
-
-    Window hygiene: rows that STAY hot across the promotion are demoted
-    write-through (straight to their shard — the store never serves them),
-    and promotion reads neither count nor install; only rows LEAVING the
-    hot set enter the working set, since those are the ones future steps
-    will actually read. The hot-set mirror is updated with exactly the ids
-    uploaded to the device cache (the consistency invariant).
-
-    Fences: in-flight write-backs drain first (demotion and promotion reads
-    must see every committed row), and the slice ring is invalidated on
-    both sides — rows crossing the hot-tier boundary in either direction
-    make ring entries stale."""
-    from repro.store.streamed import ring_reset_state
-
-    c_runs = streamed.registry.counter("promote.runs_total")
-    c_demoted = streamed.registry.counter("promote.demoted_rows")
-
-    def promote(state):
-        with streamed.tracer.span("promote.streamed"):
-            return _promote_inner(state)
-
-    def _promote_inner(state):
-        c_runs.inc()
-        streamed.drain_write_back()
-        state = ring_reset_state(state, streamed)
-        C = state["cache_ids"].shape[1] - 1
-        V = streamed.num_rows
-        cids = np.asarray(state["cache_ids"])
-        crows = np.asarray(state["cache_rows"])
-        caccums = np.asarray(state["cache_accums"])
-        ema = np.asarray(state["ema"])
-        T = ema.shape[0]
-        new_ids = np.full((T, C + 1), V, np.int32)
-        new_rows = np.zeros((T, C + 1, streamed.dim), np.float32)
-        new_accums = np.zeros((T, C + 1, 1), np.float32)
-        for t in range(T):
-            # stable argsort on -ema == lax.top_k's lower-index tie-break
-            top = np.argsort(-ema[t], kind="stable")[:C]
-            ids_sorted = np.sort(top).astype(np.int32)
-            # demote: rows staying hot write through, rows leaving install
-            real = cids[t] < V
-            stays = real & np.isin(cids[t], ids_sorted)
-            leaves = real & ~stays
-            for mask, insert in ((stays, False), (leaves, True)):
-                if mask.any():
-                    c_demoted.inc(int(mask.sum()))
-                    streamed.demote(
-                        t, cids[t][mask], crows[t][mask], caccums[t][mask], insert=insert
-                    )
-            rows, accs = streamed.gather_rows(t, ids_sorted)  # bypasses the mirror
-            streamed.set_hot_ids(t, ids_sorted)
-            new_ids[t, :C] = ids_sorted
-            new_rows[t, :C] = rows
-            new_accums[t, :C] = accs
-        return dict(
-            state,
-            cache_ids=jnp.asarray(new_ids),
-            cache_rows=jnp.asarray(new_rows),
-            cache_accums=jnp.asarray(new_accums),
-        )
-
-    return promote
+    return CachedStack(cfg, lr=lr).init_state(key, capacity=capacity)

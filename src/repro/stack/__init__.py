@@ -1,0 +1,52 @@
+"""Per-table tier stacks + the trainer that composes them.
+
+``TierStack`` (stack.base) is the contract — one system's answer to where
+embedding rows live and how they move; ``stack.trainer`` composes a stack
+with the dense model and owns the jitted step, promote cadence and
+coherent checkpointing. ``repro.dist.sparse`` shards the streamed stack
+over the model axis."""
+from repro.stack.base import TierStack, dense_fn, pooled_from_tables
+from repro.stack.cached import (
+    CachedStack,
+    make_flush_step,
+    make_promote_step,
+    pooled_from_tiered,
+)
+from repro.stack.flat import BaselineStack, FlatStack, init_sparse_system
+from repro.stack.streamed import (
+    StreamedStack,
+    init_streamed,
+    make_streamed_promote,
+    make_streamed_train_step,
+)
+from repro.stack.trainer import (
+    KERNEL_MODES,
+    STACKS,
+    MultiTableTrainer,
+    build_stack,
+    make_device_step,
+    make_sparse_train_step,
+)
+
+__all__ = [
+    "TierStack",
+    "dense_fn",
+    "pooled_from_tables",
+    "pooled_from_tiered",
+    "BaselineStack",
+    "FlatStack",
+    "CachedStack",
+    "StreamedStack",
+    "init_sparse_system",
+    "init_streamed",
+    "make_flush_step",
+    "make_promote_step",
+    "make_streamed_promote",
+    "make_streamed_train_step",
+    "KERNEL_MODES",
+    "STACKS",
+    "MultiTableTrainer",
+    "build_stack",
+    "make_device_step",
+    "make_sparse_train_step",
+]

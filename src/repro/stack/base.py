@@ -1,0 +1,132 @@
+"""The per-table tier-stack contract.
+
+A ``TierStack`` is ONE system's answer to "where do embedding rows live and
+how do they move" — it owns, for every table at once (vmapped per-table
+closures with stacked ``(T, ...)`` state):
+
+  * **state init** — which arrays the trainer state carries for this system
+    (flat tables, hot-cache blocks, EMA, ...),
+  * **fused forward** — ids -> pooled ``(B, T, D)`` embeddings through the
+    system's gather path (flat take+segment-sum, cached two-tier gather,
+    streamed slice gather),
+  * **fused update** — the casted backward: coalesced gradient ->
+    row-wise Adagrad applied through the system's scatter path,
+  * **promote / flush** — placement and write-back between tiers,
+  * **coherent save/restore** — what must happen before a checkpoint is
+    taken or adopted (demote-all / flush; see ``repro.checkpoint``).
+
+The trainer (``stack.trainer.make_device_step``) composes a stack with the
+dense model: it owns the loss, the dense Adagrad update and the jit
+boundary, and never branches on the system beyond the one structural
+property ``differentiable`` (the autodiff baseline differentiates THROUGH
+the forward; every Tensor Casting system uses the precomputed cast
+instead). Concrete stacks: ``stack.flat`` (``baseline``/``tc``/``tc_nmp``),
+``stack.cached`` (``tc_cached``), ``stack.streamed`` (``tc_streamed``).
+``repro.dist.sparse`` shards the streamed stack over the model axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.stats import segment_counts
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm
+
+
+def dense_fn(cfg: DLRMConfig, dense_params, emb, batch):
+    """Bottom MLP -> interaction -> top MLP -> mean BCE-with-logits loss.
+    The dense half of every system's step (the GPU side of the paper's
+    Fig. 3 split)."""
+    bot = dlrm._apply_mlp(dense_params["bot_mlp"], batch["dense"], final_act=True)
+    x = dlrm._interact(bot, emb)
+    logits = dlrm._apply_mlp(dense_params["top_mlp"], x, final_act=False)[:, 0]
+    labels = batch["labels"].astype(jnp.float32)
+    lf = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lf, 0) - lf * labels + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+
+
+def pooled_from_tables(cfg: DLRMConfig, tables, idx):
+    """Flat forward gather-reduce for all tables: (B,T,P) ids -> (B,T,D)."""
+    B, T, P = idx.shape
+    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+
+    def one(table, ids):
+        rows = jnp.take(table, ids.reshape(-1), axis=0)
+        return jax.ops.segment_sum(rows, dst, num_segments=B)
+
+    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, idx)
+
+
+class TierStack:
+    """Base contract; see the module docstring. Subclasses set ``system``
+    and implement the hooks they support (a flat stack has no promote)."""
+
+    system: str = "?"
+    #: True only for the autodiff baseline: the trainer differentiates
+    #: through ``forward`` w.r.t. ``state["tables"]`` and calls
+    #: ``apply_table_grad`` instead of the ``update`` hook.
+    differentiable: bool = False
+
+    def __init__(
+        self,
+        cfg: DLRMConfig,
+        *,
+        lr: float = 0.01,
+        decay: float = 0.98,
+        mode: Optional[str] = None,
+    ):
+        self.cfg = cfg
+        self.lr = lr
+        self.decay = decay  # hot-row EMA decay (cached/streamed placement)
+        self.mode = mode  # kernel dispatch mode (None = auto)
+
+    # -- state -------------------------------------------------------------
+
+    def init_state(self, key, **kw) -> dict:
+        """Sparse-side state entries for this system (the trainer adds
+        ``dense`` / ``opt_state``)."""
+        raise NotImplementedError
+
+    # -- device step pieces ------------------------------------------------
+
+    def forward(self, state: dict, batch: dict) -> tuple[Any, dict]:
+        """Pooled embeddings for the batch: ``(emb (B,T,D), ctx)``. ``ctx``
+        is an opaque dict threaded into ``update`` (resolve results, ring
+        merges, hit rates) so forward work is never recomputed."""
+        raise NotImplementedError
+
+    def update(self, state: dict, d_emb, batch: dict, ctx: dict) -> tuple[dict, Optional[dict]]:
+        """Apply the casted sparse backward. Returns ``(state_updates,
+        aux)``: the state entries this stack owns (new tables / cache
+        blocks / ring entries / ...), plus an optional aux payload returned
+        to the host driver (the streamed stack's updated cold lanes)."""
+        raise NotImplementedError
+
+    def apply_table_grad(self, state: dict, d_tables) -> dict:
+        """Autodiff-path update (``differentiable`` stacks only)."""
+        raise NotImplementedError
+
+    # -- placement / coherence --------------------------------------------
+
+    def make_promote(self):
+        """Placement step ``state -> state`` (hot-set adoption); systems
+        without a hot tier return identity."""
+        return lambda state: state
+
+    def make_flush(self):
+        """Write-back step ``state -> state`` after which the cold tier
+        alone is checkpoint-complete."""
+        return lambda state: state
+
+    # -- shared helpers ----------------------------------------------------
+
+    def counts_of(self, cast: dict):
+        """Per-unique-row lookup counts (the EMA placement signal): host
+        precomputed when the CastingServer runs ``with_counts``, else
+        derived from ``casted_dst`` on device."""
+        if "counts" in cast:
+            return cast["counts"]
+        return jax.vmap(lambda cd: segment_counts(cd, cd.shape[0]))(cast["casted_dst"])

@@ -1,0 +1,167 @@
+"""Cached tier stack (``tc_cached``): flat table + a VMEM-resident hot-row
+cache, both served through the fused two-tier kernels.
+
+Wraps the PR 2 machinery unchanged: ``TieredEmbedding`` (forward bag lookup
++ tier-split sparse update), ``HotRowCache`` layout/placement primitives,
+and the per-row EMA fed by the CastingServer's counts. Bit-identical to the
+flat stack by construction (tier placement is semantically transparent)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.hotcache import HotRowCache, init_hot_cache, promote_evict, write_back
+from repro.cache.stats import fold_counts
+from repro.cache.tiered import TieredEmbedding
+from repro.configs.base import DLRMConfig
+from repro.core.embedding import SparseGrad
+from repro.stack.base import TierStack
+from repro.stack.flat import FlatStack
+
+
+def tiered_of(state):
+    """View per-table state slices as a TieredEmbedding (used under vmap)."""
+    table, accum, cids, crows, caccum = state
+    return TieredEmbedding(table, accum, HotRowCache(cids, crows, caccum))
+
+
+def pooled_from_tiered(cfg: DLRMConfig, tables, accums, cids, crows, caccums, idx, *, mode=None):
+    """Cache-aware forward gather-reduce: hot rows come from the cache tier
+    (the authoritative copy while cached), served through the fused
+    cached-gather kernel under the requested dispatch mode (``dst`` is the
+    sorted fixed-pooling bag layout, so the kernel's revisit invariant
+    holds). Returns (emb (B,T,D), hit_frac)."""
+    B, T, P = idx.shape
+    dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+
+    def one(table, accum, ci, cr, ca, ids):
+        te = tiered_of((table, accum, ci, cr, ca))
+        pooled, hit = te.bag_lookup(ids.reshape(-1), dst, B, mode=mode)
+        return pooled, jnp.mean(hit.astype(jnp.float32))
+
+    emb, hits = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 1), out_axes=(1, 0))(
+        tables, accums, cids, crows, caccums, idx
+    )
+    return emb, jnp.mean(hits)
+
+
+class CachedStack(FlatStack):
+    """``tc_cached``: tiered store — cache-aware forward, tier-split sparse
+    update, EMA fed by the CastingServer's per-batch row counts."""
+
+    system = "tc_cached"
+    differentiable = False
+
+    def init_state(self, key, *, capacity: int | None = None, **kw) -> dict:
+        """Flat init + per-table tiered-store state. ``capacity`` defaults
+        to rows/16 — the paper-adjacent 'small fast tier' operating point
+        (RecNMP's hot-entry working set)."""
+        s = super().init_state(key, **kw)
+        T, rows_p1, D = s["tables"].shape
+        V = rows_p1 - 1
+        C = capacity if capacity is not None else max(1, V // 16)
+        # one source of truth for the cache layout/validation: hotcache.init
+        cache = init_hot_cache(C, D, V, s["tables"].dtype)
+        s["cache_ids"] = jnp.tile(cache.ids, (T, 1))
+        s["cache_rows"] = jnp.tile(cache.rows, (T, 1, 1))
+        s["cache_accums"] = jnp.tile(cache.accum, (T, 1, 1))
+        s["ema"] = jnp.zeros((T, V), jnp.float32)
+        s["hit_rate"] = jnp.zeros((), jnp.float32)
+        return s
+
+    def forward(self, state, batch):
+        emb, hit_rate = pooled_from_tiered(
+            self.cfg,
+            state["tables"], state["accums"],
+            state["cache_ids"], state["cache_rows"], state["cache_accums"],
+            batch["idx"], mode=self.mode,
+        )
+        return emb, {"hit_rate": hit_rate}
+
+    def update(self, state, d_emb, batch, ctx):
+        cast = batch["cast"]
+        counts = self.counts_of(cast)
+        mode, lr, decay = self.mode, self.lr, self.decay
+
+        def upd_one(table, accum, ci, cr, ca, e, d_e, c_src, c_dst, uids, nuniq, cnt):
+            import repro.kernels.ops as ops
+
+            te = tiered_of((table, accum, ci, cr, ca))
+            # num_valid: padding segments of the coalesced grad must be
+            # zero on every backend before the tier-split scatter.
+            coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=mode)
+            # tier-split scatter through the fused cached-scatter
+            # primitive (split_update_tiers restores the sorted/
+            # zero-pad contract the redirected streams used to break)
+            te = te.sparse_update(SparseGrad(uids, coal, nuniq), lr=lr, mode=mode)
+            e = fold_counts(e, decay, uids, cnt)
+            return te.table, te.accum, te.cache.ids, te.cache.rows, te.cache.accum, e
+
+        tables, accums, cids, crows, caccums, ema = jax.vmap(
+            upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
+        )(
+            state["tables"], state["accums"],
+            state["cache_ids"], state["cache_rows"], state["cache_accums"],
+            state["ema"],
+            d_emb,
+            cast["casted_src"],
+            cast["casted_dst"],
+            cast["unique_ids"],
+            cast["num_unique"],
+            counts,
+        )
+        return {
+            "tables": tables, "accums": accums,
+            "cache_ids": cids, "cache_rows": crows, "cache_accums": caccums,
+            "ema": ema, "hit_rate": ctx["hit_rate"],
+        }, None
+
+    # -- placement / coherence --------------------------------------------
+
+    def make_promote(self):
+        return make_promote_step()
+
+    def make_flush(self):
+        return make_flush_step()
+
+
+def make_promote_step():
+    """Jitted placement step for ``tc_cached``: per table, demote the current
+    hot set (write-back of rows + accumulators) and adopt the EMA's top-C.
+    Run every N steps off the critical path; semantically a no-op (the
+    tiered store stays bit-identical to the flat table). Shape-polymorphic
+    over the state — no config needed."""
+
+    def promote(state):
+        def one(table, accum, ci, cr, ca, ema):
+            cache, table, accum = promote_evict(HotRowCache(ci, cr, ca), table, accum, ema)
+            return table, accum, cache.ids, cache.rows, cache.accum
+
+        tables, accums, cids, crows, caccums = jax.vmap(one)(
+            state["tables"], state["accums"], state["cache_ids"],
+            state["cache_rows"], state["cache_accums"], state["ema"],
+        )
+        return dict(
+            state,
+            tables=tables, accums=accums,
+            cache_ids=cids, cache_rows=crows, cache_accums=caccums,
+        )
+
+    return jax.jit(promote, donate_argnums=(0,))
+
+
+def make_flush_step():
+    """Jitted write-back WITHOUT hot-set adoption: after this,
+    state["tables"]/["accums"] alone are checkpoint-complete while the
+    cache stays as configured (e.g. frozen under promote_every=0)."""
+
+    def flush(state):
+        tables, accums = jax.vmap(
+            lambda t, a, ci, cr, ca: write_back(HotRowCache(ci, cr, ca), t, a)
+        )(
+            state["tables"], state["accums"], state["cache_ids"],
+            state["cache_rows"], state["cache_accums"],
+        )
+        return dict(state, tables=tables, accums=accums)
+
+    return jax.jit(flush, donate_argnums=(0,))

@@ -1,0 +1,83 @@
+"""Flat tier stacks: the whole table lives in one (HBM) tier.
+
+``FlatStack`` is the paper's Tensor Casting system (``tc`` pins the jnp
+reference path, ``tc_nmp`` auto-dispatches to the Pallas kernels — the
+NMP-core analogue); ``BaselineStack`` is the framework baseline that
+autodiffs through the lookup (gradient expand-coalesce) and applies a dense
+Adagrad over the whole table."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.kernels import ops
+from repro.models import dlrm
+from repro.optim import adagrad
+from repro.optim.sparse import add_sentinel_row, init_rowwise_adagrad
+from repro.stack.base import TierStack, pooled_from_tables
+
+
+def init_sparse_system(cfg: DLRMConfig, key):
+    """Params with sentinel-padded tables + row-wise accumulators — the
+    shared bit-identity anchor every system's init derives from."""
+    params = dlrm.init_params(cfg, key)
+    tables = jax.vmap(add_sentinel_row)(params.pop("tables"))  # (T, R+1, D)
+    accums = jax.vmap(init_rowwise_adagrad)(tables)  # (T, R+1, 1)
+    return {"dense": params, "tables": tables, "accums": accums}
+
+
+class FlatStack(TierStack):
+    """``tc`` / ``tc_nmp``: flat forward, casted gather-reduce backward,
+    fused row-wise Adagrad on the unique rows."""
+
+    system = "tc"
+
+    def init_state(self, key, **kw) -> dict:
+        s = init_sparse_system(self.cfg, key)
+        s["opt_state"] = adagrad(self.lr).init(s["dense"])
+        return s
+
+    def forward(self, state, batch):
+        return pooled_from_tables(self.cfg, state["tables"], batch["idx"]), {}
+
+    def update(self, state, d_emb, batch, ctx):
+        cast = batch["cast"]  # each field stacked (T, n)
+        mode, lr = self.mode, self.lr
+
+        def upd_one(table, accum, d_e, c_src, c_dst, uids, nuniq):
+            # num_valid zeroes padding segments on every backend so the
+            # scatter's sentinel-row traffic stays deterministic.
+            coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=mode)
+            return ops.scatter_apply_adagrad(table, accum, uids, coal, lr, mode=mode)
+
+        tables, accums = jax.vmap(upd_one, in_axes=(0, 0, 1, 0, 0, 0, 0))(
+            state["tables"],
+            state["accums"],
+            d_emb,
+            cast["casted_src"],
+            cast["casted_dst"],
+            cast["unique_ids"],
+            cast["num_unique"],
+        )
+        return {"tables": tables, "accums": accums}, None
+
+
+class BaselineStack(FlatStack):
+    """``baseline``: autodiff embedding backward (framework gradient
+    expand-coalesce, unsorted scatter-add) + dense Adagrad on the tables."""
+
+    system = "baseline"
+    differentiable = True
+
+    def apply_table_grad(self, state, d_tables):
+        tables, accums = state["tables"], state["accums"]
+        # dense row-wise Adagrad over the *whole* table (untouched rows
+        # add zero) — numerically identical to the sparse path.
+        accums = accums + jnp.mean(
+            jnp.square(d_tables.astype(jnp.float32)), -1, keepdims=True
+        )
+        tables = (tables - self.lr * d_tables / jnp.sqrt(accums + 1e-10)).astype(
+            tables.dtype
+        )
+        return {"tables": tables, "accums": accums}

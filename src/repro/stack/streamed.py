@@ -1,0 +1,476 @@
+"""Streamed tier stack (``tc_streamed``): the full capacity hierarchy.
+
+The cold tier lives on DISK (mmap'd shards, ``repro.store``) behind a
+bounded host working set; the device step receives a static-shape gathered
+slice of the batch's unique cold rows (+ accumulators) and returns their
+updated values for host write-back. The device step is fully fused like
+``tc_cached`` (cached-gather forward / lane-compacted cached-scatter
+backward over the dead-lane-padded slice), the write-back commits on a
+background thread overlapped with the next step, and a device-side ring of
+recent slices serves re-faulted rows without re-upload. Bit-identical to
+``tc`` with any resident budget >= 1.
+
+Device-side pieces live on ``StreamedStack``; the host-side driver
+(``init_streamed`` / ``make_streamed_train_step`` / ``make_streamed_promote``)
+sits below it in this module. ``repro.dist.sparse`` shards both over the
+model axis."""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.hotcache import init_hot_cache, resolve, split_update_lanes
+from repro.cache.stats import fold_counts
+from repro.configs.base import DLRMConfig
+from repro.kernels import ops
+from repro.optim import adagrad
+from repro.stack.base import TierStack
+from repro.stack.flat import init_sparse_system
+
+
+class StreamedStack(TierStack):
+    """``tc_streamed`` device step pieces. The state owns only the hot tier,
+    the EMA and (lazily) the slice ring; the cold tier arrives per batch as
+    ``batch["cold_rows"]`` / ``batch["cold_accums"]`` aligned with the
+    cast's ``unique_ids`` lanes."""
+
+    system = "tc_streamed"
+
+    def init_state(self, key, **kw) -> dict:
+        raise NotImplementedError(
+            "tc_streamed state is created together with its disk store — "
+            "use repro.stack.streamed.init_streamed(cfg, key, store_path)"
+        )
+
+    def forward(self, state, batch):
+        cfg, mode = self.cfg, self.mode
+        cast = batch["cast"]
+        B, T, P = batch["idx"].shape
+        V = cfg.rows_per_table
+        dst = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+
+        cold_rows_in = batch["cold_rows"]
+        cold_accums_in = batch["cold_accums"]
+        has_ring = "ring_ids" in state
+        ring_found = None
+        if has_ring:
+            # device-side slice ring: lanes whose id was updated in one
+            # of the last K steps are served from that step's retained
+            # (and therefore current) device copy — the host skipped
+            # their gather and their PCIe upload (their slice lanes are
+            # zero). Entries' id arrays are sorted with sentinel-V
+            # tails (split_update_lanes.cold_ids), so membership is one
+            # searchsorted per entry; walking oldest -> newest and
+            # overwriting makes the newest copy win, which is what
+            # keeps a row updated on step N from being served stale on
+            # step N+1 (write-invalidate semantics without mutating
+            # older entries).
+            ring_pos = state["ring_pos"]
+            Kr = state["ring_ids"].shape[0]
+
+            def ring_one(r_ids, r_rows, r_accums, uids, cold_r, cold_a):
+                rows, accums = cold_r, cold_a
+                found = jnp.zeros(uids.shape, bool)
+                for j in range(Kr):
+                    k = (ring_pos + j) % Kr  # oldest entry first
+                    e_ids = jax.lax.dynamic_index_in_dim(r_ids, k, 0, keepdims=False)
+                    e_rows = jax.lax.dynamic_index_in_dim(r_rows, k, 0, keepdims=False)
+                    e_acc = jax.lax.dynamic_index_in_dim(r_accums, k, 0, keepdims=False)
+                    pos = jnp.searchsorted(e_ids, uids).astype(jnp.int32)
+                    pos = jnp.minimum(pos, e_ids.shape[0] - 1)
+                    e_hit = (jnp.take(e_ids, pos) == uids) & (uids < V)
+                    rows = jnp.where(e_hit[:, None], jnp.take(e_rows, pos, axis=0), rows)
+                    accums = jnp.where(e_hit[:, None], jnp.take(e_acc, pos, axis=0), accums)
+                    found = found | e_hit
+                return rows, accums, found
+
+            cold_rows_in, cold_accums_in, ring_found = jax.vmap(
+                ring_one, in_axes=(1, 1, 1, 0, 0, 0)
+            )(
+                state["ring_ids"], state["ring_rows"], state["ring_accums"],
+                cast["unique_ids"], cold_rows_in, cold_accums_in,
+            )
+
+        def fwd_one(ci, cr, ids, seg, cold_r):
+            # fused two-tier bag gather over the dead-lane-padded slice:
+            # the slice stands in for the table (cold_src = the host's
+            # lookup->segment map; hits redirect to the dead lane n),
+            # hot rows come from the VMEM-resident cache — bit-equal to
+            # jnp.take(table, ids) + segment_sum on a flat table, so it
+            # matches the tc forward exactly.
+            slots, hit = resolve(ci, ids.reshape(-1))
+            n = cold_r.shape[0]
+            pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
+            pooled = ops.cached_gather_reduce(
+                pad_r, cr,
+                jnp.where(hit, slots, ci.shape[0] - 1).astype(jnp.int32),
+                jnp.where(hit, n, seg).astype(jnp.int32),
+                dst, hit.astype(jnp.int32), B, mode=mode,
+            )
+            return pooled, jnp.mean(hit.astype(jnp.float32))
+
+        emb, hits = jax.vmap(fwd_one, in_axes=(0, 0, 1, 0, 0), out_axes=(1, 0))(
+            state["cache_ids"], state["cache_rows"],
+            batch["idx"], cast["lookup_seg"], cold_rows_in,
+        )
+        ctx = {
+            "cold_rows_in": cold_rows_in,
+            "cold_accums_in": cold_accums_in,
+            "ring_found": ring_found,
+            "hit_rate": jnp.mean(hits),
+        }
+        return emb, ctx
+
+    def update(self, state, d_emb, batch, ctx):
+        mode, lr, decay = self.mode, self.lr, self.decay
+        V = self.cfg.rows_per_table
+        cast = batch["cast"]
+        counts = self.counts_of(cast)
+        cids = state["cache_ids"]
+
+        def upd_one(ci, cr, ca, cold_r, cold_a, e, d_e, c_src, c_dst, uids, nuniq, cnt):
+            coal = ops.gather_reduce(d_e, c_src, c_dst, num_valid=nuniq, mode=mode)
+            n = coal.shape[0]
+            # lane->row compaction: the slice's per-LANE update stream
+            # is re-sorted/compacted back into the scatter layout
+            # contract (ascending lanes ARE ascending table rows), so
+            # the SAME fused cached-scatter kernel updates both tiers
+            # in one pass — hot rows RMW'd in the VMEM cache block,
+            # cold rows in the dead-lane-padded slice standing in for
+            # the HBM table. Per-lane Adagrad math goes through the
+            # fusion-isolated helpers, so rounding stays bit-identical
+            # to the flat table update on every backend.
+            split = split_update_lanes(ci, uids, coal, V)
+            pad_r = jnp.concatenate([cold_r, jnp.zeros((1, cold_r.shape[1]), cold_r.dtype)])
+            pad_a = jnp.concatenate([cold_a, jnp.zeros((1, 1), cold_a.dtype)])
+            pad_r2, pad_a2, cr2, ca2 = ops.cached_scatter_apply(
+                pad_r, pad_a, cr, ca,
+                split.hot_slot, split.cold_lane, split.hot_grads, split.cold_grads,
+                lr, mode=mode,
+            )
+            hit = split.hit  # the resolve the kernel streams were built from
+            e2 = fold_counts(e, decay, uids, cnt)
+            # ring entry: this step's updated cold rows in compacted
+            # (sorted-by-table-row) order + their id directory
+            entry_rows = jnp.take(pad_r2, split.cold_lane, axis=0)
+            entry_accums = jnp.take(pad_a2, split.cold_lane, axis=0)
+            real_cold = (uids < V) & ~hit
+            return (
+                cr2, ca2, pad_r2[:n], pad_a2[:n], hit.astype(jnp.int32),
+                split.cold_ids, entry_rows, entry_accums, real_cold, e2,
+            )
+
+        (
+            crows, caccums, cold_rows_out, cold_accums_out, hit_seg,
+            entry_ids, entry_rows, entry_accums, real_cold, ema,
+        ) = jax.vmap(
+            upd_one, in_axes=(0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0)
+        )(
+            cids, state["cache_rows"], state["cache_accums"],
+            ctx["cold_rows_in"], ctx["cold_accums_in"], state["ema"],
+            d_emb,
+            cast["casted_src"],
+            cast["casted_dst"],
+            cast["unique_ids"],
+            cast["num_unique"],
+            counts,
+        )
+        updates = {
+            "cache_ids": cids, "cache_rows": crows, "cache_accums": caccums,
+            "ema": ema, "hit_rate": ctx["hit_rate"],
+        }
+        if "ring_ids" in state:
+            # push this step's entry into the round-robin slot (the
+            # oldest entry is overwritten) and report the fraction of
+            # real cold lanes the ring served this step
+            ring_pos = state["ring_pos"]
+            Kr = state["ring_ids"].shape[0]
+            upd_ring = partial(jax.lax.dynamic_update_index_in_dim, index=ring_pos, axis=0)
+            n_cold = jnp.maximum(jnp.sum(real_cold), 1)
+            updates.update(
+                ring_ids=upd_ring(state["ring_ids"], update=entry_ids),
+                ring_rows=upd_ring(state["ring_rows"], update=entry_rows),
+                ring_accums=upd_ring(state["ring_accums"], update=entry_accums),
+                ring_pos=(ring_pos + 1) % Kr,
+                ring_hit_rate=jnp.sum(ctx["ring_found"] & real_cold) / n_cold,
+            )
+        # aux payload for the host driver's working-set write-back
+        aux = {
+            "cold_rows": cold_rows_out,
+            "cold_accums": cold_accums_out,
+            "hit_seg": hit_seg,
+        }
+        return updates, aux
+
+
+# ---------------------------------------------------------------------------
+# host driver over the disk-backed cold tier (repro.store)
+# ---------------------------------------------------------------------------
+
+
+def init_streamed(
+    cfg: DLRMConfig,
+    key,
+    store_path: str,
+    *,
+    lr: float = 0.01,
+    capacity: int | None = None,
+    resident_rows: int | None = None,
+    num_shards: int = 8,
+    prefetch: bool = True,
+    ring_depth: int = 2,
+    overlap_write_back: bool = True,
+    registry=None,
+    tracer=None,
+):
+    """``init_cached_state``'s counterpart for ``system="tc_streamed"``.
+
+    Materializes the same initial tables as ``init_state`` (same key -> same
+    values, the bit-identity anchor), writes rows + accumulators to per-table
+    shard stores under ``store_path``, and returns ``(state, streamed)``:
+    the device state holds only dense params, the hot tier and the EMA — the
+    cold tier never resides on device. ``resident_rows`` is the host
+    working-set budget (default rows/8; correctness holds for any budget
+    >= 1, streaming is only exercised when it is < rows).
+
+    ``ring_depth`` keeps that many recent cold slices resident ON DEVICE so
+    re-faulted rows skip the PCIe upload (0 disables; the ring state is
+    allocated lazily by the driver once the lane width is known), and
+    ``overlap_write_back`` commits each step's cold lanes on a background
+    thread overlapped with the next step — both default on and both are
+    semantically free: training stays bit-identical to ``tc``."""
+    from repro.store import StreamedTables
+
+    s = init_sparse_system(cfg, key)
+    tables = np.asarray(s["tables"])  # (T, V+1, D); sentinel row stays off-store
+    accums = np.asarray(s["accums"])
+    T, rows_p1, D = tables.shape
+    V = rows_p1 - 1
+    C = capacity if capacity is not None else max(1, V // 16)
+    R = resident_rows if resident_rows is not None else max(1, V // 8)
+    streamed = StreamedTables.create(
+        store_path, tables[:, :V], accums[:, :V],
+        resident_rows=R, num_shards=min(num_shards, V), prefetch=prefetch,
+        ring_depth=ring_depth, overlap_write_back=overlap_write_back,
+        registry=registry, tracer=tracer,
+    )
+    cache = init_hot_cache(C, D, V, jnp.float32)
+    state = {
+        "dense": s["dense"],
+        "opt_state": adagrad(lr).init(s["dense"]),
+        "cache_ids": jnp.tile(cache.ids, (T, 1)),
+        "cache_rows": jnp.tile(cache.rows, (T, 1, 1)),
+        "cache_accums": jnp.tile(cache.accum, (T, 1, 1)),
+        "ema": jnp.zeros((T, V), jnp.float32),
+        "hit_rate": jnp.zeros((), jnp.float32),
+    }
+    return state, streamed
+
+
+def make_streamed_train_step(
+    cfg: DLRMConfig, streamed, *, lr: float = 0.01, decay: float = 0.98,
+    step_writer=None,
+):
+    """Host driver for ``tc_streamed``: returns
+    ``step(state, batch, step_index=None) -> (state, loss)``.
+
+    ``batch`` is the HOST batch (numpy, with ``cast`` from a CastingServer
+    configured with ``with_counts=True, with_lookup_seg=True``). Per step
+    the driver: (1) fences against the in-flight write-back only if its
+    uncommitted lanes overlap what this gather will read (with the ring on,
+    last step's updated rows are ring-served and skip the gather, so the
+    fence rarely fires); (2) waits on the step's prefetch and assembles the
+    cold slice from the working set (synchronous shard faults for anything
+    missing — counted, never wrong); (3) runs the jitted device step; and
+    (4) hands the updated cold lanes to the background write-back thread
+    (or commits synchronously when overlap is off) and rotates the ring
+    mirror. ``step_index`` keys the prefetch barrier; pass the pipeline's
+    step id (None skips the wait).
+
+    ``step_writer`` (an ``obs.StepMetricsWriter``) is OPT-IN per-step
+    telemetry: each step appends one JSONL record (loss / hit rates /
+    fault + eviction counters / modeled PCIe+HBM bytes — see
+    docs/observability.md). Reading the loss and hit_rate forces a device
+    sync per step, exactly like printing the loss would; leave it None on
+    the throughput path. The cumulative fields are computed from the same
+    main-thread registry counters ``streamed.stats()`` derives from, so
+    the last record agrees with a post-run ``stats()`` call."""
+    from repro.stack.trainer import make_sparse_train_step
+
+    device_step = make_sparse_train_step(cfg, lr=lr, system="tc_streamed", decay=decay)
+    V, D = streamed.num_rows, streamed.dim
+    K = streamed.ring_depth
+    tracer = streamed.tracer
+    reg = streamed.registry
+    # main-thread instruments the per-step record derives rates from
+    # (get-or-create returns the store's own instances)
+    c_steps = reg.counter("st.steps_total")
+    c_gather_s = reg.counter("st.gather_seconds")
+    c_wait_s = reg.counter("wb.gate_wait_seconds")
+    c_sync_s = reg.counter("wb.sync_commit_seconds")
+    c_ring = reg.counter("ring.hit_lanes")
+    c_pcie_up = reg.counter("pcie.uploaded_bytes")
+    c_pcie_saved = reg.counter("pcie.ring_saved_bytes")
+
+    def write_record(state, aux, step_index, batch):
+        covered = sum(ws.stats.covered_reads for ws in streamed.working)
+        sync_faults = sum(ws.stats.sync_faults for ws in streamed.working)
+        cold = covered + sync_faults
+        ring_hits = c_ring.value()
+        steps = c_steps.value()
+        critical_s = c_gather_s.value() + c_wait_s.value() + c_sync_s.value()
+        hit_rate = float(state["hit_rate"])  # device sync (opt-in cost)
+        B, T, P = batch["idx"].shape
+        # modeled HBM gather traffic, resident accounting — the same
+        # formula as benchmarks/common.model_hbm_gather (flat row DMA vs
+        # hot-tier misses only)
+        hbm_flat = B * T * P * D * 4
+        record = {
+            "step": int(step_index) if step_index is not None else int(steps) - 1,
+            "loss": float(aux["loss"]),
+            "hit_rate": hit_rate,
+            "ring_hit_rate": (
+                ring_hits / (ring_hits + cold) if (ring_hits + cold) else 0.0
+            ),
+            "ring_step_hit_rate": float(state.get("ring_hit_rate", 0.0)),
+            "prefetch_coverage": covered / cold if cold else 1.0,
+            "sync_faults": int(sync_faults),
+            "prefetch_faults": int(
+                sum(ws.stats.prefetch_faults for ws in streamed.working)
+            ),
+            "evictions": int(sum(ws.stats.evictions for ws in streamed.working)),
+            "wb_gate_wait_s": c_wait_s.value(),
+            "host_us_per_step": critical_s / steps * 1e6 if steps else 0.0,
+            "pcie_uploaded_bytes": int(c_pcie_up.value()),
+            "pcie_ring_saved_bytes": int(c_pcie_saved.value()),
+            "hbm_gather_bytes_flat": hbm_flat,
+            "hbm_gather_bytes_cached_resident": (1.0 - hit_rate) * hbm_flat,
+        }
+        step_writer.write(record)
+
+    def step(state, batch, *, step_index=None):
+        with tracer.span("step.streamed"):
+            state, loss = _step_inner(state, batch, step_index)
+        return state, loss
+
+    def _step_inner(state, batch, step_index):
+        cast = batch["cast"]
+        if "ring_ids" in state and int(state["ring_ids"].shape[0]) < K:
+            # a mirror SHALLOWER than the device ring only forgoes skipped
+            # gathers (the device still serves its hits, same values); a
+            # DEEPER one would skip lanes the device ring already evicted
+            raise ValueError(
+                f"state carries a depth-{int(state['ring_ids'].shape[0])} slice ring "
+                f"but the StreamedTables mirror is depth {K} — a mirror deeper than "
+                "the device ring would skip gathers for lanes the ring no longer "
+                "holds (open the store with ring_depth <= the state's)"
+            )
+        if K > 0 and "ring_ids" not in state:
+            # lazy ring allocation: the lane width is the cast's static
+            # unique-id width, known only once the first batch arrives
+            T, n = np.asarray(cast["unique_ids"]).shape
+            state = dict(
+                state,
+                ring_ids=jnp.full((K, T, n), V, jnp.int32),
+                ring_rows=jnp.zeros((K, T, n, D), jnp.float32),
+                ring_accums=jnp.zeros((K, T, n, 1), jnp.float32),
+                ring_pos=jnp.zeros((), jnp.int32),
+                ring_hit_rate=jnp.zeros((), jnp.float32),
+            )
+        streamed.write_back_barrier(cast)
+        cold_rows, cold_accums = streamed.gather(step_index, cast)
+        # the gather is off the working-set lock: let the previous step's
+        # queued write-back commit now, overlapped with the device step
+        streamed.release_write_back()
+        with tracer.span("step.device"):
+            state, aux = device_step(
+                state, dict(batch, cold_rows=cold_rows, cold_accums=cold_accums)
+            )
+        if streamed.overlap_write_back:
+            streamed.write_back_async(cast, aux)
+        else:
+            streamed.write_back(
+                cast,
+                np.asarray(aux["cold_rows"]),
+                np.asarray(aux["cold_accums"]),
+                np.asarray(aux["hit_seg"]),
+            )
+        streamed.ring_push(cast)
+        if step_writer is not None:
+            write_record(state, aux, step_index, batch)
+        return state, aux["loss"]
+
+    return step
+
+
+def make_streamed_promote(streamed):
+    """Host placement step for ``tc_streamed`` (cf. ``make_promote_step``):
+    demote every cached row + accumulator through the store, then adopt the
+    EMA's per-table top-C from the working set. Semantically a no-op on the
+    trained values, exactly like ``promote_evict``.
+
+    Window hygiene: rows that STAY hot across the promotion are demoted
+    write-through (straight to their shard — the store never serves them),
+    and promotion reads neither count nor install; only rows LEAVING the
+    hot set enter the working set, since those are the ones future steps
+    will actually read. The hot-set mirror is updated with exactly the ids
+    uploaded to the device cache (the consistency invariant).
+
+    Fences: in-flight write-backs drain first (demotion and promotion reads
+    must see every committed row), and the slice ring is invalidated on
+    both sides — rows crossing the hot-tier boundary in either direction
+    make ring entries stale."""
+    from repro.store.streamed import ring_reset_state
+
+    c_runs = streamed.registry.counter("promote.runs_total")
+    c_demoted = streamed.registry.counter("promote.demoted_rows")
+
+    def promote(state):
+        with streamed.tracer.span("promote.streamed"):
+            return _promote_inner(state)
+
+    def _promote_inner(state):
+        c_runs.inc()
+        streamed.drain_write_back()
+        state = ring_reset_state(state, streamed)
+        C = state["cache_ids"].shape[1] - 1
+        V = streamed.num_rows
+        cids = np.asarray(state["cache_ids"])
+        crows = np.asarray(state["cache_rows"])
+        caccums = np.asarray(state["cache_accums"])
+        ema = np.asarray(state["ema"])
+        T = ema.shape[0]
+        new_ids = np.full((T, C + 1), V, np.int32)
+        new_rows = np.zeros((T, C + 1, streamed.dim), np.float32)
+        new_accums = np.zeros((T, C + 1, 1), np.float32)
+        for t in range(T):
+            # stable argsort on -ema == lax.top_k's lower-index tie-break
+            top = np.argsort(-ema[t], kind="stable")[:C]
+            ids_sorted = np.sort(top).astype(np.int32)
+            # demote: rows staying hot write through, rows leaving install
+            real = cids[t] < V
+            stays = real & np.isin(cids[t], ids_sorted)
+            leaves = real & ~stays
+            for mask, insert in ((stays, False), (leaves, True)):
+                if mask.any():
+                    c_demoted.inc(int(mask.sum()))
+                    streamed.demote(
+                        t, cids[t][mask], crows[t][mask], caccums[t][mask], insert=insert
+                    )
+            rows, accs = streamed.gather_rows(t, ids_sorted)  # bypasses the mirror
+            streamed.set_hot_ids(t, ids_sorted)
+            new_ids[t, :C] = ids_sorted
+            new_rows[t, :C] = rows
+            new_accums[t, :C] = accs
+        return dict(
+            state,
+            cache_ids=jnp.asarray(new_ids),
+            cache_rows=jnp.asarray(new_rows),
+            cache_accums=jnp.asarray(new_accums),
+        )
+
+    return promote

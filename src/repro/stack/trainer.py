@@ -1,0 +1,233 @@
+"""The trainer's view of all tables: compose ONE dense model with ONE
+tier stack.
+
+``make_device_step`` owns everything system-independent — the loss, the
+dense-Adagrad update, the vjp against the pooled embeddings and the jit
+boundary — and delegates everything tier-shaped (state init, fused
+forward/update, promote/flush) to the ``TierStack``. The only structural
+branch left is ``stack.differentiable`` (the autodiff baseline
+differentiates THROUGH the forward; every Tensor Casting system uses the
+precomputed cast instead), which is exactly the seam ``repro.dist.sparse``
+reuses to shard the streamed stack.
+
+``MultiTableTrainer`` wraps the whole lifecycle for callers that don't
+want to assemble the pieces by hand: build the stack, init (with the disk
+store for ``tc_streamed``), step with a promote cadence, flush, and
+coherent checkpointing."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.optim import adagrad, apply_updates
+from repro.stack.base import TierStack, dense_fn
+from repro.stack.cached import CachedStack
+from repro.stack.flat import BaselineStack, FlatStack
+from repro.stack.streamed import (
+    StreamedStack,
+    init_streamed,
+    make_streamed_promote,
+    make_streamed_train_step,
+)
+
+STACKS = {
+    "baseline": BaselineStack,
+    "tc": FlatStack,
+    "tc_nmp": FlatStack,
+    "tc_cached": CachedStack,
+    "tc_streamed": StreamedStack,
+}
+
+# tc pins the reference path; tc_nmp, tc_cached and tc_streamed
+# auto-dispatch (Mosaic on TPU, jnp on CPU, pallas_interpret under the
+# tests' pinned default — kernel equivalence is covered by
+# interpret-mode tests). tc_cached AND tc_streamed are fully fused:
+# the forward routes through the cached-gather kernel and the backward
+# tier-split update through the cached-scatter kernel — tc_cached via
+# split_update_tiers, tc_streamed via its lane-keyed sibling
+# split_update_lanes with the dead-lane-padded cold slice standing in
+# for the table — so under a Pallas-resolving mode neither system
+# falls back to jnp in either direction.
+KERNEL_MODES = {
+    "baseline": None, "tc": "jnp", "tc_nmp": None,
+    "tc_cached": None, "tc_streamed": None,
+}
+
+
+def build_stack(
+    cfg: DLRMConfig, system: str, *, lr: float = 0.01, decay: float = 0.98
+) -> TierStack:
+    """System name -> configured TierStack (with its pinned kernel mode)."""
+    if system not in STACKS:
+        raise ValueError(f"unknown system {system!r} (have {sorted(STACKS)})")
+    stack = STACKS[system](cfg, lr=lr, decay=decay, mode=KERNEL_MODES[system])
+    stack.system = system  # tc vs tc_nmp share a class, differ in mode
+    return stack
+
+
+def make_device_step(stack: TierStack):
+    """Jitted ``(state, batch) -> (state, loss-or-aux)`` for any stack.
+
+    Streamed stacks return an aux dict (``loss`` + the updated cold lanes
+    for host write-back) instead of the bare loss — same contract as the
+    pre-stack monolith."""
+    cfg, lr = stack.cfg, stack.lr
+    dense_opt = adagrad(lr)
+
+    def step(state, batch):
+        dense_params, opt_state = state["dense"], state["opt_state"]
+
+        if stack.differentiable:
+            # autodiff through the lookup: framework expand-coalesce +
+            # dense update on the whole table
+            def loss_fn(dp, tb):
+                emb, _ = stack.forward(dict(state, tables=tb), batch)
+                return dense_fn(cfg, dp, emb, batch)
+
+            loss, (d_dense, d_tables) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                dense_params, state["tables"]
+            )
+            updates, aux = stack.apply_table_grad(state, d_tables), None
+        else:
+            # Tensor Casting systems: forward through the stack's gather
+            # path, vjp only through the dense half, casted sparse backward
+            emb, ctx = stack.forward(state, batch)
+            loss, pullback = jax.vjp(
+                lambda dp, e: dense_fn(cfg, dp, e, batch), dense_params, emb
+            )
+            d_dense, d_emb = pullback(jnp.ones((), jnp.float32))
+            updates, aux = stack.update(state, d_emb, batch, ctx)
+
+        du, opt_state = dense_opt.update(d_dense, opt_state, dense_params)
+        dense_params = apply_updates(dense_params, du)
+        new_state = {"dense": dense_params, "opt_state": opt_state, **updates}
+        if aux is not None:
+            return new_state, dict(aux, loss=loss)
+        return new_state, loss
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sparse_train_step(
+    cfg: DLRMConfig, *, lr: float = 0.01, system: str = "tc", decay: float = 0.98
+):
+    """Returns jitted (state, batch_with_cast) -> (state, loss).
+
+    batch must carry ``cast`` stacked per table (from data.pipeline
+    CastingServer) when system != baseline. ``decay`` is the hot-row EMA
+    decay, used only by ``tc_cached``/``tc_streamed`` (pair with the
+    stack's promote)."""
+    return make_device_step(build_stack(cfg, system, lr=lr, decay=decay))
+
+
+class MultiTableTrainer:
+    """Lifecycle wrapper: stack construction, state init, stepping with a
+    promote cadence, flush, and coherent checkpointing — one object per
+    training run.
+
+    For ``tc_streamed`` pass ``store_path`` to ``init`` (plus any
+    ``init_streamed`` knobs at construction); stepping then goes through
+    the host driver (write-back overlap, slice ring, prefetch barrier).
+    All other systems step through the bare jitted device step."""
+
+    def __init__(
+        self,
+        cfg: DLRMConfig,
+        *,
+        system: str = "tc",
+        lr: float = 0.01,
+        decay: float = 0.98,
+        promote_every: int = 0,
+        registry=None,
+        tracer=None,
+        checkpoint_dir: Optional[str] = None,
+        keep_last: int = 3,
+        step_writer=None,
+        **streamed_kw,
+    ):
+        self.cfg = cfg
+        self.system = system
+        self.lr = lr
+        self.decay = decay
+        self.stack = build_stack(cfg, system, lr=lr, decay=decay)
+        self.promote_every = promote_every
+        self.registry = registry
+        self.tracer = tracer
+        self.step_writer = step_writer
+        self.streamed = None
+        self._streamed_kw = streamed_kw
+        if checkpoint_dir is not None:
+            from repro.checkpoint import Checkpointer
+
+            self.ckpt = Checkpointer(checkpoint_dir, keep_last=keep_last)
+        else:
+            self.ckpt = None
+        self._step_fn = None
+        self._promote_fn = None
+        self._flush_fn = None
+        self.steps_done = 0
+
+    def init(self, key, *, store_path: Optional[str] = None, **kw) -> dict:
+        if self.system == "tc_streamed":
+            if store_path is None:
+                raise ValueError("tc_streamed needs store_path= (the disk cold tier)")
+            state, self.streamed = init_streamed(
+                self.cfg, key, store_path,
+                lr=self.lr, registry=self.registry, tracer=self.tracer,
+                **dict(self._streamed_kw, **kw),
+            )
+            self._step_fn = make_streamed_train_step(
+                self.cfg, self.streamed,
+                lr=self.lr, decay=self.decay, step_writer=self.step_writer,
+            )
+            self._promote_fn = make_streamed_promote(self.streamed)
+        else:
+            state = self.stack.init_state(key, **kw)
+            device_step = make_device_step(self.stack)
+            self._step_fn = lambda st, b, *, step_index=None: device_step(st, b)
+            self._promote_fn = self.stack.make_promote()
+        self._flush_fn = self.stack.make_flush()
+        self.steps_done = 0
+        return state
+
+    def step(self, state, batch):
+        state, loss = self._step_fn(state, batch, step_index=self.steps_done)
+        self.steps_done += 1
+        if self.promote_every and self.steps_done % self.promote_every == 0:
+            state = self._promote_fn(state)
+        return state, loss
+
+    def promote(self, state):
+        return self._promote_fn(state)
+
+    def flush(self, state):
+        """Write the hot tier back so the cold tier alone is
+        checkpoint-complete (streamed: through the disk store)."""
+        if self.streamed is not None:
+            from repro.store.streamed import flush_state
+
+            return flush_state(state, self.streamed)
+        return self._flush_fn(state)
+
+    # -- checkpointing -----------------------------------------------------
+
+    def save_coherent(self, step: int, state, *, blocking: bool = False):
+        from repro.checkpoint import save_coherent
+
+        if self.ckpt is None:
+            raise ValueError("construct MultiTableTrainer with checkpoint_dir=")
+        return save_coherent(
+            self.ckpt, step, state, streamed=self.streamed, blocking=blocking
+        )
+
+    def restore_coherent(self, like, *, step: Optional[int] = None, shardings=None):
+        from repro.checkpoint import restore_coherent
+
+        if self.ckpt is None:
+            raise ValueError("construct MultiTableTrainer with checkpoint_dir=")
+        return restore_coherent(
+            self.ckpt, like, step=step, shardings=shardings, streamed=self.streamed
+        )

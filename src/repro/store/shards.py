@@ -129,7 +129,13 @@ class EmbeddingShardStore:
         """Overwrite this store's contents with another shard directory's
         (same geometry), through the open memmaps — checkpoint restore uses
         this to roll the live shard files back to a snapshot without
-        invalidating any open handles."""
+        invalidating any open handles.
+
+        Fails LOUDLY on any geometry or row-range disagreement: a snapshot
+        with fewer/shorter shards than the live store must never be copied
+        shard-by-shard (the old ``zip`` walk silently skipped the live
+        tail, leaving rows past the snapshot's coverage at their live —
+        wrong — values)."""
         src = open_store(src_path)
         try:
             if (src.num_rows, src.dim, src.shard_rows) != (
@@ -139,7 +145,22 @@ class EmbeddingShardStore:
                     f"shard geometry mismatch: snapshot ({src.num_rows}, {src.dim}, "
                     f"{src.shard_rows}) vs live ({self.num_rows}, {self.dim}, {self.shard_rows})"
                 )
-            for mm, sm in zip(self._mmaps, src._mmaps):
+            if src.num_shards != self.num_shards:
+                raise ValueError(
+                    f"shard row-range mismatch loading {src_path!r}: snapshot has "
+                    f"{src.num_shards} shard(s), live store has {self.num_shards} — "
+                    f"the snapshot does not cover rows "
+                    f"[{min(src.num_shards, self.num_shards) * self.shard_rows}, "
+                    f"{self.num_rows})"
+                )
+            for s, (mm, sm) in enumerate(zip(self._mmaps, src._mmaps)):
+                if mm.shape != sm.shape:
+                    lo = s * self.shard_rows
+                    raise ValueError(
+                        f"shard row-range mismatch loading {src_path!r}: shard {s} "
+                        f"covers [{lo}, {lo + mm.shape[0]}) live but "
+                        f"[{lo}, {lo + sm.shape[0]}) in the snapshot"
+                    )
                 mm[:] = sm[:]
         finally:
             src.close()
@@ -209,11 +230,31 @@ def create_store(
 
 
 def open_store(path: str) -> EmbeddingShardStore:
-    """Memory-map an existing shard directory for read/write."""
+    """Memory-map an existing shard directory for read/write.
+
+    Validates that the directory's shard entries tile ``[0, num_rows)``
+    contiguously — a truncated or hand-edited directory must fail here,
+    loudly naming the missing row range, not silently serve a partial
+    table."""
     with open(os.path.join(path, DIRECTORY_FILE)) as f:
         d = json.load(f)
     if d.get("version") != FORMAT_VERSION:
         raise ValueError(f"unsupported shard directory version: {d.get('version')}")
+    expect_lo = 0
+    for s in d["shards"]:
+        if s["lo"] != expect_lo or s["hi"] <= s["lo"]:
+            raise ValueError(
+                f"corrupt shard directory {path!r}: shard {s['file']!r} covers "
+                f"[{s['lo']}, {s['hi']}) but rows [{expect_lo}, ...) are expected "
+                f"next — ranges must tile [0, {d['num_rows']}) contiguously"
+            )
+        expect_lo = s["hi"]
+    if expect_lo != d["num_rows"]:
+        raise ValueError(
+            f"corrupt shard directory {path!r}: shard ranges end at row "
+            f"{expect_lo} but the table has {d['num_rows']} rows — rows "
+            f"[{expect_lo}, {d['num_rows']}) are missing"
+        )
     store = EmbeddingShardStore(
         path=path, num_rows=d["num_rows"], dim=d["dim"], shard_rows=d["shard_rows"]
     )

@@ -49,7 +49,7 @@ import jax.numpy as jnp
 
 from repro.cache.hotcache import init_hot_cache
 from repro.obs import tracing
-from repro.obs.registry import Registry, Snapshot
+from repro.obs.registry import Registry, Snapshot, _label_key, _render
 from repro.store.prefetch import ShardPrefetcher
 from repro.store.shards import EmbeddingShardStore, create_store, open_store
 from repro.store.working_set import WorkingSetManager
@@ -82,12 +82,19 @@ class StreamedTables:
         overlap_write_back: bool = False,
         registry: Optional[Registry] = None,
         tracer: Optional[tracing.Tracer] = None,
+        shard: Optional[int] = None,
     ):
         if not stores:
             raise ValueError("need at least one table store")
         if ring_depth < 0:
             raise ValueError(f"ring_depth must be >= 0, got {ring_depth}")
         self.stores = list(stores)
+        # multi-host sharding (repro.dist): when this instance is one rank
+        # of a sharded run, every instrument carries a shard label —
+        # ``name{shard=s,table=t}`` — so per-rank series stay separable in
+        # a SHARED registry while Snapshot.sum still aggregates fleet-wide.
+        self.shard = shard
+        self._labels: dict = {} if shard is None else {"shard": int(shard)}
         self.working = [WorkingSetManager(s, resident_rows) for s in self.stores]
         # telemetry surface (repro.obs): a PRIVATE registry per instance by
         # default, so repeatedly-constructed StreamedTables (tests, bench
@@ -104,8 +111,10 @@ class StreamedTables:
         # working-set / shard-store counters stay plain ints under their own
         # locks; the registry pulls them as per-table collectors at snapshot
         for t, ws in enumerate(self.working):
-            self.registry.register_collector(ws.stats.metrics, table=t)
-            self.registry.register_collector(ws.store.stats.metrics, table=t)
+            self.registry.register_collector(ws.stats.metrics, table=t, **self._labels)
+            self.registry.register_collector(
+                ws.store.stats.metrics, table=t, **self._labels
+            )
         # host mirror of the device-side slice ring (docs/store.md): one
         # entry per recent step, each a per-table array of the cold unique
         # ids that step updated. Lanes found here are served from the
@@ -122,7 +131,7 @@ class StreamedTables:
             np.zeros((0,), np.int64) for _ in self.stores
         ]
         # lanes served by the ring (skipped host gathers + saved uploads)
-        self._c_ring_hits = self.registry.counter("ring.hit_lanes")
+        self._c_ring_hits = self.registry.counter("ring.hit_lanes", **self._labels)
         # per-cast memo of the valid cold unique ids (barrier, write-back
         # enqueue and ring push all need them for the SAME cast each step)
         self._cast_ids_memo: tuple = (None, None)
@@ -167,19 +176,19 @@ class StreamedTables:
         # lock-free too), while the critical path pays only
         # wb.gate_wait_seconds — the time the main thread spent blocked on
         # the barrier or on a free buffer slot.
-        self._c_gather_s = self.registry.counter("st.gather_seconds")
+        self._c_gather_s = self.registry.counter("st.gather_seconds", **self._labels)
         # total commit time, sync + background
-        self._c_wb_commit_s = self.registry.counter("wb.commit_seconds")
+        self._c_wb_commit_s = self.registry.counter("wb.commit_seconds", **self._labels)
         # the subset spent on the caller thread
-        self._c_wb_sync_s = self.registry.counter("wb.sync_commit_seconds")
-        self._c_wb_wait_s = self.registry.counter("wb.gate_wait_seconds")
-        self._c_steps = self.registry.counter("st.steps_total")
-        self._h_gather_ms = self.registry.histogram("st.gather_ms")
+        self._c_wb_sync_s = self.registry.counter("wb.sync_commit_seconds", **self._labels)
+        self._c_wb_wait_s = self.registry.counter("wb.gate_wait_seconds", **self._labels)
+        self._c_steps = self.registry.counter("st.steps_total", **self._labels)
+        self._h_gather_ms = self.registry.histogram("st.gather_ms", **self._labels)
         # modeled PCIe traffic (benchmarks/common.py unit costs): bytes the
         # per-step cold slice actually uploads vs bytes the device slice
         # ring saved by serving lanes on device
-        self._c_pcie_up = self.registry.counter("pcie.uploaded_bytes")
-        self._c_pcie_saved = self.registry.counter("pcie.ring_saved_bytes")
+        self._c_pcie_up = self.registry.counter("pcie.uploaded_bytes", **self._labels)
+        self._c_pcie_saved = self.registry.counter("pcie.ring_saved_bytes", **self._labels)
         # windowed-stats baseline (stats_window); None = since construction
         self._window_base: Optional[Snapshot] = None
 
@@ -199,6 +208,7 @@ class StreamedTables:
         overlap_write_back: bool = False,
         registry: Optional[Registry] = None,
         tracer: Optional[tracing.Tracer] = None,
+        shard: Optional[int] = None,
     ) -> "StreamedTables":
         """Write (T, V, D) float32 tables (+ optional (T, V) / (T, V, 1)
         accumulators) into per-table shard directories under ``path``."""
@@ -216,7 +226,7 @@ class StreamedTables:
         return cls(
             stores, resident_rows=resident_rows, prefetch=prefetch,
             ring_depth=ring_depth, overlap_write_back=overlap_write_back,
-            registry=registry, tracer=tracer,
+            registry=registry, tracer=tracer, shard=shard,
         )
 
     @classmethod
@@ -231,12 +241,13 @@ class StreamedTables:
         overlap_write_back: bool = False,
         registry: Optional[Registry] = None,
         tracer: Optional[tracing.Tracer] = None,
+        shard: Optional[int] = None,
     ) -> "StreamedTables":
         stores = [open_store(_table_dir(path, t)) for t in range(num_tables)]
         return cls(
             stores, resident_rows=resident_rows, prefetch=prefetch,
             ring_depth=ring_depth, overlap_write_back=overlap_write_back,
-            registry=registry, tracer=tracer,
+            registry=registry, tracer=tracer, shard=shard,
         )
 
     @property
@@ -628,18 +639,29 @@ class StreamedTables:
             self.drain_write_back()
         return self.registry.snapshot()
 
+    def _key(self, name: str, **extra) -> str:
+        """Render this instance's snapshot key for ``name`` (instance labels
+        — the shard, when set — merged with ``extra``)."""
+        return _render(name, _label_key({**self._labels, **extra}))
+
+    def _sum_tables(self, snap: Snapshot, name: str) -> float:
+        """Sum a per-table instrument across THIS instance's tables only
+        (``Snapshot.sum`` would also fold in other shards sharing the
+        registry)."""
+        return sum(snap.get(self._key(name, table=t)) for t in range(self.num_tables))
+
     def _derive(self, snap: Snapshot) -> dict:
         """The legacy aggregate stats dict, computed from a registry
         snapshot (cumulative) or snapshot delta (windowed). All ratios are
         zero-guarded: a zero-step window yields 0.0 defaults, never NaN
         and never a ZeroDivisionError."""
-        covered = snap.sum("ws.covered_rows")
-        cold = covered + snap.sum("ws.sync_fault_rows")
-        gather_s = snap.get("st.gather_seconds")
-        wb_sync_s = snap.get("wb.sync_commit_seconds")
-        wb_wait_s = snap.get("wb.gate_wait_seconds")
-        steps = snap.get("st.steps_total")
-        ring_hits = snap.get("ring.hit_lanes")
+        covered = self._sum_tables(snap, "ws.covered_rows")
+        cold = covered + self._sum_tables(snap, "ws.sync_fault_rows")
+        gather_s = snap.get(self._key("st.gather_seconds"))
+        wb_sync_s = snap.get(self._key("wb.sync_commit_seconds"))
+        wb_wait_s = snap.get(self._key("wb.gate_wait_seconds"))
+        steps = snap.get(self._key("st.steps_total"))
+        ring_hits = snap.get(self._key("ring.hit_lanes"))
         # host CPU on the step CRITICAL PATH: gather + barrier/slot waits +
         # only the commit time that actually ran on the caller thread
         # (host_wb_sync_s); background commits stay visible separately in
@@ -648,15 +670,15 @@ class StreamedTables:
         return {
             "cold_reads": int(cold),
             "prefetch_coverage": covered / cold if cold else 0.0,
-            "sync_faults": int(snap.sum("ws.sync_fault_rows")),
-            "evictions": int(snap.sum("ws.evicted_rows")),
-            "bytes_read": int(snap.sum("store.read_bytes")),
-            "bytes_written": int(snap.sum("store.write_bytes")),
+            "sync_faults": int(self._sum_tables(snap, "ws.sync_fault_rows")),
+            "evictions": int(self._sum_tables(snap, "ws.evicted_rows")),
+            "bytes_read": int(self._sum_tables(snap, "store.read_bytes")),
+            "bytes_written": int(self._sum_tables(snap, "store.write_bytes")),
             "scheduled_rows": int(snap.sum("prefetch.scheduled_rows")),
             # host CPU spent in the working-set gather/write-back path, per
             # step (prefetch wait excluded) — the open-addressing speedup
             "host_gather_s": gather_s,
-            "host_write_back_s": snap.get("wb.commit_seconds"),
+            "host_write_back_s": snap.get(self._key("wb.commit_seconds")),
             "host_wb_sync_s": wb_sync_s,
             "host_wb_wait_s": wb_wait_s,
             "write_back_overlapped": self.overlap_write_back and wb_sync_s == 0.0,
@@ -669,8 +691,8 @@ class StreamedTables:
                 ring_hits / (ring_hits + cold) if (ring_hits + cold) else 0.0
             ),
             # modeled PCIe slice traffic (lane bytes = (D + 1) * 4)
-            "pcie_uploaded_bytes": int(snap.get("pcie.uploaded_bytes")),
-            "pcie_ring_saved_bytes": int(snap.get("pcie.ring_saved_bytes")),
+            "pcie_uploaded_bytes": int(snap.get(self._key("pcie.uploaded_bytes"))),
+            "pcie_ring_saved_bytes": int(snap.get(self._key("pcie.ring_saved_bytes"))),
         }
 
     def stats(self) -> dict:
@@ -707,7 +729,7 @@ class StreamedTables:
         per_table = []
         for t in range(self.num_tables):
             ws = {
-                f: int(d.get(f"{name}{{table={t}}}"))
+                f: int(d.get(self._key(name, table=t)))
                 for f, name in type(self.working[t].stats).METRIC_NAMES.items()
             }
             ws["cold_reads"] = ws["covered_reads"] + ws["sync_faults"]
@@ -715,7 +737,7 @@ class StreamedTables:
                 ws["covered_reads"] / ws["cold_reads"] if ws["cold_reads"] else 1.0
             )
             ws["store"] = {
-                f: int(d.get(f"{name}{{table={t}}}"))
+                f: int(d.get(self._key(name, table=t)))
                 for f, name in type(self.stores[t].stats).METRIC_NAMES.items()
             }
             per_table.append(ws)

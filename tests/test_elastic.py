@@ -65,3 +65,93 @@ def test_cross_mesh_restore_subprocess():
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert rec["ok_step"] and rec["leaves_match"] and rec["resharded"], rec
+
+
+_SUBPROC_SHARDED = textwrap.dedent(
+    """
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax
+    from repro.checkpoint import Checkpointer
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+    from repro.dist import sparse as dsp
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = DLRMConfig(
+        name="elastic-sharded", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=96, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=2, rows_per_table=96, gathers_per_table=4, batch=8,
+        s=1.05, seed=1,
+    )
+    cs = CastingServer(rows_per_table=96, with_counts=True, with_lookup_seg=True)
+    batches = [cs(stream.batch_at(i)) for i in range(12)]
+    d = tempfile.mkdtemp()
+    ckpt = Checkpointer(os.path.join(d, "ckpt"))
+
+    # "job A": 2 shards; coherent save at step 8, keep training to 12
+    mesh2 = make_host_mesh((2,), ("model",))
+    state, sh2 = dsp.init_sharded(
+        cfg, jax.random.key(0), os.path.join(d, "store2"), num_shards=2,
+        capacity=8, resident_rows=12,
+    )
+    step2 = dsp.make_sharded_train_step(cfg, sh2, mesh2)
+    prom2 = dsp.make_sharded_promote(sh2)
+    with sh2:
+        for i in range(8):
+            state, _ = step2(state, batches[i])
+            if i % 3 == 2:
+                state = prom2(state)
+        state = dsp.save_coherent(ckpt, 8, state, sharded=sh2)
+        ref_losses = []
+        for i in range(8, 12):
+            state, l = step2(state, batches[i])
+            ref_losses.append(float(l))
+        state = sh2.flush_state(state)
+        rows2, accs2 = sh2.read_all()
+
+    # "job B": restart on 4 shards — DIFFERENT init key, the restore must
+    # overwrite every rank's store through the elastic range walk
+    mesh4 = make_host_mesh((4,), ("model",))
+    like, sh4 = dsp.init_sharded(
+        cfg, jax.random.key(1), os.path.join(d, "store4"), num_shards=4,
+        capacity=8, resident_rows=6,
+    )
+    step4 = dsp.make_sharded_train_step(cfg, sh4, mesh4)
+    with sh4:
+        step, state4 = dsp.restore_coherent(ckpt, like, sharded=sh4)
+        losses4 = []
+        for i in range(8, 12):
+            state4, l = step4(state4, batches[i])
+            losses4.append(float(l))
+        state4 = sh4.flush_state(state4)
+        rows4, accs4 = sh4.read_all()
+
+    print(json.dumps({
+        "ok_step": step == 8,
+        "losses_exact": losses4 == ref_losses,
+        "store_equal": bool(
+            np.array_equal(rows2, rows4) and np.array_equal(accs2, accs4)
+        ),
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_elastic_sharded_restore_2_to_4_shards_subprocess():
+    """A coherent checkpoint taken on 2 shards restores step-N-exact onto a
+    4-shard layout: replayed steps 8..12 produce bit-equal losses and the
+    final flushed stores match the uninterrupted 2-shard run bitwise."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC_SHARDED],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok_step"] and rec["losses_exact"] and rec["store_equal"], rec

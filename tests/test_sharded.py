@@ -1,0 +1,352 @@
+"""Sharded streamed training (repro.dist.sparse): shard-local tier stacks
+over the model axis.
+
+Acceptance contract: sharded ``tc_streamed`` on a simulated multi-device
+mesh is BIT-identical to the single-host system (and therefore to ``tc``)
+— checked in-process at S=1 on the real device, and at S=2/S=4 in
+subprocesses that fake an 8-device host platform. Host-side geometry
+(row ranges, cast projection), the shared-registry shard labels, the
+modeled all-to-all gauge, and the loud row-range validation on elastic
+restore are covered without a mesh."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.data.pipeline import CastingServer
+from repro.data.synth import DLRMStream
+from repro.dist import sparse as dsp
+from repro.launch.mesh import make_host_mesh
+from repro.obs.registry import Registry
+from repro.runtime import dlrm_train
+from repro.store import StreamedTables
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(rows=64, tables=2, pooling=4):
+    return DLRMConfig(
+        name="sharded-test", num_tables=tables, gathers_per_table=pooling,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=rows, emb_dim=8,
+    )
+
+
+def _batches(cfg, steps, *, batch=4, s=1.05, seed=1):
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=batch, s=s, seed=seed,
+    )
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    return [cs(stream.batch_at(i)) for i in range(steps)]
+
+
+# ---------------------------------------------------------------------------
+# geometry: ranges + cast projection (no mesh, no device step)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_ranges_tile_and_owner_formula():
+    for V, S in ((96, 4), (10, 4), (7, 1), (5, 5)):
+        ranges = dsp.shard_ranges(V, S)
+        assert len(ranges) == S
+        assert ranges[0][0] == 0 and ranges[-1][1] == V
+        for (_, hi), (lo2, _) in zip(ranges, ranges[1:]):
+            assert hi == lo2
+        # the one-divide owner formula agrees with the range walk
+        W = -(-V // S)
+        for rid in range(V):
+            owner = min(rid // W, S - 1)
+            lo, hi = ranges[owner]
+            assert lo <= rid < hi
+    with pytest.raises(ValueError):
+        dsp.shard_ranges(4, 5)
+
+
+def _mk_sharded(tmp_path, *, V=24, T=2, D=4, S=3, registry=None):
+    rng = np.random.default_rng(0)
+    tables = rng.normal(size=(T, V, D)).astype(np.float32)
+    sharded = dsp.ShardedStreamedTables.create(
+        str(tmp_path / "store"), tables,
+        num_shards=S, resident_rows=8, registry=registry,
+    )
+    return tables, sharded
+
+
+def test_local_casts_project_owned_spans(tmp_path):
+    """Each shard's local cast is the owned contiguous span of the global
+    ascending uniques, rebased to local ids and packed from lane 0 with a
+    local-sentinel tail; lane_start/lane_count reproduce the span."""
+    tables, sharded = _mk_sharded(tmp_path, V=24, S=3)  # ranges [0,8) [8,16) [16,24)
+    with sharded:
+        n = 6
+        cast = {
+            "unique_ids": np.array(
+                [[1, 7, 8, 15, 23, 24], [16, 17, 18, 24, 24, 24]], np.int32
+            ),
+            "num_unique": np.array([5, 3], np.int32),
+        }
+        locals_, lane_start, lane_count = sharded.local_casts(cast)
+        np.testing.assert_array_equal(lane_start, [[0, 0], [2, 0], [4, 0]])
+        np.testing.assert_array_equal(lane_count, [[2, 0], [2, 0], [1, 3]])
+        # shard 0 (rows [0,8)): owns global 1, 7 -> local 1, 7; sentinel 8
+        np.testing.assert_array_equal(
+            locals_[0]["unique_ids"][0], [1, 7, 8, 8, 8, 8]
+        )
+        np.testing.assert_array_equal(locals_[0]["num_unique"], [2, 0])
+        # shard 2 (rows [16,24)): table 1 owns all three -> local 0,1,2
+        np.testing.assert_array_equal(
+            locals_[2]["unique_ids"][1], [0, 1, 2, 8, 8, 8]
+        )
+        np.testing.assert_array_equal(locals_[2]["num_unique"], [1, 3])
+        # gather returns owned lanes only, each from the rank's local slice
+        rows, accums = sharded.gather(locals_)
+        assert rows.shape == (3, 2, n, 4) and accums.shape == (3, 2, n, 1)
+        np.testing.assert_array_equal(rows[1, 0, 0], tables[0, 8])
+        np.testing.assert_array_equal(rows[1, 0, 1], tables[0, 15])
+        assert (rows[1, 0, 2:] == 0).all()  # unowned lanes stay zero
+
+
+def test_shard_labels_and_snapshot_sum_aggregate(tmp_path):
+    """One shared registry, S ranks: every store instrument carries its
+    ``shard`` label so per-rank series stay separable, while Snapshot.sum
+    folds them fleet-wide; the modeled all-to-all gauge follows
+    valid_lanes * (S-1) * D * 4."""
+    reg = Registry()
+    tables, sharded = _mk_sharded(tmp_path, V=24, S=3, registry=reg)
+    with sharded:
+        cast = {
+            "unique_ids": np.array([[1, 8, 16, 24], [2, 9, 17, 24]], np.int32),
+            "num_unique": np.array([3, 3], np.int32),
+        }
+        locals_, _, _ = sharded.local_casts(cast)
+        sharded.gather(locals_)
+        sharded.record_alltoall(cast)
+        snap = reg.snapshot()
+        per_shard = [
+            snap.get(f"store.read_bytes{{shard={s},table=0}}") for s in range(3)
+        ]
+        assert all(v > 0 for v in per_shard)  # each rank read its own lane
+        # cross-shard aggregation: the fleet total is the label-set sum
+        assert snap.sum("store.read_bytes") == sum(
+            snap.get(f"store.read_bytes{{shard={s},table={t}}}")
+            for s in range(3)
+            for t in range(2)
+        )
+        assert snap.get("dist.alltoall_bytes") == 6 * 2 * 4 * 4
+        # per-rank stats() stay exact under the shared registry
+        assert sharded.stats()["per_shard"][0]["bytes_read"] == sum(
+            snap.get(f"store.read_bytes{{shard=0,table={t}}}") for t in range(2)
+        )
+
+
+# ---------------------------------------------------------------------------
+# elastic restore validation: loud failure on range disagreement
+# ---------------------------------------------------------------------------
+
+
+def test_restore_shards_rejects_mismatched_geometry(tmp_path):
+    _, sharded = _mk_sharded(tmp_path, V=24, S=2)
+    rng = np.random.default_rng(1)
+    other = dsp.ShardedStreamedTables.create(
+        str(tmp_path / "other"),
+        rng.normal(size=(2, 16, 4)).astype(np.float32),  # 16 != 24 rows
+        num_shards=2, resident_rows=8,
+    )
+    other.close()
+    with sharded:
+        with pytest.raises(ValueError, match=r"16 row\(s\).*24"):
+            sharded.restore_shards(str(tmp_path / "other"))
+
+
+def test_restore_shards_rejects_non_tiling_ranges(tmp_path):
+    """A snapshot whose layout.json ranges do not tile [0, V) — e.g. a
+    truncated copy that lost a rank — must fail loudly naming the missing
+    row range, never silently restore a partial table."""
+    _, src = _mk_sharded(tmp_path, V=24, S=3)
+    src.close()
+    lp = str(tmp_path / "store" / "layout.json")
+    with open(lp) as f:
+        layout = json.load(f)
+    layout["ranges"] = layout["ranges"][:-1]  # drop rows [16, 24)
+    with open(lp, "w") as f:
+        json.dump(layout, f)
+    _, live = _mk_sharded(tmp_path / "live", V=24, S=2)
+    with live:
+        with pytest.raises(ValueError, match=r"ends at row 16.*\[16, 24\)"):
+            live.restore_shards(str(tmp_path / "store"))
+
+
+def test_restore_shards_from_single_host_snapshot(tmp_path):
+    """A plain StreamedTables store (no layout.json: one implicit range
+    [0, V)) restores onto any shard count — single-host checkpoints stay
+    adoptable after scaling out."""
+    rng = np.random.default_rng(2)
+    T, V, D = 2, 24, 4
+    tables = rng.normal(size=(T, V, D)).astype(np.float32)
+    accums = rng.random(size=(T, V, 1)).astype(np.float32)
+    single = StreamedTables.create(
+        str(tmp_path / "single"), tables, accums, resident_rows=8, prefetch=False
+    )
+    single.close()
+    _, live = _mk_sharded(tmp_path / "live", V=V, T=T, D=D, S=3)
+    with live:
+        live.restore_shards(str(tmp_path / "single"))
+        rows, accs = live.read_all()
+        np.testing.assert_array_equal(rows, tables)
+        np.testing.assert_array_equal(accs, accums)
+
+
+# ---------------------------------------------------------------------------
+# e2e bit-identity: S=1 in-process on the real device
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_s1_bit_identical_to_tc(tmp_path):
+    """The whole sharded machinery at S=1 (shard_map on the single real
+    device): losses bit-equal to the flat tc system over 8 steps with a
+    promotion, and the flushed store equals the tc tables bitwise."""
+    cfg = _cfg()
+    batches = _batches(cfg, 8)
+    s_tc = dlrm_train.init_state(cfg, jax.random.key(0))
+    step_tc = dlrm_train.make_sparse_train_step(cfg, system="tc")
+    tc_losses = []
+    for b in batches:
+        s_tc, l = step_tc(s_tc, jax.tree_util.tree_map(jnp.asarray, b))
+        tc_losses.append(float(l))
+
+    mesh = make_host_mesh((1,), ("model",))
+    state, sharded = dsp.init_sharded(
+        cfg, jax.random.key(0), str(tmp_path / "store"), num_shards=1,
+        capacity=8, resident_rows=16,
+    )
+    step_sh = dsp.make_sharded_train_step(cfg, sharded, mesh)
+    promote = dsp.make_sharded_promote(sharded)
+    with sharded:
+        for i, b in enumerate(batches):
+            state, l = step_sh(state, b)
+            assert tc_losses[i] == float(l), f"loss diverged at step {i}"
+            if i == 4:
+                state = promote(state)
+        state = sharded.flush_state(state)
+        rows, accs = sharded.read_all()
+        V = cfg.rows_per_table
+        np.testing.assert_array_equal(rows, np.asarray(s_tc["tables"])[:, :V])
+        np.testing.assert_array_equal(accs, np.asarray(s_tc["accums"])[:, :V])
+        # S=1: no peers to exchange with
+        assert sharded.stats()["alltoall_bytes"] == 0.0
+
+
+def test_mesh_size_must_match_shard_count(tmp_path):
+    cfg = _cfg()
+    mesh = make_host_mesh((1,), ("model",))
+    _, sharded = _mk_sharded(tmp_path, V=cfg.rows_per_table, S=2)
+    with sharded:
+        with pytest.raises(ValueError, match="sharded 2-way"):
+            dsp.make_sharded_train_step(cfg, sharded, mesh)
+
+
+# ---------------------------------------------------------------------------
+# e2e bit-identity: S=2 / S=4 on a simulated 8-device host platform
+# ---------------------------------------------------------------------------
+
+_SUBPROC = textwrap.dedent(
+    """
+    import os, sys, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    S = int(sys.argv[1])
+    import json
+    import numpy as np, jax
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+    from repro.dist import sparse as dsp
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import dlrm_train
+    from repro.store import flush_state
+
+    cfg = DLRMConfig(
+        name="sharded-sub", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=96, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=2, rows_per_table=96, gathers_per_table=4, batch=8,
+        s=1.05, seed=1,
+    )
+    cs = CastingServer(rows_per_table=96, with_counts=True, with_lookup_seg=True)
+    batches = [cs(stream.batch_at(i)) for i in range(16)]
+    d = tempfile.mkdtemp()
+
+    # single-host tc_streamed reference over >= 16 steps with promotion churn
+    state1, streamed1 = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), os.path.join(d, "single"),
+        capacity=8, resident_rows=24, prefetch=False,
+    )
+    step1 = dlrm_train.make_streamed_train_step(cfg, streamed1)
+    prom1 = dlrm_train.make_streamed_promote(streamed1)
+    ref_losses = []
+    with streamed1:
+        for i, b in enumerate(batches):
+            state1, l = step1(state1, b)
+            ref_losses.append(float(l))
+            if i % 5 == 4:
+                state1 = prom1(state1)
+        state1 = flush_state(state1, streamed1)
+        ref = [streamed1.stores[t].read_all() for t in range(2)]
+
+    mesh = make_host_mesh((S,), ("model",))
+    state, sharded = dsp.init_sharded(
+        cfg, jax.random.key(0), os.path.join(d, "sharded"), num_shards=S,
+        capacity=8, resident_rows=24 // S,
+    )
+    step_sh = dsp.make_sharded_train_step(cfg, sharded, mesh)
+    promote = dsp.make_sharded_promote(sharded)
+    with sharded:
+        losses = []
+        for i, b in enumerate(batches):
+            state, l = step_sh(state, b)
+            losses.append(float(l))
+            if i % 5 == 4:
+                state = promote(state)
+        state = sharded.flush_state(state)
+        rows, accs = sharded.read_all()
+        store_equal = all(
+            np.array_equal(rows[t], ref[t][0]) and np.array_equal(accs[t], ref[t][1])
+            for t in range(2)
+        )
+        a2a = sharded.stats()["alltoall_bytes"]
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "losses_equal": losses == ref_losses,
+        "store_equal": bool(store_equal),
+        "alltoall_positive": a2a > 0,
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_sharded_bit_identity_simulated_mesh_subprocess(num_shards):
+    """Sharded tc_streamed on a simulated multi-device mesh: 16 steps with
+    promotion churn, per-step losses bit-equal to single-host tc_streamed,
+    flushed shard stores bitwise equal to the single-host store, and the
+    modeled all-to-all gauge engaged."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC, str(num_shards)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 8, rec
+    assert rec["losses_equal"] and rec["store_equal"] and rec["alltoall_positive"], rec

@@ -61,6 +61,49 @@ def test_shard_store_rejects_bad_input(tmp_path, rng):
         store.read_rows(np.asarray([-1]))
 
 
+def test_truncated_shard_directory_fails_loudly(tmp_path, rng):
+    """Regression: a shard directory whose entries no longer tile
+    [0, num_rows) — e.g. a truncated snapshot copy — must raise a clear
+    error naming the missing row range at open time, and ``load_from`` must
+    refuse a snapshot with fewer shards than the live store instead of
+    silently leaving the uncovered tail at its live (wrong) values."""
+    import json
+    import os
+
+    rows = rng.normal(size=(40, 4)).astype(np.float32)
+    create_store(str(tmp_path / "t"), rows, num_shards=4).close()  # 10 rows/shard
+
+    # truncate: drop the last shard entry from the directory
+    dpath = str(tmp_path / "t" / "directory.json")
+    with open(dpath) as f:
+        d = json.load(f)
+    full = d["shards"]
+    d["shards"] = full[:-1]
+    with open(dpath, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(ValueError, match=r"end at row 30.*\[30, 40\) are missing"):
+        open_store(str(tmp_path / "t"))
+
+    # a gap in the middle names the expected next row
+    d["shards"] = [full[0], full[2], full[3]]
+    with open(dpath, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(ValueError, match=r"covers \[20, 30\) but rows \[10, "):
+        open_store(str(tmp_path / "t"))
+
+    # restore the directory; load_from must reject a shorter snapshot
+    # (30 rows vs 40: caught by the geometry check before any copy)
+    d["shards"] = full
+    with open(dpath, "w") as f:
+        json.dump(d, f)
+    snap = create_store(str(tmp_path / "snap"), rows[:30].copy(), num_shards=3)
+    snap.close()
+    live = open_store(str(tmp_path / "t"))
+    with pytest.raises(ValueError, match=r"geometry mismatch.*\(30, 4, 10\)"):
+        live.load_from(str(tmp_path / "snap"))
+    live.close()
+
+
 # ---------------------------------------------------------------------------
 # working set
 # ---------------------------------------------------------------------------
