@@ -23,7 +23,7 @@ import json
 from collections import defaultdict
 
 from repro.obs import read_step_metrics
-from repro.obs.tracing import overlap_us
+from repro.obs.anatomy import format_budget, step_budget, wb_commit_overlap_us
 
 
 def summarize_steps(records: list[dict]) -> dict:
@@ -55,8 +55,10 @@ def summarize_steps(records: list[dict]) -> dict:
 
 
 def summarize_trace(doc: dict) -> dict:
-    """Per-span totals + the wb.commit / step.streamed cross-thread
-    overlap from a Chrome-trace document."""
+    """Per-span totals + the per-step time budget (``obs.anatomy``) from
+    a Chrome-trace document. The overlap math lives in the library now —
+    ``wb_commit_overlap_us`` here IS ``anatomy.wb_commit_overlap_us``,
+    so the CLI report and in-process consumers agree by construction."""
     evs = [e for e in doc.get("traceEvents", []) if e.get("ph") == "X"]
     tnames = {
         e["tid"]: e["args"]["name"]
@@ -69,13 +71,7 @@ def summarize_trace(doc: dict) -> dict:
         s["count"] += 1
         s["total_us"] += float(e["dur"])
         s["threads"].add(tnames.get(e["tid"], str(e["tid"])))
-    steps = [e for e in evs if e["name"] == "step.streamed"]
-    step_tids = {e["tid"] for e in steps}
-    commit_overlap = sum(
-        max((overlap_us(c, s) for s in steps), default=0.0)
-        for c in evs
-        if c["name"] == "wb.commit" and c["tid"] not in step_tids
-    )
+    budget = step_budget(doc)
     return {
         "spans": {
             name: {
@@ -86,7 +82,8 @@ def summarize_trace(doc: dict) -> dict:
             }
             for name, s in sorted(spans.items())
         },
-        "wb_commit_overlap_us": commit_overlap,
+        "budget": budget,
+        "wb_commit_overlap_us": wb_commit_overlap_us(evs),
     }
 
 
@@ -119,6 +116,7 @@ def main() -> None:
                 f"  {name:18s} {sp['total_us']:12.1f} {sp['count']:6d}  "
                 f"{','.join(sp['threads'])}"
             )
+        print(format_budget(t["budget"]))
         print(f"wb.commit overlap with step.streamed: {t['wb_commit_overlap_us']:.1f} us")
 
 

@@ -90,7 +90,22 @@ def main() -> None:
         from benchmarks.check import check_dir
 
         fresh_dir = os.environ.get("BENCH_OUT_DIR", ".")
-        if check_dir(fresh_dir, args.baseline_dir):
+        failures = check_dir(fresh_dir, args.baseline_dir)
+        # the store bench stream is stationary, so its HealthMonitor must
+        # stay silent — any alert in the log is a detector or tier-stack
+        # regression (belt-and-suspenders with the alerts_total baseline)
+        alerts_path = os.path.join(fresh_dir, "store_alerts.jsonl")
+        if "store" in want and os.path.exists(alerts_path):
+            from repro.obs import iter_step_metrics
+
+            alerts = list(iter_step_metrics(alerts_path))
+            if alerts:
+                print(f"check: {len(alerts)} monitor alert(s) on the "
+                      f"stationary store bench:", file=sys.stderr)
+                for a in alerts:
+                    print(f"  {a}", file=sys.stderr)
+                failures += len(alerts)
+        if failures:
             sys.exit(1)
 
 

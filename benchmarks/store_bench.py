@@ -53,7 +53,7 @@ from benchmarks.common import emit, write_json
 from repro.configs.base import DLRMConfig
 from repro.data.pipeline import CastingServer, Prefetcher
 from repro.data.synth import DLRMStream
-from repro.obs import StepMetricsWriter, Tracer
+from repro.obs import HealthMonitor, MetricsServer, StepMetricsWriter, Tracer
 from repro.obs.registry import Registry
 from repro.runtime import dlrm_train
 
@@ -84,11 +84,16 @@ def bench_config(rows: int, pooling: int, emb_dim: int) -> DLRMConfig:
 def _run_streamed(
     cfg, *, alpha, batch, steps, capacity, resident_rows, promote_every,
     warmup_frac=0.25, ring_depth=2, overlap_write_back=True,
-    steps_jsonl=None, trace_path=None,
+    steps_jsonl=None, trace_path=None, monitor=None, metrics_prom=None,
 ):
     """One tc_streamed episode. ``steps_jsonl``/``trace_path`` opt into the
     obs artifacts (per-step JSONL + Chrome trace) for this run — the CI
-    quick lane uploads both alongside BENCH_store.json."""
+    quick lane uploads both alongside BENCH_store.json. ``monitor`` binds a
+    ``HealthMonitor`` to the run's registry (the bench stream is
+    stationary, so any alert is a regression — asserted by run.py --check
+    via the alerts_total baseline); ``metrics_prom`` live-scrapes the
+    run's own ``/metrics`` endpoint mid-run and saves the OpenMetrics
+    text as an artifact."""
     stream = DLRMStream(
         num_tables=1, rows_per_table=cfg.rows_per_table,
         gathers_per_table=cfg.gathers_per_table, batch=batch, s=float(alpha), seed=0,
@@ -106,6 +111,11 @@ def _run_streamed(
         )
         if tracer is not None:
             tracer.start()
+        if monitor is not None:
+            monitor.bind(streamed.registry)
+        server = MetricsServer(streamed.registry) if metrics_prom else None
+        if server is not None:
+            server.start()
         step_fn = dlrm_train.make_streamed_train_step(
             cfg, streamed, step_writer=writer
         )
@@ -126,7 +136,23 @@ def _run_streamed(
                     hits.append(float(state["hit_rate"]))
                 if promote_every > 0 and k % promote_every == promote_every - 1:
                     state = promote(state)
+                # the hot tier is empty until the first promotion, so the
+                # monitor watches the steady state only — otherwise the
+                # cold-start 0 -> hit_rate jump IS a (correct) band alert
+                if monitor is not None and k >= promote_every and monitor.due(k):
+                    monitor.observe(k, metrics={"hit_rate": float(state["hit_rate"])})
+                if server is not None and k == steps - 1:
+                    # scrape our own live endpoint: the artifact proves the
+                    # exposition renders mid-run, writers still going
+                    import urllib.request
+
+                    with urllib.request.urlopen(server.url + "/metrics", timeout=10) as r:
+                        text = r.read().decode("utf-8")
+                    with open(metrics_prom, "w") as f:
+                        f.write(text)
             stats = streamed.stats()
+        if server is not None:
+            server.close()
         if writer is not None:
             writer.close()
         if tracer is not None:
@@ -237,25 +263,52 @@ def run(
     # obs artifacts ride the FIRST production run (one JSONL + one trace is
     # enough for the timeline; every run's counters land in the stats)
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
     obs_paths = {
         "steps_jsonl": os.path.join(out_dir, "store_steps.jsonl"),
         "trace": os.path.join(out_dir, "store_trace.json"),
+        "alerts_jsonl": os.path.join(out_dir, "store_alerts.jsonl"),
+        "metrics_prom": os.path.join(out_dir, "store_metrics.prom"),
     }
     first_run = True
     host_us_first = 0.0
+    monitor_summary = {}
     for alpha in alphas:
         per_budget = {}
         for frac in budget_fracs:
             resident = max(1, rows // frac)
+            monitor = None
+            if first_run:
+                monitor = HealthMonitor(
+                    every=max(1, promote_every // 4), warmup_windows=4,
+                    alert_log=obs_paths["alerts_jsonl"],
+                )
             # production config: double-buffered write-back + slice ring
             med_us, hot_hit, stats = _run_streamed(
                 cfg, alpha=alpha, batch=batch, steps=steps,
                 capacity=capacity, resident_rows=resident, promote_every=promote_every,
                 steps_jsonl=obs_paths["steps_jsonl"] if first_run else None,
                 trace_path=obs_paths["trace"] if first_run else None,
+                monitor=monitor,
+                metrics_prom=obs_paths["metrics_prom"] if first_run else None,
             )
             if first_run:
                 host_us_first = stats["host_us_per_step"]
+                monitor.close()
+                # the bench stream is stationary: any alert is a detector
+                # (or stack) regression. alerts_total rides the baseline so
+                # run.py --check trips on nonzero.
+                monitor_summary = {
+                    "alerts_total": len(monitor.alerts),
+                    "windows_observed": sum(
+                        1 for k in range(promote_every, steps) if monitor.due(k)
+                    ),
+                }
+                emit(
+                    "store/monitor", 0.0,
+                    f"alerts={len(monitor.alerts)};"
+                    f"windows={monitor_summary['windows_observed']}",
+                )
                 first_run = False
             # comparison point: synchronous commit, no ring (the PR 3/4 path)
             med_us_sync, _, stats_sync = _run_streamed(
@@ -319,6 +372,7 @@ def run(
         "alphas": results,
         "sharding": sharding,
         "obs_overhead": obs_overhead,
+        "monitor": monitor_summary,
         # basenames, not paths: the artifact dir is runner-dependent
         "obs_artifacts": {k: os.path.basename(p) for k, p in obs_paths.items()},
     })

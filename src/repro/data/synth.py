@@ -88,6 +88,104 @@ class DLRMStream:
         }
 
 
+@dataclass
+class DriftingDLRMStream:
+    """Non-stationary DLRM stream: the first scenario of the ROADMAP's
+    traffic suite (daily cycles, head churn — the Cross-Stack Workload
+    Characterization access patterns).
+
+    Two mechanisms compose, both deterministic in (seed, step):
+
+      * **time-varying zipf exponent** — ``s(step) = s_base +
+        s_amplitude * sin(2*pi*step / s_period)``: the *sharpness* of the
+        head breathes like a daily cycle. Probabilities are recomputed
+        per step from a cache keyed on the rounded exponent (the pmf is
+        O(rows), cheap at synthetic scales).
+      * **head churn at ``break_step``** — at the break, a fraction
+        ``churn_frac`` of the hottest ``head_size`` ranks swaps identity
+        with tail ids drawn by a seed-deterministic permutation: the
+        *which rows are hot* changes while the marginal skew stays the
+        same. This is the distribution break the drift detector
+        (``obs.monitor``) must catch: the hot tier's cached rows go cold
+        in one step, so the hit rate drops until promotion re-learns the
+        head.
+
+    ``break_step=None`` (or ``churn_frac=0``) disables the churn;
+    ``s_amplitude=0`` freezes the exponent — with both off this is
+    exactly ``DLRMStream`` (asserted in tests).
+    """
+
+    num_tables: int
+    rows_per_table: int
+    gathers_per_table: int
+    batch: int
+    dense_features: int = 13
+    s_base: float = 1.05
+    s_amplitude: float = 0.0
+    s_period: int = 256
+    break_step: int | None = None
+    head_size: int = 64
+    churn_frac: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._n = min(self.rows_per_table, 1 << 18)
+        self._pmf_cache: dict[float, np.ndarray] = {}
+        # rank -> id map before/after the churn break. Identity until the
+        # break; after it, the churned head ranks point at far-tail ids
+        # (previously ~never-sampled rows: maximally cold for the caches).
+        self._ident = np.arange(self._n)
+        self._churned = self._ident.copy()
+        if self.break_step is not None and self.churn_frac > 0:
+            head = min(self.head_size, self._n // 2)
+            k = max(1, int(round(head * min(self.churn_frac, 1.0))))
+            rng = np.random.default_rng(self.seed ^ 0x5EED_C0DE)
+            swap_ranks = rng.choice(head, size=k, replace=False)
+            # partner each churned head rank with a distinct tail id
+            tail_ids = self._n - 1 - rng.choice(
+                self._n // 2, size=k, replace=False
+            )
+            self._churned[swap_ranks], self._churned[tail_ids] = (
+                self._churned[tail_ids].copy(),
+                self._churned[swap_ranks].copy(),
+            )
+
+    def s_at(self, step: int) -> float:
+        if self.s_amplitude == 0.0:
+            return self.s_base
+        return self.s_base + self.s_amplitude * float(
+            np.sin(2.0 * np.pi * step / max(1, self.s_period))
+        )
+
+    def _probs_at(self, step: int) -> np.ndarray:
+        s = round(self.s_at(step), 4)  # cache key: 1e-4 exponent grid
+        p = self._pmf_cache.get(s)
+        if p is None:
+            if len(self._pmf_cache) > 256:
+                self._pmf_cache.clear()
+            p = self._pmf_cache[s] = _zipf_probs(self._n, s)
+        return p
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        ranks = rng.choice(
+            self._n,
+            size=(self.batch, self.num_tables, self.gathers_per_table),
+            p=self._probs_at(step),
+        )
+        rank_to_id = (
+            self._churned
+            if self.break_step is not None and step >= self.break_step
+            else self._ident
+        )
+        idx = rank_to_id[ranks]
+        return {
+            "dense": rng.normal(size=(self.batch, self.dense_features)).astype(np.float32),
+            "idx": idx.astype(np.int32),
+            "labels": rng.integers(0, 2, size=(self.batch,)).astype(np.float32),
+        }
+
+
 def coalescing_stats(ids: np.ndarray) -> dict:
     """Fig. 5b quantities for one table's lookup ids: expanded vs coalesced
     gradient tensor sizes (rows), normalized to the backpropagated size."""

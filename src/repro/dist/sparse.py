@@ -424,6 +424,30 @@ class ShardedStreamedTables:
             "per_shard": [rank.stats() for rank in self.ranks],
         }
 
+    def spill_metrics(self, dir_path: str) -> list[str]:
+        """Write one atomic snapshot spill per rank (``rank_NN.json``)
+        under ``dir_path`` — the multi-process story rehearsed in one
+        process: each rank spills only its own ``{shard=s}``-labeled
+        keys (rank 0 additionally carries the shard-unlabeled process
+        globals like ``dist.alltoall_bytes``), and
+        ``obs.fleet.fleet_snapshot(dir_path)`` reconstructs the full
+        registry — counters sum back to exactly ``Snapshot.sum``.
+        Returns the written paths."""
+        from repro.obs.export import filter_snapshot, write_snapshot_spill
+
+        snap = self.registry.snapshot()
+        paths = []
+        for s in range(self.num_shards):
+            sub = filter_snapshot(
+                snap, {"shard": s}, include_unlabeled=(s == 0)
+            )
+            paths.append(
+                write_snapshot_spill(
+                    os.path.join(dir_path, f"rank_{s:02d}.json"), sub, rank=s
+                )
+            )
+        return paths
+
 
 # ---------------------------------------------------------------------------
 # device step: the whole sharded tier stack inside one shard_map body

@@ -27,6 +27,11 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--metrics-port", type=int, default=-1,
+        help="expose the server's registry at /metrics on this port "
+        "(0 = ephemeral, -1 = off)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -36,6 +41,14 @@ def main():
         cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
     params = api.init_params(cfg, jax.random.key(args.seed))
     srv = Server(cfg, params, slots=args.slots, max_len=args.max_len, eos_id=-1)
+    metrics_server = None
+    if args.metrics_port >= 0:
+        from repro.obs import serve_metrics
+
+        metrics_server = serve_metrics(
+            srv.registry, host="0.0.0.0", port=args.metrics_port
+        )
+        print(f"[launch.serve] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(
@@ -46,9 +59,13 @@ def main():
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    for start in range(0, len(reqs), args.slots):
-        srv.generate(reqs[start : start + args.slots])
-    print(f"[launch.serve] {srv.throughput_report(time.perf_counter() - t0)}")
+    try:
+        for start in range(0, len(reqs), args.slots):
+            srv.generate(reqs[start : start + args.slots])
+        print(f"[launch.serve] {srv.throughput_report(time.perf_counter() - t0)}")
+    finally:
+        if metrics_server is not None:
+            metrics_server.close()
 
 
 if __name__ == "__main__":

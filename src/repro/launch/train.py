@@ -35,12 +35,28 @@ def main():
     ap.add_argument("--compression", default="none", choices=["none", "bf16", "int8"])
     ap.add_argument("--zipf", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--metrics-port", type=int, default=-1,
+        help="expose /metrics + /healthz on this port (0 = ephemeral, "
+        "-1 = off); scrapes the process-wide registry live",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke or args.mesh == "none")
     stream = ZipfTokenStream(
         vocab_size=cfg.vocab_size, batch=args.batch, seq=args.seq, s=args.zipf, seed=args.seed
     )
+
+    registry = None
+    metrics_server = None
+    if args.metrics_port >= 0:
+        from repro.obs import default_registry, serve_metrics
+
+        registry = default_registry()
+        metrics_server = serve_metrics(
+            registry, host="0.0.0.0", port=args.metrics_port
+        )
+        print(f"[launch.train] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
 
     def run():
         state = train(
@@ -52,17 +68,22 @@ def main():
             ckpt_every=args.ckpt_every,
             compression=args.compression,
             seed=args.seed,
+            registry=registry,
         )
         print(f"[launch.train] done at step {state.step}")
 
-    if args.mesh == "none":
-        run()
-    else:
-        from repro.launch.mesh import make_production_mesh
-
-        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
-        with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+    try:
+        if args.mesh == "none":
             run()
+        else:
+            from repro.launch.mesh import make_production_mesh
+
+            mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+            with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+                run()
+    finally:
+        if metrics_server is not None:
+            metrics_server.close()
 
 
 if __name__ == "__main__":

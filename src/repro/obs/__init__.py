@@ -1,6 +1,6 @@
 """Unified observability for the tier stack (``repro.obs``).
 
-Three pieces, documented in docs/observability.md:
+Seven pieces, documented in docs/observability.md:
 
   * ``registry`` — typed counters / gauges / fixed-bucket histograms with
     per-thread-sharded lock-free increments and ``snapshot()``/``delta()``
@@ -11,7 +11,32 @@ Three pieces, documented in docs/observability.md:
     → gated write-back → prefetch overlap is visible as a timeline.
   * ``stepmetrics`` — per-step JSONL sink consumed by
     ``benchmarks/obs_report.py`` and uploaded by the CI quick lane.
+  * ``export`` — OpenMetrics text rendering, the ``/metrics`` scrape
+    endpoint (``MetricsServer``), and atomic per-rank snapshot spills.
+  * ``fleet`` — merge per-rank spills into one fleet snapshot (counters
+    sum, histograms bucket-add, gauges last-write-wins).
+  * ``monitor`` — ``HealthMonitor``: windowed deltas at step cadence,
+    headline-rate derivation, EWMA-band + Page–Hinkley drift detection,
+    threshold/stall rules, alerts as counter + tracer instant + JSONL.
+  * ``anatomy`` — fold trace spans into the per-step time budget (host
+    gather / gate wait / device / wb-commit overlap / unattributed).
 """
+from repro.obs.anatomy import step_budget, wb_commit_overlap_us  # noqa: F401
+from repro.obs.export import (  # noqa: F401
+    MetricsServer,
+    read_snapshot_spill,
+    render_openmetrics,
+    serve_metrics,
+    write_snapshot_spill,
+)
+from repro.obs.fleet import fleet_snapshot, merge_snapshots  # noqa: F401
+from repro.obs.monitor import (  # noqa: F401
+    Alert,
+    EwmaBand,
+    HealthMonitor,
+    PageHinkley,
+    derive_rates,
+)
 from repro.obs.registry import (  # noqa: F401
     Counter,
     Gauge,

@@ -1,0 +1,156 @@
+"""Per-step time-budget anatomy from trace spans.
+
+``benchmarks/obs_report.py`` proved the write-back overlap claim by
+folding trace spans into one number; this module promotes that math into
+a library so the budget is queryable in-process (monitor, autotuner) and
+not just printable. Given a trace — a Chrome-trace document or a
+``Tracer.events()`` list — ``step_budget`` attributes each
+``step.streamed`` span's wall time to components:
+
+  * ``host_gather``   — ``st.gather`` spans on the step's own thread,
+  * ``gate_wait``     — ``wb.enqueue_wait`` + ``wb.barrier`` (time the
+    step spent blocked on the write-back gate),
+  * ``prefetch_wait`` — ``prefetch.wait``,
+  * ``device``        — ``step.device`` (the jitted fused step),
+  * ``unattributed``  — whatever remains of the step span (python glue,
+    ring push, record writing), clamped at zero.
+
+plus the *cross-thread* quantity the overlap argument rests on:
+``wb_commit_overlap_us`` — us of ``wb.commit`` on a non-step thread that
+ran while some step span was open. The formula is shared with
+``obs_report.summarize_trace`` (which now delegates here), so the CLI
+report and the library agree to the last microsecond by construction.
+
+Same-thread components are attributed by interval overlap with the
+enclosing step span (spans are context managers, so a component either
+nests inside its step or straddles its edge; overlap handles both).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Union
+
+from repro.obs.tracing import _interval, overlap_us
+
+# component name -> span names that feed it (same-thread attribution)
+DEFAULT_COMPONENTS: dict[str, tuple[str, ...]] = {
+    "host_gather": ("st.gather",),
+    "gate_wait": ("wb.enqueue_wait", "wb.barrier"),
+    "prefetch_wait": ("prefetch.wait",),
+    "device": ("step.device",),
+}
+
+STEP_SPAN = "step.streamed"
+COMMIT_SPAN = "wb.commit"
+
+TraceLike = Union[dict, Iterable[dict]]
+
+
+def trace_events(trace: TraceLike) -> list[dict]:
+    """Normalize a trace to a list of complete-span dicts with ``name``,
+    ``tid`` and an interval ``_interval`` can read. Accepts a Chrome
+    document (``{"traceEvents": [...]}``, keeps ``ph == "X"``), a raw
+    Chrome event list, or ``Tracer.events()`` output (keeps events with
+    a duration; instants carry ``dur_us=None`` and are dropped)."""
+    if isinstance(trace, dict):
+        evs = trace.get("traceEvents", [])
+    else:
+        evs = list(trace)
+    out = []
+    for e in evs:
+        if e.get("ph") == "M":
+            continue
+        if e.get("ph") == "i":
+            continue
+        if _interval(e) is None:  # instants / malformed
+            continue
+        out.append(e)
+    return out
+
+
+def wb_commit_overlap_us(
+    events: list[dict],
+    *,
+    step_span: str = STEP_SPAN,
+    commit_span: str = COMMIT_SPAN,
+) -> float:
+    """us of ``commit_span`` on non-step threads overlapping any open
+    ``step_span``. Exactly ``obs_report``'s historical formula: each
+    commit contributes its *maximum* single-step overlap (commits are
+    gated to at most one in flight, so they never straddle two steps
+    for longer than one step's interval)."""
+    steps = [e for e in events if e["name"] == step_span]
+    step_tids = {e["tid"] for e in steps}
+    return sum(
+        max((overlap_us(c, s) for s in steps), default=0.0)
+        for c in events
+        if c["name"] == commit_span and c["tid"] not in step_tids
+    )
+
+
+def step_budget(
+    trace: TraceLike,
+    *,
+    step_span: str = STEP_SPAN,
+    components: Optional[dict] = None,
+) -> dict:
+    """Fold a trace into the per-step time budget (see module doc).
+
+    Returns ``{"steps": n, "totals_us": {...}, "per_step_us": {...},
+    "wb_commit_overlap_us": float, "wb_commit_total_us": float}``; with
+    zero step spans everything is zeroed (never NaN, never raise)."""
+    comps = dict(components) if components is not None else dict(DEFAULT_COMPONENTS)
+    evs = trace_events(trace)
+    steps = [e for e in evs if e["name"] == step_span]
+    totals = {name: 0.0 for name in comps}
+    totals["step"] = 0.0
+    totals["unattributed"] = 0.0
+
+    span_to_comp = {s: c for c, spans in comps.items() for s in spans}
+    by_tid: dict[int, list[dict]] = {}
+    for e in evs:
+        if e["name"] in span_to_comp:
+            by_tid.setdefault(e["tid"], []).append(e)
+
+    for s in steps:
+        iv = _interval(s)
+        dur = iv[1] - iv[0]
+        totals["step"] += dur
+        attributed = 0.0
+        for e in by_tid.get(s["tid"], ()):
+            ov = overlap_us(e, s)
+            if ov > 0.0:
+                totals[span_to_comp[e["name"]]] += ov
+                attributed += ov
+        totals["unattributed"] += max(0.0, dur - attributed)
+
+    n = len(steps)
+    commit_total = sum(
+        _interval(e)[1] - _interval(e)[0] for e in evs if e["name"] == COMMIT_SPAN
+    )
+    return {
+        "steps": n,
+        "totals_us": totals,
+        "per_step_us": {k: (v / n if n else 0.0) for k, v in totals.items()},
+        "wb_commit_overlap_us": wb_commit_overlap_us(evs, step_span=step_span),
+        "wb_commit_total_us": commit_total,
+    }
+
+
+def format_budget(budget: dict) -> str:
+    """Human-readable one-block rendering of a ``step_budget`` result."""
+    n = budget["steps"]
+    lines = [f"per-step time budget over {n} step span(s):"]
+    per = budget["per_step_us"]
+    step_us = per.get("step", 0.0)
+    order = ["host_gather", "gate_wait", "prefetch_wait", "device", "unattributed"]
+    for k in order:
+        if k in per:
+            frac = per[k] / step_us if step_us else 0.0
+            lines.append(f"  {k:14s} {per[k]:10.1f} us/step  ({frac:6.1%})")
+    lines.append(f"  {'step total':14s} {step_us:10.1f} us/step")
+    lines.append(
+        f"  wb.commit overlap with {STEP_SPAN}: "
+        f"{budget['wb_commit_overlap_us']:.1f} us "
+        f"(of {budget['wb_commit_total_us']:.1f} us total commit)"
+    )
+    return "\n".join(lines)

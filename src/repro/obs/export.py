@@ -1,0 +1,393 @@
+"""OpenMetrics export for ``Registry.snapshot()``: text renderer, scrape
+endpoint, and atomic per-rank snapshot spill files.
+
+Three consumers, one snapshot shape:
+
+  * ``render_openmetrics(snapshot)`` — the Prometheus / OpenMetrics text
+    exposition: counters (and cumulative collector entries) become
+    ``<family>_total`` samples, gauges pass through, histograms unfold
+    into cumulative ``_bucket{le=...}`` lines plus ``_sum``/``_count``.
+    Labels survive from the flat ``name{table=0,shard=1}`` snapshot keys.
+    Instrument names use dots (``ws.covered_rows``); the exposition
+    charset is ``[a-zA-Z0-9_:]``, so dots map to underscores — the
+    mapping is stable and collision-checked at render time.
+  * ``MetricsServer`` — a stdlib ``http.server`` scrape endpoint
+    (``/metrics``, ``/healthz``) on a daemon thread. ``port=0`` binds an
+    ephemeral port (read it back from ``.port``); the handler renders a
+    fresh snapshot per GET, so a scrape mid-run sees live counters.
+  * ``write_snapshot_spill`` / ``read_snapshot_spill`` — JSON spill files
+    for multi-process runs where rank N cannot be scraped directly.
+    Writes are atomic (tmp + rename in the same directory) so a fleet
+    merge (``obs.fleet``) never reads a torn file.
+
+The exposition is strictly parseable: ``tests/test_export.py`` runs a
+line-grammar parser over it (escaping, histogram bucket monotonicity,
+``# EOF`` terminator) rather than eyeballing substrings.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Optional, Union
+
+from repro.obs.registry import HistogramSnapshot, Registry, Snapshot
+
+# OpenMetrics content type (Prometheus also accepts text/plain; version=0.0.4
+# but every modern scraper negotiates this one)
+OPENMETRICS_CONTENT_TYPE = "application/openmetrics-text; version=1.0.0; charset=utf-8"
+
+_NAME_OK = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+
+def parse_key(key: str) -> tuple[str, dict]:
+    """Split a flat snapshot key ``name{table=0,shard=1}`` back into
+    ``(name, labels)``. Inverse of ``registry._render`` (label values in
+    this codebase are identifiers/ints — no commas or braces)."""
+    i = key.find("{")
+    if i < 0:
+        return key, {}
+    name = key[:i]
+    body = key[i + 1 : key.rindex("}")]
+    labels = {}
+    for part in body.split(","):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        labels[k] = v
+    return name, labels
+
+
+def metric_name(name: str) -> str:
+    """Map a registry instrument name (``ws.covered_rows``) onto the
+    OpenMetrics charset. Dots and any other illegal characters become
+    underscores; a leading digit gains a ``_`` prefix."""
+    out = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    if not _NAME_OK.match(out):
+        out = "_" + out
+    return out
+
+
+def _escape_label(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt(v: float) -> str:
+    """Number formatting for sample values: exact for ints, repr (full
+    round-trip precision — the fleet-merge-equality acceptance test
+    depends on it) for floats, spec spellings for non-finite."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if math.isnan(f):
+        return "NaN"
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def _labels_str(labels: dict, extra: Optional[list[tuple[str, str]]] = None) -> str:
+    items = [(k, str(v)) for k, v in sorted(labels.items())]
+    if extra:
+        items += extra
+    if not items:
+        return ""
+    return "{" + ",".join(f'{metric_name(k)}="{_escape_label(v)}"' for k, v in items) + "}"
+
+
+def render_openmetrics(snap: Snapshot) -> str:
+    """Render one ``Snapshot`` as OpenMetrics text ending in ``# EOF``.
+
+    Kinds map as: ``counter`` and ``collector`` (cumulative by the
+    registry contract) -> counter families named without the ``_total``
+    suffix whose samples carry it; ``gauge`` -> gauge; histograms ->
+    cumulative ``le`` buckets + ``_sum`` + ``_count``. Families are
+    emitted sorted by name, one ``# TYPE`` line each.
+    """
+    # family name -> {"type": str, "lines": [sample lines]}
+    families: dict[str, dict] = {}
+    collisions: dict[str, str] = {}  # family -> source instrument name
+
+    def family(raw_name: str, om_type: str) -> dict:
+        fam = metric_name(raw_name)
+        if om_type == "counter" and fam.endswith("_total"):
+            fam = fam[: -len("_total")]
+        prev = collisions.get(fam)
+        if prev is not None and prev != raw_name:
+            raise ValueError(
+                f"OpenMetrics name collision: {raw_name!r} and {prev!r} "
+                f"both map to family {fam!r}"
+            )
+        collisions[fam] = raw_name
+        entry = families.get(fam)
+        if entry is None:
+            entry = families[fam] = {"type": om_type, "lines": []}
+        elif entry["type"] != om_type:
+            raise ValueError(
+                f"family {fam!r} rendered as both {entry['type']} and {om_type}"
+            )
+        return entry
+
+    for key in sorted(snap.values):
+        raw, labels = parse_key(key)
+        kind = snap.kinds.get(key, "gauge")
+        v = snap.values[key]
+        if kind in ("counter", "collector"):
+            entry = family(raw, "counter")
+            fam = metric_name(raw)
+            if fam.endswith("_total"):
+                fam = fam[: -len("_total")]
+            entry["lines"].append(f"{fam}_total{_labels_str(labels)} {_fmt(v)}")
+        else:
+            entry = family(raw, "gauge")
+            entry["lines"].append(f"{metric_name(raw)}{_labels_str(labels)} {_fmt(v)}")
+
+    for key in sorted(snap.hists):
+        raw, labels = parse_key(key)
+        h = snap.hists[key]
+        entry = family(raw, "histogram")
+        fam = metric_name(raw)
+        cum = 0
+        for i, bound in enumerate(h.bounds):
+            cum += h.counts[i]
+            ls = _labels_str(labels, extra=[("le", _fmt(float(bound)))])
+            entry["lines"].append(f"{fam}_bucket{ls} {cum}")
+        ls = _labels_str(labels, extra=[("le", "+Inf")])
+        entry["lines"].append(f"{fam}_bucket{ls} {h.n}")
+        entry["lines"].append(f"{fam}_sum{_labels_str(labels)} {_fmt(h.total)}")
+        entry["lines"].append(f"{fam}_count{_labels_str(labels)} {h.n}")
+
+    out = []
+    for fam in sorted(families):
+        out.append(f"# TYPE {fam} {families[fam]['type']}")
+        out.extend(families[fam]["lines"])
+    out.append("# EOF")
+    return "\n".join(out) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# scrape endpoint
+
+
+SnapshotSource = Union[Registry, Callable[[], Snapshot]]
+
+
+def _pull(source: SnapshotSource) -> Snapshot:
+    if isinstance(source, Registry):
+        return source.snapshot()
+    return source()
+
+
+class MetricsServer:
+    """``/metrics`` + ``/healthz`` over one or more snapshot sources.
+
+    ``sources`` may be ``Registry`` instances or zero-arg callables
+    returning a ``Snapshot``; multiple sources are fleet-merged per
+    scrape (counters sum, gauges last-write-wins), so a process holding
+    several private registries still exposes one coherent page.
+    """
+
+    def __init__(
+        self,
+        source: SnapshotSource,
+        *extra: SnapshotSource,
+        host: str = "127.0.0.1",
+        port: int = 0,
+    ):
+        self._sources: tuple[SnapshotSource, ...] = (source, *extra)
+        self._host = host
+        self._requested_port = int(port)
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+        self._t0 = time.time()
+
+    # -- snapshot / render --------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        snaps = [_pull(s) for s in self._sources]
+        if len(snaps) == 1:
+            return snaps[0]
+        from repro.obs.fleet import merge_snapshots  # local: fleet imports us
+
+        return merge_snapshots(snaps)
+
+    def render(self) -> str:
+        return render_openmetrics(self.snapshot())
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "MetricsServer":
+        if self._httpd is not None:
+            return self
+        server = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 (stdlib API)
+                if self.path.split("?")[0] == "/metrics":
+                    try:
+                        body = server.render().encode("utf-8")
+                    except Exception as e:  # render must never kill the scrape
+                        self.send_response(500)
+                        self.send_header("Content-Type", "text/plain; charset=utf-8")
+                        self.end_headers()
+                        self.wfile.write(f"render error: {e}\n".encode())
+                        return
+                    self.send_response(200)
+                    self.send_header("Content-Type", OPENMETRICS_CONTENT_TYPE)
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                elif self.path.split("?")[0] == "/healthz":
+                    body = json.dumps(
+                        {"status": "ok", "uptime_s": time.time() - server._t0}
+                    ).encode("utf-8")
+                    self.send_response(200)
+                    self.send_header("Content-Type", "application/json")
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                else:
+                    self.send_response(404)
+                    self.end_headers()
+
+            def log_message(self, *a):  # silence per-request stderr lines
+                pass
+
+        self._httpd = ThreadingHTTPServer((self._host, self._requested_port), Handler)
+        self._httpd.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-server", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    @property
+    def port(self) -> int:
+        if self._httpd is None:
+            raise RuntimeError("MetricsServer not started")
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self._host}:{self.port}"
+
+    def close(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            if self._thread is not None:
+                self._thread.join(timeout=5)
+            self._httpd = None
+            self._thread = None
+
+    def __enter__(self) -> "MetricsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve_metrics(
+    source: SnapshotSource, *extra: SnapshotSource, host: str = "127.0.0.1", port: int = 0
+) -> MetricsServer:
+    """Start a ``MetricsServer`` and return it (``.url`` has the address)."""
+    return MetricsServer(source, *extra, host=host, port=port).start()
+
+
+# ---------------------------------------------------------------------------
+# snapshot spill files (multi-process ranks -> fleet merge)
+
+SPILL_VERSION = 1
+
+
+def snapshot_to_doc(snap: Snapshot) -> dict:
+    """JSON-serializable document for one snapshot (spill file payload)."""
+    return {
+        "version": SPILL_VERSION,
+        "at": snap.at,
+        "values": dict(snap.values),
+        "kinds": dict(snap.kinds),
+        "hists": {
+            k: {
+                "bounds": list(h.bounds),
+                "counts": list(h.counts),
+                "n": h.n,
+                "total": h.total,
+                "min": h.min,
+                "max": h.max,
+            }
+            for k, h in snap.hists.items()
+        },
+    }
+
+
+def doc_to_snapshot(doc: dict) -> Snapshot:
+    hists = {
+        k: HistogramSnapshot(
+            tuple(h["bounds"]), list(h["counts"]), h["n"], h["total"], h["min"], h["max"]
+        )
+        for k, h in doc.get("hists", {}).items()
+    }
+    return Snapshot(
+        float(doc.get("at", 0.0)), dict(doc.get("values", {})), hists,
+        dict(doc.get("kinds", {})),
+    )
+
+
+def write_snapshot_spill(path: str, snap: Snapshot, *, rank: Optional[int] = None) -> str:
+    """Atomically write one rank's snapshot spill (tmp + rename in the
+    same directory, so a concurrent fleet merge never sees a torn file).
+    Returns ``path``."""
+    doc = snapshot_to_doc(snap)
+    if rank is not None:
+        doc["rank"] = int(rank)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def read_snapshot_spill(path: str) -> tuple[Snapshot, dict]:
+    """Read one spill file -> ``(snapshot, meta)`` where meta carries
+    ``rank``/``version``."""
+    with open(path) as f:
+        doc = json.load(f)
+    meta = {"rank": doc.get("rank"), "version": doc.get("version")}
+    return doc_to_snapshot(doc), meta
+
+
+def filter_snapshot(
+    snap: Snapshot, labels: dict, *, include_unlabeled: bool = False
+) -> Snapshot:
+    """Subset a snapshot to keys whose labels include every ``labels``
+    item (values compared as strings). ``include_unlabeled=True`` also
+    keeps keys carrying none of the filter's label names — rank 0
+    typically spills those process-global instruments so a fleet merge
+    reconstructs the full registry exactly once."""
+    want = {str(k): str(v) for k, v in labels.items()}
+
+    def keep(key: str) -> bool:
+        _, got = parse_key(key)
+        if not any(k in got for k in want):
+            return include_unlabeled
+        return all(got.get(k) == v for k, v in want.items())
+
+    values = {k: v for k, v in snap.values.items() if keep(k)}
+    hists = {k: h for k, h in snap.hists.items() if keep(k)}
+    kinds = {k: v for k, v in snap.kinds.items() if k in values or k in hists}
+    return Snapshot(snap.at, values, hists, kinds)

@@ -1,0 +1,103 @@
+"""Fleet aggregation: merge per-rank snapshot spills into one snapshot.
+
+Multi-process sharded runs (``dist.sparse``) cannot share a ``Registry``
+across process boundaries; instead each rank spills its own snapshot to
+disk (``export.write_snapshot_spill``, one atomic file per rank) and the
+launcher — or an offline report — merges them here:
+
+  * **counters / collectors** (cumulative): sum across ranks,
+  * **histograms**: bucket-wise add (bounds must match — a mismatch is a
+    programming error and raises, never silently mis-bins),
+  * **gauges**: last-write-wins ordered by spill timestamp (the
+    ``Snapshot.at`` stamped when the rank snapshotted).
+
+Rank sets may be ragged: a rank that never touched an instrument simply
+contributes nothing to that key. Keys whose *kind* disagrees across
+ranks (counter on one, gauge on another) raise — that is a naming bug,
+not a merge policy question.
+
+The merged snapshot is a plain ``registry.Snapshot``: ``sum()``,
+``delta()``, ``render_openmetrics`` and the monitor all work on it
+unchanged. PR 7's per-shard ``{shard=s}`` labels keep per-rank keys
+distinct, so merging never conflates two shards' counters.
+"""
+from __future__ import annotations
+
+import glob
+import os
+from typing import Optional, Sequence
+
+from repro.obs.export import read_snapshot_spill
+from repro.obs.registry import HistogramSnapshot, Snapshot
+
+# kinds that accumulate across ranks (the registry contract: collector
+# values are cumulative, see registry module docstring)
+_CUMULATIVE = ("counter", "collector")
+
+
+def _merge_hist(a: HistogramSnapshot, b: HistogramSnapshot) -> HistogramSnapshot:
+    if a.bounds != b.bounds:
+        raise ValueError(
+            f"histogram bounds mismatch in fleet merge: {a.bounds[:3]}... vs {b.bounds[:3]}..."
+        )
+    counts = [x + y for x, y in zip(a.counts, b.counts)]
+    n = a.n + b.n
+    if a.n == 0:
+        mn, mx = b.min, b.max
+    elif b.n == 0:
+        mn, mx = a.min, a.max
+    else:
+        mn, mx = min(a.min, b.min), max(a.max, b.max)
+    return HistogramSnapshot(a.bounds, counts, n, a.total + b.total, mn, mx)
+
+
+def merge_snapshots(snaps: Sequence[Snapshot]) -> Snapshot:
+    """Merge rank snapshots into one fleet snapshot (policy above)."""
+    if not snaps:
+        return Snapshot(0.0, {}, {}, {})
+    # gauges are last-write-wins by snapshot timestamp: process in
+    # ascending ``at`` order so the latest spill lands last
+    ordered = sorted(snaps, key=lambda s: s.at)
+    values: dict[str, float] = {}
+    hists: dict[str, HistogramSnapshot] = {}
+    kinds: dict[str, str] = {}
+
+    for snap in ordered:
+        for k, v in snap.values.items():
+            kind = snap.kinds.get(k, "gauge")
+            prev_kind = kinds.get(k)
+            if prev_kind is not None and (prev_kind in _CUMULATIVE) != (kind in _CUMULATIVE):
+                raise ValueError(
+                    f"fleet merge kind conflict for {k!r}: {prev_kind} vs {kind}"
+                )
+            if k in values and kind in _CUMULATIVE:
+                values[k] = values[k] + v
+            else:  # gauge LWW (ordered by at), or first sighting
+                values[k] = v
+            kinds[k] = kind
+        for k, h in snap.hists.items():
+            hists[k] = _merge_hist(hists[k], h) if k in hists else h
+            kinds[k] = "histogram"
+
+    return Snapshot(ordered[-1].at, values, hists, kinds)
+
+
+def read_fleet_spills(
+    dir_path: str, pattern: str = "rank_*.json"
+) -> list[tuple[Snapshot, dict]]:
+    """Read every spill file under ``dir_path`` matching ``pattern``,
+    sorted by filename -> ``[(snapshot, meta), ...]``."""
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_path, pattern))):
+        out.append(read_snapshot_spill(path))
+    return out
+
+
+def fleet_snapshot(dir_path: str, pattern: str = "rank_*.json") -> Optional[Snapshot]:
+    """Merge every spill under ``dir_path`` into one snapshot; ``None``
+    when the directory holds no spills (distinguishes 'no fleet yet'
+    from 'fleet with zero counts')."""
+    spills = read_fleet_spills(dir_path, pattern)
+    if not spills:
+        return None
+    return merge_snapshots([s for s, _ in spills])

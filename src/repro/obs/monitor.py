@@ -1,0 +1,445 @@
+"""Streaming health monitoring over registry snapshots.
+
+``HealthMonitor`` closes the loop the static dashboards leave open: the
+tier stack's health is a set of *ratios* (hot-tier hit rate, prefetch
+coverage, ring hit rate, host critical-path us/step) that drift when
+traffic shifts — daily cycles, head churn, flash crowds (the Cross-Stack
+Workload Characterization access patterns). The monitor pulls a windowed
+``snapshot.delta()`` from the bound registry at a step cadence, derives
+the headline rates from the window, and runs small streaming detectors
+per metric:
+
+  * ``EwmaBand`` — exponentially-weighted mean/variance; fires when a
+    sample leaves the ``k``-sigma band. A ``std_floor`` keeps benign CI
+    noise on a near-constant metric from becoming a hair trigger.
+  * ``PageHinkley`` — cumulative deviation-from-running-mean test; the
+    standard sequential drift detector: robust to single-sample spikes,
+    fires on *sustained* level shifts. ``normalize=True`` divides by the
+    warmup mean so thresholds are scale-free (``host_us_per_step`` sits
+    at 1e2..1e5 depending on the design point).
+  * ``ThresholdRule`` — static min/max bound, fires on the transition
+    into violation (not every tick while violated).
+  * ``StallRule`` — zero progress (``st.steps_total`` delta == 0) for
+    N consecutive windows.
+
+Alerts surface three ways at once: a ``mon.alerts_total{metric=,kind=}``
+counter on the registry (scrapeable via ``obs.export``), a tracer
+instant (``mon.alert.<metric>`` — lands in the Chrome trace timeline),
+and a JSONL event log (one json object per alert, written through
+``StepMetricsWriter`` in append mode so restarts don't truncate the
+alert history).
+
+This module is the *detection* half of the ROADMAP autotuning item: the
+actuation half (periodic ``choose_capacity`` re-sizing) consumes these
+alerts.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.obs.registry import Registry, Snapshot, base_name
+from repro.obs.stepmetrics import StepMetricsWriter
+from repro.obs.tracing import TRACER, Tracer
+
+
+@dataclass
+class Alert:
+    """One detector firing: what metric, which rule, at which step."""
+
+    step: int
+    metric: str
+    kind: str  # "band" | "drift" | "threshold" | "stall"
+    value: float
+    detail: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "step": self.step,
+            "metric": self.metric,
+            "kind": self.kind,
+            "value": self.value,
+            **{f"detail.{k}": v for k, v in self.detail.items()},
+        }
+
+
+class EwmaBand:
+    """EWMA mean/variance band detector.
+
+    Warmup seeds the running mean/var from the first ``warmup`` samples
+    (simple average) without firing; after warmup a sample with
+    ``|z| > k`` fires, where sigma is floored at ``std_floor`` (absolute)
+    and ``std_floor_frac * |mean|`` (relative) so near-constant metrics
+    don't alert on numeric dust. The fired sample still updates the
+    band, so a persistent level shift fires once and then re-baselines.
+    """
+
+    kind = "band"
+
+    def __init__(
+        self,
+        *,
+        alpha: float = 0.15,
+        k: float = 6.0,
+        warmup: int = 8,
+        std_floor: float = 0.0,
+        std_floor_frac: float = 0.0,
+    ):
+        self.alpha = float(alpha)
+        self.k = float(k)
+        self.warmup = max(1, int(warmup))
+        self.std_floor = float(std_floor)
+        self.std_floor_frac = float(std_floor_frac)
+        self._n = 0
+        self._mean = 0.0
+        self._var = 0.0
+        self._warm_sum = 0.0
+        self._warm_sq = 0.0
+
+    def update(self, x: float) -> Optional[dict]:
+        x = float(x)
+        self._n += 1
+        if self._n <= self.warmup:
+            self._warm_sum += x
+            self._warm_sq += x * x
+            if self._n == self.warmup:
+                self._mean = self._warm_sum / self.warmup
+                self._var = max(0.0, self._warm_sq / self.warmup - self._mean**2)
+            return None
+        std = math.sqrt(self._var)
+        std = max(std, self.std_floor, self.std_floor_frac * abs(self._mean))
+        z = (x - self._mean) / std if std > 0 else 0.0
+        fired = abs(z) > self.k
+        detail = None
+        if fired:
+            detail = {"z": z, "mean": self._mean, "std": std}
+        # update the band with the new sample (EWMA of mean and of
+        # squared deviation), including fired samples: re-baseline
+        d = x - self._mean
+        self._mean += self.alpha * d
+        self._var = (1 - self.alpha) * (self._var + self.alpha * d * d)
+        return detail
+
+
+class PageHinkley:
+    """Two-sided Page-Hinkley sequential drift test.
+
+    Tracks cumulative deviation of samples from their running mean (with
+    a small tolerance ``delta``); fires when the cumulative sum departs
+    ``threshold`` from its running extremum — i.e. the metric has moved
+    and *stayed* moved. State resets on fire so one break produces one
+    alert. ``normalize=True`` rescales samples by the magnitude of the
+    warmup mean, making ``delta``/``threshold`` fractions of the
+    baseline level rather than absolute units.
+    """
+
+    kind = "drift"
+
+    def __init__(
+        self,
+        *,
+        delta: float = 0.005,
+        threshold: float = 0.5,
+        warmup: int = 8,
+        normalize: bool = False,
+    ):
+        self.delta = float(delta)
+        self.threshold = float(threshold)
+        self.warmup = max(1, int(warmup))
+        self.normalize = bool(normalize)
+        self._warm_n = 0
+        self._warm_sum = 0.0
+        self._ref: Optional[float] = None  # normalization scale
+        self._reset()
+
+    def _reset(self) -> None:
+        self._n = 0
+        self._mean = 0.0
+        self._m_inc = 0.0  # cumulative (x - mean - delta): grows on upward shift
+        self._min_inc = 0.0
+        self._m_dec = 0.0  # cumulative (x - mean + delta): shrinks on downward shift
+        self._max_dec = 0.0
+
+    def update(self, x: float) -> Optional[dict]:
+        x = float(x)
+        if self._warm_n < self.warmup:
+            self._warm_n += 1
+            self._warm_sum += x
+            if self._warm_n == self.warmup and self.normalize:
+                self._ref = max(abs(self._warm_sum / self.warmup), 1e-12)
+            return None
+        if self._ref is not None:
+            x = x / self._ref
+        self._n += 1
+        self._mean += (x - self._mean) / self._n
+        self._m_inc += x - self._mean - self.delta
+        self._min_inc = min(self._min_inc, self._m_inc)
+        self._m_dec += x - self._mean + self.delta
+        self._max_dec = max(self._max_dec, self._m_dec)
+        up = self._m_inc - self._min_inc
+        down = self._max_dec - self._m_dec
+        if up > self.threshold or down > self.threshold:
+            detail = {
+                "direction": "up" if up > self.threshold else "down",
+                "stat": max(up, down),
+                "threshold": self.threshold,
+            }
+            self._reset()  # one break -> one alert; re-learn the new level
+            return detail
+        return None
+
+
+class ThresholdRule:
+    """Static bound; fires on the transition into violation."""
+
+    kind = "threshold"
+
+    def __init__(self, *, min: Optional[float] = None, max: Optional[float] = None):
+        self.min = min
+        self.max = max
+        self._violating = False
+
+    def update(self, x: float) -> Optional[dict]:
+        x = float(x)
+        bad = (self.min is not None and x < self.min) or (
+            self.max is not None and x > self.max
+        )
+        fired = bad and not self._violating
+        self._violating = bad
+        if fired:
+            return {"min": self.min, "max": self.max}
+        return None
+
+
+class StallRule:
+    """Fires when the watched delta is zero for ``after`` consecutive
+    windows (one alert per stall, re-armed by progress)."""
+
+    kind = "stall"
+
+    def __init__(self, *, after: int = 3):
+        self.after = max(1, int(after))
+        self._zero_windows = 0
+        self._fired = False
+
+    def update(self, x: float) -> Optional[dict]:
+        if float(x) == 0.0:
+            self._zero_windows += 1
+            if self._zero_windows >= self.after and not self._fired:
+                self._fired = True
+                return {"zero_windows": self._zero_windows}
+        else:
+            self._zero_windows = 0
+            self._fired = False
+        return None
+
+
+def derive_rates(delta: Snapshot) -> dict:
+    """Headline rates from one windowed snapshot delta. Mirrors
+    ``store.streamed.StreamedTables._derive`` but over an arbitrary
+    window; rates whose denominator is empty in the window are *omitted*
+    (an empty window must never alert), not zero-filled."""
+    out: dict[str, float] = {}
+    covered = delta.sum("ws.covered_rows")
+    sync = delta.sum("ws.sync_fault_rows")
+    cold = covered + sync
+    if cold > 0:
+        out["prefetch_coverage"] = covered / cold
+    ring = delta.sum("ring.hit_lanes")
+    if ring + cold > 0:
+        out["ring_hit_rate"] = ring / (ring + cold)
+    steps = delta.sum("st.steps_total")
+    if steps > 0:
+        crit_s = (
+            delta.sum("st.gather_seconds")
+            + delta.sum("wb.gate_wait_seconds")
+            + delta.sum("wb.sync_commit_seconds")
+        )
+        out["host_us_per_step"] = crit_s / steps * 1e6
+    return out
+
+
+# per-metric detector policies: "rate" metrics live in [0, 1] (absolute
+# floors make sense); "scale" metrics span decades (normalize)
+def _rate_detectors(warmup: int) -> list:
+    return [
+        EwmaBand(k=6.0, warmup=warmup, std_floor=0.02),
+        PageHinkley(delta=0.01, threshold=0.5, warmup=warmup),
+    ]
+
+
+def _scale_detectors(warmup: int) -> list:
+    return [
+        EwmaBand(k=8.0, warmup=warmup, std_floor_frac=0.05),
+        PageHinkley(delta=0.05, threshold=2.0, warmup=warmup, normalize=True),
+    ]
+
+
+DEFAULT_POLICIES: dict[str, str] = {
+    "hit_rate": "rate",
+    "prefetch_coverage": "rate",
+    "ring_hit_rate": "rate",
+    "host_us_per_step": "scale",
+    "loss": "scale",
+}
+
+HEADLINE_METRICS: tuple[str, ...] = (
+    "hit_rate",
+    "prefetch_coverage",
+    "ring_hit_rate",
+    "host_us_per_step",
+)
+
+
+class HealthMonitor:
+    """Windowed detector harness over a registry (see module docstring).
+
+    Usage::
+
+        mon = HealthMonitor(registry=streamed.registry,
+                            every=8, alert_log="alerts.jsonl")
+        for step in range(steps):
+            ...
+            if mon.due(step):
+                mon.observe(step, metrics={"hit_rate": float(state["hit_rate"])})
+
+    ``observe`` is cheap off-cadence (immediate return); ``due(step)``
+    lets callers skip building ``metrics`` that cost a device sync.
+    Detector warmup is counted in *windows*: with ``every=8`` and
+    ``warmup_windows=4`` the detectors baseline over steps 8..32 and
+    arm afterwards.
+    """
+
+    def __init__(
+        self,
+        registry: Optional[Registry] = None,
+        *,
+        every: int = 8,
+        warmup_windows: int = 4,
+        watch: Sequence[str] = HEADLINE_METRICS,
+        policies: Optional[dict] = None,
+        thresholds: Optional[dict] = None,
+        stall_after: int = 3,
+        alert_log: Optional[str] = None,
+        tracer: Optional[Tracer] = None,
+        max_alerts_kept: int = 1024,
+    ):
+        self.registry = registry
+        self.every = max(1, int(every))
+        self.warmup_windows = max(1, int(warmup_windows))
+        self.watch = tuple(watch)
+        self.policies = dict(DEFAULT_POLICIES)
+        if policies:
+            self.policies.update(policies)
+        self.thresholds = {
+            m: ThresholdRule(**spec) for m, spec in (thresholds or {}).items()
+        }
+        self._stall = StallRule(after=stall_after) if stall_after else None
+        self.tracer = tracer if tracer is not None else TRACER
+        self.alerts: list[Alert] = []
+        self._max_alerts_kept = int(max_alerts_kept)
+        self.alerts_total = 0
+        self._detectors: dict[str, list] = {}
+        self._prev: Optional[Snapshot] = None
+        self._log = StepMetricsWriter(alert_log, mode="a") if alert_log else None
+        self._counter_cache: dict[tuple, object] = {}
+
+    # -- binding ------------------------------------------------------------
+
+    def bind(self, registry: Registry) -> "HealthMonitor":
+        """Attach the registry to window over (used by the trainer when
+        the registry is created inside ``init_streamed``)."""
+        if self.registry is None:
+            self.registry = registry
+            self._prev = None
+        return self
+
+    # -- cadence ------------------------------------------------------------
+
+    def due(self, step: int) -> bool:
+        return step % self.every == 0
+
+    # -- observation --------------------------------------------------------
+
+    def _detectors_for(self, metric: str) -> list:
+        dets = self._detectors.get(metric)
+        if dets is None:
+            policy = self.policies.get(metric, "rate")
+            mk = _scale_detectors if policy == "scale" else _rate_detectors
+            dets = self._detectors[metric] = mk(self.warmup_windows)
+        return dets
+
+    def _emit(self, alert: Alert) -> None:
+        self.alerts_total += 1
+        self.alerts.append(alert)
+        if len(self.alerts) > self._max_alerts_kept:
+            del self.alerts[: -self._max_alerts_kept]
+        if self.registry is not None:
+            key = (alert.metric, alert.kind)
+            c = self._counter_cache.get(key)
+            if c is None:
+                c = self._counter_cache[key] = self.registry.counter(
+                    "mon.alerts_total", metric=alert.metric, kind=alert.kind
+                )
+            c.inc()
+        self.tracer.instant(f"mon.alert.{alert.metric}")
+        if self._log is not None:
+            self._log.write(alert.as_dict())
+
+    def observe(self, step: int, metrics: Optional[dict] = None) -> list[Alert]:
+        """Process one cadence tick. Off-cadence calls return ``[]``
+        immediately. Returns the alerts fired on this tick."""
+        if not self.due(step):
+            return []
+        merged: dict[str, float] = {}
+        steps_delta: Optional[float] = None
+        if self.registry is not None:
+            snap = self.registry.snapshot()
+            if self._prev is not None:
+                delta = snap.delta(self._prev)
+                merged.update(derive_rates(delta))
+                # only arm the stall rule when the instrument exists —
+                # sum() over an absent key is 0.0, not "no progress"
+                if any(base_name(k) == "st.steps_total" for k in snap.values):
+                    steps_delta = delta.sum("st.steps_total")
+            self._prev = snap
+        if metrics:
+            merged.update(
+                {k: float(v) for k, v in metrics.items() if v is not None}
+            )
+
+        fired: list[Alert] = []
+        for m in self.watch:
+            if m not in merged:
+                continue
+            x = merged[m]
+            for det in self._detectors_for(m):
+                detail = det.update(x)
+                if detail is not None:
+                    fired.append(Alert(step, m, det.kind, x, detail))
+        for m, rule in self.thresholds.items():
+            if m in merged:
+                detail = rule.update(merged[m])
+                if detail is not None:
+                    fired.append(Alert(step, m, rule.kind, merged[m], detail))
+        if self._stall is not None and steps_delta is not None:
+            detail = self._stall.update(steps_delta)
+            if detail is not None:
+                fired.append(Alert(step, "st.steps_total", self._stall.kind, 0.0, detail))
+
+        for a in fired:
+            self._emit(a)
+        return fired
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        if self._log is not None:
+            self._log.close()
+
+    def __enter__(self) -> "HealthMonitor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

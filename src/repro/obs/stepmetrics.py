@@ -3,51 +3,69 @@
 One json object per line, one line per training step (or serving wave).
 The writer sanitizes numpy / jax scalars into plain python so the file is
 readable by anything (``benchmarks/obs_report.py`` is the in-repo
-consumer; the CI quick lane uploads the file as an artifact).
+consumer; the CI quick lane uploads the file as an artifact). Non-finite
+floats become ``null`` — ``json.dumps`` would otherwise emit bare
+``NaN``/``Infinity``, which strict JSON parsers (and the OpenMetrics
+pipeline downstream) reject.
 
 Reading a 0-d device array forces a host sync — the writer is therefore
 OPT-IN on the streamed driver (``step_writer=``): enabling step metrics
 trades a per-step device sync for the record, exactly like printing the
 loss would.
+
+``mode="a"`` appends instead of truncating: a restore-and-resume run
+keeps its pre-crash step history (and the monitor's alert log survives
+restarts). ``iter_step_metrics`` tolerates a torn *final* line — the
+crash-between-write-and-flush case — while still raising on corruption
+anywhere else in the file.
 """
 from __future__ import annotations
 
 import json
+import math
 import os
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
 
 def _to_py(v):
     """Best-effort scalar/array -> plain python (jax arrays included via
-    __array__)."""
-    if v is None or isinstance(v, (bool, int, float, str)):
+    __array__). Non-finite floats map to None (JSON null)."""
+    if v is None or isinstance(v, (bool, int, str)):
         return v
+    if isinstance(v, float):
+        return v if math.isfinite(v) else None
     if isinstance(v, (np.integer,)):
         return int(v)
     if isinstance(v, (np.floating,)):
-        return float(v)
+        f = float(v)
+        return f if math.isfinite(f) else None
     if isinstance(v, dict):
         return {str(k): _to_py(x) for k, x in v.items()}
     if isinstance(v, (list, tuple)):
         return [_to_py(x) for x in v]
     arr = np.asarray(v)
     if arr.ndim == 0:
-        return arr.item()
-    return arr.tolist()
+        return _to_py(arr.item())
+    return _to_py(arr.tolist())
 
 
 class StepMetricsWriter:
     """Append-per-step JSONL writer. ``flush_every=1`` (default) flushes
-    each line so a crashed run still leaves a readable file."""
+    each line so a crashed run still leaves a readable file. ``mode`` is
+    ``"w"`` (fresh file, the default) or ``"a"`` (resume: append to an
+    existing history)."""
 
-    def __init__(self, path: str, *, flush_every: int = 1):
+    def __init__(self, path: str, *, flush_every: int = 1, mode: str = "w"):
+        if mode not in ("w", "a"):
+            raise ValueError(f"mode must be 'w' or 'a', got {mode!r}")
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
         self.path = path
-        self._f = open(path, "w")
+        self.mode = mode
+        self._f = open(path, mode)
         self._flush_every = max(1, int(flush_every))
         self._since_flush = 0
         self.records_written = 0
@@ -73,14 +91,27 @@ class StepMetricsWriter:
         self.close()
 
 
-def read_step_metrics(path: str) -> list[dict]:
+def read_step_metrics(path: str, *, strict: bool = False) -> list[dict]:
     """Load every record of a step-metrics JSONL file."""
-    return list(iter_step_metrics(path))
+    return list(iter_step_metrics(path, strict=strict))
 
 
-def iter_step_metrics(path: str) -> Iterator[dict]:
+def iter_step_metrics(path: str, *, strict: bool = False) -> Iterator[dict]:
+    """Yield records. A torn FINAL line (crash between write and flush)
+    is silently dropped unless ``strict=True``; a malformed line with
+    valid records after it still raises — that is corruption, not a
+    crash artifact."""
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                yield json.loads(line)
+        lines = f.read().split("\n")
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            trailing = any(l.strip() for l in lines[i + 1 :])
+            if strict or trailing:
+                raise
+            return
+        yield rec

@@ -8,7 +8,10 @@ leave on the host hot path permanently.
 
 Events are buffered per thread (one list per ``threading.get_ident()``,
 appended without a lock — each thread owns its own list) and merged at
-export. ``export_chrome_trace`` writes the Chrome ``traceEvents`` JSON
+export. Buffers are bounded (``max_events_per_thread``, default ~262k):
+past the cap new events are dropped and counted, and the drop count
+surfaces as a ``tracer.dropped_events`` instant in ``events()`` and the
+Chrome export — always-on tracing can't grow memory without bound. ``export_chrome_trace`` writes the Chrome ``traceEvents`` JSON
 (also loadable in Perfetto: ui.perfetto.dev → Open trace file): one ``M``
 ``thread_name`` metadata event per thread plus ``X`` complete events with
 microsecond timestamps. Nesting needs no explicit parent ids — Chrome
@@ -52,11 +55,18 @@ class _Span:
         return False
 
 
+#: default per-thread event cap (~25 MB/thread at ~100 B/event). Always-on
+#: tracing in a long run stops growing here instead of eating the host.
+DEFAULT_MAX_EVENTS_PER_THREAD = 262_144
+
+
 class Tracer:
-    def __init__(self):
+    def __init__(self, max_events_per_thread: int = DEFAULT_MAX_EVENTS_PER_THREAD):
         self.enabled = False
+        self.max_events_per_thread = int(max_events_per_thread)
         self._buffers: dict[int, list] = {}  # tid -> [(name, t0_ns, dur_ns)]
         self._tnames: dict[int, str] = {}
+        self._dropped: dict[int, int] = {}  # tid -> events dropped past the cap
         self._pid = os.getpid()
 
     # -- recording ----------------------------------------------------------
@@ -75,6 +85,12 @@ class Tracer:
             # each thread creates only its OWN buffer: race-free under GIL
             buf = self._buffers[tid] = []
             self._tnames[tid] = threading.current_thread().name
+        if len(buf) >= self.max_events_per_thread:
+            # drop-after-cap (not a ring): the head of a run is the part a
+            # trace viewer needs to line spans up; the count of what was
+            # lost is surfaced via dropped_events()/events()/Chrome export
+            self._dropped[tid] = self._dropped.get(tid, 0) + 1
+            return
         buf.append((name, t0_ns, dur_ns))
 
     # -- lifecycle ----------------------------------------------------------
@@ -90,23 +106,45 @@ class Tracer:
     def clear(self) -> None:
         self._buffers = {}
         self._tnames = {}
+        self._dropped = {}
 
     # -- export -------------------------------------------------------------
 
+    def dropped_events(self) -> dict[int, int]:
+        """Per-thread count of events dropped past the cap (tid -> n)."""
+        return dict(self._dropped)
+
     def events(self) -> list[dict]:
         """Merged events sorted by start time: {name, tid, tname, ts_us,
-        dur_us} (dur_us is None for instants)."""
+        dur_us} (dur_us is None for instants). Threads that overflowed
+        the cap contribute one trailing ``tracer.dropped_events`` instant
+        carrying the drop ``count``."""
         out = []
+        last_ts: dict[int, float] = {}
         for tid, buf in list(self._buffers.items()):
             tname = self._tnames.get(tid, f"thread-{tid}")
             for name, t0_ns, dur_ns in list(buf):
+                ts = t0_ns / 1e3
                 out.append({
                     "name": name,
                     "tid": tid,
                     "tname": tname,
-                    "ts_us": t0_ns / 1e3,
+                    "ts_us": ts,
                     "dur_us": None if dur_ns < 0 else dur_ns / 1e3,
                 })
+                if ts > last_ts.get(tid, 0.0):
+                    last_ts[tid] = ts
+        for tid, n in list(self._dropped.items()):
+            if n <= 0:
+                continue
+            out.append({
+                "name": "tracer.dropped_events",
+                "tid": tid,
+                "tname": self._tnames.get(tid, f"thread-{tid}"),
+                "ts_us": last_ts.get(tid, 0.0),
+                "dur_us": None,
+                "count": n,
+            })
         out.sort(key=lambda e: e["ts_us"])
         return out
 
@@ -121,10 +159,13 @@ class Tracer:
             })
         for e in self.events():
             if e["dur_us"] is None:
-                evs.append({
+                ev = {
                     "name": e["name"], "ph": "i", "s": "t",
                     "pid": self._pid, "tid": e["tid"], "ts": e["ts_us"],
-                })
+                }
+                if "count" in e:  # tracer.dropped_events marker
+                    ev["args"] = {"count": e["count"]}
+                evs.append(ev)
             else:
                 evs.append({
                     "name": e["name"], "ph": "X",

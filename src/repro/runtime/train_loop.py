@@ -93,10 +93,19 @@ def train(
     log_every: int = 10,
     log: Callable[[str], None] = print,
     step_writer: Optional[StepMetricsWriter] = None,
+    registry=None,
+    monitor=None,
 ) -> TrainState:
     """``step_writer`` (obs.StepMetricsWriter) appends one JSONL record per
     step — step / loss / wall ms / straggler flag. The loop already syncs
-    on the loss every step, so enabling it costs nothing extra."""
+    on the loss every step, so enabling it costs nothing extra.
+
+    ``registry`` (an ``obs.Registry``) turns on live instruments —
+    ``train.steps_total`` / ``train.loss`` / ``train.step_ms`` /
+    ``train.straggler_total`` — so a ``--metrics-port`` scrape endpoint
+    over the same registry shows the run progressing. ``monitor`` (an
+    ``obs.HealthMonitor``) gets the loss and step wall time at its
+    cadence (the loop syncs on the loss anyway, so this is free)."""
     params = api.init_params(cfg, jax.random.key(seed))
     opt_state = optimizer.init(params)
     ef_state = make_ef_state(params) if compression != "none" else 0
@@ -110,6 +119,14 @@ def train(
 
     step_fn = make_train_step(cfg, optimizer, compression=compression)
     detector = StragglerDetector()
+
+    if registry is not None:
+        c_steps = registry.counter("train.steps_total")
+        g_loss = registry.gauge("train.loss")
+        h_step_ms = registry.histogram("train.step_ms")
+        c_straggler = registry.counter("train.straggler_total")
+    if monitor is not None and registry is not None:
+        monitor.bind(registry)
 
     def produce(step: int) -> dict:
         b = stream.batch_at(step)
@@ -128,6 +145,16 @@ def train(
             if is_straggler:
                 log(f"[train] straggler step {step_no}: {dt * 1e3:.1f}ms")
             losses.append(float(metrics["loss"]))
+            if registry is not None:
+                c_steps.inc()
+                g_loss.set(losses[-1])
+                h_step_ms.observe(dt * 1e3)
+                if is_straggler:
+                    c_straggler.inc()
+            if monitor is not None and monitor.due(step_no):
+                monitor.observe(
+                    step_no, metrics={"loss": losses[-1], "step_ms": dt * 1e3}
+                )
             if step_writer is not None:
                 step_writer.write(
                     {

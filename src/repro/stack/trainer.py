@@ -131,7 +131,14 @@ class MultiTableTrainer:
     For ``tc_streamed`` pass ``store_path`` to ``init`` (plus any
     ``init_streamed`` knobs at construction); stepping then goes through
     the host driver (write-back overlap, slice ring, prefetch barrier).
-    All other systems step through the bare jitted device step."""
+    All other systems step through the bare jitted device step.
+
+    ``monitor`` (an ``obs.HealthMonitor``) turns on live health
+    detection: at the monitor's cadence ``step`` feeds it the device
+    hit rate and loss (a device sync, paid only on cadence ticks) and,
+    once ``init`` has bound it to the streamed registry, the windowed
+    rates (prefetch coverage, ring hit rate, host_us_per_step) derive
+    from snapshot deltas automatically."""
 
     def __init__(
         self,
@@ -146,6 +153,7 @@ class MultiTableTrainer:
         checkpoint_dir: Optional[str] = None,
         keep_last: int = 3,
         step_writer=None,
+        monitor=None,
         **streamed_kw,
     ):
         self.cfg = cfg
@@ -157,6 +165,7 @@ class MultiTableTrainer:
         self.registry = registry
         self.tracer = tracer
         self.step_writer = step_writer
+        self.monitor = monitor
         self.streamed = None
         self._streamed_kw = streamed_kw
         if checkpoint_dir is not None:
@@ -184,6 +193,10 @@ class MultiTableTrainer:
                 lr=self.lr, decay=self.decay, step_writer=self.step_writer,
             )
             self._promote_fn = make_streamed_promote(self.streamed)
+            if self.monitor is not None:
+                # the registry may have been created inside init_streamed;
+                # bind() is a no-op when the monitor already has one
+                self.monitor.bind(self.streamed.registry)
         else:
             state = self.stack.init_state(key, **kw)
             device_step = make_device_step(self.stack)
@@ -198,6 +211,16 @@ class MultiTableTrainer:
         self.steps_done += 1
         if self.promote_every and self.steps_done % self.promote_every == 0:
             state = self._promote_fn(state)
+        if self.monitor is not None and self.monitor.due(self.steps_done):
+            metrics = {}
+            lv = loss["loss"] if isinstance(loss, dict) else loss
+            try:
+                metrics["loss"] = float(lv)  # device sync, cadence-only
+            except (TypeError, ValueError):
+                pass
+            if isinstance(state, dict) and "hit_rate" in state:
+                metrics["hit_rate"] = float(state["hit_rate"])
+            self.monitor.observe(self.steps_done, metrics=metrics)
         return state, loss
 
     def promote(self, state):

@@ -1,0 +1,425 @@
+"""obs.export + obs.fleet: OpenMetrics rendering, scrape endpoint, spill
+files and fleet merge.
+
+The exposition tests run a strict line-grammar parser (names, label
+escaping, value syntax, ``# TYPE`` before samples, ``# EOF`` last) —
+OpenMetrics validity is asserted structurally, not by substring. The
+scrape test drives a REAL tc_streamed run with the server attached and
+checks the acceptance contract: after thread join, every counter parsed
+back out of ``GET /metrics`` equals the in-process snapshot exactly, and
+per-rank spill files fleet-merge back to ``Snapshot.sum``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+import threading
+import urllib.request
+
+import pytest
+
+import jax
+
+from repro.obs.export import (
+    MetricsServer,
+    filter_snapshot,
+    metric_name,
+    parse_key,
+    read_snapshot_spill,
+    render_openmetrics,
+    serve_metrics,
+    write_snapshot_spill,
+)
+from repro.obs.fleet import fleet_snapshot, merge_snapshots, read_fleet_spills
+from repro.obs.registry import HistogramSnapshot, Registry, Snapshot
+
+# ---------------------------------------------------------------------------
+# strict OpenMetrics line-grammar parser (the test oracle)
+# ---------------------------------------------------------------------------
+
+_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_LABEL_PAIR = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\\n]|\\["\\n])*)"')
+_SAMPLE = re.compile(
+    rf"^({_NAME})(\{{(.*)\}})? (-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?|[+-]Inf|NaN)$"
+)
+_TYPE_LINE = re.compile(rf"^# TYPE ({_NAME}) (counter|gauge|histogram)$")
+
+
+def parse_openmetrics_strict(text: str):
+    """Parse + validate an exposition. Returns (families, samples) where
+    families = {name: type} and samples = {(sample_name, label_tuple):
+    float}. Raises AssertionError on any grammar or structure violation."""
+    lines = text.split("\n")
+    assert lines[-1] == "", "must end with a newline"
+    lines = lines[:-1]
+    assert lines[-1] == "# EOF", "must terminate with # EOF"
+    families: dict[str, str] = {}
+    samples: dict[tuple, float] = {}
+    for ln in lines[:-1]:
+        if ln.startswith("#"):
+            m = _TYPE_LINE.match(ln)
+            assert m, f"bad comment line: {ln!r}"
+            assert m.group(1) not in families, f"duplicate TYPE for {m.group(1)}"
+            families[m.group(1)] = m.group(2)
+            continue
+        m = _SAMPLE.match(ln)
+        assert m, f"bad sample line: {ln!r}"
+        name, labels_body, value = m.group(1), m.group(3), m.group(4)
+        labels = ()
+        if labels_body is not None:
+            # the label body must be exactly comma-joined valid pairs
+            pairs = _LABEL_PAIR.findall(labels_body)
+            rebuilt = ",".join(f'{k}="{v}"' for k, v in pairs)
+            assert rebuilt == labels_body, f"bad label body: {labels_body!r}"
+            labels = tuple(pairs)
+        # sample must belong to a declared family with the right suffix
+        fam = next(
+            (
+                f
+                for f in families
+                if name == f
+                or (families[f] == "counter" and name == f + "_total")
+                or (
+                    families[f] == "histogram"
+                    and name in (f + "_bucket", f + "_sum", f + "_count")
+                )
+            ),
+            None,
+        )
+        assert fam is not None, f"sample {name!r} has no TYPE family"
+        if families[fam] == "counter":
+            assert name == fam + "_total", f"counter sample {name!r} missing _total"
+        if families[fam] == "histogram" and name == fam + "_bucket":
+            assert any(k == "le" for k, _ in labels), "bucket without le label"
+        key = (name, labels)
+        assert key not in samples, f"duplicate sample {key}"
+        samples[key] = float(value)
+    # histogram structure: buckets cumulative-monotone, +Inf == _count
+    for fam, typ in families.items():
+        if typ != "histogram":
+            continue
+        by_set: dict[tuple, list] = {}
+        for (name, labels), v in samples.items():
+            if name == fam + "_bucket":
+                rest = tuple(p for p in labels if p[0] != "le")
+                le = dict(labels)["le"]
+                by_set.setdefault(rest, []).append((le, v))
+        for rest, buckets in by_set.items():
+            def le_key(le):
+                return math.inf if le == "+Inf" else float(le)
+
+            ordered = sorted(buckets, key=lambda p: le_key(p[0]))
+            vals = [v for _, v in ordered]
+            assert vals == sorted(vals), f"non-monotone buckets for {fam}{rest}"
+            assert ordered[-1][0] == "+Inf", f"missing +Inf bucket for {fam}{rest}"
+            count = samples[(fam + "_count", rest)]
+            assert ordered[-1][1] == count, "le=+Inf bucket != _count"
+            assert (fam + "_sum", rest) in samples
+    return families, samples
+
+
+# ---------------------------------------------------------------------------
+# rendering units
+# ---------------------------------------------------------------------------
+
+
+def test_metric_name_sanitization_and_key_parse():
+    assert metric_name("ws.covered_rows") == "ws_covered_rows"
+    assert metric_name("a-b c") == "a_b_c"
+    assert metric_name("0bad") == "_0bad"
+    assert parse_key("ws.rows{shard=1,table=0}") == (
+        "ws.rows",
+        {"shard": "1", "table": "0"},
+    )
+    assert parse_key("plain") == ("plain", {})
+
+
+def test_render_counters_gauges_labels_and_eof():
+    reg = Registry()
+    reg.counter("st.steps_total").inc(7)  # name already carries _total
+    reg.counter("ws.covered_rows", table=0, shard=1).inc(100)
+    reg.gauge("q.depth").set(-2.5)
+    text = render_openmetrics(reg.snapshot())
+    families, samples = parse_openmetrics_strict(text)
+    assert families["st_steps"] == "counter"
+    assert families["ws_covered_rows"] == "counter"
+    assert families["q_depth"] == "gauge"
+    assert samples[("st_steps_total", ())] == 7.0
+    assert samples[("ws_covered_rows_total", (("shard", "1"), ("table", "0")))] == 100.0
+    assert samples[("q_depth", ())] == -2.5
+    assert text.rstrip("\n").endswith("# EOF")
+
+
+def test_render_collector_entries_as_counters():
+    reg = Registry()
+    reg.register_collector(lambda: {"store.read_bytes": 4096}, table=2)
+    _, samples = parse_openmetrics_strict(render_openmetrics(reg.snapshot()))
+    assert samples[("store_read_bytes_total", (("table", "2"),))] == 4096.0
+
+
+def test_render_label_escaping_survives_strict_parse():
+    snap = Snapshot(
+        0.0,
+        {'g.weird{path=a\\b"c}': 1.0},
+        {},
+        {'g.weird{path=a\\b"c}': "gauge"},
+    )
+    text = render_openmetrics(snap)
+    _, samples = parse_openmetrics_strict(text)
+    assert samples[("g_weird", (("path", 'a\\\\b\\"c'),))] == 1.0
+
+
+def test_render_histogram_buckets_cumulative_and_monotone():
+    reg = Registry()
+    h = reg.histogram("st.gather_ms", table=0)
+    for v in (0.5, 1.5, 1.5, 5000.0):  # last one overflows the top bound
+        h.observe(v)
+    text = render_openmetrics(reg.snapshot())
+    families, samples = parse_openmetrics_strict(text)
+    assert families["st_gather_ms"] == "histogram"
+    rest = (("table", "0"),)
+    assert samples[("st_gather_ms_count", rest)] == 4.0
+    assert samples[("st_gather_ms_sum", rest)] == pytest.approx(5003.5)
+    inf_bucket = samples[("st_gather_ms_bucket", rest + (("le", "+Inf"),))]
+    assert inf_bucket == 4.0
+
+
+def test_render_nonfinite_gauges_use_spec_spellings():
+    snap = Snapshot(
+        0.0,
+        {"g.nan": float("nan"), "g.inf": float("inf")},
+        {},
+        {"g.nan": "gauge", "g.inf": "gauge"},
+    )
+    text = render_openmetrics(snap)
+    _, samples = parse_openmetrics_strict(text)
+    assert math.isnan(samples[("g_nan", ())])
+    assert samples[("g_inf", ())] == math.inf
+
+
+def test_render_name_collision_raises():
+    snap = Snapshot(
+        0.0,
+        {"a.b": 1.0, "a_b": 2.0},
+        {},
+        {"a.b": "gauge", "a_b": "gauge"},
+    )
+    with pytest.raises(ValueError, match="collision"):
+        render_openmetrics(snap)
+
+
+# ---------------------------------------------------------------------------
+# spill files
+# ---------------------------------------------------------------------------
+
+
+def _mk_snapshot(*, steps=10, depth=2.0, hist_vals=(1.0, 2.0), at=100.0) -> Snapshot:
+    reg = Registry()
+    reg.counter("st.steps_total", shard=0).inc(steps)
+    reg.gauge("q.depth").set(depth)
+    h = reg.histogram("st.gather_ms", shard=0)
+    for v in hist_vals:
+        h.observe(v)
+    snap = reg.snapshot()
+    snap.at = at
+    return snap
+
+
+def test_spill_roundtrip_exact(tmp_path):
+    snap = _mk_snapshot()
+    p = write_snapshot_spill(str(tmp_path / "rank_00.json"), snap, rank=0)
+    back, meta = read_snapshot_spill(p)
+    assert meta["rank"] == 0 and meta["version"] == 1
+    assert back.at == snap.at
+    assert back.values == snap.values
+    assert back.kinds == snap.kinds
+    hb, ha = back.hists["st.gather_ms{shard=0}"], snap.hists["st.gather_ms{shard=0}"]
+    assert (hb.bounds, hb.counts, hb.n, hb.total, hb.min, hb.max) == (
+        ha.bounds, list(ha.counts), ha.n, ha.total, ha.min, ha.max,
+    )
+    # atomic write: no tmp litter left behind
+    assert os.listdir(tmp_path) == ["rank_00.json"]
+
+
+def test_filter_snapshot_by_shard_label():
+    reg = Registry()
+    reg.counter("ws.rows", shard=0, table=0).inc(1)
+    reg.counter("ws.rows", shard=1, table=0).inc(2)
+    reg.gauge("dist.alltoall_bytes").set(512)  # process-global, unlabeled
+    snap = reg.snapshot()
+    s0 = filter_snapshot(snap, {"shard": 0}, include_unlabeled=True)
+    s1 = filter_snapshot(snap, {"shard": 1})
+    assert set(s0.values) == {"ws.rows{shard=0,table=0}", "dist.alltoall_bytes"}
+    assert set(s1.values) == {"ws.rows{shard=1,table=0}"}
+
+
+# ---------------------------------------------------------------------------
+# fleet merge semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_merge_counters_sum_gauges_lww_hists_bucket_add():
+    a = _mk_snapshot(steps=10, depth=1.0, hist_vals=(1.0,), at=100.0)
+    b = _mk_snapshot(steps=32, depth=9.0, hist_vals=(2.0, 3.0), at=200.0)
+    m = merge_snapshots([b, a])  # order must not matter for LWW (at does)
+    assert m.values["st.steps_total{shard=0}"] == 42
+    assert m.values["q.depth"] == 9.0  # b spilled later -> wins
+    h = m.hists["st.gather_ms{shard=0}"]
+    assert h.n == 3 and h.total == 6.0 and h.min == 1.0 and h.max == 3.0
+    assert sum(h.counts) == 3
+    assert m.at == 200.0
+
+
+def test_fleet_merge_ragged_rank_sets():
+    a = _mk_snapshot(steps=5)
+    reg = Registry()
+    reg.counter("wb.commit_rows", shard=1).inc(77)  # key a never saw
+    b = reg.snapshot()
+    m = merge_snapshots([a, b])
+    assert m.values["st.steps_total{shard=0}"] == 5
+    assert m.values["wb.commit_rows{shard=1}"] == 77
+
+
+def test_fleet_merge_conflicts_raise():
+    bounds = (1.0, 2.0)
+    ha = Snapshot(0.0, {}, {"h": HistogramSnapshot(bounds, [1, 0, 0], 1, 1.0, 1.0, 1.0)}, {"h": "histogram"})
+    hb = Snapshot(1.0, {}, {"h": HistogramSnapshot((1.0, 3.0), [1, 0, 0], 1, 1.0, 1.0, 1.0)}, {"h": "histogram"})
+    with pytest.raises(ValueError, match="bounds"):
+        merge_snapshots([ha, hb])
+    ka = Snapshot(0.0, {"x": 1.0}, {}, {"x": "counter"})
+    kb = Snapshot(1.0, {"x": 2.0}, {}, {"x": "gauge"})
+    with pytest.raises(ValueError, match="kind"):
+        merge_snapshots([ka, kb])
+
+
+def test_fleet_spill_dir_roundtrip(tmp_path):
+    a = _mk_snapshot(steps=10, at=100.0)
+    b = _mk_snapshot(steps=20, at=101.0)
+    write_snapshot_spill(str(tmp_path / "rank_00.json"), a, rank=0)
+    write_snapshot_spill(str(tmp_path / "rank_01.json"), b, rank=1)
+    spills = read_fleet_spills(str(tmp_path))
+    assert [m["rank"] for _, m in spills] == [0, 1]
+    m = fleet_snapshot(str(tmp_path))
+    assert m.sum("st.steps_total") == 30
+    assert fleet_snapshot(str(tmp_path / "empty")) is None
+
+
+# ---------------------------------------------------------------------------
+# scrape endpoint
+# ---------------------------------------------------------------------------
+
+
+def _get(url: str):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read().decode()
+
+
+def test_metrics_server_endpoints():
+    reg = Registry()
+    reg.counter("st.steps_total").inc(3)
+    with MetricsServer(reg) as srv:
+        status, ctype, body = _get(srv.url + "/metrics")
+        assert status == 200 and "openmetrics-text" in ctype
+        _, samples = parse_openmetrics_strict(body)
+        assert samples[("st_steps_total", ())] == 3.0
+        status, _, body = _get(srv.url + "/healthz")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+
+
+def test_metrics_server_merges_multiple_sources():
+    r1, r2 = Registry(), Registry()
+    r1.counter("st.steps_total").inc(4)
+    r2.counter("st.steps_total").inc(6)
+    with serve_metrics(r1, r2) as srv:
+        _, samples = parse_openmetrics_strict(_get(srv.url + "/metrics")[2])
+        assert samples[("st_steps_total", ())] == 10.0
+
+
+def test_live_scrape_on_streamed_run_exact_after_join(tmp_path):
+    """Acceptance: GET /metrics during a live tc_streamed run (write-back
+    + prefetch threads running) returns strictly-valid OpenMetrics; after
+    the run joins its threads, the scraped counters equal the in-process
+    snapshot EXACTLY, and two per-label spills fleet-merge back to
+    ``Snapshot.sum``."""
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+    from repro.runtime import dlrm_train
+
+    cfg = DLRMConfig(
+        name="scrape-test", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=256, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=2, rows_per_table=256, gathers_per_table=4, batch=4,
+        s=1.05, seed=0,
+    )
+    cs = CastingServer(rows_per_table=256, with_counts=True, with_lookup_seg=True)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=16, resident_rows=64,
+    )
+    step = dlrm_train.make_streamed_train_step(cfg, streamed)
+    with serve_metrics(streamed.registry) as srv:
+        with streamed:
+            for i in range(12):
+                state, _ = step(state, cs(stream.batch_at(i)))
+                if i == 6:  # live mid-run scrape under real worker threads
+                    status, _, body = _get(srv.url + "/metrics")
+                    assert status == 200
+                    _, live = parse_openmetrics_strict(body)
+                    assert live[("st_steps_total", ())] >= 1.0
+        # streamed.__exit__ joined the wb/prefetch threads: exact now
+        snap = streamed.registry.snapshot()
+        _, samples = parse_openmetrics_strict(_get(srv.url + "/metrics")[2])
+
+    from repro.obs.export import metric_name as mn
+    from repro.obs.export import parse_key as pk
+
+    for key, v in snap.values.items():
+        raw, labels = pk(key)
+        kind = snap.kinds[key]
+        name = mn(raw)
+        if kind in ("counter", "collector"):
+            if not name.endswith("_total"):
+                name += "_total"
+        lbl = tuple(sorted((mn(k), str(x)) for k, x in labels.items()))
+        assert samples[(name, lbl)] == float(v), key
+
+    # per-table spills -> fleet merge == Snapshot.sum, exactly
+    d = str(tmp_path / "spills")
+    for t in range(cfg.num_tables):
+        sub = filter_snapshot(snap, {"table": t}, include_unlabeled=(t == 0))
+        write_snapshot_spill(os.path.join(d, f"rank_{t:02d}.json"), sub, rank=t)
+    merged = fleet_snapshot(d)
+    for name in ("ws.covered_rows", "ws.sync_fault_rows", "store.read_bytes"):
+        assert merged.sum(name) == snap.sum(name), name
+    assert merged.sum("st.steps_total") == 12
+
+
+def test_metrics_server_render_concurrent_with_writers():
+    """Scrapes must never tear or raise while writer threads hammer the
+    registry (the snapshot contract extended through the renderer)."""
+    reg = Registry()
+    c = reg.counter("hammer.n")
+    stop = threading.Event()
+
+    def work():
+        while not stop.is_set():
+            c.inc()
+
+    t = threading.Thread(target=work)
+    t.start()
+    try:
+        with MetricsServer(reg) as srv:
+            for _ in range(10):
+                _, samples = parse_openmetrics_strict(_get(srv.url + "/metrics")[2])
+                assert samples[("hammer_n_total", ())] >= 0.0
+    finally:
+        stop.set()
+        t.join()

@@ -1,0 +1,319 @@
+"""obs.monitor + the non-stationary synth scenario.
+
+Detector units (EWMA band, Page-Hinkley, threshold, stall) on synthetic
+series; ``derive_rates`` window semantics (empty windows omit rates, so
+they can never alert); the ``DriftingDLRMStream`` scenario contract
+(deterministic, reduces to ``DLRMStream`` when stationary, head churn
+actually moves the head); and the PR acceptance integration: a real
+tc_streamed run through ``MultiTableTrainer(monitor=...)`` raises a
+drift alert within a few steps of the simulated break and stays silent
+on stationary traffic.
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synth import DLRMStream, DriftingDLRMStream
+from repro.obs.monitor import (
+    EwmaBand,
+    HealthMonitor,
+    PageHinkley,
+    StallRule,
+    ThresholdRule,
+    derive_rates,
+)
+from repro.obs.registry import Registry
+from repro.obs.stepmetrics import read_step_metrics
+from repro.obs.tracing import Tracer
+
+# ---------------------------------------------------------------------------
+# detector units
+# ---------------------------------------------------------------------------
+
+
+def _series(rng, mean, noise, n):
+    return [mean + noise * rng.uniform(-1, 1) for _ in range(n)]
+
+
+def test_ewma_band_warmup_then_fires_on_jump():
+    rng = random.Random(0)
+    det = EwmaBand(k=6.0, warmup=8, std_floor=0.02)
+    for x in _series(rng, 0.9, 0.01, 30):
+        assert det.update(x) is None
+    d = det.update(0.5)
+    assert d is not None and abs(d["z"]) > 6.0
+
+
+def test_ewma_band_std_floor_absorbs_numeric_dust():
+    det = EwmaBand(k=6.0, warmup=4, std_floor=0.02)
+    for _ in range(10):
+        assert det.update(1.0) is None  # zero variance: floor saves us
+    assert det.update(1.05) is None  # 2.5 sigma at the floor: inside band
+    assert det.update(0.5) is not None  # 25 sigma: out
+
+
+def test_page_hinkley_fires_on_sustained_shift_both_directions():
+    rng = random.Random(1)
+    for sign in (+1, -1):
+        det = PageHinkley(delta=0.01, threshold=0.5, warmup=8)
+        fired_at = None
+        xs = _series(rng, 0.8, 0.02, 40) + _series(rng, 0.8 + sign * 0.4, 0.02, 10)
+        for i, x in enumerate(xs):
+            if det.update(x) is not None:
+                fired_at = i
+                break
+        assert fired_at is not None and 40 <= fired_at <= 44, (sign, fired_at)
+
+
+def test_page_hinkley_ignores_single_spike():
+    rng = random.Random(2)
+    det = PageHinkley(delta=0.01, threshold=0.5, warmup=8)
+    xs = _series(rng, 0.8, 0.02, 60)
+    xs[30] = 0.55  # one moderate dip, level unchanged after
+    assert all(det.update(x) is None for x in xs)
+
+
+def test_page_hinkley_normalized_is_scale_free():
+    rng = random.Random(3)
+    fired = {}
+    for scale in (1.0, 1e4):
+        det = PageHinkley(delta=0.05, threshold=2.0, warmup=8, normalize=True)
+        xs = _series(rng, scale, 0.02 * scale, 30) + _series(
+            rng, 2.0 * scale, 0.02 * scale, 10
+        )
+        fired[scale] = next(
+            (i for i, x in enumerate(xs) if det.update(x) is not None), None
+        )
+    assert fired[1.0] is not None and fired[1e4] is not None
+    assert abs(fired[1.0] - fired[1e4]) <= 2  # same behavior at both scales
+
+
+def test_page_hinkley_resets_after_fire():
+    det = PageHinkley(delta=0.01, threshold=0.3, warmup=4)
+    xs = [1.0] * 10 + [2.0] * 6
+    fires = [i for i, x in enumerate(xs) if det.update(x) is not None]
+    assert len(fires) == 1  # one break -> one alert (state reset re-learns 2.0)
+
+
+def test_threshold_rule_fires_on_transition_only():
+    rule = ThresholdRule(min=0.5)
+    assert rule.update(0.8) is None
+    assert rule.update(0.4) is not None  # transition in
+    assert rule.update(0.3) is None  # still violating: no repeat
+    assert rule.update(0.7) is None  # recovered
+    assert rule.update(0.2) is not None  # new violation
+
+
+def test_stall_rule_needs_consecutive_zero_windows():
+    rule = StallRule(after=3)
+    assert rule.update(5) is None
+    assert rule.update(0) is None
+    assert rule.update(0) is None
+    assert rule.update(0) is not None  # third consecutive zero window
+    assert rule.update(0) is None  # fired once per stall
+    assert rule.update(4) is None  # progress re-arms
+    assert [rule.update(0) for _ in range(3)][-1] is not None
+
+
+# ---------------------------------------------------------------------------
+# derive_rates window semantics
+# ---------------------------------------------------------------------------
+
+
+def test_derive_rates_from_registry_delta_and_empty_window():
+    reg = Registry()
+    reg.counter("ws.covered_rows", table=0).inc(90)
+    reg.counter("ws.sync_fault_rows", table=0).inc(10)
+    reg.counter("ring.hit_lanes").inc(100)
+    reg.counter("st.steps_total").inc(4)
+    reg.counter("st.gather_seconds").inc(0.4)
+    reg.counter("wb.gate_wait_seconds").inc(0.2)
+    reg.counter("wb.sync_commit_seconds").inc(0.2)
+    base = reg.snapshot()
+    rates = derive_rates(base.delta(Registry().snapshot()))
+    assert rates["prefetch_coverage"] == pytest.approx(0.9)
+    assert rates["ring_hit_rate"] == pytest.approx(0.5)
+    assert rates["host_us_per_step"] == pytest.approx(0.2e6)
+    # empty window: every rate omitted -> nothing to alert on
+    assert derive_rates(reg.snapshot().delta(base)) == {}
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor harness
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_silent_on_stationary_fires_after_break(tmp_path):
+    rng = random.Random(0)
+    log = str(tmp_path / "alerts.jsonl")
+    tracer = Tracer()
+    tracer.start()
+    reg = Registry()
+    mon = HealthMonitor(
+        reg, every=1, warmup_windows=8, watch=("hit_rate",),
+        alert_log=log, tracer=tracer,
+    )
+    first = None
+    for s in range(80):
+        v = 0.9 if s < 50 else 0.55
+        fired = mon.observe(s, metrics={"hit_rate": v + 0.01 * rng.uniform(-1, 1)})
+        if fired and first is None:
+            first = s
+    mon.close()
+    tracer.stop()
+    assert first is not None and 50 <= first <= 54
+    # three surfaces: counter, tracer instant, JSONL log
+    assert reg.snapshot().sum("mon.alerts_total") == len(mon.alerts) > 0
+    assert any(e["name"] == "mon.alert.hit_rate" for e in tracer.events())
+    recs = read_step_metrics(log)
+    assert len(recs) == len(mon.alerts)
+    assert recs[0]["metric"] == "hit_rate" and recs[0]["step"] == first
+
+
+def test_monitor_off_cadence_observe_is_noop():
+    mon = HealthMonitor(every=4, warmup_windows=1, watch=("hit_rate",))
+    assert not mon.due(3)
+    assert mon.observe(3, metrics={"hit_rate": 0.0}) == []
+    assert mon.due(4)
+
+
+def test_monitor_threshold_and_stall_via_registry():
+    reg = Registry()
+    c = reg.counter("st.steps_total")
+    mon = HealthMonitor(
+        reg, every=1, warmup_windows=2, watch=(),
+        thresholds={"prefetch_coverage": {"min": 0.5}}, stall_after=2,
+    )
+    c.inc()
+    mon.observe(0)  # establishes the baseline snapshot
+    cov = reg.counter("ws.covered_rows", table=0)
+    flt = reg.counter("ws.sync_fault_rows", table=0)
+    cov.inc(9); flt.inc(1); c.inc()
+    assert mon.observe(1) == []  # coverage 0.9: fine
+    flt.inc(10); c.inc()
+    fired = mon.observe(2)
+    assert [a.kind for a in fired] == ["threshold"]
+    # now stall: steps counter stops moving for 2 windows
+    assert mon.observe(3) == []
+    stall = mon.observe(4)
+    assert [a.kind for a in stall] == ["stall"]
+    # empty-window rates were omitted, so threshold did NOT re-fire
+
+
+def test_monitor_alert_log_appends_across_restarts(tmp_path):
+    log = str(tmp_path / "alerts.jsonl")
+    for _ in range(2):
+        mon = HealthMonitor(
+            every=1, warmup_windows=1, watch=(),
+            thresholds={"x": {"max": 1.0}}, stall_after=0, alert_log=log,
+        )
+        mon.observe(0, metrics={"x": 5.0})
+        mon.close()
+    recs = read_step_metrics(log)
+    assert len(recs) == 2  # mode="a": the first run's alert survived
+
+
+# ---------------------------------------------------------------------------
+# DriftingDLRMStream scenario
+# ---------------------------------------------------------------------------
+
+
+def test_drifting_stream_stationary_equals_dlrm_stream():
+    kw = dict(num_tables=2, rows_per_table=512, gathers_per_table=4, batch=8, seed=3)
+    a = DLRMStream(s=1.05, **kw)
+    b = DriftingDLRMStream(s_base=1.05, **kw)
+    for step in (0, 7, 31):
+        ba, bb = a.batch_at(step), b.batch_at(step)
+        assert np.array_equal(ba["idx"], bb["idx"])
+        assert np.array_equal(ba["dense"], bb["dense"])
+        assert np.array_equal(ba["labels"], bb["labels"])
+
+
+def test_drifting_stream_deterministic_and_break_moves_head():
+    kw = dict(num_tables=1, rows_per_table=2048, gathers_per_table=8, batch=64,
+              s_base=1.2, break_step=10, head_size=32, churn_frac=1.0, seed=0)
+    c = DriftingDLRMStream(**kw)
+    assert np.array_equal(c.batch_at(12)["idx"], DriftingDLRMStream(**kw).batch_at(12)["idx"])
+    from collections import Counter
+
+    pre = Counter(np.concatenate([c.batch_at(s)["idx"].ravel() for s in range(5)]))
+    post = Counter(np.concatenate([c.batch_at(s)["idx"].ravel() for s in range(10, 15)]))
+    top_pre = {k for k, _ in pre.most_common(16)}
+    top_post = {k for k, _ in post.most_common(16)}
+    assert len(top_pre & top_post) < 8  # the head is substantially new ids
+    # marginal skew unchanged: same number of distinct hot ids either side
+    assert abs(len(top_pre) - len(top_post)) == 0
+
+
+def test_drifting_stream_zipf_cycle():
+    d = DriftingDLRMStream(
+        num_tables=1, rows_per_table=512, gathers_per_table=4, batch=8,
+        s_base=1.0, s_amplitude=0.2, s_period=40,
+    )
+    assert d.s_at(0) == pytest.approx(1.0)
+    assert d.s_at(10) == pytest.approx(1.2)
+    assert d.s_at(30) == pytest.approx(0.8)
+    # sharper exponent -> more concentrated head in the sampled ids
+    sharp = d.batch_at(10)["idx"]
+    flat = d.batch_at(30)["idx"]
+    assert np.unique(sharp).size < np.unique(flat).size
+
+
+# ---------------------------------------------------------------------------
+# acceptance integration: trainer + monitor + drifting stream
+# ---------------------------------------------------------------------------
+
+
+def _drift_run(tmp_path, *, break_step, steps=56, seed=0):
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.stack.trainer import MultiTableTrainer
+
+    cfg = DLRMConfig(
+        name="drift-accept", num_tables=2, gathers_per_table=4,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=1024, emb_dim=8,
+    )
+    stream = DriftingDLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=64,
+        s_base=1.2, break_step=break_step, head_size=64, churn_frac=1.0,
+        seed=seed,
+    )
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    mon = HealthMonitor(every=2, warmup_windows=8, watch=("hit_rate",))
+    trainer = MultiTableTrainer(
+        cfg, system="tc_streamed", promote_every=4, monitor=mon,
+        capacity=96, resident_rows=256, prefetch=2,
+    )
+    state = trainer.init(
+        jax.random.key(0), store_path=str(tmp_path / f"store_{break_step}")
+    )
+    with trainer.streamed:
+        for s in range(steps):
+            batch = jax.tree_util.tree_map(jnp.asarray, cs(stream.batch_at(s)))
+            state, _ = trainer.step(state, batch)
+    return mon
+
+
+def test_drift_alert_within_n_steps_of_break_silent_on_stationary(tmp_path):
+    """PR acceptance: the simulated head-churn break at step 36 raises a
+    drift alert within 8 steps; the identical stationary run raises
+    ZERO alerts."""
+    broke = _drift_run(tmp_path, break_step=36)
+    pre_break = [a for a in broke.alerts if a.step < 36]
+    assert pre_break == []
+    fired = [a for a in broke.alerts if 36 <= a.step <= 44]
+    assert fired and fired[0].metric == "hit_rate"
+    # registry counter surface agrees (bound to the streamed registry)
+    assert broke.registry.snapshot().sum("mon.alerts_total") == len(broke.alerts)
+
+    stationary = _drift_run(tmp_path, break_step=None)
+    assert stationary.alerts == []

@@ -31,7 +31,12 @@ from repro.obs.registry import (
     base_name,
     default_registry,
 )
-from repro.obs.stepmetrics import StepMetricsWriter, read_step_metrics
+from repro.obs.stepmetrics import (
+    StepMetricsWriter,
+    _to_py,
+    iter_step_metrics,
+    read_step_metrics,
+)
 from repro.obs.tracing import Tracer, overlap_us
 
 
@@ -264,6 +269,51 @@ def test_tracer_start_clears_previous_buffers():
     assert [e["name"] for e in tr.events()] == ["new"]
 
 
+def test_tracer_per_thread_buffer_cap_surfaces_drops(tmp_path):
+    tr = Tracer(max_events_per_thread=10)
+    tr.start()
+    for i in range(25):
+        tr.instant(f"e{i}")
+    tr.stop()
+    assert tr.dropped_events() == {threading.get_ident(): 15}
+    evs = tr.events()
+    # the 10 retained events plus one synthetic drop marker
+    assert len(evs) == 11
+    marker = evs[-1]
+    assert marker["name"] == "tracer.dropped_events" and marker["count"] == 15
+    # the marker lands in the chrome export with the count in args
+    path = tr.export_chrome_trace(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    m = [e for e in doc["traceEvents"] if e.get("name") == "tracer.dropped_events"]
+    assert len(m) == 1 and m[0]["ph"] == "i" and m[0]["args"]["count"] == 15
+    # clear() re-arms the buffer and forgets the drops
+    tr.clear()
+    tr.start()
+    tr.instant("fresh")
+    tr.stop()
+    assert tr.dropped_events() == {}
+    assert [e["name"] for e in tr.events()] == ["fresh"]
+
+
+def test_tracer_cap_is_per_thread():
+    tr = Tracer(max_events_per_thread=5)
+    tr.start()
+
+    def worker():
+        for _ in range(3):
+            tr.instant("w")
+
+    t = threading.Thread(target=worker, name="small")
+    for _ in range(9):
+        tr.instant("m")  # main overflows ...
+    t.start()
+    t.join()  # ... the worker does not
+    tr.stop()
+    assert list(tr.dropped_events().values()) == [4]
+    assert sum(1 for e in tr.events() if e["name"] == "w") == 3
+
+
 # ---------------------------------------------------------------------------
 # step-metrics JSONL
 # ---------------------------------------------------------------------------
@@ -287,6 +337,107 @@ def test_stepmetrics_roundtrip_sanitizes_numpy(tmp_path):
     assert recs[1] == {"loss": 0.25, "step": 1}
     # every value survived as plain json types
     assert json.loads(json.dumps(recs)) == recs
+
+
+def test_to_py_maps_non_finite_to_null():
+    """Regression: a NaN loss must not emit bare ``NaN`` tokens (invalid
+    JSON for strict parsers) — non-finite floats become null."""
+    assert _to_py(float("nan")) is None
+    assert _to_py(float("inf")) is None
+    assert _to_py(np.float32("-inf")) is None
+    assert _to_py(np.float64("nan")) is None
+    assert _to_py(1.5) == 1.5
+    assert _to_py(np.float32(0.5)) == 0.5
+    # arrays: element-wise through tolist()
+    assert _to_py(np.array([1.0, np.nan, np.inf])) == [1.0, None, None]
+    assert _to_py(np.array(np.nan)) is None  # 0-d
+    assert _to_py({"a": [float("nan"), 2]}) == {"a": [None, 2]}
+
+
+def test_stepmetrics_nan_roundtrips_as_null(tmp_path):
+    p = str(tmp_path / "steps.jsonl")
+    with StepMetricsWriter(p) as w:
+        w.write({"step": 0, "loss": float("nan"), "aux": np.inf})
+    with open(p) as f:
+        text = f.read()
+    assert "NaN" not in text and "Infinity" not in text
+    assert read_step_metrics(p) == [{"step": 0, "loss": None, "aux": None}]
+
+
+def test_stepmetrics_append_mode_resumes(tmp_path):
+    p = str(tmp_path / "steps.jsonl")
+    with StepMetricsWriter(p) as w:
+        w.write({"step": 0})
+    with StepMetricsWriter(p, mode="a") as w:
+        assert w.mode == "a"
+        w.write({"step": 1})
+    assert [r["step"] for r in read_step_metrics(p)] == [0, 1]
+    # mode="w" truncates, as before
+    with StepMetricsWriter(p) as w:
+        w.write({"step": 9})
+    assert [r["step"] for r in read_step_metrics(p)] == [9]
+    with pytest.raises(ValueError):
+        StepMetricsWriter(p, mode="x")
+
+
+def test_iter_step_metrics_tolerates_torn_final_line(tmp_path):
+    p = str(tmp_path / "steps.jsonl")
+    with open(p, "w") as f:
+        f.write('{"step": 0}\n{"step": 1}\n{"step": 2, "lo')  # torn tail
+    assert [r["step"] for r in iter_step_metrics(p)] == [0, 1]
+    with pytest.raises(json.JSONDecodeError):
+        list(iter_step_metrics(p, strict=True))
+    # corruption mid-file (valid lines after it) is never silently eaten
+    with open(p, "w") as f:
+        f.write('{"step": 0}\n{"bad\n{"step": 2}\n')
+    with pytest.raises(json.JSONDecodeError):
+        list(iter_step_metrics(p))
+
+
+# ---------------------------------------------------------------------------
+# anatomy: per-step time budget on synthetic events
+# ---------------------------------------------------------------------------
+
+
+def test_step_budget_synthetic_attribution():
+    from repro.obs.anatomy import step_budget, wb_commit_overlap_us
+
+    def ev(name, tid, ts, dur):
+        return {"name": name, "tid": tid, "ts_us": ts, "dur_us": dur}
+
+    events = [
+        # two steps on the main thread (tid 1), 100us each
+        ev("step.streamed", 1, 0.0, 100.0),
+        ev("st.gather", 1, 10.0, 30.0),  # host gather inside step 0
+        ev("step.device", 1, 50.0, 40.0),  # device inside step 0
+        ev("step.streamed", 1, 200.0, 100.0),
+        ev("wb.enqueue_wait", 1, 210.0, 20.0),  # gate wait inside step 1
+        # commit on the wb thread (tid 2): 60us under step 0, 10us outside
+        ev("wb.commit", 2, 40.0, 70.0),
+        # commit fully outside any step window
+        ev("wb.commit", 2, 150.0, 30.0),
+    ]
+    b = step_budget(events)
+    assert b["steps"] == 2
+    t = b["totals_us"]
+    assert t["host_gather"] == 30.0
+    assert t["device"] == 40.0
+    assert t["gate_wait"] == 20.0
+    # unattributed = (100 - 70) + (100 - 20)
+    assert t["unattributed"] == 110.0
+    assert b["per_step_us"]["host_gather"] == 15.0
+    assert b["wb_commit_total_us"] == 100.0
+    # overlap: 60us of the first commit rides under step 0; best-step max
+    assert b["wb_commit_overlap_us"] == 60.0
+    assert b["wb_commit_overlap_us"] == wb_commit_overlap_us(events)
+
+
+def test_step_budget_zero_steps_contract():
+    from repro.obs.anatomy import format_budget, step_budget
+
+    b = step_budget([])
+    assert b["steps"] == 0 and b["wb_commit_overlap_us"] == 0.0
+    assert isinstance(format_budget(b), str)
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +558,10 @@ def test_streamed_registry_jsonl_trace_acceptance(tmp_path):
     assert {"step.streamed", "step.device", "st.gather", "wb.commit"} <= names
     assert "wb-worker" in tsum["spans"]["wb.commit"]["threads"]
     assert tsum["wb_commit_overlap_us"] > 0.0
+    # anatomy's budget reproduces obs_report's overlap number exactly
+    assert tsum["budget"]["wb_commit_overlap_us"] == tsum["wb_commit_overlap_us"]
+    assert tsum["budget"]["steps"] == 20
+    assert tsum["budget"]["totals_us"]["host_gather"] > 0.0
 
     # obs_report's step summary consumes the same file
     ssum = summarize_steps(recs)

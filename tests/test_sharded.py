@@ -147,6 +147,16 @@ def test_shard_labels_and_snapshot_sum_aggregate(tmp_path):
         assert sharded.stats()["per_shard"][0]["bytes_read"] == sum(
             snap.get(f"store.read_bytes{{shard=0,table={t}}}") for t in range(2)
         )
+        # fleet path: per-rank spill files merge back to the in-process sum
+        from repro.obs.fleet import fleet_snapshot
+
+        spill_dir = str(tmp_path / "spills")
+        paths = sharded.spill_metrics(spill_dir)
+        assert len(paths) == 3 and all(p.endswith(".json") for p in paths)
+        merged = fleet_snapshot(spill_dir)
+        for name in ("store.read_bytes", "store.read_rows"):
+            assert merged.sum(name) == snap.sum(name), name
+        assert merged.get("dist.alltoall_bytes") == snap.get("dist.alltoall_bytes")
 
 
 # ---------------------------------------------------------------------------
