@@ -2,4 +2,5 @@ from repro.checkpoint.checkpointer import (  # noqa: F401
     Checkpointer,
     restore_coherent,
     save_coherent,
+    verify_snapshot,
 )

@@ -35,6 +35,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import numpy as np
@@ -42,10 +43,87 @@ import numpy as np
 import jax
 
 from repro.cache.hotcache import HotRowCache, demote_all
+from repro.resilience import faults
+from repro.resilience.retry import call_with_retry
+
+INTEGRITY_FILE = "integrity.json"
+MANIFEST_FILE = "manifest.json"
 
 
 def _escape(path_str: str) -> str:
     return path_str.replace("/", "__")
+
+
+def _walk_files(root: str) -> list[tuple[str, str]]:
+    """Sorted (relative, absolute) data files under a snapshot dir —
+    everything except the two JSON manifests (which carry the checksums
+    and are fsynced on their own write path)."""
+    out = []
+    for base, _, files in os.walk(root):
+        for name in files:
+            if base == root and name in (INTEGRITY_FILE, MANIFEST_FILE):
+                continue
+            full = os.path.join(base, name)
+            out.append((os.path.relpath(full, root), full))
+    out.sort()
+    return out
+
+
+def _crc32_file(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk)
+            if not b:
+                break
+            crc = zlib.crc32(b, crc)
+    return crc
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by fd (directory fsync makes the rename
+    that created/removed entries in it durable)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def verify_snapshot(directory: str) -> list[str]:
+    """Check one snapshot dir against its integrity manifest. Returns a
+    list of problems (empty = intact), each naming the offending path —
+    a torn copy, a truncated file, flipped bytes, or a pre-integrity-era
+    snapshot with no manifest at all."""
+    problems: list[str] = []
+    if not os.path.exists(os.path.join(directory, MANIFEST_FILE)):
+        problems.append(f"{os.path.join(directory, MANIFEST_FILE)}: missing manifest")
+    ipath = os.path.join(directory, INTEGRITY_FILE)
+    if not os.path.exists(ipath):
+        problems.append(f"{ipath}: missing integrity manifest")
+        return problems
+    try:
+        with open(ipath) as f:
+            files = json.load(f)["files"]
+    except (ValueError, KeyError, OSError) as e:
+        problems.append(f"{ipath}: unreadable integrity manifest ({e})")
+        return problems
+    for rel in sorted(files):
+        meta = files[rel]
+        full = os.path.join(directory, rel)
+        if not os.path.exists(full):
+            problems.append(f"{full}: missing")
+            continue
+        size = os.path.getsize(full)
+        if size != int(meta["size"]):
+            problems.append(
+                f"{full}: {size} bytes on disk, integrity manifest says "
+                f"{meta['size']} (torn)"
+            )
+            continue
+        if _crc32_file(full) != int(meta["crc32"]):
+            problems.append(f"{full}: checksum mismatch (corrupt bytes)")
+    return problems
 
 
 def _leaves_with_paths(tree):
@@ -60,9 +138,10 @@ def _leaves_with_paths(tree):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, *, keep_last: int = 3):
+    def __init__(self, directory: str, *, keep_last: int = 3, registry: Any = None):
         self.directory = directory
         self.keep_last = keep_last
+        self.registry = registry  # optional obs Registry for retry counters
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -99,20 +178,45 @@ class Checkpointer:
             try:
                 final = os.path.join(self.directory, f"step_{step:08d}")
                 tmp = final + ".tmp"
-                if os.path.exists(tmp):
-                    shutil.rmtree(tmp)
-                os.makedirs(tmp)
-                for p, a in host:
-                    np.save(os.path.join(tmp, _escape(p) + ".npy"), a)
-                for name, src in (extra_dirs or {}).items():
-                    shutil.copytree(src, os.path.join(tmp, name))
-                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+
+                def _serialize():
+                    faults.fire("ckpt.io")  # injected serialization IO error
+                    if os.path.exists(tmp):
+                        shutil.rmtree(tmp)
+                    os.makedirs(tmp)
+                    for p, a in host:
+                        np.save(os.path.join(tmp, _escape(p) + ".npy"), a)
+                    for name, src in (extra_dirs or {}).items():
+                        shutil.copytree(src, os.path.join(tmp, name))
+
+                call_with_retry(_serialize, point="ckpt.io", registry=self.registry)
+                # integrity manifest + durability: checksum and fsync every
+                # data file while still under the .tmp name — the rename must
+                # only ever publish bytes that are already on the platter
+                integrity = {}
+                for rel, full in _walk_files(tmp):
+                    integrity[rel] = {
+                        "crc32": _crc32_file(full),
+                        "size": os.path.getsize(full),
+                    }
+                    _fsync_path(full)
+                with open(os.path.join(tmp, INTEGRITY_FILE), "w") as f:
+                    json.dump({"version": 1, "files": integrity}, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                with open(os.path.join(tmp, MANIFEST_FILE), "w") as f:
                     json.dump(manifest, f)
                     f.flush()
                     os.fsync(f.fileno())
                 if os.path.exists(final):
                     shutil.rmtree(final)
                 os.rename(tmp, final)
+                # the rename is only durable once the PARENT directory's
+                # entry table is — fsync it, or a crash can resurrect .tmp
+                _fsync_path(self.directory)
+                # chaos hook: flip bytes in the just-published snapshot, so
+                # restore_latest_good must detect it and fall back a step
+                faults.maybe_corrupt("ckpt.corrupt", final)
                 self._gc()
             except BaseException as e:  # surfaced on next save/wait
                 self._error = e
@@ -148,15 +252,60 @@ class Checkpointer:
         steps = self.available_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, *, step: Optional[int] = None, shardings: Any = None) -> tuple[int, Any]:
+    def verify(self, step: int) -> list[str]:
+        """Integrity problems for one snapshot (empty list = intact)."""
+        return verify_snapshot(os.path.join(self.directory, f"step_{step:08d}"))
+
+    def latest_good_step(self, *, log=print) -> Optional[int]:
+        """Newest snapshot that passes integrity verification, skipping torn
+        or corrupted ones LOUDLY (each skip logs the offending paths — a
+        silent fallback would hide data loss). None if nothing intact."""
+        for s in reversed(self.available_steps()):
+            problems = self.verify(s)
+            if not problems:
+                return s
+            if log is not None:
+                log(f"[ckpt] skipping snapshot step {s}: " + "; ".join(problems))
+        return None
+
+    def restore_latest_good(
+        self, like: Any, *, shardings: Any = None, log=print
+    ) -> tuple[int, Any]:
+        """Restore from the newest snapshot that verifies clean."""
+        step = self.latest_good_step(log=log)
+        if step is None:
+            raise FileNotFoundError(
+                f"no intact checkpoints in {self.directory} "
+                "(all snapshots torn/corrupt or directory empty)"
+            )
+        return self.restore(like, step=step, verify=True, shardings=shardings)
+
+    def restore(
+        self,
+        like: Any,
+        *,
+        step: Optional[int] = None,
+        shardings: Any = None,
+        verify: bool = False,
+    ) -> tuple[int, Any]:
         """Restore into the structure of ``like``. ``shardings`` (optional
         matching pytree of NamedSharding) reshards each leaf for the current
-        mesh — checkpoints are mesh-independent (elastic restart)."""
+        mesh — checkpoints are mesh-independent (elastic restart). With
+        ``verify=True`` the snapshot is checked against its integrity
+        manifest first and a corrupt one is rejected with the offending
+        paths in the error."""
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         d = os.path.join(self.directory, f"step_{step:08d}")
+        if verify:
+            problems = verify_snapshot(d)
+            if problems:
+                raise ValueError(
+                    f"checkpoint step {step} failed integrity verification: "
+                    + "; ".join(problems)
+                )
         named, treedef = _leaves_with_paths(like)
         shard_leaves = None
         if shardings is not None:
@@ -244,6 +393,7 @@ def restore_coherent(
     step: Optional[int] = None,
     shardings: Any = None,
     streamed=None,
+    verify: bool = False,
 ) -> tuple[int, dict]:
     """Restore, then demote-all-then-flush FIRST — before any training step.
     A coherent save already stores an empty cache (demote is then a no-op);
@@ -255,7 +405,7 @@ def restore_coherent(
     (``save_coherent(streamed=...)``), it is loaded back into ``streamed``'s
     live shard files (and the working sets invalidated) — restoring to step
     N even when the live store has since been mutated by further training."""
-    step, state = ckpt.restore(like, step=step, shardings=shardings)
+    step, state = ckpt.restore(like, step=step, shardings=shardings, verify=verify)
     if streamed is not None:
         snap = os.path.join(ckpt.directory, f"step_{step:08d}", "store")
         if os.path.isdir(snap):

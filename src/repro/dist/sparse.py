@@ -329,6 +329,14 @@ class ShardedStreamedTables:
                 accums[t, lo:hi] = a
         return rows, accums
 
+    def abort_write_back(self) -> None:
+        """Recovery fence (duck-typed with StreamedTables.abort_write_back):
+        rank stores run write-back synchronously, so there is never an
+        in-flight commit to discard — but delegate anyway so a rank that
+        was flipped to overlap mode still quiesces before restore."""
+        for rank in self.ranks:
+            rank.abort_write_back()
+
     def close(self) -> None:
         for rank in self.ranks:
             rank.close()

@@ -48,7 +48,10 @@ def main():
         metrics_server = serve_metrics(
             srv.registry, host="0.0.0.0", port=args.metrics_port
         )
-        print(f"[launch.serve] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
+        if metrics_server.running:
+            print(f"[launch.serve] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
+        else:
+            print("[launch.serve] metrics endpoint disabled (bind failed); serving continues")
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(

@@ -56,7 +56,10 @@ def main():
         metrics_server = serve_metrics(
             registry, host="0.0.0.0", port=args.metrics_port
         )
-        print(f"[launch.train] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
+        if metrics_server.running:
+            print(f"[launch.train] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
+        else:
+            print("[launch.train] metrics endpoint disabled (bind failed); training continues")
 
     def run():
         state = train(

@@ -33,7 +33,7 @@ import re
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Callable, Optional, Union
+from typing import Any, Callable, Optional, Union
 
 from repro.obs.registry import HistogramSnapshot, Registry, Snapshot
 
@@ -261,18 +261,53 @@ class MetricsServer:
             def log_message(self, *a):  # silence per-request stderr lines
                 pass
 
-        self._httpd = ThreadingHTTPServer((self._host, self._requested_port), Handler)
+        try:
+            self._httpd = ThreadingHTTPServer((self._host, self._requested_port), Handler)
+        except OSError as e:
+            # bind failure must never kill training. First fallback: retry
+            # on an ephemeral port (the requested one is usually what's
+            # taken); if even that fails, run degraded with no endpoint.
+            if self._requested_port != 0:
+                print(
+                    f"[obs] metrics port {self._host}:{self._requested_port} "
+                    f"unavailable ({e}); falling back to an ephemeral port"
+                )
+                try:
+                    self._httpd = ThreadingHTTPServer((self._host, 0), Handler)
+                except OSError as e2:
+                    e = e2
+            if self._httpd is None:
+                print(
+                    f"[obs] metrics server disabled ({e}); training continues "
+                    "without a scrape endpoint"
+                )
+                self._set_up_gauge(0.0)
+                return self
         self._httpd.daemon_threads = True
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, name="metrics-server", daemon=True
         )
         self._thread.start()
+        self._set_up_gauge(1.0)
         return self
+
+    def _set_up_gauge(self, v: float) -> None:
+        """Record endpoint health on every Registry source so the monitor
+        (and a fleet merge of spills) can see a silently-unscrapable rank."""
+        for s in self._sources:
+            if isinstance(s, Registry):
+                s.gauge("obs.metrics_server_up").set(v)
+
+    @property
+    def running(self) -> bool:
+        """True when the scrape endpoint is actually listening. False both
+        before ``start()`` and after a degraded (bind-failed) start."""
+        return self._httpd is not None
 
     @property
     def port(self) -> int:
         if self._httpd is None:
-            raise RuntimeError("MetricsServer not started")
+            raise RuntimeError("MetricsServer not started (or bind failed)")
         return self._httpd.server_address[1]
 
     @property
@@ -342,10 +377,18 @@ def doc_to_snapshot(doc: dict) -> Snapshot:
     )
 
 
-def write_snapshot_spill(path: str, snap: Snapshot, *, rank: Optional[int] = None) -> str:
+def write_snapshot_spill(
+    path: str, snap: Snapshot, *, rank: Optional[int] = None, registry: Any = None
+) -> str:
     """Atomically write one rank's snapshot spill (tmp + rename in the
     same directory, so a concurrent fleet merge never sees a torn file).
+    Transient IO errors are retried with backoff (point ``obs.spill``).
     Returns ``path``."""
+    # lazy: resilience.recovery imports repro.obs, so a module-level import
+    # here would be a cycle
+    from repro.resilience import faults
+    from repro.resilience.retry import call_with_retry
+
     doc = snapshot_to_doc(snap)
     if rank is not None:
         doc["rank"] = int(rank)
@@ -353,12 +396,17 @@ def write_snapshot_spill(path: str, snap: Snapshot, *, rank: Optional[int] = Non
     if d:
         os.makedirs(d, exist_ok=True)
     tmp = f"{path}.tmp.{os.getpid()}"
-    with open(tmp, "w") as f:
-        json.dump(doc, f)
-        f.write("\n")
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+
+    def _spill():
+        faults.fire("obs.spill")
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    call_with_retry(_spill, point="obs.spill", registry=registry)
     return path
 
 

@@ -335,6 +335,11 @@ class HealthMonitor:
         self.thresholds = {
             m: ThresholdRule(**spec) for m, spec in (thresholds or {}).items()
         }
+        # resilience: any component entering degraded mode (dead prefetcher,
+        # dead write-back worker, lost alert log) must surface as an alert.
+        # The counter is cumulative, so the 0 -> N transition fires once
+        # when the first component degrades and healthy runs stay silent.
+        self.thresholds.setdefault("degraded_total", ThresholdRule(max=0))
         self._stall = StallRule(after=stall_after) if stall_after else None
         self.tracer = tracer if tracer is not None else TRACER
         self.alerts: list[Alert] = []
@@ -385,7 +390,28 @@ class HealthMonitor:
             c.inc()
         self.tracer.instant(f"mon.alert.{alert.metric}")
         if self._log is not None:
-            self._log.write(alert.as_dict())
+            # losing the alert JSONL must not take down the monitor (the
+            # alert is already in memory + counters): retry transient IO,
+            # then drop the log and run degraded
+            from repro.resilience import faults
+            from repro.resilience.retry import call_with_retry, is_retryable, mark_degraded
+
+            def _append():
+                faults.fire("mon.alert_log")
+                self._log.write(alert.as_dict())
+
+            try:
+                call_with_retry(_append, point="mon.alert_log", registry=self.registry)
+            except BaseException as e:
+                if not is_retryable(e):
+                    raise
+                print(f"[mon] alert log lost ({e}); alerts continue in memory")
+                try:
+                    self._log.close()
+                except Exception:
+                    pass
+                self._log = None
+                mark_degraded(self.registry, "alert_log")
 
     def observe(self, step: int, metrics: Optional[dict] = None) -> list[Alert]:
         """Process one cadence tick. Off-cadence calls return ``[]``
@@ -403,6 +429,9 @@ class HealthMonitor:
                 # sum() over an absent key is 0.0, not "no progress"
                 if any(base_name(k) == "st.steps_total" for k in snap.values):
                     steps_delta = delta.sum("st.steps_total")
+            # cumulative (not windowed): degrades are one-way, the rule
+            # fires on the 0 -> N transition
+            merged["degraded_total"] = snap.sum("resilience.degraded_total")
             self._prev = snap
         if metrics:
             merged.update(

@@ -1,0 +1,40 @@
+"""Resilience layer: fault injection, retry/backoff, degraded modes,
+checkpoint integrity and the supervised recovery loop (docs/resilience.md)."""
+from repro.resilience.faults import (
+    FatalFault,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    TornWrite,
+    active_plan,
+    corrupt_dir,
+    corrupt_file,
+)
+from repro.resilience.recovery import RecoveryPolicy, run_supervised
+from repro.resilience.retry import (
+    DEFAULT_POLICY,
+    RetryPolicy,
+    backoff_delay,
+    call_with_retry,
+    is_retryable,
+    mark_degraded,
+)
+
+__all__ = [
+    "DEFAULT_POLICY",
+    "FatalFault",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "RecoveryPolicy",
+    "RetryPolicy",
+    "TornWrite",
+    "active_plan",
+    "backoff_delay",
+    "call_with_retry",
+    "corrupt_dir",
+    "corrupt_file",
+    "is_retryable",
+    "mark_degraded",
+    "run_supervised",
+]

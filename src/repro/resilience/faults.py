@@ -1,0 +1,271 @@
+"""Deterministic, seed-driven fault injection for the tier stack.
+
+Every crash window the streamed system owns gets a named *injection
+point*: a production call site that asks the active ``FaultPlan`` (if
+any) whether to misbehave right here, right now. The points are placed
+at real tier boundaries — shard IO, the prefetch and write-back worker
+threads, checkpoint bytes, the step critical path — so a chaos test
+exercises the exact code that a flaky disk or a dying thread would.
+
+Catalog (docs/resilience.md):
+
+  ==================  =====================================================
+  point               fires inside
+  ==================  =====================================================
+  shards.read         ``EmbeddingShardStore.read_rows`` (retry-wrapped)
+  shards.write        ``EmbeddingShardStore.write_rows`` (retry-wrapped)
+  shards.torn_write   ``write_rows``: writes a PREFIX of the rows, then
+                      raises ``TornWrite`` (fatal — recovery path)
+  prefetch.thread     the shard-prefetch thread, mid fault-in
+  wb.thread           the wb-worker thread, mid commit
+  ckpt.corrupt        ``Checkpointer._write``: after the atomic rename,
+                      flips bytes in one file of the just-written snapshot
+  ckpt.io             checkpoint leaf serialization (retry-wrapped)
+  step.stall          top of the streamed driver step (action="stall")
+  obs.spill           ``write_snapshot_spill`` (retry-wrapped)
+  mon.alert_log       the monitor's alert-JSONL append (retry-wrapped)
+  ==================  =====================================================
+
+Design rules:
+
+  * **disabled = one branch.** ``fire()``/``should_fire()`` read one
+    module global; with no plan installed they return immediately.
+    ``benchmarks/store_bench.py`` measures this (``resilience`` column).
+  * **deterministic.** Triggers are counted per point under a lock
+    (points fire from three different threads); ``at=``/``every=`` are
+    exact, ``prob=`` draws from ``np.random.default_rng`` seeded by
+    ``(plan.seed, crc32(point))`` — same seed, same schedule, every run.
+  * **replay-safe.** ``max_fires`` (default 1) keeps a fault from
+    re-firing while the recovery loop replays the same steps after a
+    rollback — one injected crash, one recovery, bit-exact resume.
+
+Install via context manager::
+
+    plan = FaultPlan([FaultSpec("wb.thread", action="raise", at=(3,))], seed=7)
+    with plan.install():
+        ... training ...
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+class InjectedFault(OSError):
+    """A retryable injected failure (looks like transient IO)."""
+
+
+class FatalFault(RuntimeError):
+    """A non-retryable injected failure: retry must give up immediately
+    and the supervised recovery loop (``resilience.recovery``) takes
+    over — rollback to the latest good snapshot."""
+
+
+class TornWrite(FatalFault):
+    """A shard write that stopped partway: some rows hold new values,
+    the rest are stale. Never retried in place (the damage is done);
+    surfaced to the recovery loop, which restores a snapshot."""
+
+
+@dataclass
+class FaultSpec:
+    """Trigger schedule for one injection point.
+
+    ``at`` fires on exact 0-based invocation counts, ``every`` on every
+    N-th invocation, ``prob`` independently per invocation (seeded —
+    deterministic for a fixed plan seed). ``max_fires`` caps total
+    firings so a fault does not re-fire during post-rollback replay.
+    ``action``: "raise" (``InjectedFault``), "fatal" (``FatalFault``),
+    "stall" (sleep ``stall_s``), or "flag" (only observable through
+    ``should_fire`` — the call site implements the damage, e.g. the
+    torn shard write and checkpoint corruption)."""
+
+    point: str
+    action: str = "raise"  # raise | fatal | stall | flag
+    at: Sequence[int] = ()
+    every: Optional[int] = None
+    prob: float = 0.0
+    max_fires: Optional[int] = 1
+    stall_s: float = 0.05
+    # optional substring filter for corrupt_dir targets (ckpt.corrupt)
+    match: Optional[str] = None
+
+    def __post_init__(self):
+        if self.action not in ("raise", "fatal", "stall", "flag"):
+            raise ValueError(f"unknown fault action {self.action!r}")
+
+
+class FaultPlan:
+    """A set of ``FaultSpec`` schedules plus the seed that makes their
+    probabilistic triggers reproducible. Thread-safe: points fire from
+    the train, prefetch and wb-worker threads concurrently."""
+
+    def __init__(self, specs: Sequence[FaultSpec], *, seed: int = 0):
+        self.seed = int(seed)
+        self.specs: dict[str, FaultSpec] = {}
+        for s in specs:
+            if s.point in self.specs:
+                raise ValueError(f"duplicate FaultSpec for point {s.point!r}")
+            self.specs[s.point] = s
+        self._lock = threading.Lock()
+        self._calls: dict[str, int] = {}
+        self._fires: dict[str, int] = {}
+        self._rngs: dict[str, "np.random.Generator"] = {}
+
+    # -- trigger evaluation --------------------------------------------------
+
+    def _rng(self, point: str):
+        rng = self._rngs.get(point)
+        if rng is None:
+            import numpy as np
+
+            rng = self._rngs[point] = np.random.default_rng(
+                (self.seed, zlib.crc32(point.encode()))
+            )
+        return rng
+
+    def _triggered(self, point: str) -> Optional[FaultSpec]:
+        spec = self.specs.get(point)
+        if spec is None:
+            return None
+        with self._lock:
+            n = self._calls.get(point, 0)
+            self._calls[point] = n + 1
+            if spec.max_fires is not None and self._fires.get(point, 0) >= spec.max_fires:
+                return None
+            hit = n in spec.at
+            if not hit and spec.every:
+                hit = (n + 1) % spec.every == 0
+            if not hit and spec.prob > 0.0:
+                hit = bool(self._rng(point).random() < spec.prob)
+            if hit:
+                self._fires[point] = self._fires.get(point, 0) + 1
+                return spec
+        return None
+
+    def fire_counts(self) -> dict[str, int]:
+        """Fires so far per point (chaos tests assert the plan engaged)."""
+        with self._lock:
+            return dict(self._fires)
+
+    # -- installation --------------------------------------------------------
+
+    def install(self) -> "_Installed":
+        return _Installed(self)
+
+
+class _Installed:
+    def __init__(self, plan: FaultPlan):
+        self._plan = plan
+        self._prev: Optional[FaultPlan] = None
+
+    def __enter__(self) -> FaultPlan:
+        global _ACTIVE
+        self._prev, _ACTIVE = _ACTIVE, self._plan
+        return self._plan
+
+    def __exit__(self, *exc) -> None:
+        global _ACTIVE
+        _ACTIVE = self._prev
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+def fire(point: str) -> None:
+    """Production-side hook: no-op (one global read) unless a plan is
+    installed AND this invocation triggers. ``action="raise"``/"fatal"
+    raise; "stall" sleeps; "flag" is ignored here (use should_fire)."""
+    plan = _ACTIVE
+    if plan is None:
+        return
+    spec = plan._triggered(point)
+    if spec is None:
+        return
+    if spec.action == "raise":
+        raise InjectedFault(f"injected fault at {point!r}")
+    if spec.action == "fatal":
+        raise FatalFault(f"injected fatal fault at {point!r}")
+    if spec.action == "stall":
+        time.sleep(spec.stall_s)
+
+
+def should_fire(point: str) -> bool:
+    """Call-site-managed variant: returns True when this invocation
+    triggers, and the caller implements the damage (torn write,
+    checkpoint byte corruption). Same schedule machinery as ``fire``."""
+    plan = _ACTIVE
+    if plan is None:
+        return False
+    return plan._triggered(point) is not None
+
+
+# ---------------------------------------------------------------------------
+# corruption helpers (deterministic byte damage)
+
+
+def corrupt_file(path: str, *, seed: int = 0, nbytes: int = 16) -> None:
+    """Deterministically flip up to ``nbytes`` bytes spread through the
+    file (never a silent no-op: raises on an empty file)."""
+    size = os.path.getsize(path)
+    if size == 0:
+        raise ValueError(f"cannot corrupt empty file {path!r}")
+    import numpy as np
+
+    rng = np.random.default_rng((seed, zlib.crc32(path.encode()) & 0xFFFF))
+    offsets = sorted(set(int(o) for o in rng.integers(0, size, size=min(nbytes, size))))
+    with open(path, "r+b") as f:
+        for off in offsets:
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0xFF]))
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def corrupt_dir(path: str, *, seed: int = 0, match: Optional[str] = None) -> str:
+    """Corrupt one deterministically-chosen file under ``path`` (relative
+    paths sorted, optional substring filter — e.g. ``match="rank_01"``
+    targets one rank's shard dir inside a snapshot). Returns the path of
+    the damaged file."""
+    candidates = []
+    for root, _, files in os.walk(path):
+        for name in files:
+            full = os.path.join(root, name)
+            rel = os.path.relpath(full, path)
+            if match is not None and match not in rel:
+                continue
+            if os.path.getsize(full) > 0:
+                candidates.append((rel, full))
+    if not candidates:
+        raise FileNotFoundError(
+            f"no corruptible files under {path!r}"
+            + (f" matching {match!r}" if match else "")
+        )
+    candidates.sort()
+    idx = zlib.crc32(f"{seed}".encode()) % len(candidates)
+    _, target = candidates[idx]
+    corrupt_file(target, seed=seed)
+    return target
+
+
+def maybe_corrupt(point: str, path: str) -> Optional[str]:
+    """``should_fire`` + ``corrupt_dir`` in one call, honoring the
+    spec's ``match`` filter and the plan's seed. Returns the damaged
+    file path (or None when the point did not trigger)."""
+    plan = _ACTIVE
+    if plan is None:
+        return None
+    spec = plan._triggered(point)
+    if spec is None:
+        return None
+    return corrupt_dir(path, seed=plan.seed, match=spec.match)

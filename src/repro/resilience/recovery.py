@@ -1,0 +1,187 @@
+"""Supervised recovery loop: fault -> drain -> rollback -> replay.
+
+``run_supervised`` closes the loop PR 8's monitor left open: detection
+(alerts, exceptions) now *acts*. The contract:
+
+  * a **recoverable fault** (any exception the policy covers that the
+    degraded-mode fallbacks did not absorb — in practice
+    ``faults.FatalFault`` / ``TornWrite`` and real non-transient IO)
+    triggers a rollback: abort in-flight write-back, restore the latest
+    *good* (checksum-verified) snapshot, rewind the step counter, replay;
+  * a **stall** (step wall time over ``step_timeout_s``, or the bound
+    monitor firing a stall alert) triggers the same rollback — replay
+    from a known-good state beats waiting on a wedged thread;
+  * recovery is **step-exact**: batches are keyed by step index, the
+    promote cadence is keyed by step index, and snapshot save/restore is
+    the coherent demote-all-then-flush — so the replayed run is
+    bit-identical to an uninterrupted run from the same snapshot
+    (tests/test_recovery_e2e.py proves final-state equality).
+
+Every transition appends one JSONL event (``fault`` / ``stall`` /
+``rollback`` / ``give_up`` / ``done``) through ``StepMetricsWriter`` in
+append mode — the recovery audit trail CI uploads next to the alert log
+— and counts on the registry: ``resilience.recoveries_total``,
+``resilience.replayed_steps_total``, ``resilience.gave_up_total``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.obs.stepmetrics import StepMetricsWriter
+
+
+@dataclass
+class RecoveryPolicy:
+    """Knobs for ``run_supervised``. ``max_recoveries`` bounds rollbacks
+    before giving up (re-raising); ``save_every`` > 0 makes the loop
+    itself snapshot at that cadence (via ``save_fn``); ``step_timeout_s``
+    > 0 arms the stall watchdog; ``log_path`` appends the JSONL audit
+    trail. ``recover_on`` is the exception allowlist — anything else
+    re-raises immediately (e.g. a KeyboardInterrupt or an assertion)."""
+
+    max_recoveries: int = 4
+    save_every: int = 0
+    step_timeout_s: float = 0.0
+    log_path: Optional[str] = None
+    recover_on: tuple = (Exception,)
+
+    def should_recover(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.recover_on)
+
+
+def run_supervised(
+    state,
+    *,
+    num_steps: int,
+    step_fn: Callable,
+    produce: Callable[[int], dict],
+    policy: RecoveryPolicy,
+    save_fn: Optional[Callable] = None,
+    restore_fn: Optional[Callable] = None,
+    start_step: int = 0,
+    registry=None,
+    monitor=None,
+    log: Callable[[str], None] = print,
+):
+    """Drive ``step_fn(state, batch, step_index=i)`` from ``start_step``
+    to ``num_steps`` under the recovery policy.
+
+    ``save_fn(step, state) -> state`` snapshots coherently (the returned
+    — demoted — state continues training: snapshot and live run must
+    agree on row authority). ``restore_fn(state) -> (step, state)``
+    rolls back to the latest good snapshot; it must abort in-flight
+    write-back first (``StreamedTables.abort_write_back``) — the
+    trainer's ``run_supervised`` wires all of this up. Without a
+    ``restore_fn`` every fault is terminal (re-raised).
+
+    Returns ``(state, report)`` where report carries ``recoveries``,
+    ``replayed_steps``, ``final_step`` and the in-memory ``events``."""
+    writer = StepMetricsWriter(policy.log_path, mode="a") if policy.log_path else None
+    events: list[dict] = []
+    recoveries = 0
+    replayed = 0
+    seen_alerts = len(monitor.alerts) if monitor is not None else 0
+
+    def emit(event: str, step: int, **extra) -> None:
+        rec = {"event": event, "step": int(step), **extra}
+        events.append(rec)
+        if writer is not None:
+            writer.write(rec)
+
+    def rollback(i: int, why: str, detail: str):
+        nonlocal recoveries, replayed, state
+        if restore_fn is None or recoveries >= policy.max_recoveries:
+            emit("give_up", i, reason=why, detail=detail, recoveries=recoveries)
+            if registry is not None:
+                registry.counter("resilience.gave_up_total", point="recovery").inc()
+            return None
+        recoveries += 1
+        emit(why, i, detail=detail)
+        res = restore_fn(state)
+        if res is None:  # no intact snapshot to roll back to
+            emit("give_up", i, reason=why, detail="no intact snapshot",
+                 recoveries=recoveries)
+            if registry is not None:
+                registry.counter("resilience.gave_up_total", point="recovery").inc()
+            return None
+        snap_step, state = res
+        replayed += max(0, i - snap_step)
+        emit("rollback", i, to_step=int(snap_step), recoveries=recoveries)
+        log(f"[recovery] {why} at step {i}: rolled back to step {snap_step} "
+            f"({recoveries}/{policy.max_recoveries})")
+        if registry is not None:
+            registry.counter("resilience.recoveries_total").inc()
+            registry.counter("resilience.replayed_steps_total").inc(
+                max(0, i - snap_step)
+            )
+        return int(snap_step)
+
+    i = start_step
+    # Stall-watchdog grace: the FIRST step (jit compilation) and the first
+    # step after a rollback (synchronous working-set repopulation from a
+    # cold restore) are EXPECTED to run long — flagging them would loop.
+    grace_until = start_step + 1
+    try:
+        while i < num_steps:
+            try:
+                batch = produce(i)
+                t0 = time.perf_counter()
+                state, loss = step_fn(state, batch, step_index=i)
+                dt = time.perf_counter() - t0
+            except BaseException as e:
+                if not policy.should_recover(e):
+                    raise
+                to = rollback(i, "fault", f"{type(e).__name__}: {e}")
+                if to is None:
+                    raise
+                i = to
+                grace_until = to + 1
+                continue
+            # stall watchdog: the step completed but took pathologically
+            # long (a wedged disk under a degraded sync path) — replaying
+            # from the snapshot is deterministic, so rolling back is safe
+            stalled = (
+                policy.step_timeout_s > 0
+                and dt > policy.step_timeout_s
+                and i >= grace_until
+            )
+            if monitor is not None and not stalled:
+                fresh = monitor.alerts[seen_alerts:]
+                seen_alerts = len(monitor.alerts)
+                stalled = any(a.kind == "stall" for a in fresh)
+            if stalled:
+                to = rollback(i, "stall", f"step took {dt:.3f}s")
+                if to is not None:
+                    i = to
+                    grace_until = to + 1
+                    continue
+                # no rollback budget left: keep going rather than dying
+                # on a slow-but-correct step
+            i += 1
+            if save_fn is not None and policy.save_every and i % policy.save_every == 0:
+                # the coherent save drains write-back, so a wb-thread fault
+                # can surface HERE rather than at a step barrier — it gets
+                # the same rollback treatment as a mid-step fault
+                try:
+                    state = save_fn(i, state)
+                except BaseException as e:
+                    if not policy.should_recover(e):
+                        raise
+                    to = rollback(i, "fault", f"{type(e).__name__}: {e} (in save)")
+                    if to is None:
+                        raise
+                    i = to
+                    grace_until = to + 1
+        emit("done", num_steps, recoveries=recoveries, replayed_steps=replayed)
+    finally:
+        if writer is not None:
+            writer.close()
+    report = {
+        "recoveries": recoveries,
+        "replayed_steps": replayed,
+        "final_step": num_steps,
+        "events": events,
+    }
+    return state, report

@@ -1,0 +1,105 @@
+"""Bounded retry with exponential backoff + the retryable/fatal taxonomy.
+
+Wrapped around the IO the tier stack cannot afford to die on: shard
+reads/writes (``store.shards``), snapshot spills (``obs.export``) and
+alert-JSONL appends (``obs.monitor``). The happy path is one function
+call and one ``try`` — ``benchmarks/store_bench.py``'s ``resilience``
+column holds the wrapper to the same ≤2% host-path budget as obs.
+
+Taxonomy (docs/resilience.md):
+
+  * **retryable** — ``OSError`` / ``TimeoutError`` (transient IO; the
+    injected ``faults.InjectedFault`` subclasses OSError on purpose).
+    Retried up to ``max_attempts`` with exponential backoff and
+    deterministic jitter; every retry increments
+    ``resilience.retries_total{point=}``, exhaustion increments
+    ``resilience.gave_up_total{point=}`` and re-raises.
+  * **fatal** — everything else, including ``faults.FatalFault`` and
+    ``faults.TornWrite`` (the damage is already on disk; retrying in
+    place would paper over partial state). Raised immediately — the
+    supervised recovery loop is the handler of last resort.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Callable, Optional, TypeVar
+
+from repro.resilience.faults import FatalFault
+
+T = TypeVar("T")
+
+RETRYABLE_TYPES = (OSError, TimeoutError)
+
+
+def is_retryable(exc: BaseException) -> bool:
+    """Transient (worth retrying) vs fatal (recovery loop territory)."""
+    return isinstance(exc, RETRYABLE_TYPES) and not isinstance(exc, FatalFault)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """``max_attempts`` total tries; delay doubles from ``base_delay_s``
+    up to ``max_delay_s`` with up to ``jitter`` fractional extra (the
+    jitter is a deterministic hash of (point, attempt) — retries are
+    reproducible like everything else in this layer)."""
+
+    max_attempts: int = 4
+    base_delay_s: float = 0.002
+    max_delay_s: float = 0.25
+    jitter: float = 0.5
+
+
+DEFAULT_POLICY = RetryPolicy()
+
+
+def _jitter_frac(point: str, attempt: int) -> float:
+    return (zlib.crc32(f"{point}:{attempt}".encode()) % 1024) / 1024.0
+
+
+def backoff_delay(policy: RetryPolicy, point: str, attempt: int) -> float:
+    """Delay before retry ``attempt`` (1-based) at ``point``."""
+    d = min(policy.max_delay_s, policy.base_delay_s * (2 ** (attempt - 1)))
+    if policy.jitter:
+        d *= 1.0 + policy.jitter * _jitter_frac(point, attempt)
+    return d
+
+
+def call_with_retry(
+    fn: Callable[[], T],
+    *,
+    point: str,
+    policy: RetryPolicy = DEFAULT_POLICY,
+    registry=None,
+    sleep: Callable[[float], None] = time.sleep,
+) -> T:
+    """Run ``fn`` under the retry policy. ``registry`` (an
+    ``obs.Registry``) receives ``resilience.retries_total{point=}`` /
+    ``resilience.gave_up_total{point=}``; None skips instrumentation
+    (the counters are only touched on the failure path either way)."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except BaseException as e:
+            if not is_retryable(e):
+                raise
+            attempt += 1
+            if registry is not None:
+                registry.counter("resilience.retries_total", point=point).inc()
+            if attempt >= policy.max_attempts:
+                if registry is not None:
+                    registry.counter("resilience.gave_up_total", point=point).inc()
+                raise
+            sleep(backoff_delay(policy, point, attempt))
+
+
+def mark_degraded(registry, component: str) -> None:
+    """Flip the degraded-mode gauge for ``component`` and count the
+    transition — both monitor-visible (``HealthMonitor`` carries a
+    default threshold rule over ``resilience.degraded_total``)."""
+    if registry is None:
+        return
+    registry.gauge("resilience.degraded", component=component).set(1.0)
+    registry.counter("resilience.degraded_total", component=component).inc()

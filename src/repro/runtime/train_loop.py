@@ -25,6 +25,7 @@ from repro.obs.stepmetrics import StepMetricsWriter
 from repro.optim import apply_updates
 from repro.optim.compression import apply_ef, make_ef_state
 from repro.optim.optimizers import Transform
+from repro.resilience import RecoveryPolicy
 
 
 @dataclass
@@ -95,6 +96,7 @@ def train(
     step_writer: Optional[StepMetricsWriter] = None,
     registry=None,
     monitor=None,
+    recovery: Optional[RecoveryPolicy] = None,
 ) -> TrainState:
     """``step_writer`` (obs.StepMetricsWriter) appends one JSONL record per
     step — step / loss / wall ms / straggler flag. The loop already syncs
@@ -105,26 +107,41 @@ def train(
     ``train.straggler_total`` — so a ``--metrics-port`` scrape endpoint
     over the same registry shows the run progressing. ``monitor`` (an
     ``obs.HealthMonitor``) gets the loss and step wall time at its
-    cadence (the loop syncs on the loss anyway, so this is free)."""
+    cadence (the loop syncs on the loss anyway, so this is free).
+
+    ``recovery`` (a ``resilience.RecoveryPolicy``) arms the supervised
+    loop: on a recoverable step failure the loop restores the latest
+    integrity-verified checkpoint and replays from it, up to
+    ``max_recoveries`` times."""
     params = api.init_params(cfg, jax.random.key(seed))
     opt_state = optimizer.init(params)
     ef_state = make_ef_state(params) if compression != "none" else 0
     start_step = 0
 
+    # restore skeleton that survives buffer donation (restore() only reads
+    # .dtype off the leaves, so shape/dtype structs are a valid `like`)
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        {"params": params, "opt_state": opt_state},
+    )
+
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     if ckpt and resume and ckpt.latest_step() is not None:
-        start_step, restored = ckpt.restore({"params": params, "opt_state": opt_state})
+        # prefer the newest snapshot that passes integrity verification;
+        # fall back to the newest unverified one only for pre-integrity-era
+        # checkpoint dirs (no integrity.json anywhere)
+        good = ckpt.latest_good_step(log=log)
+        if good is not None:
+            start_step, restored = ckpt.restore(like, step=good, verify=True)
+        else:
+            log("[train] no integrity-verified checkpoint; restoring newest unverified")
+            start_step, restored = ckpt.restore(like)
         params, opt_state = restored["params"], restored["opt_state"]
         log(f"[train] resumed from step {start_step}")
 
     step_fn = make_train_step(cfg, optimizer, compression=compression)
     detector = StragglerDetector()
 
-    if registry is not None:
-        c_steps = registry.counter("train.steps_total")
-        g_loss = registry.gauge("train.loss")
-        h_step_ms = registry.histogram("train.step_ms")
-        c_straggler = registry.counter("train.straggler_total")
     if monitor is not None and registry is not None:
         monitor.bind(registry)
 
@@ -133,6 +150,60 @@ def train(
         return {k: jnp.asarray(v) for k, v in b.items()}
 
     losses = []
+    recoveries = 0
+    resume_from = start_step
+    while True:
+        try:
+            params, opt_state, ef_state = _run_span(
+                resume_from, num_steps, produce, step_fn, detector,
+                params, opt_state, ef_state,
+                registry=registry, monitor=monitor, step_writer=step_writer,
+                log=log, log_every=log_every, losses=losses,
+                ckpt=ckpt, ckpt_every=ckpt_every,
+            )
+            break
+        except Exception as e:
+            if (
+                recovery is None
+                or ckpt is None
+                or not recovery.should_recover(e)
+                or recoveries >= recovery.max_recoveries
+            ):
+                raise
+            good = ckpt.latest_good_step(log=log)
+            if good is None:
+                raise  # nothing intact to roll back to — surface the fault
+            recoveries += 1
+            _, restored = ckpt.restore(like, step=good, verify=True)
+            params, opt_state = restored["params"], restored["opt_state"]
+            # ef residuals are not checkpointed; restart them clean
+            ef_state = make_ef_state(params) if compression != "none" else 0
+            resume_from = good
+            if registry is not None:
+                registry.counter("resilience.recoveries_total").inc()
+            log(
+                f"[train] recovered from {type(e).__name__}: {e}; rolled back "
+                f"to step {good} ({recoveries}/{recovery.max_recoveries})"
+            )
+    if ckpt:
+        ckpt.save(num_steps, {"params": params, "opt_state": opt_state}, blocking=True)
+    return TrainState(params, opt_state, num_steps, ef_state)
+
+
+def _run_span(
+    start_step, num_steps, produce, step_fn, detector,
+    params, opt_state, ef_state, *,
+    registry, monitor, step_writer, log, log_every, losses, ckpt, ckpt_every,
+):
+    """One uninterrupted training span ``[start_step, num_steps)`` — split
+    out so the supervised recovery loop can rebuild the prefetcher at the
+    rollback step (its producer thread indexes batches by step, so replay
+    is bit-identical to the uninterrupted run)."""
+    if registry is not None:
+        c_steps = registry.counter("train.steps_total")
+        g_loss = registry.gauge("train.loss")
+        h_step_ms = registry.histogram("train.step_ms")
+        c_straggler = registry.counter("train.straggler_total")
     with Prefetcher(produce, depth=2, start_step=start_step) as pf:
         for i in range(start_step, num_steps):
             step_no, batch = pf.get()
@@ -168,6 +239,4 @@ def train(
                 log(f"[train] step {step_no} loss {losses[-1]:.4f} ({dt * 1e3:.1f}ms)")
             if ckpt and ckpt_every and (step_no + 1) % ckpt_every == 0:
                 ckpt.save(step_no + 1, {"params": params, "opt_state": opt_state})
-    if ckpt:
-        ckpt.save(num_steps, {"params": params, "opt_state": opt_state}, blocking=True)
-    return TrainState(params, opt_state, num_steps, ef_state)
+    return params, opt_state, ef_state

@@ -28,6 +28,7 @@ from repro.cache.stats import fold_counts
 from repro.configs.base import DLRMConfig
 from repro.kernels import ops
 from repro.optim import adagrad
+from repro.resilience import faults
 from repro.stack.base import TierStack
 from repro.stack.flat import init_sparse_system
 
@@ -358,6 +359,7 @@ def make_streamed_train_step(
         return state, loss
 
     def _step_inner(state, batch, step_index):
+        faults.fire("step.stall")  # chaos: artificial step stall (watchdog)
         cast = batch["cast"]
         if "ring_ids" in state and int(state["ring_ids"].shape[0]) < K:
             # a mirror SHALLOWER than the device ring only forgoes skipped

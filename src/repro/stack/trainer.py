@@ -254,3 +254,52 @@ class MultiTableTrainer:
         return restore_coherent(
             self.ckpt, like, step=step, shardings=shardings, streamed=self.streamed
         )
+
+    # -- supervised recovery ----------------------------------------------
+
+    def run_supervised(self, state, produce, num_steps: int, *, policy, log=print):
+        """Run ``num_steps`` of training under a ``RecoveryPolicy``: on a
+        recoverable fault or stall, quiesce the streamed write-back path,
+        roll back to the newest integrity-verified coherent snapshot, and
+        replay from it. ``produce(step)`` must return the batch for one
+        GLOBAL step index — replayed steps then see byte-identical inputs
+        and the recovered run finishes bit-identical to an uninterrupted
+        one. Returns ``(state, report)`` (see resilience.run_supervised)."""
+        from repro.resilience import run_supervised
+
+        if self.ckpt is None:
+            raise ValueError("construct MultiTableTrainer with checkpoint_dir=")
+
+        def step_fn(st, batch, *, step_index):
+            # pin the promote cadence (and the streamed driver's step
+            # bookkeeping) to the GLOBAL step so replay == original
+            self.steps_done = step_index
+            return self.step(st, batch)
+
+        def save_fn(step, st):
+            return self.save_coherent(step, st)
+
+        def restore_fn(st):
+            if self.streamed is not None:
+                # discard any wedged in-flight commit before the rollback:
+                # restore_shards rewrites the files a live commit would race
+                self.streamed.abort_write_back()
+            good = self.ckpt.latest_good_step(log=log)
+            if good is None:
+                return None
+            return self.restore_coherent(st, step=good)
+
+        return run_supervised(
+            state,
+            num_steps=num_steps,
+            step_fn=step_fn,
+            produce=produce,
+            policy=policy,
+            save_fn=save_fn,
+            restore_fn=restore_fn,
+            registry=self.registry
+            if self.streamed is None
+            else self.streamed.registry,
+            monitor=self.monitor,
+            log=log,
+        )

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.obs import tracing
 from repro.obs.registry import Registry
+from repro.resilience import faults
 from repro.store.working_set import WorkingSetManager
 
 
@@ -64,6 +65,7 @@ class ShardPrefetcher:
                 continue
             try:
                 if self._exc is None:  # after a failure, drain but do no IO
+                    faults.fire("prefetch.thread")  # injected mid-flight death
                     with self.tracer.span("prefetch.fault_in"):
                         for ws, ids in zip(self._working_sets, ids_per_table):
                             ws.fault_in(ids, prefetch=True)
@@ -133,6 +135,15 @@ class ShardPrefetcher:
         if ids_per_table is not None:
             for ws, ids in zip(self._working_sets, ids_per_table):
                 ws.unpin(ids)
+
+    def release_all(self) -> None:
+        """Unpin every pending step's rows (degraded-mode teardown: the
+        consumer stops waiting on this prefetcher, so its pins would
+        otherwise leak and shrink the evictable window forever)."""
+        with self._lock:
+            pending = list(self._pending)
+        for step in pending:
+            self.release(step)
 
     def close(self) -> None:
         if self._closed:

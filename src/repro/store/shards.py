@@ -22,8 +22,12 @@ import json
 import os
 import threading
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
+
+from repro.resilience import faults
+from repro.resilience.retry import DEFAULT_POLICY, RetryPolicy, call_with_retry
 
 DIRECTORY_FILE = "directory.json"
 FORMAT_VERSION = 1
@@ -66,6 +70,12 @@ class EmbeddingShardStore:
     # reads come from both the prefetch thread (lock-free fault path) and
     # the train thread; += on the counters is not atomic
     _stats_lock: threading.Lock = field(default_factory=threading.Lock)
+    # transient IO is retried (bounded backoff); reads are idempotent and
+    # writes are set-semantics absolute values, so a re-run commits the
+    # exact same bytes. ``retry_registry`` (an obs Registry, bound by
+    # StreamedTables) receives resilience.retries_total{point=}.
+    retry_policy: RetryPolicy = DEFAULT_POLICY
+    retry_registry: Optional[object] = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -102,9 +112,17 @@ class EmbeddingShardStore:
         ids = self._check_ids(ids)
         out = np.empty((ids.shape[0], self.dim + 1), np.float32)
         shard = ids // self.shard_rows
-        for s in np.unique(shard):
-            m = shard == s
-            out[m] = self._mmaps[s][ids[m] - s * self.shard_rows]
+
+        def _read():
+            faults.fire("shards.read")
+            for s in np.unique(shard):
+                m = shard == s
+                out[m] = self._mmaps[s][ids[m] - s * self.shard_rows]
+
+        call_with_retry(
+            _read, point="shards.read",
+            policy=self.retry_policy, registry=self.retry_registry,
+        )
         with self._stats_lock:
             self.stats.rows_read += ids.shape[0]
             self.stats.bytes_read += ids.shape[0] * self.row_nbytes
@@ -118,9 +136,29 @@ class EmbeddingShardStore:
         packed[:, : self.dim] = rows
         packed[:, self.dim] = np.asarray(accums, np.float32).reshape(-1)
         shard = ids // self.shard_rows
-        for s in np.unique(shard):
-            m = shard == s
-            self._mmaps[s][ids[m] - s * self.shard_rows] = packed[m]
+
+        def _write():
+            faults.fire("shards.write")
+            if faults.should_fire("shards.torn_write"):
+                # write a PREFIX of the rows, then die: the store now holds
+                # a mix of new and stale values — fatal (never retried in
+                # place), the recovery loop restores a snapshot
+                k = max(1, ids.shape[0] // 2)
+                tshard, tids = shard[:k], ids[:k]
+                for s in np.unique(tshard):
+                    m = tshard == s
+                    self._mmaps[s][tids[m] - s * self.shard_rows] = packed[:k][m]
+                raise faults.TornWrite(
+                    f"torn write to {self.path!r}: {k}/{ids.shape[0]} rows landed"
+                )
+            for s in np.unique(shard):
+                m = shard == s
+                self._mmaps[s][ids[m] - s * self.shard_rows] = packed[m]
+
+        call_with_retry(
+            _write, point="shards.write",
+            policy=self.retry_policy, registry=self.retry_registry,
+        )
         with self._stats_lock:
             self.stats.rows_written += ids.shape[0]
             self.stats.bytes_written += ids.shape[0] * self.row_nbytes
@@ -232,10 +270,11 @@ def create_store(
 def open_store(path: str) -> EmbeddingShardStore:
     """Memory-map an existing shard directory for read/write.
 
-    Validates that the directory's shard entries tile ``[0, num_rows)``
-    contiguously — a truncated or hand-edited directory must fail here,
-    loudly naming the missing row range, not silently serve a partial
-    table."""
+    Validates geometry AND content size: the directory's shard entries
+    must tile ``[0, num_rows)`` contiguously, and every shard file must
+    hold exactly its range's bytes — a truncated shard file (a torn
+    copy, a partial rank restore) must fail here, loudly naming the
+    offending path, not silently serve garbage past the truncation."""
     with open(os.path.join(path, DIRECTORY_FILE)) as f:
         d = json.load(f)
     if d.get("version") != FORMAT_VERSION:
@@ -255,6 +294,17 @@ def open_store(path: str) -> EmbeddingShardStore:
             f"{expect_lo} but the table has {d['num_rows']} rows — rows "
             f"[{expect_lo}, {d['num_rows']}) are missing"
         )
+    row_nbytes = (d["dim"] + 1) * 4
+    for s in d["shards"]:
+        fpath = os.path.join(path, s["file"])
+        expect = (s["hi"] - s["lo"]) * row_nbytes
+        actual = os.path.getsize(fpath)
+        if actual != expect:
+            raise ValueError(
+                f"corrupt shard file {fpath!r}: {actual} bytes on disk but rows "
+                f"[{s['lo']}, {s['hi']}) x {row_nbytes} B/row needs {expect} — "
+                + ("file is truncated" if actual < expect else "file has trailing bytes")
+            )
     store = EmbeddingShardStore(
         path=path, num_rows=d["num_rows"], dim=d["dim"], shard_rows=d["shard_rows"]
     )

@@ -50,6 +50,8 @@ import jax.numpy as jnp
 from repro.cache.hotcache import init_hot_cache
 from repro.obs import tracing
 from repro.obs.registry import Registry, Snapshot, _label_key, _render
+from repro.resilience import faults
+from repro.resilience.retry import is_retryable, mark_degraded
 from repro.store.prefetch import ShardPrefetcher
 from repro.store.shards import EmbeddingShardStore, create_store, open_store
 from repro.store.working_set import WorkingSetManager
@@ -103,6 +105,9 @@ class StreamedTables:
         # driver- and store-level spans land in one timeline.
         self.registry = registry if registry is not None else Registry()
         self.tracer = tracer if tracer is not None else tracing.TRACER
+        # shard-store retries count on this registry (docs/resilience.md)
+        for s in self.stores:
+            s.retry_registry = self.registry
         self.prefetcher: Optional[ShardPrefetcher] = (
             ShardPrefetcher(self.working, registry=self.registry, tracer=self.tracer)
             if prefetch
@@ -150,6 +155,10 @@ class StreamedTables:
         self._wb_inflight: deque[list[np.ndarray]] = deque()
         self._wb_gates: list[threading.Event] = []
         self._wb_exc: Optional[BaseException] = None
+        # payloads whose background commit did NOT complete (the job that
+        # failed + everything drained without IO behind it), FIFO — the
+        # degraded-mode fallback re-commits them synchronously in order
+        self._wb_failed: deque[tuple] = deque()
         self._wb_q: queue.Queue = queue.Queue()
         self._wb_thread: Optional[threading.Thread] = None
         if self.overlap_write_back:
@@ -352,11 +361,28 @@ class StreamedTables:
     def schedule_prefetch(self, step: int, cast: dict) -> None:
         """Queue one future batch's per-table unique ids for background
         fault-in (call as soon as the cast exists, i.e. at produce time)."""
-        if self.prefetcher is not None:
-            self.prefetcher.schedule(
-                step,
-                [self._valid_ids(cast, t, memo=False) for t in range(self.num_tables)],
-            )
+        p = self.prefetcher
+        if p is not None:
+            try:
+                p.schedule(
+                    step,
+                    [self._valid_ids(cast, t, memo=False) for t in range(self.num_tables)],
+                )
+            except RuntimeError:
+                # closed by the consumer thread degrading mid-run: the
+                # step's rows become counted synchronous faults instead
+                pass
+
+    def _degrade_prefetch(self, exc: BaseException) -> None:
+        """A retryable prefetch-thread death degrades to synchronous
+        fault-in: unscheduled rows are already a counted, correct path
+        inside ``WorkingSetManager.gather``. Flips the degraded gauge
+        (monitor-visible) instead of killing the step."""
+        p, self.prefetcher = self.prefetcher, None
+        if p is not None:
+            p.release_all()  # leaked pins would shrink the evictable window
+            p.close()
+        mark_degraded(self.registry, "prefetch")
 
     def wrap_produce(self, produce: Callable[[int], dict]) -> Callable[[int], dict]:
         """Wrap a host ``produce(step) -> batch_with_cast`` fn so every
@@ -381,7 +407,12 @@ class StreamedTables:
         (>= num_unique, or the fill sentinel) are zero."""
         if self.prefetcher is not None and step is not None:
             with self.tracer.span("prefetch.wait"):
-                self.prefetcher.wait(step)
+                try:
+                    self.prefetcher.wait(step)
+                except BaseException as e:
+                    if not is_retryable(e):
+                        raise  # fatal: the recovery loop's territory
+                    self._degrade_prefetch(e)
         t0 = time.perf_counter()
         with self.tracer.span("st.gather"):
             uids = np.asarray(cast["unique_ids"])
@@ -466,6 +497,7 @@ class StreamedTables:
             gate.wait()  # released once the NEXT gather is off the WS lock
             try:
                 if self._wb_exc is None:  # after a failure: drain, no IO
+                    faults.fire("wb.thread")  # injected mid-commit death
                     with self.tracer.span("wb.commit"):
                         # device sync happens HERE, off the train loop thread
                         rows = np.asarray(aux["cold_rows"])
@@ -481,18 +513,59 @@ class StreamedTables:
                         # deferred-commit LRU inversion), and the slice ring
                         # already serves their near-term re-reads.
                         self._commit_write_back(cast, rows, accums, hit, insert=False)
+                else:
+                    # drain mode: keep the payload — a retryable failure
+                    # re-commits it synchronously (degraded mode), a fatal
+                    # one hands it to abort_write_back
+                    with self._wb_cond:
+                        self._wb_failed.append((cast, aux))
             except BaseException as e:  # surfaced on the next barrier/enqueue
                 with self._wb_cond:
                     self._wb_exc = e
+                    self._wb_failed.append((cast, aux))
             finally:
                 with self._wb_cond:
                     self._wb_inflight.popleft()  # FIFO: head is this job
                     self._wb_cond.notify_all()
 
-    def _raise_wb_exc_locked(self) -> None:
-        if self._wb_exc is not None:
-            exc, self._wb_exc = self._wb_exc, None
-            raise exc
+    def _sync_commit_payload(self, cast: dict, aux: dict) -> None:
+        self.write_back(
+            cast,
+            np.asarray(aux["cold_rows"]),
+            np.asarray(aux["cold_accums"]),
+            np.asarray(aux["hit_seg"]),
+        )
+
+    def _maybe_degrade_write_back(self) -> None:
+        """Surface a pending wb-worker failure. Non-retryable exceptions
+        (RuntimeError from a bad commit, ``faults.FatalFault``) re-raise
+        exactly as before — the recovery loop's territory. A RETRYABLE
+        failure (transient IO) degrades instead of killing the step:
+        drain the pipeline, re-commit every uncommitted payload
+        synchronously in FIFO order (set-semantics absolute values make
+        the partial failed commit idempotent), and fall back to
+        synchronous write-back for the rest of the run — the driver
+        reads ``overlap_write_back`` per step, so the flip takes effect
+        on the next step."""
+        if self._wb_exc is None:  # racy read: the real check is locked
+            return
+        with self._wb_cond:
+            exc = self._wb_exc
+            if exc is None:
+                return
+            if not is_retryable(exc):
+                self._wb_exc = None
+                raise exc
+            self._release_gates_locked()
+            while self._wb_inflight:
+                self._wb_cond.wait(1.0)
+            failed = list(self._wb_failed)
+            self._wb_failed.clear()
+            self._wb_exc = None
+        for cast, aux in failed:
+            self._sync_commit_payload(cast, aux)
+        self.overlap_write_back = False
+        mark_degraded(self.registry, "write_back")
 
     def write_back_async(self, cast: dict, aux: dict) -> None:
         """Queue the device step's aux output (jax arrays: ``cold_rows``,
@@ -501,22 +574,35 @@ class StreamedTables:
         the next step's gather), so the commit overlaps the device step —
         the long phase — instead of contending with the gather for the
         working-set lock. Blocks only when WB_DEPTH jobs are already in
-        flight; re-raises any pending worker exception."""
+        flight; surfaces any pending worker failure (re-raise or degrade —
+        see ``_maybe_degrade_write_back``)."""
         if self._wb_thread is None:
             raise RuntimeError("StreamedTables built with overlap_write_back=False")
+        self._maybe_degrade_write_back()
+        if not self.overlap_write_back:
+            # degraded mid-run by the call above: this job commits here
+            self._sync_commit_payload(cast, aux)
+            return
         ids = [self._valid_ids(cast, t) for t in range(self.num_tables)]
         gate = threading.Event()
         t0 = time.perf_counter()
+        pending_exc = False
         with self.tracer.span("wb.enqueue_wait"):
             with self._wb_cond:
-                self._raise_wb_exc_locked()
                 while len(self._wb_inflight) >= self.WB_DEPTH:
+                    if self._wb_exc is not None:
+                        pending_exc = True
+                        break
                     self._release_gates_locked()  # a gated job can never drain
                     self._wb_cond.wait(1.0)
-                    self._raise_wb_exc_locked()
-                self._wb_inflight.append(ids)
-                self._wb_gates.append(gate)
+                if not pending_exc:
+                    self._wb_inflight.append(ids)
+                    self._wb_gates.append(gate)
         self._c_wb_wait_s.inc(time.perf_counter() - t0)
+        if pending_exc:
+            self._maybe_degrade_write_back()  # raises, or degrades + drains
+            self._sync_commit_payload(cast, aux)
+            return
         self._wb_q.put((cast, aux, gate))
 
     def _release_gates_locked(self) -> None:
@@ -537,17 +623,22 @@ class StreamedTables:
         never touch the working set, so with the ring enabled consecutive
         steps' natural overlap — last step's updated rows — is already
         excluded and the fence rarely fires); with None, drains everything.
-        Re-raises a worker exception either way."""
+        Surfaces a worker failure either way (re-raise or degrade — see
+        ``_maybe_degrade_write_back``)."""
+        self._maybe_degrade_write_back()
         needed = (
             None
             if cast is None
             else [self._gather_ids(cast, t) for t in range(self.num_tables)]
         )
         t0 = time.perf_counter()
+        pending_exc = False
         with self.tracer.span("wb.barrier"):
             with self._wb_cond:
                 while True:
-                    self._raise_wb_exc_locked()
+                    if self._wb_exc is not None:
+                        pending_exc = True
+                        break
                     if not self._wb_inflight:
                         break
                     if needed is not None and not any(
@@ -559,11 +650,33 @@ class StreamedTables:
                     self._release_gates_locked()  # gated jobs can't commit
                     self._wb_cond.wait(1.0)
         self._c_wb_wait_s.inc(time.perf_counter() - t0)
+        if pending_exc:
+            # raises non-retryable; a retryable failure degrades, which
+            # drains and re-commits everything — the fence is satisfied
+            self._maybe_degrade_write_back()
 
     def drain_write_back(self) -> None:
         """Block until every queued write-back is committed (checkpoint /
         promotion / flush fence) and surface any worker exception."""
         self.write_back_barrier(None)
+
+    def abort_write_back(self) -> None:
+        """The ROLLBACK fence: wait out the in-flight queue, then discard
+        any pending worker failure and its uncommitted payloads WITHOUT
+        committing them. The recovery loop calls this before
+        ``restore_shards`` — the rolled-back snapshot supersedes every
+        queued write, and draining normally would re-raise the very
+        fault being recovered from. Never raises."""
+        if self._wb_thread is None:
+            self._wb_exc = None
+            self._wb_failed.clear()
+            return
+        with self._wb_cond:
+            self._release_gates_locked()
+            while self._wb_inflight:
+                self._wb_cond.wait(1.0)
+            self._wb_exc = None
+            self._wb_failed.clear()
 
     def _gather_ids(self, cast: dict, t: int) -> np.ndarray:
         """The ids ``gather`` would actually read for table ``t``: valid

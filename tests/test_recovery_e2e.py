@@ -1,0 +1,399 @@
+"""Supervised recovery acceptance: injected faults at seed-randomized
+steps -> degrade / rollback / replay -> the recovered run's final state
+is BIT-identical to an uninterrupted run.
+
+Single-host ``tc_streamed`` (MultiTableTrainer.run_supervised) takes the
+full gauntlet in one run: a prefetcher kill (degrades to sync fault-in),
+a fatal write-back crash mid-commit (rollback), and corruption of the
+newest snapshot (the rollback must skip it to an older good one). The
+sharded store repeats the drill at S=1 in-process and S=2 in a
+subprocess faking an 8-device host platform, with one corrupted rank
+dir inside the snapshot.
+
+``CHAOS_SEED`` (env, default 0) seeds the fault schedule — the CI chaos
+lane runs this file with a fixed seed and uploads the recovery JSONL.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import DLRMConfig
+from repro.data.pipeline import CastingServer
+from repro.data.synth import DLRMStream
+from repro.resilience import FaultPlan, FaultSpec, RecoveryPolicy
+from repro.stack.trainer import MultiTableTrainer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+CHAOS_OUT = os.environ.get("CHAOS_OUT_DIR")  # CI uploads JSONLs from here
+
+
+def _cfg(rows=48, tables=2, pooling=2):
+    return DLRMConfig(
+        name="recovery-e2e", num_tables=tables, gathers_per_table=pooling,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=rows, emb_dim=8,
+    )
+
+
+def _batches(cfg, steps, *, batch=4, seed=1):
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=batch, s=1.05, seed=seed,
+    )
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    return [cs(stream.batch_at(i)) for i in range(steps)]
+
+
+def _log_dir(tmp_path, name):
+    d = CHAOS_OUT if CHAOS_OUT else str(tmp_path)
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, name)
+
+
+def _run_streamed(tmp_path, name, cfg, batches, *, plan=None, log_path=None):
+    """One full tc_streamed run under run_supervised (identical save
+    cadence with and without faults — the bit-identity anchor). Returns
+    (dense_params, per-table (rows, accums), report)."""
+    import contextlib
+
+    trainer = MultiTableTrainer(
+        cfg, system="tc_streamed", promote_every=5,
+        checkpoint_dir=str(tmp_path / name / "ckpt"), keep_last=8,
+        ring_depth=0,
+    )
+    state = trainer.init(
+        jax.random.key(0), store_path=str(tmp_path / name / "store"),
+        capacity=6, resident_rows=12,
+    )
+    state = trainer.save_coherent(0, state)  # step-0 rollback anchor
+    policy = RecoveryPolicy(save_every=4, max_recoveries=4, log_path=log_path)
+    cm = plan.install() if plan is not None else contextlib.nullcontext()
+    with cm, trainer.streamed:
+        state, report = trainer.run_supervised(
+            state, lambda i: batches[i], len(batches),
+            policy=policy, log=lambda m: None,
+        )
+        state = trainer.flush(state)
+        stores = [trainer.streamed.stores[t].read_all() for t in range(cfg.num_tables)]
+    dense = jax.tree_util.tree_map(np.asarray, state["dense"])
+    return dense, stores, report
+
+
+def test_streamed_recovery_bit_identical(tmp_path):
+    """The headline acceptance: prefetcher kill + fatal wb crash at a
+    seed-randomized step + newest-snapshot corruption, all in one run —
+    the supervised loop degrades, skips the corrupt snapshot, rolls back
+    to the older good one, replays, and finishes bit-identical to the
+    uninterrupted run (dense params AND every shard store row/accum)."""
+    cfg = _cfg()
+    steps = 16
+    batches = _batches(cfg, steps)
+
+    ref_dense, ref_stores, ref_report = _run_streamed(
+        tmp_path, "clean", cfg, batches
+    )
+    assert ref_report["recoveries"] == 0
+
+    rng = np.random.default_rng(CHAOS_SEED)
+    fault_step = int(rng.integers(9, 12))  # after the step-8 save
+    plan = FaultPlan(
+        [
+            # prefetch thread dies early -> degraded sync fault-in
+            FaultSpec("prefetch.thread", action="raise", at=(1,)),
+            # wb worker dies FATALLY mid-commit -> rollback territory
+            FaultSpec("wb.thread", action="fatal", at=(fault_step,)),
+            # the newest snapshot at rollback time (invocation 1 = the
+            # step-8 save; the step-0 anchor predates the plan) is
+            # corrupted -> restore must skip it loudly to step 4
+            FaultSpec("ckpt.corrupt", action="flag", at=(1,)),
+        ],
+        seed=CHAOS_SEED,
+    )
+    log_path = _log_dir(tmp_path, "recovery_streamed.jsonl")
+    dense, stores, report = _run_streamed(
+        tmp_path, "chaos", cfg, batches, plan=plan, log_path=log_path
+    )
+
+    fired = plan.fire_counts()
+    assert fired.get("wb.thread") == 1, fired
+    assert fired.get("ckpt.corrupt") == 1, fired
+    assert report["recoveries"] >= 1
+    assert report["replayed_steps"] >= 1
+    rollbacks = [e for e in report["events"] if e["event"] == "rollback"]
+    assert rollbacks and rollbacks[0]["to_step"] == 4  # skipped corrupt step 8
+
+    # the audit trail is on disk (CI artifact)
+    with open(log_path) as f:
+        logged = [json.loads(line) for line in f if line.strip()]
+    assert any(e["event"] == "rollback" for e in logged)
+    assert any(e["event"] == "done" for e in logged)
+
+    # bit-identical final state vs the uninterrupted run
+    jax.tree_util.tree_map(np.testing.assert_array_equal, dense, ref_dense)
+    for t in range(cfg.num_tables):
+        np.testing.assert_array_equal(stores[t][0], ref_stores[t][0])
+        np.testing.assert_array_equal(stores[t][1], ref_stores[t][1])
+
+
+def test_streamed_stall_watchdog_rolls_back(tmp_path):
+    """A wedged step (artificial stall past step_timeout_s) triggers the
+    same rollback/replay path — and stays bit-identical."""
+    cfg = _cfg(rows=32, tables=1)
+    steps = 12
+    batches = _batches(cfg, steps, batch=2)
+
+    ref_dense, ref_stores, _ = _run_streamed(tmp_path, "clean", cfg, batches)
+
+    import contextlib
+
+    trainer = MultiTableTrainer(
+        cfg, system="tc_streamed", promote_every=5,
+        checkpoint_dir=str(tmp_path / "stall" / "ckpt"), keep_last=8,
+        ring_depth=0,
+    )
+    state = trainer.init(
+        jax.random.key(0), store_path=str(tmp_path / "stall" / "store"),
+        capacity=6, resident_rows=12,
+    )
+    state = trainer.save_coherent(0, state)
+    policy = RecoveryPolicy(save_every=4, max_recoveries=2, step_timeout_s=0.2)
+    plan = FaultPlan(
+        [FaultSpec("step.stall", action="stall", stall_s=0.5, at=(6,))],
+        seed=CHAOS_SEED,
+    )
+    with plan.install(), trainer.streamed:
+        state, report = trainer.run_supervised(
+            state, lambda i: batches[i], steps, policy=policy, log=lambda m: None
+        )
+        state = trainer.flush(state)
+        stores = [trainer.streamed.stores[0].read_all()]
+    assert plan.fire_counts().get("step.stall") == 1
+    assert report["recoveries"] == 1
+    assert any(e["event"] == "stall" for e in report["events"])
+    dense = jax.tree_util.tree_map(np.asarray, state["dense"])
+    jax.tree_util.tree_map(np.testing.assert_array_equal, dense, ref_dense)
+    np.testing.assert_array_equal(stores[0][0], ref_stores[0][0])
+    np.testing.assert_array_equal(stores[0][1], ref_stores[0][1])
+
+
+# ---------------------------------------------------------------------------
+# sharded store: rollback across rank dirs
+# ---------------------------------------------------------------------------
+
+
+def _run_sharded(tmp_path, name, cfg, batches, S, *, plan=None, log_path=None):
+    """Sharded run under resilience.run_supervised with the dist coherent
+    save/restore closures (the trainer wrapper is single-host only)."""
+    import contextlib
+
+    from repro.checkpoint import Checkpointer
+    from repro.dist import sparse as dsp
+    from repro.launch.mesh import make_host_mesh
+    from repro.resilience import run_supervised
+
+    mesh = make_host_mesh((S,), ("model",))
+    state, sharded = dsp.init_sharded(
+        cfg, jax.random.key(0), str(tmp_path / name / "store"), num_shards=S,
+        capacity=6, resident_rows=24 // S,
+    )
+    step_sh = dsp.make_sharded_train_step(cfg, sharded, mesh)
+    promote = dsp.make_sharded_promote(sharded)
+    ckpt = Checkpointer(str(tmp_path / name / "ckpt"), keep_last=8)
+
+    def step_fn(st, batch, *, step_index):
+        st, loss = step_sh(st, batch, step_index=step_index)
+        if (step_index + 1) % 5 == 0:
+            st = promote(st)
+        return st, loss
+
+    def save_fn(step, st):
+        return dsp.save_coherent(ckpt, step, st, sharded=sharded)
+
+    def restore_fn(st):
+        sharded.abort_write_back()
+        good = ckpt.latest_good_step(log=lambda m: None)
+        if good is None:
+            return None
+        return dsp.restore_coherent(ckpt, st, sharded=sharded, step=good)
+
+    policy = RecoveryPolicy(save_every=4, max_recoveries=4, log_path=log_path)
+    cm = plan.install() if plan is not None else contextlib.nullcontext()
+    with cm, sharded:
+        state = save_fn(0, state)
+        state, report = run_supervised(
+            state, num_steps=len(batches), step_fn=step_fn,
+            produce=lambda i: batches[i], policy=policy,
+            save_fn=save_fn, restore_fn=restore_fn, log=lambda m: None,
+        )
+        state = sharded.flush_state(state)
+        rows, accs = sharded.read_all()
+    dense = jax.tree_util.tree_map(np.asarray, state["dense"])
+    return dense, (rows, accs), report
+
+
+def test_sharded_s1_recovery_with_corrupted_rank_dir(tmp_path):
+    """S=1 in-process: the step-12 coherent save dies with a fatal IO
+    fault AND the newest intact snapshot's rank dir (step 8, rank_00) is
+    corrupted -> rollback skips it to step 4, replays, and finishes
+    bit-identical to the clean sharded run. (The sharded ranks commit
+    write-back synchronously — overlap_write_back=False — so the async
+    wb.thread point never fires here; ckpt.io is the sharded-path fatal.)
+    """
+    cfg = _cfg(rows=48, tables=2)
+    steps = 12
+    batches = _batches(cfg, steps)
+
+    ref_dense, (ref_rows, ref_accs), ref_report = _run_sharded(
+        tmp_path, "clean", cfg, batches, S=1
+    )
+    assert ref_report["recoveries"] == 0
+
+    plan = FaultPlan(
+        [
+            # invocation 3 = the step-12 save (0=anchor, 1=step 4, 2=step 8)
+            FaultSpec("ckpt.io", action="fatal", at=(3,)),
+            # corrupt inside the step-8 snapshot's rank dir specifically
+            FaultSpec("ckpt.corrupt", action="flag", at=(2,), match="rank_00"),
+        ],
+        seed=CHAOS_SEED,
+    )
+    log_path = _log_dir(tmp_path, "recovery_sharded_s1.jsonl")
+    dense, (rows, accs), report = _run_sharded(
+        tmp_path, "chaos", cfg, batches, S=1, plan=plan, log_path=log_path
+    )
+    assert plan.fire_counts().get("ckpt.io") == 1
+    assert plan.fire_counts().get("ckpt.corrupt") == 1
+    assert report["recoveries"] >= 1
+    rollbacks = [e for e in report["events"] if e["event"] == "rollback"]
+    assert rollbacks and rollbacks[0]["to_step"] == 4
+    jax.tree_util.tree_map(np.testing.assert_array_equal, dense, ref_dense)
+    np.testing.assert_array_equal(rows, ref_rows)
+    np.testing.assert_array_equal(accs, ref_accs)
+
+
+_SUBPROC = textwrap.dedent(
+    """
+    import os, sys, tempfile, contextlib
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    seed = int(sys.argv[1])
+    import json
+    import numpy as np, jax
+    from repro.checkpoint import Checkpointer
+    from repro.configs.base import DLRMConfig
+    from repro.data.pipeline import CastingServer
+    from repro.data.synth import DLRMStream
+    from repro.dist import sparse as dsp
+    from repro.launch.mesh import make_host_mesh
+    from repro.resilience import FaultPlan, FaultSpec, RecoveryPolicy, run_supervised
+
+    S = 2
+    cfg = DLRMConfig(
+        name="recovery-sub", num_tables=2, gathers_per_table=2,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=48, emb_dim=8,
+    )
+    stream = DLRMStream(
+        num_tables=2, rows_per_table=48, gathers_per_table=2, batch=4,
+        s=1.05, seed=1,
+    )
+    cs = CastingServer(rows_per_table=48, with_counts=True, with_lookup_seg=True)
+    batches = [cs(stream.batch_at(i)) for i in range(12)]
+
+    def run(name, plan=None, log_path=None):
+        d = tempfile.mkdtemp(prefix=name)
+        mesh = make_host_mesh((S,), ("model",))
+        state, sharded = dsp.init_sharded(
+            cfg, jax.random.key(0), os.path.join(d, "store"), num_shards=S,
+            capacity=6, resident_rows=12,
+        )
+        step_sh = dsp.make_sharded_train_step(cfg, sharded, mesh)
+        promote = dsp.make_sharded_promote(sharded)
+        ckpt = Checkpointer(os.path.join(d, "ckpt"), keep_last=8)
+
+        def step_fn(st, batch, *, step_index):
+            st, loss = step_sh(st, batch, step_index=step_index)
+            if (step_index + 1) % 5 == 0:
+                st = promote(st)
+            return st, loss
+
+        def save_fn(step, st):
+            return dsp.save_coherent(ckpt, step, st, sharded=sharded)
+
+        def restore_fn(st):
+            sharded.abort_write_back()
+            good = ckpt.latest_good_step(log=lambda m: None)
+            if good is None:
+                return None
+            return dsp.restore_coherent(ckpt, st, sharded=sharded, step=good)
+
+        policy = RecoveryPolicy(save_every=4, max_recoveries=4, log_path=log_path)
+        cm = plan.install() if plan is not None else contextlib.nullcontext()
+        with cm, sharded:
+            state2 = save_fn(0, state)
+            state2, report = run_supervised(
+                state2, num_steps=len(batches), step_fn=step_fn,
+                produce=lambda i: batches[i], policy=policy,
+                save_fn=save_fn, restore_fn=restore_fn, log=lambda m: None,
+            )
+            state2 = sharded.flush_state(state2)
+            rows, accs = sharded.read_all()
+        dense = jax.tree_util.tree_map(np.asarray, state2["dense"])
+        return dense, rows, accs, report
+
+    ref_dense, ref_rows, ref_accs, ref_report = run("clean")
+    plan = FaultPlan(
+        [
+            FaultSpec("ckpt.io", action="fatal", at=(3,)),
+            FaultSpec("ckpt.corrupt", action="flag", at=(2,), match="rank_01"),
+        ],
+        seed=seed,
+    )
+    out_dir = os.environ.get("CHAOS_OUT_DIR") or tempfile.mkdtemp()
+    os.makedirs(out_dir, exist_ok=True)
+    log_path = os.path.join(out_dir, "recovery_sharded_s2.jsonl")
+    dense, rows, accs, report = run("chaos", plan=plan, log_path=log_path)
+    leaves_equal = all(
+        np.array_equal(a, b) for a, b in zip(
+            jax.tree_util.tree_leaves(dense), jax.tree_util.tree_leaves(ref_dense)
+        )
+    )
+    rollbacks = [e for e in report["events"] if e["event"] == "rollback"]
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "fired": plan.fire_counts(),
+        "recoveries": report["recoveries"],
+        "rolled_back_to": rollbacks[0]["to_step"] if rollbacks else None,
+        "dense_equal": bool(leaves_equal),
+        "store_equal": bool(
+            np.array_equal(rows, ref_rows) and np.array_equal(accs, ref_accs)
+        ),
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_s2_recovery_subprocess():
+    """S=2 on a simulated 8-device host: fatal write-back fault + one
+    corrupted rank dir (rank_01) inside the newest snapshot -> rollback
+    to the older good snapshot, bit-identical finish."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC, str(CHAOS_SEED)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 8, rec
+    assert rec["fired"].get("ckpt.corrupt") == 1, rec
+    assert rec["recoveries"] >= 1, rec
+    assert rec["rolled_back_to"] == 4, rec
+    assert rec["dense_equal"] and rec["store_equal"], rec

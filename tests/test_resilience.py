@@ -1,0 +1,570 @@
+"""Resilience layer units: deterministic fault schedules, the retry
+taxonomy, degraded-mode fallbacks (dead prefetcher / dead wb-worker /
+unbindable metrics port / lost alert log), checkpoint integrity +
+latest-good rollback, and loud rejection of truncated shard files.
+
+The e2e recovery acceptance (injected fault -> rollback -> bit-identical
+final state) lives in tests/test_recovery_e2e.py; this file pins the
+building blocks one failure mode at a time.
+"""
+import json
+import os
+import socket
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import DLRMConfig
+from repro.data.pipeline import CastingServer
+from repro.data.synth import DLRMStream
+from repro.resilience import (
+    FatalFault,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    RetryPolicy,
+    TornWrite,
+    backoff_delay,
+    call_with_retry,
+    corrupt_dir,
+    corrupt_file,
+    is_retryable,
+)
+from repro.resilience import faults
+from repro.runtime import dlrm_train
+
+
+def _cfg(rows=32, tables=2, pooling=2):
+    return DLRMConfig(
+        name="resilience", num_tables=tables, gathers_per_table=pooling,
+        bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=rows, emb_dim=8,
+    )
+
+
+def _batches(cfg, steps, *, batch=4, seed=1):
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=batch, s=1.05, seed=seed,
+    )
+    cs = CastingServer(
+        rows_per_table=cfg.rows_per_table, with_counts=True, with_lookup_seg=True
+    )
+    return [cs(stream.batch_at(i)) for i in range(steps)]
+
+
+# ---------------------------------------------------------------------------
+# fault plans: deterministic schedules
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_at_every_and_max_fires():
+    plan = FaultPlan(
+        [
+            FaultSpec("a", at=(0, 2), max_fires=None),
+            FaultSpec("b", every=3, max_fires=None),
+            FaultSpec("c", at=(0, 1, 2), max_fires=1),
+        ]
+    )
+    with plan.install():
+        hits_a = [i for i in range(5) if faults.should_fire("a")]
+        hits_b = [i for i in range(9) if faults.should_fire("b")]
+        hits_c = [i for i in range(5) if faults.should_fire("c")]
+        assert not faults.should_fire("unregistered.point")
+    assert hits_a == [0, 2]
+    assert hits_b == [2, 5, 8]  # every=3: fires on the 3rd, 6th, 9th call
+    assert hits_c == [0]  # max_fires=1 swallows the rest of the schedule
+    assert plan.fire_counts() == {"a": 2, "b": 3, "c": 1}
+
+
+def test_fault_plan_prob_is_seed_deterministic():
+    def run(seed):
+        plan = FaultPlan([FaultSpec("p", prob=0.3, max_fires=None)], seed=seed)
+        with plan.install():
+            return [i for i in range(64) if faults.should_fire("p")]
+
+    assert run(7) == run(7)
+    assert run(7) != run(8)
+    assert len(run(7)) > 0
+
+
+def test_fire_actions_raise_fatal_and_disabled_is_noop():
+    # no plan installed: pure no-op
+    faults.fire("shards.read")
+    plan = FaultPlan(
+        [
+            FaultSpec("r", action="raise", at=(0,)),
+            FaultSpec("f", action="fatal", at=(0,)),
+        ]
+    )
+    with plan.install():
+        with pytest.raises(InjectedFault):
+            faults.fire("r")
+        with pytest.raises(FatalFault):
+            faults.fire("f")
+        faults.fire("r")  # max_fires=1 default: second call passes
+    with pytest.raises(ValueError):
+        FaultSpec("x", action="explode")
+    with pytest.raises(ValueError):
+        FaultPlan([FaultSpec("dup"), FaultSpec("dup")])
+
+
+def test_corrupt_file_and_dir_deterministic(tmp_path):
+    p = tmp_path / "data.bin"
+    p.write_bytes(bytes(range(256)))
+    corrupt_file(str(p), seed=3)
+    damaged = p.read_bytes()
+    assert damaged != bytes(range(256))
+    p.write_bytes(bytes(range(256)))
+    corrupt_file(str(p), seed=3)
+    assert p.read_bytes() == damaged  # same seed, same damage
+    (tmp_path / "sub").mkdir()
+    (tmp_path / "sub" / "other.bin").write_bytes(b"x" * 64)
+    target = corrupt_dir(str(tmp_path), seed=3, match="other")
+    assert target.endswith("other.bin")
+    with pytest.raises(ValueError):
+        empty = tmp_path / "empty.bin"
+        empty.write_bytes(b"")
+        corrupt_file(str(empty))
+
+
+# ---------------------------------------------------------------------------
+# retry: taxonomy, backoff, counters
+# ---------------------------------------------------------------------------
+
+
+def test_retry_taxonomy():
+    assert is_retryable(OSError("disk"))
+    assert is_retryable(TimeoutError("slow"))
+    assert is_retryable(InjectedFault("injected"))
+    assert not is_retryable(FatalFault("fatal"))
+    assert not is_retryable(TornWrite("torn"))
+    assert not is_retryable(RuntimeError("logic"))
+    assert not is_retryable(ValueError("bad"))
+
+
+def test_call_with_retry_recovers_and_counts():
+    from repro.obs.registry import Registry
+
+    reg = Registry()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    slept = []
+    out = call_with_retry(
+        flaky, point="t.flaky", registry=reg, sleep=slept.append
+    )
+    assert out == "ok" and calls["n"] == 3
+    assert len(slept) == 2 and all(d > 0 for d in slept)
+    snap = reg.snapshot()
+    assert snap.values["resilience.retries_total{point=t.flaky}"] == 2
+    assert "resilience.gave_up_total{point=t.flaky}" not in snap.values
+
+
+def test_call_with_retry_gives_up_and_fatal_skips_retry():
+    from repro.obs.registry import Registry
+
+    reg = Registry()
+    calls = {"n": 0}
+
+    def always_bad():
+        calls["n"] += 1
+        raise OSError("persistent")
+
+    with pytest.raises(OSError):
+        call_with_retry(
+            always_bad, point="t.dead", policy=RetryPolicy(max_attempts=3),
+            registry=reg, sleep=lambda d: None,
+        )
+    assert calls["n"] == 3
+    snap = reg.snapshot()
+    assert snap.values["resilience.gave_up_total{point=t.dead}"] == 1
+
+    calls["n"] = 0
+
+    def fatal():
+        calls["n"] += 1
+        raise TornWrite("damage done")
+
+    with pytest.raises(TornWrite):
+        call_with_retry(fatal, point="t.fatal", sleep=lambda d: None)
+    assert calls["n"] == 1  # fatal: no second attempt
+
+
+def test_backoff_delay_monotone_and_capped():
+    pol = RetryPolicy(max_attempts=8, base_delay_s=0.01, max_delay_s=0.1, jitter=0.0)
+    ds = [backoff_delay(pol, "p", a) for a in range(1, 8)]
+    assert ds == sorted(ds)
+    assert ds[0] == 0.01 and max(ds) == 0.1
+    jittered = backoff_delay(RetryPolicy(jitter=0.5), "p", 1)
+    assert jittered == backoff_delay(RetryPolicy(jitter=0.5), "p", 1)  # deterministic
+
+
+# ---------------------------------------------------------------------------
+# shard IO: retries engage; truncated files rejected loudly
+# ---------------------------------------------------------------------------
+
+
+def test_shard_read_retries_through_injected_fault(tmp_path):
+    from repro.obs.registry import Registry
+    from repro.store.shards import create_store
+
+    rows = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    store = create_store(str(tmp_path / "t0"), rows, num_shards=4)
+    store.retry_registry = reg = Registry()
+    plan = FaultPlan([FaultSpec("shards.read", action="raise", at=(0,))])
+    with plan.install():
+        got, _ = store.read_rows(np.array([1, 5, 9], np.int64))
+    np.testing.assert_array_equal(got, rows[[1, 5, 9]])
+    snap = reg.snapshot()
+    assert snap.values["resilience.retries_total{point=shards.read}"] == 1
+    store.close()
+
+
+def test_torn_write_is_fatal_and_leaves_partial_rows(tmp_path):
+    from repro.store.shards import create_store
+
+    rows = np.zeros((16, 4), np.float32)
+    store = create_store(str(tmp_path / "t0"), rows, num_shards=2)
+    ids = np.arange(8, dtype=np.int64)
+    new = np.full((8, 4), 7.0, np.float32)
+    plan = FaultPlan([FaultSpec("shards.torn_write", action="flag", at=(0,))])
+    with plan.install():
+        with pytest.raises(TornWrite):
+            store.write_rows(ids, new, np.ones((8,), np.float32))
+    got, _ = store.read_rows(ids)
+    assert (got == 7.0).all(axis=1).any()  # prefix landed
+    assert (got == 0.0).all(axis=1).any()  # suffix did not
+    store.close()
+
+
+def test_truncated_shard_file_rejected_with_path(tmp_path):
+    from repro.store.shards import create_store, open_store
+
+    rows = np.ones((32, 4), np.float32)
+    store = create_store(str(tmp_path / "t0"), rows, num_shards=4)
+    store.close()
+    # truncate one shard file: geometry metadata stays valid, bytes lie
+    victim = None
+    for name in sorted(os.listdir(tmp_path / "t0")):
+        if name.endswith(".bin"):
+            victim = str(tmp_path / "t0" / name)
+            break
+    assert victim is not None
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) - 8)
+    with pytest.raises(ValueError, match="truncated") as ei:
+        open_store(str(tmp_path / "t0"))
+    assert victim in str(ei.value)  # offending path named
+
+
+def test_truncated_rank_shard_rejected_by_restore_shards(tmp_path):
+    """Satellite: a truncated rank shard file inside a sharded-store
+    snapshot is rejected loudly by restore_shards — content validation,
+    not just layout.json geometry."""
+    from repro.dist.sparse import ShardedStreamedTables
+
+    tables = np.random.default_rng(0).normal(size=(1, 32, 8)).astype(np.float32)
+    sharded = ShardedStreamedTables.create(
+        str(tmp_path / "live"), tables,
+        num_shards=2, resident_rows=8, store_shards=2,
+    )
+    # snapshot = a copy of the store layout; then truncate one rank shard
+    import shutil
+
+    snap = str(tmp_path / "snap")
+    shutil.copytree(str(tmp_path / "live"), snap)
+    victim = None
+    for root, _, files in os.walk(snap):
+        for name in sorted(files):
+            if name.endswith(".bin"):
+                victim = os.path.join(root, name)
+                break
+        if victim:
+            break
+    assert victim is not None
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) - 4)
+    with pytest.raises(ValueError, match="truncated") as ei:
+        sharded.restore_shards(snap)
+    assert victim in str(ei.value)
+    sharded.close()
+
+
+# ---------------------------------------------------------------------------
+# degraded modes: dead prefetcher / dead wb worker keep training correct
+# ---------------------------------------------------------------------------
+
+
+def test_dead_prefetcher_degrades_to_sync_fault_in(tmp_path):
+    cfg = _cfg(rows=32, tables=1)
+    batches = _batches(cfg, 8, batch=2)
+
+    # reference: clean run, prefetch disabled from the start
+    state_ref, streamed_ref = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "ref"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+        overlap_write_back=False,
+    )
+    step_ref = dlrm_train.make_streamed_train_step(cfg, streamed_ref)
+    with streamed_ref:
+        for i, b in enumerate(batches):
+            state_ref, _ = step_ref(state_ref, b, step_index=i)
+        from repro.store import flush_state
+
+        state_ref = flush_state(state_ref, streamed_ref)
+        ref_rows, ref_accums = streamed_ref.stores[0].read_all()
+
+    # victim: prefetch thread dies on its first fault-in (retryable)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "victim"),
+        capacity=4, resident_rows=8, prefetch=True, ring_depth=0,
+        overlap_write_back=False,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    plan = FaultPlan([FaultSpec("prefetch.thread", action="raise", at=(0,))])
+    with plan.install(), streamed:
+        for i, b in enumerate(batches):
+            # schedule like the pipeline would: the first fault-in dies
+            streamed.schedule_prefetch(i, b["cast"])
+            state, _ = step_st(state, b, step_index=i)
+        assert streamed.prefetcher is None  # degraded: torn down
+        snap = streamed.registry.snapshot()
+        assert snap.values["resilience.degraded{component=prefetch}"] == 1.0
+        from repro.store import flush_state
+
+        state = flush_state(state, streamed)
+        rows, accums = streamed.stores[0].read_all()
+    assert plan.fire_counts().get("prefetch.thread") == 1
+    np.testing.assert_array_equal(rows, ref_rows)
+    np.testing.assert_array_equal(accums, ref_accums)
+
+
+def test_dead_wb_worker_degrades_to_sync_write_back(tmp_path):
+    cfg = _cfg(rows=32, tables=1)
+    batches = _batches(cfg, 8, batch=2)
+
+    state_ref, streamed_ref = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "ref"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+        overlap_write_back=False,
+    )
+    step_ref = dlrm_train.make_streamed_train_step(cfg, streamed_ref)
+    with streamed_ref:
+        for i, b in enumerate(batches):
+            state_ref, _ = step_ref(state_ref, b, step_index=i)
+        from repro.store import flush_state
+
+        state_ref = flush_state(state_ref, streamed_ref)
+        ref_rows, ref_accums = streamed_ref.stores[0].read_all()
+
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "victim"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+        overlap_write_back=True,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+    plan = FaultPlan([FaultSpec("wb.thread", action="raise", at=(0,))])
+    with plan.install(), streamed:
+        for i, b in enumerate(batches):
+            state, _ = step_st(state, b, step_index=i)
+        assert streamed.overlap_write_back is False  # degraded to sync
+        snap = streamed.registry.snapshot()
+        assert snap.values["resilience.degraded{component=write_back}"] == 1.0
+        from repro.store import flush_state
+
+        state = flush_state(state, streamed)
+        rows, accums = streamed.stores[0].read_all()
+    assert plan.fire_counts().get("wb.thread") == 1
+    np.testing.assert_array_equal(rows, ref_rows)
+    np.testing.assert_array_equal(accums, ref_accums)
+
+
+def test_nonretryable_wb_exception_still_propagates(tmp_path):
+    """The degrade path must not absorb logic errors: a RuntimeError from
+    the wb worker keeps its PR-pinned propagation semantics."""
+    cfg = _cfg(rows=32, tables=1)
+    batches = _batches(cfg, 6, batch=2)
+    state, streamed = dlrm_train.init_streamed(
+        cfg, jax.random.key(0), str(tmp_path / "store"),
+        capacity=4, resident_rows=8, prefetch=False, ring_depth=0,
+    )
+    step_st = dlrm_train.make_streamed_train_step(cfg, streamed)
+
+    def boom(*a, **k):
+        raise RuntimeError("wb boom")
+
+    streamed.working[0].update = boom
+    with pytest.raises(RuntimeError, match="wb boom"):
+        for k in range(4):
+            state, _ = step_st(state, batches[0])
+    streamed.close()
+
+
+# ---------------------------------------------------------------------------
+# metrics server: bind failure never kills the process
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_server_falls_back_to_ephemeral_port():
+    from repro.obs.export import MetricsServer
+    from repro.obs.registry import Registry
+
+    reg = Registry()
+    reg.counter("x.total").inc(3)
+    blocker = socket.socket()
+    blocker.bind(("127.0.0.1", 0))
+    taken = blocker.getsockname()[1]
+    try:
+        srv = MetricsServer(reg, host="127.0.0.1", port=taken).start()
+        try:
+            assert srv.running
+            assert srv.port != taken  # fell back to an ephemeral port
+            snap = reg.snapshot()
+            assert snap.values["obs.metrics_server_up"] == 1.0
+        finally:
+            srv.close()
+    finally:
+        blocker.close()
+
+
+def test_metrics_server_disabled_on_unbindable_host():
+    from repro.obs.export import MetricsServer
+    from repro.obs.registry import Registry
+
+    reg = Registry()
+    # 203.0.113.1 is TEST-NET-3: not a local interface, bind always fails
+    srv = MetricsServer(reg, host="203.0.113.1", port=9100).start()
+    assert not srv.running
+    with pytest.raises(RuntimeError):
+        srv.port
+    snap = reg.snapshot()
+    assert snap.values["obs.metrics_server_up"] == 0.0
+    srv.close()  # no-op, must not raise
+
+
+# ---------------------------------------------------------------------------
+# monitor: lost alert log degrades; degraded components alert
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_survives_alert_log_loss(tmp_path):
+    from repro.obs.monitor import HealthMonitor
+    from repro.obs.registry import Registry
+
+    reg = Registry()
+    mon = HealthMonitor(
+        reg, every=1, thresholds={"bad_metric": {"max": 1.0}},
+        alert_log=str(tmp_path / "alerts.jsonl"),
+    )
+    plan = FaultPlan(
+        [FaultSpec("mon.alert_log", action="raise", every=1, max_fires=None)]
+    )
+    with plan.install():
+        fired = mon.observe(0, metrics={"bad_metric": 5.0})
+    assert len(fired) == 1  # the alert itself survived
+    assert mon._log is None  # log dropped, monitor alive
+    snap = reg.snapshot()
+    assert snap.values["resilience.degraded{component=alert_log}"] == 1.0
+    # subsequent alerts keep working without a log
+    fired = mon.observe(1, metrics={"other": 0.0})
+    mon.close()
+
+
+def test_monitor_alerts_on_degraded_component(tmp_path):
+    from repro.obs.monitor import HealthMonitor
+    from repro.obs.registry import Registry
+    from repro.resilience.retry import mark_degraded
+
+    reg = Registry()
+    mon = HealthMonitor(reg, every=1)
+    assert mon.observe(0) == []  # healthy: silent
+    mark_degraded(reg, "prefetch")
+    fired = mon.observe(1)
+    assert any(a.metric == "degraded_total" and a.kind == "threshold" for a in fired)
+    assert mon.observe(2) == []  # fires on the transition, not every tick
+    mon.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: manifest, verification, latest-good rollback
+# ---------------------------------------------------------------------------
+
+
+def _toy_tree(v=0.0):
+    return {"w": np.full((4, 4), v, np.float32), "b": np.zeros((4,), np.float32)}
+
+
+def test_checkpoint_integrity_roundtrip_and_corruption(tmp_path):
+    from repro.checkpoint import Checkpointer, verify_snapshot
+
+    ckpt = Checkpointer(str(tmp_path), keep_last=5)
+    for s in (1, 2, 3):
+        ckpt.save(s, _toy_tree(float(s)), blocking=True)
+    assert ckpt.verify(3) == []
+    assert ckpt.latest_good_step(log=None) == 3
+
+    # flip bytes in the newest snapshot: verify names the damaged file,
+    # latest_good_step skips back to 2, restore(verify=True) refuses
+    damaged = corrupt_dir(str(tmp_path / "step_00000003"), seed=1, match=".npy")
+    problems = ckpt.verify(3)
+    assert problems and any(damaged in p for p in problems)
+    logs = []
+    assert ckpt.latest_good_step(log=logs.append) == 2
+    assert any("skipping" in m and "3" in m for m in logs)
+    with pytest.raises(ValueError, match="integrity"):
+        ckpt.restore(_toy_tree(), step=3, verify=True)
+    step, tree = ckpt.restore_latest_good(_toy_tree(), log=None)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["w"]), _toy_tree(2.0)["w"])
+    # intact snapshots restore with or without verification
+    step, _ = ckpt.restore(_toy_tree(), step=2)
+    assert step == 2
+
+
+def test_checkpoint_truncation_detected(tmp_path):
+    from repro.checkpoint import Checkpointer
+
+    ckpt = Checkpointer(str(tmp_path), keep_last=5)
+    ckpt.save(1, _toy_tree(1.0), blocking=True)
+    victim = str(tmp_path / "step_00000001" / "w.npy")
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) - 16)
+    problems = ckpt.verify(1)
+    assert any(victim in p and "torn" in p for p in problems)
+    assert ckpt.latest_good_step(log=None) is None
+    with pytest.raises(FileNotFoundError, match="no intact"):
+        ckpt.restore_latest_good(_toy_tree(), log=None)
+
+
+def test_checkpoint_io_fault_is_retried(tmp_path):
+    from repro.checkpoint import Checkpointer
+    from repro.obs.registry import Registry
+
+    reg = Registry()
+    ckpt = Checkpointer(str(tmp_path), registry=reg)
+    plan = FaultPlan([FaultSpec("ckpt.io", action="raise", at=(0,))])
+    with plan.install():
+        ckpt.save(1, _toy_tree(1.0), blocking=True)  # survives the fault
+    assert ckpt.verify(1) == []
+    snap = reg.snapshot()
+    assert snap.values["resilience.retries_total{point=ckpt.io}"] == 1
+
+
+def test_ckpt_corrupt_point_damages_snapshot(tmp_path):
+    from repro.checkpoint import Checkpointer
+
+    ckpt = Checkpointer(str(tmp_path), keep_last=5)
+    plan = FaultPlan([FaultSpec("ckpt.corrupt", action="flag", at=(1,))])
+    with plan.install():
+        ckpt.save(1, _toy_tree(1.0), blocking=True)
+        ckpt.save(2, _toy_tree(2.0), blocking=True)  # 2nd save: corrupted
+    assert ckpt.verify(1) == []
+    assert ckpt.verify(2) != []
+    assert ckpt.latest_good_step(log=None) == 1
