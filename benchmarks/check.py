@@ -6,9 +6,9 @@ against the committed baseline in ``benchmarks/baselines/`` with
 PER-METRIC tolerance bands instead of exact equality, because two classes
 of metric move between runners:
 
-  * **wall-clock** (``*_us*``, ``*_ms*``, ``*_ns``, ``*seconds*``,
-    ``*speedup*``, ``*tok_per_s*``, ``*overhead*``) — machine-dependent,
-    SKIPPED entirely; the artifact upload is the trajectory record, the
+  * **wall-clock / throughput** (``*_us*``, ``*_ms*``, ``*_ns``,
+    ``*seconds*``, ``*speedup*``, ``*tok_per_s*``, ``*qps*``,
+    ``*overhead*``) — machine-dependent, SKIPPED entirely; the artifact upload is the trajectory record, the
     check only guards structure and the structural metrics below.
   * **rates in [0, 1]** (``*rate*``, ``*coverage*``, ``*frac*``,
     ``*hit*``) — compared with an ABSOLUTE band (default 0.1): thread
@@ -32,7 +32,7 @@ import sys
 
 SKIP_SUBSTRINGS = (
     "_us", "us_", "_ms", "ms_", "_ns", "seconds", "speedup", "tok_per_s",
-    "overhead", "_s_",
+    "overhead", "_s_", "qps",
 )
 SKIP_SUFFIXES = ("_s",)
 RATE_SUBSTRINGS = ("rate", "coverage", "frac", "hit", "saved")

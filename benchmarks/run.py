@@ -12,7 +12,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default="all",
-        help="comma list of: fig4,fig5,fig6,fig12,fig13,fig15,fig16,fig17,kernels,roofline,cache,store",
+        help="comma list of: fig4,fig5,fig6,fig12,fig13,fig15,fig16,fig17,kernels,roofline,cache,store,serve",
     )
     ap.add_argument("--quick", action="store_true", help="smaller sweeps for CI")
     ap.add_argument(
@@ -28,7 +28,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     want = set(args.only.split(",")) if args.only != "all" else {
         "fig5", "fig6", "fig12", "fig13", "fig15", "fig16", "fig17", "fig4",
-        "kernels", "roofline", "cache", "store",
+        "kernels", "roofline", "cache", "store", "serve",
     }
 
     print("name,us_per_call,derived")
@@ -85,6 +85,10 @@ def main() -> None:
         from benchmarks import store_bench
 
         store_bench.run(**(store_bench.QUICK if args.quick else {}))
+    if "serve" in want:
+        from benchmarks import serve_bench
+
+        serve_bench.run(**(serve_bench.QUICK if args.quick else {}))
     print(f"# total_bench_seconds,{time.time() - t0:.1f},", file=sys.stderr)
     if args.check:
         from benchmarks.check import check_dir

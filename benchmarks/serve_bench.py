@@ -1,0 +1,271 @@
+"""Serving-engine benchmark: sustained QPS + request latency percentiles
+over the frozen ``tc_streamed`` tier stack (docs/serving.md).
+
+One flushed shard store is built once, opened read-only, frozen, and
+warmed; then two kinds of measurement run over it:
+
+  * **structural** (machine-independent, exact — these are what the CI
+    baseline check actually guards):
+      - ``batched_bit_identical`` — every batched+padded score equals the
+        unbatched single-request reference bit-for-bit.
+      - ``store_unchanged`` / ``dirty_rows`` — the shard directory hashes
+        identically after the whole bench (zero write-back) and the
+        working set never held a dirty row.
+      - ``hot_fill_rows_warm`` / ``hot_fill_rows_after_serving`` — the
+        VMEM hot tier is filled exactly once, at warm time; the delta
+        across all serving is 0 (the fill-once acceptance criterion).
+      - admission counts (``rejected_queue_full`` / ``rejected_oversize``)
+        and per-bucket batch/padding counters for a fixed request plan.
+  * **timing** (trajectory record, skipped by the checker):
+      - a closed-loop wave-slots sweep: sustained ``qps`` with
+        ``request_p50_ms`` / ``request_p99_ms`` / ``batch_p50_ms`` per
+        point (fig12-style latency-vs-throughput).
+      - an open-loop offered-rate sweep: requests arrive on a pacing
+        clock, the engine pumps when a wave fills, and the percentiles
+        include queue wait — the knee past the sustained rate is the
+        admission-control story.
+
+CSV rows via benchmarks.common.emit:
+  serve/slots<n>,<us_per_request>,qps=<q>;p50=<ms>;p99=<ms>
+  serve/offered<q>,<us_per_request>,qps=<q>;p50=<ms>;p99=<ms>
+
+``BENCH_serve.json`` (benchmarks.common.write_json) carries everything
+machine-readably for the CI quick lane (artifact + baseline check).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, model_hbm_gather, write_json
+from repro.configs.base import DLRMConfig
+from repro.data.synth import DLRMStream
+from repro.obs.registry import Registry
+from repro.serve import ServeRequest, ServingEngine, open_readonly, store_digest
+from repro.stack.frozen import freeze
+from repro.stack.streamed import init_streamed
+from repro.store.streamed import flush_state
+
+QUICK = dict(
+    rows=2048, num_tables=2, pooling=8, emb_dim=16, requests=24,
+    slot_sweep=(2, 4), offered_qps=(100.0, 400.0),
+)
+
+
+def bench_config(rows: int, num_tables: int, pooling: int, emb_dim: int) -> DLRMConfig:
+    return DLRMConfig(
+        name="serve-bench",
+        num_tables=num_tables,
+        gathers_per_table=pooling,
+        bottom_mlp=(64, emb_dim),
+        top_mlp=(64, 1),
+        rows_per_table=rows,
+        emb_dim=emb_dim,
+    )
+
+
+def _requests(cfg, sizes, seed=1):
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=max(sizes) + 1, seed=seed,
+    )
+    out = []
+    for rid, n in enumerate(sizes):
+        b = stream.batch_at(rid)
+        out.append(
+            ServeRequest(
+                rid=rid, dense=np.asarray(b["dense"][:n]), idx=np.asarray(b["idx"][:n])
+            )
+        )
+    return out
+
+
+def _percentiles(registry) -> tuple[float, float, float]:
+    snap = registry.snapshot()
+    req = snap.hist("serve.request_ms")
+    batches = [h for k, h in snap.hists.items() if k.startswith("serve.batch_ms")]
+    batch_p50 = max((h.p50 for h in batches), default=0.0)
+    return req.p50, req.p99, batch_p50
+
+
+def run(
+    *,
+    rows: int = 16384,
+    num_tables: int = 4,
+    pooling: int = 16,
+    emb_dim: int = 32,
+    cap_frac: int = 16,
+    resident_frac: int = 8,
+    requests: int = 96,
+    buckets=(1, 2, 4, 8),
+    slot_sweep=(1, 2, 4, 8),
+    offered_qps=(50.0, 200.0, 800.0),
+    seed: int = 0,
+) -> dict:
+    cfg = bench_config(rows, num_tables, pooling, emb_dim)
+    capacity = max(1, rows // cap_frac)
+    resident = max(64, rows // resident_frac)
+    results: dict = {}
+
+    with tempfile.TemporaryDirectory(prefix="serve_bench_") as tmp:
+        store_path = os.path.join(tmp, "store")
+        state, train_tables = init_streamed(
+            cfg, jax.random.key(seed), store_path, lr=0.01, capacity=capacity,
+            resident_rows=resident, num_shards=8, prefetch=False,
+        )
+        flush_state(state, train_tables)
+        train_tables.close()
+        digest0 = store_digest(store_path)
+
+        ro = open_readonly(store_path, cfg.num_tables, resident_rows=resident)
+        frozen = freeze("tc_streamed", state, cfg=cfg, streamed=ro)
+        fill_warm = frozen.warm()
+        results["hot_fill_rows_warm"] = fill_warm
+
+        # flat reference over the same flushed rows (bit-identity anchor)
+        flat = np.zeros((cfg.num_tables, rows + 1, emb_dim), np.float32)
+        for t in range(cfg.num_tables):
+            flat[t, :rows] = ro.stores[t].read_rows(np.arange(rows))[0]
+        ref_engine = ServingEngine(
+            freeze("tc", {"dense": state["dense"], "tables": flat}, cfg=cfg),
+            buckets=buckets, wave_slots=1, registry=Registry(),
+        )
+
+        # -- structural pass -------------------------------------------------
+        rng = np.random.default_rng(seed)
+        sizes = [int(rng.integers(1, buckets[-1] + 1)) for _ in range(requests)]
+        eng = ServingEngine(
+            frozen, buckets=buckets, wave_slots=4,
+            queue_depth=max(16, requests), registry=Registry(),
+        )
+        done = eng.serve(_requests(cfg, sizes))
+        bit_ok = all(
+            np.array_equal(
+                r.scores,
+                ref_engine.reference_scores(
+                    ServeRequest(rid=r.rid, dense=r.dense, idx=r.idx)
+                ),
+            )
+            for r in done
+        )
+        results["batched_bit_identical"] = int(bit_ok)
+        results["served_requests"] = len(done)
+        results["served_examples"] = int(sum(r.n for r in done))
+        snap = eng.registry.snapshot()
+        for b in buckets:
+            results[f"batches_bucket{b}"] = int(
+                snap.get(f"serve.batches_total{{bucket={b}}}")
+            )
+            results[f"padded_examples_bucket{b}"] = int(
+                snap.get(f"serve.padded_examples_total{{bucket={b}}}")
+            )
+
+        # admission control, exact: overfill a bounded queue, then one
+        # oversize request
+        adm = ServingEngine(
+            frozen, buckets=buckets, wave_slots=2, queue_depth=8, registry=Registry()
+        )
+        for r in _requests(cfg, [1] * 12, seed=7):
+            adm.submit(r)
+        adm.submit(_requests(cfg, [buckets[-1] + 1], seed=8)[0])
+        adm_snap = adm.registry.snapshot()
+        results["rejected_queue_full"] = int(
+            adm_snap.get("serve.rejected_total{reason=queue_full}")
+        )
+        results["rejected_oversize"] = int(
+            adm_snap.get("serve.rejected_total{reason=oversize}")
+        )
+        adm.pump()
+
+        # -- closed-loop slots sweep (latency vs throughput) ------------------
+        sweep: dict = {}
+        for slots in slot_sweep:
+            reg = Registry()
+            e = ServingEngine(
+                frozen, buckets=buckets, wave_slots=slots,
+                queue_depth=max(16, requests), registry=reg,
+            )
+            reqs = _requests(cfg, sizes, seed=2)
+            e.serve(reqs)  # warm the per-bucket traces
+            reqs = _requests(cfg, sizes, seed=3)
+            t0 = time.perf_counter()
+            served = e.serve(reqs)
+            dt = time.perf_counter() - t0
+            p50, p99, batch_p50 = _percentiles(reg)
+            qps = len(served) / max(dt, 1e-9)
+            sweep[f"slots{slots}"] = {
+                "qps": qps,
+                "request_p50_ms": p50,
+                "request_p99_ms": p99,
+                "batch_p50_ms": batch_p50,
+            }
+            emit(
+                f"serve/slots{slots}", dt / max(len(served), 1) * 1e6,
+                f"qps={qps:.1f};p50={p50:.2f};p99={p99:.2f}",
+            )
+        results["slots_sweep"] = sweep
+
+        # -- open-loop offered-rate sweep (queue wait included) ---------------
+        open_loop: dict = {}
+        for offered in offered_qps:
+            reg = Registry()
+            e = ServingEngine(
+                frozen, buckets=buckets, wave_slots=4,
+                queue_depth=max(16, requests), registry=reg,
+            )
+            reqs = _requests(cfg, sizes, seed=4)
+            gap = 1.0 / offered
+            t0 = time.perf_counter()
+            served = []
+            for i, r in enumerate(reqs):
+                while time.perf_counter() - t0 < i * gap:
+                    pass  # pacing clock: arrivals at the offered rate
+                if e.submit(r) and len(e._queue) >= e.wave_slots:
+                    served.extend(e.pump())
+            served.extend(e.pump())
+            dt = time.perf_counter() - t0
+            p50, p99, _ = _percentiles(reg)
+            qps = len(served) / max(dt, 1e-9)
+            open_loop[f"offered{offered:g}"] = {
+                "offered_qps": offered,
+                "qps": qps,
+                "request_p50_ms": p50,
+                "request_p99_ms": p99,
+            }
+            emit(
+                f"serve/offered{offered:g}", dt / max(len(served), 1) * 1e6,
+                f"qps={qps:.1f};p50={p50:.2f};p99={p99:.2f}",
+            )
+        results["offered_sweep"] = open_loop
+
+        # -- fill-once + zero-write-back proofs -------------------------------
+        results["hot_fill_rows_after_serving"] = frozen.hot_fill_rows() - fill_warm
+        results["dirty_rows"] = ro.dirty_rows()
+        ro.close()
+        results["store_unchanged"] = int(store_digest(store_path) == digest0)
+
+        # modeled VMEM-residency savings at this operating point: every
+        # hot-tier lookup spares one (1, D) HBM/PCIe row move per request
+        hot = np.asarray(frozen._state["cache_ids"])[:, :-1]
+        idx = np.concatenate([r.idx for r in done], axis=0)
+        hit = float(
+            np.mean(
+                [np.isin(idx[:, t], hot[t]).mean() for t in range(cfg.num_tables)]
+            )
+        )
+        results["hbm_model"] = model_hbm_gather(
+            lookups=int(idx.shape[0]) * pooling, d=emb_dim,
+            capacity=capacity, hit=hit,
+        )
+
+    write_json("serve", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(**QUICK)

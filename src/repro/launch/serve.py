@@ -1,10 +1,19 @@
-"""Serving launcher CLI: batched decode through the slot server.
+"""Serving launcher CLI.
 
-CPU/demo: PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
+Two families behind one entrypoint, dispatched on the config:
+
+  * LM archs — batched prefill/decode through the slot server
+    (``runtime.serve_loop``):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
+  * DLRM archs — the read-only scoring engine over a frozen tier stack
+    (``repro.serve``; docs/serving.md):
+    PYTHONPATH=src python -m repro.launch.serve --arch rm1 --smoke --system tc_streamed
 """
 from __future__ import annotations
 
 import argparse
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -15,6 +24,91 @@ import repro.configs
 from repro.configs.base import get_config
 from repro.models import api
 from repro.runtime.serve_loop import Request, Server
+
+
+def _serve_dlrm(cfg, args) -> None:
+    """DLRM demo loop: train-state -> freeze -> warm -> closed-loop serve."""
+    from repro.data.synth import DLRMStream
+    from repro.serve import ServeRequest, ServingEngine, open_readonly, store_digest
+    from repro.stack.frozen import freeze
+    from repro.stack.streamed import init_streamed
+    from repro.store.streamed import flush_state
+
+    key = jax.random.key(args.seed)
+    streamed = None
+    tmp = None
+    if args.system == "tc_streamed":
+        tmp = tempfile.TemporaryDirectory(prefix="serve_store_")
+        store_path = os.path.join(tmp.name, "store")
+        capacity = max(1, cfg.rows_per_table // 16)
+        state, train_tables = init_streamed(
+            cfg, key, store_path, lr=0.01, capacity=capacity,
+            resident_rows=max(64, cfg.rows_per_table // 8), num_shards=4,
+            prefetch=False,
+        )
+        flush_state(state, train_tables)
+        train_tables.close()
+        digest = store_digest(store_path)
+        streamed = open_readonly(
+            store_path, cfg.num_tables,
+            resident_rows=max(64, cfg.rows_per_table // 8),
+        )
+        frozen = freeze("tc_streamed", state, cfg=cfg, streamed=streamed)
+        frozen.warm()
+    else:
+        from repro.stack.trainer import build_stack
+
+        stack = build_stack(cfg, args.system)
+        state = stack.init_state(key)
+        frozen = freeze(args.system, state, cfg=cfg)
+        digest = None
+    print(f"[launch.serve] frozen {args.system}: hot_fill_rows={frozen.hot_fill_rows()}")
+
+    engine = ServingEngine(
+        frozen, buckets=(1, 2, 4, 8), wave_slots=args.slots, queue_depth=64
+    )
+    metrics_server = None
+    if args.metrics_port >= 0:
+        from repro.obs import serve_metrics
+
+        metrics_server = serve_metrics(
+            engine.registry, host="0.0.0.0", port=args.metrics_port
+        )
+        if metrics_server.running:
+            print(f"[launch.serve] metrics at http://127.0.0.1:{metrics_server.port}/metrics")
+
+    stream = DLRMStream(
+        num_tables=cfg.num_tables, rows_per_table=cfg.rows_per_table,
+        gathers_per_table=cfg.gathers_per_table, batch=8, seed=args.seed,
+    )
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    try:
+        reqs = []
+        for rid in range(args.requests):
+            b = stream.batch_at(rid)
+            n = int(rng.integers(1, 9))
+            reqs.append(
+                ServeRequest(
+                    rid=rid,
+                    dense=np.asarray(b["dense"][:n]),
+                    idx=np.asarray(b["idx"][:n]),
+                )
+            )
+        done = engine.serve(reqs)
+        dt = time.perf_counter() - t0
+        summ = engine.summary()
+        summ["qps"] = len(done) / max(dt, 1e-9)
+        print(f"[launch.serve] {summ}")
+        if streamed is not None:
+            streamed.close()
+            unchanged = store_digest(store_path) == digest
+            print(f"[launch.serve] store unchanged after serving: {unchanged}")
+    finally:
+        if metrics_server is not None:
+            metrics_server.close()
+        if tmp is not None:
+            tmp.cleanup()
 
 
 def main():
@@ -28,6 +122,11 @@ def main():
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
+        "--system", default="tc_streamed",
+        choices=("tc", "tc_nmp", "baseline", "tc_cached", "tc_streamed"),
+        help="DLRM archs only: which tier stack to freeze and serve",
+    )
+    ap.add_argument(
         "--metrics-port", type=int, default=-1,
         help="expose the server's registry at /metrics on this port "
         "(0 = ephemeral, -1 = off)",
@@ -35,6 +134,9 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if getattr(cfg, "family", "") == "dlrm":
+        _serve_dlrm(cfg, args)
+        return
     if args.kv_int8:
         import dataclasses
 

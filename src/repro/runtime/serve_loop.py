@@ -73,9 +73,18 @@ class Server:
 
     def generate(self, requests: list[Request], *, greedy: bool = True, seed: int = 0) -> list[Request]:
         """Serve a wave of requests (len <= slots), lockstep decode."""
+        if not requests:
+            return []  # empty wave: no prefill, no counters, no histograms
         assert len(requests) <= self.slots
         B = self.slots
         S = max(len(r.prompt) for r in requests)
+        if S > self.max_len:
+            bad = next(r for r in requests if len(r.prompt) > self.max_len)
+            raise ValueError(
+                f"request rid={bad.rid}: prompt length {len(bad.prompt)} exceeds "
+                f"max_len={self.max_len} — the slot cache holds max_len positions, "
+                "so the overflow would silently wrap; raise max_len or truncate"
+            )
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(requests):
             toks[i, S - len(r.prompt) :] = r.prompt  # left-pad
@@ -88,11 +97,22 @@ class Server:
         self._c_prefill.inc()
         self._h_prefill_ms.observe((time.perf_counter() - t_wave) * 1e3)
         key = jax.random.key(seed)
-        done_ms: dict[int, float] = {}  # rid -> latency at completion
+        # per-request latency, recorded at the request's OWN completion
+        # point — keyed by slot index, so duplicate rids can't alias, and
+        # with no whole-wave fallback that would charge a short request
+        # the tail of the longest one
+        done_ms: dict[int, float] = {}
 
-        def finished(r: Request, step: int) -> bool:
+        def finished(r: Request) -> bool:
             return r.done or len(r.generated) >= r.max_new_tokens
 
+        def record(i: int) -> None:
+            if i not in done_ms:
+                done_ms[i] = (time.perf_counter() - t_wave) * 1e3
+
+        for i, r in enumerate(requests):
+            if finished(r):  # max_new_tokens == 0: completes at prefill
+                record(i)
         max_new = max(r.max_new_tokens for r in requests)
         for step in range(max_new):
             for i, r in enumerate(requests):
@@ -100,9 +120,9 @@ class Server:
                     r.generated.append(int(cur[i]))
                     if cur[i] == self.eos_id:
                         r.done = True
-                if finished(r, step) and r.rid not in done_ms:
-                    done_ms[r.rid] = (time.perf_counter() - t_wave) * 1e3
-            if all(finished(r, step) for r in requests):
+                if finished(r):
+                    record(i)
+            if all(finished(r) for r in requests):
                 break
             t0 = time.perf_counter()
             with self.tracer.span("serve.decode"):
@@ -116,9 +136,10 @@ class Server:
             self._h_decode_ms.observe((time.perf_counter() - t0) * 1e3)
         self._c_tokens.inc(sum(len(r.generated) for r in requests))
         self._c_requests.inc(len(requests))
-        wave_ms = (time.perf_counter() - t_wave) * 1e3
-        for r in requests:
-            self._h_request_ms.observe(done_ms.get(r.rid, wave_ms))
+        for i in range(len(requests)):
+            # total by construction: every request records at the step its
+            # last token was appended (or right after prefill for M == 0)
+            self._h_request_ms.observe(done_ms[i])
         return requests
 
     def summary(self) -> dict:

@@ -1,0 +1,27 @@
+"""Read-only high-QPS serving over the tier stack (``repro.serve``).
+
+The training repo's inference half: ``stack.freeze`` turns a trained
+system state into a read-only ``FrozenStack`` (hot tier VMEM-resident
+across requests, cold tier behind ``store.open_readonly`` with every
+write path closed), and ``ServingEngine`` runs the request plane on top —
+bounded admission queue, padding buckets, dynamic wave batching, and
+per-request latency attribution on a ``repro.obs`` registry.
+
+See docs/serving.md for the dataflow and the bit-identity / zero-write-
+back guarantees.
+"""
+from repro.serve.batching import PaddingBuckets, ServeRequest  # noqa: F401
+from repro.serve.engine import ServingEngine  # noqa: F401
+from repro.stack.frozen import (  # noqa: F401
+    FrozenCached,
+    FrozenFlat,
+    FrozenStack,
+    FrozenStreamed,
+    freeze,
+)
+from repro.store.readonly import (  # noqa: F401
+    ReadOnlyStreamedTables,
+    ReadOnlyViolation,
+    open_readonly,
+    store_digest,
+)

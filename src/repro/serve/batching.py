@@ -1,0 +1,73 @@
+"""Request shapes for the serving engine: the wire-level request object
+and the padding-bucket ladder that keeps jit recompiles bounded.
+
+A DLRM serving request is a micro-batch of examples (an ad auction scores
+one user against ``n`` candidate items, so ``n`` varies per request).
+Padding every request to its nearest bucket size means the engine only
+ever presents ``len(sizes)`` distinct shapes to ``FrozenStack.score`` —
+one trace per bucket, cached by jax — instead of a fresh compile per
+request size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class ServeRequest:
+    """One scoring request: ``n`` candidate examples sharing a rid.
+
+    ``dense`` is ``(n, F)`` float32, ``idx`` is ``(n, T, P)`` int32 —
+    the same example layout the training pipeline emits. The engine fills
+    ``scores`` (``(n,)`` CTR logits) and the latency stamps.
+    """
+
+    rid: int
+    dense: np.ndarray
+    idx: np.ndarray
+    scores: Optional[np.ndarray] = None
+    t_submit: float = field(default=0.0, repr=False)
+    t_done: float = field(default=0.0, repr=False)
+
+    @property
+    def n(self) -> int:
+        return int(self.dense.shape[0])
+
+    @property
+    def latency_ms(self) -> float:
+        """Submit -> scores-ready, for THIS request's own completion point
+        (stamped when its wave finishes, not when the whole pump drains)."""
+        return (self.t_done - self.t_submit) * 1e3
+
+
+class PaddingBuckets:
+    """Sorted ladder of batch sizes; each request pads up to the smallest
+    bucket that fits. ``bucket_of`` returns ``None`` for oversize requests
+    — the engine's admission control rejects those instead of compiling an
+    unbounded shape."""
+
+    def __init__(self, sizes: Tuple[int, ...] = (1, 2, 4, 8)):
+        if not sizes or any(int(s) <= 0 for s in sizes):
+            raise ValueError(f"bucket sizes must be positive, got {sizes!r}")
+        self.sizes: Tuple[int, ...] = tuple(sorted(int(s) for s in sizes))
+
+    @property
+    def max_size(self) -> int:
+        return self.sizes[-1]
+
+    def bucket_of(self, n: int) -> Optional[int]:
+        if n <= 0:
+            raise ValueError(f"request must hold at least one example, got n={n}")
+        for s in self.sizes:
+            if n <= s:
+                return s
+        return None
+
+    def pad_frac(self, n: int) -> float:
+        """Fraction of the bucket that is padding — the cost knob sweeps
+        in the serve bench trade against recompiles."""
+        b = self.bucket_of(n)
+        return 0.0 if b is None else (b - n) / b

@@ -1,0 +1,198 @@
+"""The serving request plane: admission -> buckets -> waves -> scores.
+
+``ServingEngine`` drives a ``FrozenStack`` the way the offline-inference
+harnesses drive LM servers: a bounded FIFO queue with loud admission
+control (oversize and queue-full rejections are counted, never silently
+dropped), requests grouped into padding buckets, buckets chunked into
+fixed-slot waves, and — for the streamed tier — ALL waves of a pump
+prepared (cast + prefetch scheduled) before the first one scores, so the
+shard prefetcher gets the same lookahead the training input pipeline has.
+
+Latency is attributed per request at its own wave's completion
+(``t_done - t_submit``), so a queue-tail request never inherits the whole
+pump's wall time. Wave padding keeps shapes static per bucket; scores for
+padding lanes are sliced away, and per-example independence of the DLRM
+forward makes the kept lanes bit-identical to a solo run at the same
+padded shape (pinned by tests/test_serve_engine.py).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.obs import tracing
+from repro.obs.registry import Registry
+from repro.serve.batching import PaddingBuckets, ServeRequest
+from repro.stack.frozen import FrozenStack
+
+
+class ServingEngine:
+    """Closed-loop serving over a frozen stack (see module docstring).
+
+    ``submit`` enqueues (or rejects) one request; ``pump`` drains the
+    queue through batched scoring; ``serve`` is the submit-all-then-pump
+    convenience loop the bench and CLI use. Telemetry lands on the frozen
+    stack's registry by default so the hot-fill counter, the store's
+    working-set metrics and the request-plane series share one snapshot.
+    """
+
+    def __init__(
+        self,
+        frozen: FrozenStack,
+        *,
+        buckets: Sequence[int] = (1, 2, 4, 8),
+        wave_slots: int = 4,
+        queue_depth: int = 64,
+        registry: Optional[Registry] = None,
+        tracer: Optional[tracing.Tracer] = None,
+    ):
+        if wave_slots <= 0:
+            raise ValueError(f"wave_slots must be positive, got {wave_slots}")
+        if queue_depth <= 0:
+            raise ValueError(f"queue_depth must be positive, got {queue_depth}")
+        self.frozen = frozen
+        self.buckets = PaddingBuckets(tuple(buckets))
+        self.wave_slots = wave_slots
+        self.queue_depth = queue_depth
+        self.registry = registry if registry is not None else frozen.registry
+        self.tracer = tracer if tracer is not None else tracing.TRACER
+        self._queue: Deque[ServeRequest] = deque()
+        self._step = 0  # wave counter — the prefetcher's step key
+        self._c_accepted = self.registry.counter("serve.accepted_total")
+        self._c_requests = self.registry.counter("serve.requests_total")
+        self._c_examples = self.registry.counter("serve.examples_total")
+        self._g_queue = self.registry.gauge("serve.queue_depth")
+        self._h_request_ms = self.registry.histogram("serve.request_ms")
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> bool:
+        """Admit one request into the queue. Returns False (and counts
+        ``serve.rejected_total{reason=...}``) when the request is larger
+        than every padding bucket or the queue is full — backpressure is
+        explicit, never a silent drop."""
+        req.t_submit = time.perf_counter()
+        if self.buckets.bucket_of(req.n) is None:
+            self.registry.counter("serve.rejected_total", reason="oversize").inc()
+            return False
+        if len(self._queue) >= self.queue_depth:
+            self.registry.counter("serve.rejected_total", reason="queue_full").inc()
+            return False
+        self._queue.append(req)
+        self._c_accepted.inc()
+        self._g_queue.set(len(self._queue))
+        return True
+
+    # -- batching ------------------------------------------------------------
+
+    def _plan(self) -> List[Tuple[int, List[ServeRequest]]]:
+        """Drain the queue into ``(bucket, wave)`` pairs: FIFO within each
+        bucket, at most ``wave_slots`` requests per wave."""
+        by_bucket: dict[int, List[ServeRequest]] = {}
+        while self._queue:
+            r = self._queue.popleft()
+            by_bucket.setdefault(self.buckets.bucket_of(r.n), []).append(r)
+        self._g_queue.set(0)
+        waves = []
+        for b in sorted(by_bucket):
+            group = by_bucket[b]
+            for i in range(0, len(group), self.wave_slots):
+                waves.append((b, group[i : i + self.wave_slots]))
+        return waves
+
+    def _assemble(self, b: int, wave: List[ServeRequest]) -> dict:
+        """Pack a wave into the bucket's static shape: ``wave_slots`` lanes
+        of ``b`` examples each, zero-padded. Padding idx lanes point at row
+        0 — a valid id, so the forward stays in-range; their scores are
+        sliced away and (per-example independence) never perturb real lanes."""
+        F = wave[0].dense.shape[1]
+        T, P = wave[0].idx.shape[1], wave[0].idx.shape[2]
+        dense = np.zeros((self.wave_slots * b, F), np.float32)
+        idx = np.zeros((self.wave_slots * b, T, P), np.int32)
+        for i, r in enumerate(wave):
+            dense[i * b : i * b + r.n] = r.dense
+            idx[i * b : i * b + r.n] = r.idx
+        return {"dense": dense, "idx": idx}
+
+    # -- scoring -------------------------------------------------------------
+
+    def pump(self) -> List[ServeRequest]:
+        """Drain the queue: plan waves, prepare them ALL (prefetch lead
+        time), then score in order. Returns the completed requests."""
+        waves = self._plan()
+        if not waves:
+            return []
+        prepared = []
+        for b, wave in waves:
+            batch = self._assemble(b, wave)
+            step = self._step
+            self._step += 1
+            with self.tracer.span("serve.prepare"):
+                extras = self.frozen.prepare(batch, step=step)
+            prepared.append((b, wave, batch, extras))
+        done: List[ServeRequest] = []
+        for b, wave, batch, extras in prepared:
+            t0 = time.perf_counter()
+            with self.tracer.span("serve.wave"):
+                scores = self.frozen.score(batch, extras)
+            t_done = time.perf_counter()
+            self.registry.histogram("serve.batch_ms", bucket=b).observe(
+                (t_done - t0) * 1e3
+            )
+            self.registry.counter("serve.batches_total", bucket=b).inc()
+            self.registry.counter("serve.padded_examples_total", bucket=b).inc(
+                self.wave_slots * b - sum(r.n for r in wave)
+            )
+            for i, r in enumerate(wave):
+                r.scores = np.asarray(scores[i * b : i * b + r.n])
+                r.t_done = t_done
+                self._h_request_ms.observe(r.latency_ms)
+                done.append(r)
+            self._c_requests.inc(len(wave))
+            self._c_examples.inc(sum(r.n for r in wave))
+        return done
+
+    def serve(self, requests: Sequence[ServeRequest]) -> List[ServeRequest]:
+        """Closed loop: submit everything (pumping whenever the queue
+        fills), then drain. Rejected-oversize requests are left unscored;
+        the caller reads ``serve.rejected_total`` off the registry."""
+        done: List[ServeRequest] = []
+        for r in requests:
+            if not self.submit(r):
+                if self.buckets.bucket_of(r.n) is None:
+                    continue  # oversize: rejected for good
+                done.extend(self.pump())  # queue full: drain, then retry
+                self.submit(r)
+        done.extend(self.pump())
+        return done
+
+    # -- references / reporting ----------------------------------------------
+
+    def reference_scores(self, req: ServeRequest) -> np.ndarray:
+        """Unbatched single-request reference: the request alone in its
+        padded wave shape — the same trace the batched path uses, so the
+        result is bit-identical to the request's lanes in ANY wave."""
+        b = self.buckets.bucket_of(req.n)
+        if b is None:
+            raise ValueError(f"request rid={req.rid} n={req.n} exceeds every bucket")
+        batch = self._assemble(b, [req])
+        return np.asarray(self.frozen.score(batch)[: req.n])
+
+    def summary(self) -> dict:
+        snap = self.registry.snapshot()
+        req = snap.hist("serve.request_ms")
+        return {
+            "requests": int(snap.get("serve.requests_total")),
+            "examples": int(snap.get("serve.examples_total")),
+            "accepted": int(snap.get("serve.accepted_total")),
+            "rejected_oversize": int(snap.get("serve.rejected_total{reason=oversize}")),
+            "rejected_queue_full": int(
+                snap.get("serve.rejected_total{reason=queue_full}")
+            ),
+            "request_p50_ms": req.p50,
+            "request_p99_ms": req.p99,
+            "hot_fill_rows": self.frozen.hot_fill_rows(),
+        }

@@ -4,7 +4,8 @@
 embedding rows live and how they move; ``stack.trainer`` composes a stack
 with the dense model and owns the jitted step, promote cadence and
 coherent checkpointing. ``repro.dist.sparse`` shards the streamed stack
-over the model axis."""
+over the model axis; ``stack.frozen`` is the read-only serving view
+(``repro.serve``)."""
 from repro.stack.base import TierStack, dense_fn, pooled_from_tables
 from repro.stack.cached import (
     CachedStack,
@@ -13,6 +14,14 @@ from repro.stack.cached import (
     pooled_from_tiered,
 )
 from repro.stack.flat import BaselineStack, FlatStack, init_sparse_system
+from repro.stack.frozen import (
+    FrozenCached,
+    FrozenFlat,
+    FrozenStack,
+    FrozenStreamed,
+    dlrm_scores,
+    freeze,
+)
 from repro.stack.streamed import (
     StreamedStack,
     init_streamed,
@@ -37,6 +46,12 @@ __all__ = [
     "FlatStack",
     "CachedStack",
     "StreamedStack",
+    "FrozenStack",
+    "FrozenFlat",
+    "FrozenCached",
+    "FrozenStreamed",
+    "freeze",
+    "dlrm_scores",
     "init_sparse_system",
     "init_streamed",
     "make_flush_step",

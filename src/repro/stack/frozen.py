@@ -1,0 +1,318 @@
+"""Frozen tier stacks: the read-only serving view (``repro.serve``).
+
+``freeze()`` turns a trained system state into a ``FrozenStack`` — the
+inference twin of the ``TierStack`` contract. A frozen stack owns exactly
+one operation, ``score(batch) -> CTR logits``, built from the SAME fused
+forward machinery training uses (flat take+segment-sum, the cached
+two-tier gather kernel, the streamed slice gather), so serving inherits
+every bit-identity guarantee the training forwards already pin. Everything
+else is closed off: ``update`` / ``promote`` / ``flush`` raise
+``ReadOnlyViolation``.
+
+The hot tier is filled ONCE, at freeze/warm time, and stays VMEM-resident
+across requests — the serving counters prove it: ``serve.hot_fill_rows``
+increments only here, never on the request path, so the acceptance
+criterion "per-request VMEM fill count == 0 after warmup" is a counter
+delta any test can assert.
+
+Per system:
+
+  * ``tc`` / ``tc_nmp`` / ``baseline`` — flat tables, no hot tier;
+    ``FrozenFlat`` is also the reference every other frozen forward is
+    compared against.
+  * ``tc_cached`` — tables + the VMEM hot-row cache, served through the
+    fused cached-gather kernel (read-only by nature: the forward never
+    touches the cache fill path).
+  * ``tc_streamed`` — hot cache + a ``ReadOnlyStreamedTables`` cold tier
+    (mmap'd shards behind the working set + casting-driven prefetch, every
+    write path closed — see ``repro.store.readonly``). ``warm()`` adopts a
+    hot set from the training EMA (or explicit ids) via the non-installing
+    placement read, exactly like the training promote minus the demote.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm
+from repro.obs.registry import Registry
+from repro.stack.base import pooled_from_tables
+from repro.stack.cached import pooled_from_tiered
+from repro.stack.streamed import StreamedStack
+from repro.store.readonly import ReadOnlyStreamedTables, ReadOnlyViolation
+
+
+def dlrm_scores(cfg: DLRMConfig, dense_params, emb, dense):
+    """The dense half of serving: bottom MLP -> interaction -> top MLP ->
+    CTR logits ``(B,)``. Identical arithmetic to ``stack.base.dense_fn``
+    up to (and excluding) the loss, so served scores match training
+    forwards bit-for-bit."""
+    bot = dlrm._apply_mlp(dense_params["bot_mlp"], dense, final_act=True)
+    x = dlrm._interact(bot, emb)
+    return dlrm._apply_mlp(dense_params["top_mlp"], x, final_act=False)[:, 0]
+
+
+class FrozenStack:
+    """Read-only serving view over one system's state (see module
+    docstring). ``score`` is jitted once; jax's shape-keyed jit cache
+    gives each padding bucket its own trace automatically."""
+
+    system: str = "?"
+    #: True when ``score`` needs a host-side cast (the streamed cold tier)
+    needs_cast: bool = False
+
+    def __init__(
+        self, cfg: DLRMConfig, dense_params, *, mode: Optional[str] = None,
+        registry: Optional[Registry] = None,
+    ):
+        self.cfg = cfg
+        self.mode = mode
+        self.registry = registry if registry is not None else Registry()
+        # the one-time hot-tier fill; the request path NEVER increments it
+        self._c_fill = self.registry.counter("serve.hot_fill_rows")
+        self._state = {"dense": dense_params}
+        self._jit_score = jax.jit(self._score)
+
+    # -- the one allowed operation -----------------------------------------
+
+    def _emb(self, state, idx, extras):
+        raise NotImplementedError
+
+    def _score(self, state, dense_feat, idx, extras):
+        emb = self._emb(state, idx, extras)
+        return dlrm_scores(self.cfg, state["dense"], emb, dense_feat)
+
+    def prepare(self, host_batch: dict, *, step: Optional[int] = None) -> dict:
+        """Host-side work for one wave (cast + prefetch scheduling for the
+        streamed tier; nothing for device-resident tiers). Returned extras
+        are handed back to ``score`` — calling ``prepare`` for SEVERAL
+        waves before scoring the first gives the prefetcher lead time."""
+        return {}
+
+    def score(self, host_batch: dict, extras: Optional[dict] = None) -> np.ndarray:
+        """``{"dense" (B,F), "idx" (B,T,P)}`` -> CTR logits ``(B,)``."""
+        out = self._jit_score(
+            self._state,
+            jnp.asarray(host_batch["dense"]),
+            jnp.asarray(host_batch["idx"]),
+            {},
+        )
+        return np.asarray(out)
+
+    # -- closed TierStack surface ------------------------------------------
+
+    def update(self, *a, **kw):
+        raise ReadOnlyViolation(f"update on frozen {self.system} stack")
+
+    def promote(self, *a, **kw):
+        raise ReadOnlyViolation(
+            f"promote on frozen {self.system} stack — the hot set is fixed "
+            "at freeze/warm time (re-freeze to change placement)"
+        )
+
+    def flush(self, *a, **kw):
+        raise ReadOnlyViolation(f"flush on frozen {self.system} stack")
+
+    def hot_fill_rows(self) -> int:
+        """Cumulative hot-tier rows filled (freeze/warm only). Unchanged
+        across requests == the tier stayed VMEM-resident."""
+        return int(self._c_fill.value())
+
+
+class FrozenFlat(FrozenStack):
+    """``tc`` / ``tc_nmp`` / ``baseline``: flat tables — the reference
+    forward for every other frozen system."""
+
+    system = "tc"
+
+    def __init__(self, cfg, dense_params, tables, **kw):
+        super().__init__(cfg, dense_params, **kw)
+        self._state["tables"] = jnp.asarray(tables)
+
+    def _emb(self, state, idx, extras):
+        return pooled_from_tables(self.cfg, state["tables"], idx)
+
+
+class FrozenCached(FrozenStack):
+    """``tc_cached``: flat tables + the VMEM-resident hot-row cache, served
+    through the fused cached-gather kernel. The cache blocks are uploaded
+    once here and reused for every request — the forward has no fill path."""
+
+    system = "tc_cached"
+
+    def __init__(
+        self, cfg, dense_params, tables, accums, cache_ids, cache_rows,
+        cache_accums, **kw,
+    ):
+        super().__init__(cfg, dense_params, **kw)
+        self._state.update(
+            tables=jnp.asarray(tables), accums=jnp.asarray(accums),
+            cache_ids=jnp.asarray(cache_ids), cache_rows=jnp.asarray(cache_rows),
+            cache_accums=jnp.asarray(cache_accums),
+        )
+        V = int(tables.shape[1]) - 1  # sentinel-padded tables
+        self._c_fill.inc(int((np.asarray(cache_ids) < V).sum()))
+
+    def _emb(self, state, idx, extras):
+        emb, _ = pooled_from_tiered(
+            self.cfg, state["tables"], state["accums"],
+            state["cache_ids"], state["cache_rows"], state["cache_accums"],
+            idx, mode=self.mode,
+        )
+        return emb
+
+
+class FrozenStreamed(FrozenStack):
+    """``tc_streamed``: VMEM hot cache over a read-only disk cold tier.
+    The per-request cold slice is assembled by the read-only working set
+    (+ casting-driven prefetch) and uploaded per wave; hot lanes are
+    served from the cache uploaded at ``warm()`` time. No ring (it holds
+    *updated* lanes — serving never updates), no write-back thread."""
+
+    system = "tc_streamed"
+    needs_cast = True
+
+    def __init__(
+        self, cfg, dense_params, cache_ids, cache_rows,
+        streamed: ReadOnlyStreamedTables, *, ema=None, **kw,
+    ):
+        if not isinstance(streamed, ReadOnlyStreamedTables):
+            raise TypeError(
+                "FrozenStreamed serves only through ReadOnlyStreamedTables "
+                "(store.open_readonly) — a writable StreamedTables would "
+                "leave the write paths open on the serving tier"
+            )
+        if kw.get("registry") is None:
+            # share the store's registry so hot-fill, working-set and
+            # request-plane series land on one snapshot (/metrics)
+            kw["registry"] = streamed.registry
+        super().__init__(cfg, dense_params, **kw)
+        self.streamed = streamed
+        self.ema = None if ema is None else np.asarray(ema)
+        self._state.update(
+            cache_ids=jnp.asarray(cache_ids), cache_rows=jnp.asarray(cache_rows)
+        )
+        self._fwd = StreamedStack(cfg, mode=self.mode)
+        from repro.data.pipeline import CastingServer
+
+        self._caster = CastingServer(
+            rows_per_table=cfg.rows_per_table, with_lookup_seg=True
+        )
+        # rows the training state left hot (usually none: flush_state
+        # demotes everything; warm() is the serving fill path)
+        resident = int((np.asarray(cache_ids) < streamed.num_rows).sum())
+        if resident:
+            self._c_fill.inc(resident)
+            for t in range(streamed.num_tables):
+                ids = np.asarray(cache_ids)[t]
+                streamed.set_hot_ids(t, ids[ids < streamed.num_rows])
+
+    def warm(self, ids_per_table: Optional[Sequence[np.ndarray]] = None) -> int:
+        """Fill the hot tier ONCE before serving: per table adopt explicit
+        ids (or the training EMA's top-C) through the non-installing,
+        uncounted placement read — placement traffic neither evicts the
+        prefetched working set nor skews the coverage metric. Returns the
+        number of rows filled; the request path never refills."""
+        T = self._state["cache_ids"].shape[0]
+        Cp1 = self._state["cache_ids"].shape[1]
+        C = Cp1 - 1
+        V, D = self.streamed.num_rows, self.streamed.dim
+        new_ids = np.full((T, Cp1), V, np.int32)
+        new_rows = np.zeros((T, Cp1, D), np.float32)
+        filled = 0
+        for t in range(T):
+            if ids_per_table is not None:
+                ids = np.unique(np.asarray(ids_per_table[t], np.int64))[:C]
+            elif self.ema is not None:
+                # stable argsort on -ema == lax.top_k's lower-index tie-break
+                ids = np.sort(np.argsort(-self.ema[t], kind="stable")[:C])
+            else:
+                raise ValueError("warm() needs ids_per_table or a freeze-time ema")
+            ids = ids[ids < V].astype(np.int32)
+            rows, _ = self.streamed.gather_rows(t, ids)
+            self.streamed.set_hot_ids(t, ids)
+            new_ids[t, : ids.size] = ids
+            new_rows[t, : ids.size] = rows
+            filled += int(ids.size)
+        self._state["cache_ids"] = jnp.asarray(new_ids)
+        self._state["cache_rows"] = jnp.asarray(new_rows)
+        self._c_fill.inc(filled)
+        return filled
+
+    def prepare(self, host_batch: dict, *, step: Optional[int] = None) -> dict:
+        cast = self._caster({"idx": np.asarray(host_batch["idx"])})["cast"]
+        if step is not None:
+            self.streamed.schedule_prefetch(step, cast)
+        return {"cast": cast, "step": step}
+
+    def score(self, host_batch: dict, extras: Optional[dict] = None) -> np.ndarray:
+        if extras is None:
+            extras = self.prepare(host_batch)  # unscheduled: sync fault-in
+        cast = extras["cast"]
+        cold_rows, cold_accums = self.streamed.gather(extras.get("step"), cast)
+        out = self._jit_score(
+            self._state,
+            jnp.asarray(host_batch["dense"]),
+            jnp.asarray(host_batch["idx"]),
+            {
+                "cast": {k: jnp.asarray(v) for k, v in cast.items()},
+                "cold_rows": jnp.asarray(cold_rows),
+                "cold_accums": jnp.asarray(cold_accums),
+            },
+        )
+        return np.asarray(out)
+
+    def _emb(self, state, idx, extras):
+        # the training forward, minus the ring (no "ring_ids" in state)
+        emb, _ = self._fwd.forward(
+            {"cache_ids": state["cache_ids"], "cache_rows": state["cache_rows"]},
+            {
+                "idx": idx,
+                "cast": extras["cast"],
+                "cold_rows": extras["cold_rows"],
+                "cold_accums": extras["cold_accums"],
+            },
+        )
+        return emb
+
+
+def freeze(
+    system: str,
+    state: dict,
+    *,
+    cfg: DLRMConfig,
+    mode: Optional[str] = None,
+    streamed: Optional[ReadOnlyStreamedTables] = None,
+    registry: Optional[Registry] = None,
+) -> FrozenStack:
+    """Trained ``(system, state)`` -> read-only serving view.
+
+    ``state`` is the training state dict (a coherent checkpoint for
+    ``tc_streamed``: post ``flush_state``, paired with ``streamed`` from
+    ``store.open_readonly`` over the flushed shard directory)."""
+    if system in ("baseline", "tc", "tc_nmp"):
+        return FrozenFlat(
+            cfg, state["dense"], state["tables"], mode=mode, registry=registry
+        )
+    if system == "tc_cached":
+        return FrozenCached(
+            cfg, state["dense"], state["tables"], state["accums"],
+            state["cache_ids"], state["cache_rows"], state["cache_accums"],
+            mode=mode, registry=registry,
+        )
+    if system == "tc_streamed":
+        if streamed is None:
+            raise ValueError(
+                "freeze(system='tc_streamed') needs streamed= "
+                "(a ReadOnlyStreamedTables from store.open_readonly)"
+            )
+        return FrozenStreamed(
+            cfg, state["dense"], state["cache_ids"], state["cache_rows"],
+            streamed, ema=state.get("ema"), mode=mode, registry=registry,
+        )
+    raise ValueError(f"unknown system {system!r}")

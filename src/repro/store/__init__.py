@@ -14,8 +14,15 @@ See docs/store.md for the shard format, prefetch dataflow and consistency
 rules.
 """
 from repro.store.prefetch import ShardPrefetcher  # noqa: F401
+from repro.store.readonly import (  # noqa: F401
+    ReadOnlyStreamedTables,
+    ReadOnlyViolation,
+    open_readonly,
+    store_digest,
+)
 from repro.store.shards import (  # noqa: F401
     EmbeddingShardStore,
+    ReadOnlyStoreError,
     create_store,
     open_store,
 )

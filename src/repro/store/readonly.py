@@ -1,0 +1,122 @@
+"""Read-only serving view over the streamed store (``repro.serve``'s tier).
+
+``ReadOnlyStreamedTables`` is the inference-path twin of ``StreamedTables``:
+the same bounded working set and casting-driven prefetch over the same
+mmap'd shard files, with every mutation path closed off. The guarantees,
+layered so a violation fails as early (and as loudly) as possible:
+
+  1. **API level** — ``write_back`` / ``write_back_async`` / ``demote`` /
+     ``restore_shards`` raise ``ReadOnlyViolation``; ``flush`` is a no-op
+     (there is nothing dirty to move). The write-back worker thread and
+     the device slice ring are never constructed (``ring_depth=0``,
+     ``overlap_write_back=False`` are forced).
+  2. **Structural level** — the read path can't dirty anything even
+     without the overrides: ``WorkingSetManager.gather`` installs faulted
+     rows CLEAN (``dirty=False``), and eviction only writes dirty rows,
+     so a serving pass produces zero ``write_rows`` calls by construction.
+  3. **OS level** — every shard file is mapped ``mode="r"``
+     (``open_store(writable=False)``), so even a path the overrides miss
+     raises ``ReadOnlyStoreError`` before a byte changes; ``store_digest``
+     turns that into a checkable post-run proof.
+
+``store_digest(path)`` hashes the shard directory byte-for-byte (directory
+JSON + every shard file, in sorted order) — equal digests before and after
+a serving run are the zero-write-back acceptance proof the serve bench and
+``tests/test_serve_readonly.py`` assert.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Optional
+
+from repro.obs import tracing
+from repro.obs.registry import Registry
+from repro.store.shards import DIRECTORY_FILE, ReadOnlyStoreError, open_store
+from repro.store.streamed import StreamedTables, _table_dir
+
+
+class ReadOnlyViolation(ReadOnlyStoreError):
+    """A mutation path was reached on a read-only serving store/stack."""
+
+
+class ReadOnlyStreamedTables(StreamedTables):
+    """``StreamedTables`` with every mutation path closed off (see module
+    docstring). Construct via ``open_readonly`` — it opens the shard
+    stores ``writable=False``, which this class requires."""
+
+    def __init__(self, stores, **kw):
+        for s in stores:
+            if s.writable:
+                raise ValueError(
+                    f"ReadOnlyStreamedTables needs stores opened writable=False "
+                    f"(store {s.path!r} is writable) — use store.open_readonly"
+                )
+        # no ring (it holds *updated* lanes — serving never updates) and
+        # no write-back worker, whatever the caller asked for
+        kw["ring_depth"] = 0
+        kw["overlap_write_back"] = False
+        super().__init__(stores, **kw)
+
+    # -- closed mutation paths ---------------------------------------------
+
+    def write_back(self, cast, rows, accums, hit) -> None:
+        raise ReadOnlyViolation("write_back on a read-only serving store")
+
+    def write_back_async(self, cast, aux) -> None:
+        raise ReadOnlyViolation("write_back_async on a read-only serving store")
+
+    def demote(self, t, ids, rows, accums, *, insert: bool = True) -> None:
+        raise ReadOnlyViolation("demote on a read-only serving store")
+
+    def restore_shards(self, src_path: str) -> None:
+        raise ReadOnlyViolation("restore_shards on a read-only serving store")
+
+    def flush(self) -> None:
+        """No-op: the read path never dirties a row, so there is nothing
+        to move to the shards (and the shard maps are ``mode="r"``)."""
+
+    def dirty_rows(self) -> int:
+        """Total dirty resident rows across tables — 0 is the read-only
+        working-set invariant tests assert mid-run."""
+        return int(sum(ws._dirty.sum() for ws in self.working))
+
+
+def open_readonly(
+    path: str,
+    num_tables: int,
+    *,
+    resident_rows: int,
+    prefetch: bool = True,
+    registry: Optional[Registry] = None,
+    tracer: Optional[tracing.Tracer] = None,
+    shard: Optional[int] = None,
+) -> ReadOnlyStreamedTables:
+    """Open a COHERENT shard directory (post ``flush_state``) for serving:
+    shard files mapped read-only, working set + prefetch live, no ring, no
+    write-back thread."""
+    stores = [
+        open_store(_table_dir(path, t), writable=False) for t in range(num_tables)
+    ]
+    return ReadOnlyStreamedTables(
+        stores, resident_rows=resident_rows, prefetch=prefetch,
+        registry=registry, tracer=tracer, shard=shard,
+    )
+
+
+def store_digest(path: str) -> str:
+    """sha256 over the whole store tree (every table's directory JSON +
+    shard files, sorted path order) — the zero-write-back proof: equal
+    before/after a serving pass iff no byte of the cold tier moved."""
+    h = hashlib.sha256()
+    for root, dirs, files in sorted(os.walk(path)):
+        dirs.sort()
+        for fname in sorted(files):
+            if fname != DIRECTORY_FILE and not fname.endswith(".bin"):
+                continue
+            fpath = os.path.join(root, fname)
+            h.update(os.path.relpath(fpath, path).encode())
+            with open(fpath, "rb") as f:
+                for chunk in iter(lambda: f.read(1 << 20), b""):
+                    h.update(chunk)
+    return h.hexdigest()

@@ -33,6 +33,11 @@ DIRECTORY_FILE = "directory.json"
 FORMAT_VERSION = 1
 
 
+class ReadOnlyStoreError(RuntimeError):
+    """A write path was reached on a store opened ``writable=False`` —
+    the serving read path's hard guarantee (docs/serving.md)."""
+
+
 @dataclass
 class ShardStoreStats:
     rows_read: int = 0
@@ -76,6 +81,10 @@ class EmbeddingShardStore:
     # StreamedTables) receives resilience.retries_total{point=}.
     retry_policy: RetryPolicy = DEFAULT_POLICY
     retry_registry: Optional[object] = None
+    # False: shard files are mapped ``mode="r"`` and every write path
+    # raises ReadOnlyStoreError — the OS-level enforcement behind the
+    # serving engine's zero-write-back contract
+    writable: bool = True
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -88,6 +97,8 @@ class EmbeddingShardStore:
         return (self.dim + 1) * 4
 
     def flush(self) -> None:
+        if not self.writable:
+            return  # nothing to sync: read-only maps hold no dirty pages
         for mm in self._mmaps:
             mm.flush()
 
@@ -131,6 +142,11 @@ class EmbeddingShardStore:
     def write_rows(self, ids: np.ndarray, rows: np.ndarray, accums: np.ndarray) -> None:
         """Scatter absolute values (set semantics). ``ids`` must be unique —
         duplicate ids in one write would race within the fancy index."""
+        if not self.writable:
+            raise ReadOnlyStoreError(
+                f"write_rows on read-only store {self.path!r} "
+                f"({len(np.asarray(ids))} row(s)) — opened writable=False"
+            )
         ids = self._check_ids(ids)
         packed = np.empty((ids.shape[0], self.dim + 1), np.float32)
         packed[:, : self.dim] = rows
@@ -174,6 +190,10 @@ class EmbeddingShardStore:
         shard-by-shard (the old ``zip`` walk silently skipped the live
         tail, leaving rows past the snapshot's coverage at their live —
         wrong — values)."""
+        if not self.writable:
+            raise ReadOnlyStoreError(
+                f"load_from on read-only store {self.path!r} — opened writable=False"
+            )
         src = open_store(src_path)
         try:
             if (src.num_rows, src.dim, src.shard_rows) != (
@@ -267,8 +287,11 @@ def create_store(
     return open_store(path)
 
 
-def open_store(path: str) -> EmbeddingShardStore:
-    """Memory-map an existing shard directory for read/write.
+def open_store(path: str, *, writable: bool = True) -> EmbeddingShardStore:
+    """Memory-map an existing shard directory for read/write (or, with
+    ``writable=False``, read-only: shard files map ``mode="r"`` so even a
+    stray in-process write faults at the OS level, and the store's own
+    write paths raise ``ReadOnlyStoreError`` first).
 
     Validates geometry AND content size: the directory's shard entries
     must tile ``[0, num_rows)`` contiguously, and every shard file must
@@ -306,14 +329,15 @@ def open_store(path: str) -> EmbeddingShardStore:
                 + ("file is truncated" if actual < expect else "file has trailing bytes")
             )
     store = EmbeddingShardStore(
-        path=path, num_rows=d["num_rows"], dim=d["dim"], shard_rows=d["shard_rows"]
+        path=path, num_rows=d["num_rows"], dim=d["dim"], shard_rows=d["shard_rows"],
+        writable=writable,
     )
     for s in d["shards"]:
         store._mmaps.append(
             np.memmap(
                 os.path.join(path, s["file"]),
                 np.float32,
-                mode="r+",
+                mode="r+" if writable else "r",
                 shape=(s["hi"] - s["lo"], d["dim"] + 1),
             )
         )

